@@ -1,0 +1,51 @@
+//! Side-by-side method comparison on the same problems — the paper's
+//! story in one terminal screen: greedy vs Full-BoN vs ST-BoN vs KAPPA on
+//! a handful of problems, with per-method accuracy/token/memory totals.
+//!
+//!   cargo run --release --example compare_methods -- --problems 10 --n 10
+
+use std::sync::Arc;
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::coordinator::metrics_for;
+use kappa::data::Dataset;
+use kappa::engine::Engine;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+use kappa::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_problems = args.usize_or("problems", 10);
+    let n = args.usize_or("n", 10);
+    let model_name = args.str_or("model", "sm");
+    let dataset = Dataset::parse(&args.str_or("dataset", "math")).expect("gsm|math");
+
+    let manifest = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, &model_name)?);
+    let engine = Engine::new(model);
+
+    let problems = dataset.generate(n_problems, 4242);
+    println!(
+        "model {model_name} on {} — {n_problems} problems, N={n}\n",
+        dataset.name()
+    );
+    println!(
+        "{:>8}  {:>8}  {:>10}  {:>10}  {:>9}  {:>8}",
+        "method", "accuracy", "final_tok", "total_tok", "peak_MB", "time_s"
+    );
+    for method in Method::all() {
+        let cfg = RunConfig { method, n, ..RunConfig::default() };
+        let m = metrics_for(&engine, &problems, &cfg)?;
+        println!(
+            "{:>8}  {:>8.3}  {:>10.1}  {:>10.1}  {:>9.1}  {:>8.2}",
+            method.name(),
+            m.accuracy(),
+            m.mean_final_branch_tokens(),
+            m.mean_total_tokens(),
+            m.peak_mem_mb(),
+            m.mean_wall_seconds(),
+        );
+    }
+    Ok(())
+}

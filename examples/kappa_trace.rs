@@ -1,0 +1,164 @@
+//! Annotated KAPPA walk-through: runs the three phases step by step on
+//! one problem and prints what the algorithm sees — per-branch KL /
+//! confidence / entropy signals, the robustified EMA, trajectory scores,
+//! and every pruning decision. Built entirely from the public engine +
+//! signal-pipeline API, so it doubles as an executable explanation of
+//! Algorithm 2.
+//!
+//!   cargo run --release --example kappa_trace -- --n 5
+
+use std::sync::Arc;
+
+use kappa::coordinator::config::{KappaConfig, SamplerConfig};
+use kappa::coordinator::signals::{combine_scores, BranchSignalState};
+use kappa::coordinator::{draft, sampler, schedule};
+use kappa::engine::Engine;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+use kappa::util::cli::Args;
+use kappa::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 5);
+    let seed = args.u64_or("seed", 11);
+    let prompt = args.str_or("prompt", "q: compute (7*6+4) mod 5.\na:");
+
+    let manifest = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+    let rt = Arc::new(Runtime::new()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, &args.str_or("model", "sm"))?);
+    let engine = Engine::new(model);
+
+    let kcfg = KappaConfig::default();
+    let scfg = SamplerConfig::default();
+    let tau = kcfg.effective_tau(n);
+    let tok = engine.tokenizer().clone();
+
+    println!("prompt: {prompt:?}");
+    println!("N={n}, τ={tau}, α={}, w={}, m={}, weights=({},{},{})\n", kcfg.ema_alpha, kcfg.window, kcfg.mom_buckets, kcfg.w_kl, kcfg.w_conf, kcfg.w_ent);
+
+    let mut state = engine.start(&prompt, n)?;
+    let mut rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+    let mut steps = 0usize;
+
+    // ---- Phase I: draft until pairwise inconsistency ----
+    println!("— Phase I (draft) —");
+    loop {
+        let seqs: Vec<&[u32]> =
+            state.live_branches().iter().map(|&bi| state.branches[bi].tokens.as_slice()).collect();
+        if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= kcfg.max_draft {
+            break;
+        }
+        let live = state.live_branches().to_vec();
+        let sampled: Vec<(u32, f64)> = live
+            .iter()
+            .enumerate()
+            .map(|(slot, &bi)| sampler::sample(state.logits_for_slot(slot), &scfg, &mut rngs[bi]))
+            .collect();
+        state.step(&engine, &sampled)?;
+        steps += 1;
+        state.compact_finished(&engine)?;
+    }
+    println!("cutoff c = {steps} (all {n} branches pairwise inconsistent)");
+    for &bi in state.live_branches() {
+        println!("  branch {bi}: {:?}", tok.decode(&state.branches[bi].tokens));
+    }
+
+    // ---- Phase II: scoring & gating ----
+    println!("\n— Phase II (scoring & gating over τ={tau} steps) —");
+    let mut sig: Vec<BranchSignalState> =
+        (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
+    let mut k = 0usize;
+    while k < tau && state.n_live() > 0 && state.remaining() > 0 {
+        k += 1;
+        let live = state.live_branches().to_vec();
+        let rows = live.len();
+        let slab = state.live_logits();
+        let (kl, conf, ent) = engine.model().signals(&slab, rows)?;
+        let mut ema = Vec::with_capacity(rows);
+        for (slot, &bi) in live.iter().enumerate() {
+            ema.push(sig[bi].update_kl(kl[slot] as f64, &kcfg));
+        }
+        let confs: Vec<f64> = conf.iter().map(|&x| x as f64).collect();
+        let ents: Vec<f64> = ent.iter().map(|&x| x as f64).collect();
+        combine_scores(&mut sig, &live, &ema, &confs, &ents, steps + 1, &kcfg);
+
+        let sampled: Vec<(u32, f64)> = live
+            .iter()
+            .enumerate()
+            .map(|(slot, &bi)| sampler::sample(state.logits_for_slot(slot), &scfg, &mut rngs[bi]))
+            .collect();
+        state.step(&engine, &sampled)?;
+        steps += 1;
+
+        let target = schedule::survivors(kcfg.schedule, n, k, tau);
+        print!("k={k:<3} target R={target:<3}");
+        for (slot, &bi) in live.iter().enumerate() {
+            print!(
+                "  b{bi}[kl={:.2} c={:.2} h={:.2} S={:+.3}]",
+                kl[slot], conf[slot], ent[slot], sig[bi].score
+            );
+        }
+        println!();
+
+        let candidates: Vec<usize> =
+            (0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned).collect();
+        let target = target.min(candidates.len()).max(1);
+        if target < candidates.len() {
+            let mut ranked = candidates.clone();
+            ranked.sort_by(|&a, &b| sig[b].score.partial_cmp(&sig[a].score).unwrap());
+            let keep = &ranked[..target];
+            let keep_live: Vec<usize> = state
+                .live_branches()
+                .iter()
+                .copied()
+                .filter(|bi| keep.contains(bi))
+                .collect();
+            for &bi in &candidates {
+                if !keep.contains(&bi) {
+                    println!("      ✂ prune branch {bi} (S={:+.3}) → bucket may shrink", sig[bi].score);
+                }
+            }
+            if keep_live.is_empty() {
+                break;
+            }
+            state.retain_branches(&engine, &keep_live)?;
+            for &bi in &candidates {
+                if !keep.contains(&bi) {
+                    state.branches[bi].pruned = true;
+                }
+            }
+        }
+        if !state.compact_finished(&engine)? {
+            break;
+        }
+    }
+
+    // ---- Phase III: continuation ----
+    let survivors: Vec<usize> =
+        (0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned).collect();
+    let chosen = survivors
+        .iter()
+        .copied()
+        .max_by(|&a, &b| sig[a].score.partial_cmp(&sig[b].score).unwrap())
+        .unwrap_or(0);
+    println!("\n— Phase III (continuation) — winner: branch {chosen} (S={:+.3})", sig[chosen].score);
+    if !state.branches[chosen].finished && state.live_branches().contains(&chosen) {
+        state.retain_branches(&engine, &[chosen])?;
+        let mut rng = rngs[chosen].clone();
+        while !state.all_finished() && state.remaining() > 0 && steps < 96 {
+            let (t, lp) = sampler::sample(state.logits_for_slot(0), &scfg, &mut rng);
+            state.step(&engine, &[(t, lp)])?;
+            steps += 1;
+        }
+    }
+    println!("output: {:?}", state.text_of(&engine, chosen));
+    println!(
+        "answer: {:?} | total tokens {} | peak mem {:.1} MB | {} decode calls, {} gathers",
+        kappa::data::eval::extract_answer(&state.text_of(&engine, chosen)),
+        state.total_tokens(),
+        state.mem.peak_mb(),
+        state.decode_calls,
+        state.gather_calls,
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: load the small model from `artifacts/`, decode one
+//! math word problem with KAPPA (N = 5 branches), print the chosen
+//! chain-of-thought and the extracted answer.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::coordinator::run_method;
+use kappa::data::eval;
+use kappa::engine::Engine;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (HLO text + weights + manifest).
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Arc::new(Runtime::new()?);
+    let model = Arc::new(LoadedModel::load(rt, &manifest, "sm")?);
+    let engine = Engine::new(model);
+
+    // 2. Ask a question in the dataset's format.
+    let prompt = "q: mia has 3 boxes of 4 pens each. how many pens in total?\na:";
+    println!("prompt: {prompt:?}");
+
+    // 3. Decode with KAPPA (paper defaults: T=0.7/top-k 20/top-p 0.95,
+    //    α=0.5, w=16, m=4, weights (0.7, 0.2, 0.1), linear schedule).
+    let cfg = RunConfig { method: Method::Kappa, n: 5, ..RunConfig::default() };
+    let t0 = std::time::Instant::now();
+    let out = run_method(&engine, prompt, &cfg, /*seed=*/ 7)?;
+
+    println!("chain-of-thought:{}", out.text.trim_end());
+    println!("answer: {:?}", eval::extract_answer(&out.text));
+    println!(
+        "branch {} won; generated {} tokens total across {} branches, peak memory {:.1} MB, {:.2}s",
+        out.chosen_branch,
+        out.metrics.total_tokens,
+        cfg.n,
+        out.metrics.peak_mem_bytes as f64 / (1024.0 * 1024.0),
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}

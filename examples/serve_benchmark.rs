@@ -1,0 +1,71 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Boots the batched request server on the trained small model, replays a
+//! mixed gsm/math request trace through the KAPPA policy, and reports the
+//! numbers a serving team cares about: throughput (req/s, tok/s), latency
+//! percentiles (queue + service), accuracy, token cost and peak memory —
+//! then repeats the trace with Full-BoN to show the serving-level effect
+//! of inference-time pruning. Results are recorded in EXPERIMENTS.md.
+//!
+//!   make artifacts && cargo run --release --example serve_benchmark
+//!   (flags: --requests 40 --model sm --n 5 --workers 1)
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::data::{eval, Dataset};
+use kappa::server::Server;
+use kappa::util::cli::Args;
+use kappa::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 40);
+    let model = args.str_or("model", "sm");
+    let workers = args.usize_or("workers", 1);
+    let n = args.usize_or("n", 5);
+    let dir = args.str_or("artifacts", "artifacts");
+
+    // Mixed trace: alternate gsm / math problems, like a real queue.
+    let gsm = Dataset::GsmSynth.generate(n_requests / 2 + 1, 1001);
+    let math = Dataset::MathSynth.generate(n_requests / 2 + 1, 2002);
+    let mut problems = Vec::new();
+    for i in 0..n_requests {
+        problems.push(if i % 2 == 0 { gsm[i / 2].clone() } else { math[i / 2].clone() });
+    }
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+
+    for method in [Method::Kappa, Method::Bon] {
+        let cfg = RunConfig { method, n, ..RunConfig::default() };
+        eprintln!("\n=== {} (N={n}, {workers} worker(s), {n_requests} requests) ===", method.name());
+        let server = Server::start(&dir, &model, workers, cfg)?;
+        let t0 = std::time::Instant::now();
+        let responses = server.submit_all(&prompts, 42);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut lat = Vec::new();
+        let mut correct = 0usize;
+        let mut tokens = 0usize;
+        let mut peak_mb: f64 = 0.0;
+        for (resp, prob) in responses.iter().zip(&problems) {
+            let r = resp.as_ref().expect("request failed");
+            lat.push(r.queue_seconds + r.service_seconds);
+            tokens += r.output.metrics.total_tokens;
+            peak_mb = peak_mb.max(r.output.metrics.peak_mem_bytes as f64 / (1024.0 * 1024.0));
+            if eval::is_correct(&r.output.text, prob.answer) {
+                correct += 1;
+            }
+        }
+        println!(
+            "{:6}: {:.2} req/s  {:.0} tok/s  acc {:.3}  latency p50 {:.2}s p95 {:.2}s  peak {:.1} MB  total {:.1}s",
+            method.name(),
+            n_requests as f64 / wall,
+            tokens as f64 / wall,
+            correct as f64 / n_requests as f64,
+            stats::percentile(&lat, 50.0),
+            stats::percentile(&lat, 95.0),
+            peak_mb,
+            wall,
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

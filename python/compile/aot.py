@@ -1,0 +1,245 @@
+"""AOT exporter: train → lower → serialize. The single Python entry point
+(``make artifacts`` runs ``python -m compile.aot``); after it finishes the
+Rust binary is self-contained.
+
+Exports, per model size m ∈ {sm, lg}:
+
+  artifacts/prefill_{m}_b1.hlo.txt        prompt pass (branches share prompts)
+  artifacts/decode_{m}_b{B}.hlo.txt       one step per batch bucket B
+  artifacts/gather_{m}_b{S}to{D}.hlo.txt  KV-cache gather: branch broadcast
+                                          (S=1) and post-prune compaction
+  artifacts/weights_{m}.bin               flat little-endian f32 params
+plus model-independent:
+  artifacts/signals_b{B}.hlo.txt          fused Pallas KL/conf/entropy kernel
+  artifacts/manifest.json                 the contract consumed by Rust
+
+Interchange is **HLO text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tokenizer, train
+from .kernels.signals import signals
+from .model import BATCH_BUCKETS, CONFIGS, ModelConfig, decode_step, prefill
+
+FORMAT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered → XLA HLO text (the only interchange the Rust side accepts)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def gather_pairs(buckets=BATCH_BUCKETS):
+    """(src, dst) bucket pairs the engine needs: broadcast-from-1 after
+    prefill, and shrink-compaction after pruning."""
+    pairs = []
+    for s in buckets:
+        for d in buckets:
+            if s == 1 or d <= s:
+                pairs.append((s, d))
+    return sorted(set(pairs))
+
+
+def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUCKETS):
+    """Lower all graphs for one model size; returns manifest fragment."""
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+    arts: dict = {"decode": {}, "gather": {}}
+
+    def as_dict(flat):
+        return dict(zip(names, flat))
+
+    # --- prefill (b=1) ---
+    def prefill_fn(*args):
+        p = as_dict(args[:n_p])
+        tokens, length = args[n_p], args[n_p + 1]
+        return prefill(cfg, p, tokens, length)
+
+    lowered = jax.jit(prefill_fn).lower(
+        *param_specs, _spec((1, cfg.prompt_len), jnp.int32), _spec((), jnp.int32)
+    )
+    arts["prefill"] = _write(out_dir, f"prefill_{cfg.name}_b1.hlo.txt", to_hlo_text(lowered))
+
+    # --- decode per bucket ---
+    for b in buckets:
+        def decode_fn(*args):
+            p = as_dict(args[:n_p])
+            token, pos, kc, vc = args[n_p : n_p + 4]
+            return decode_step(cfg, p, token, pos, kc, vc, use_pallas=True)
+
+        lowered = jax.jit(decode_fn).lower(
+            *param_specs,
+            _spec((b,), jnp.int32),
+            _spec((), jnp.int32),
+            _spec((lyr, b, h, s, dh)),
+            _spec((lyr, b, h, s, dh)),
+        )
+        arts["decode"][str(b)] = _write(
+            out_dir, f"decode_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lowered)
+        )
+
+    # --- KV gather (broadcast / compaction) ---
+    for src, dst in gather_pairs(buckets):
+        def gather_fn(kc, vc, idx):
+            return jnp.take(kc, idx, axis=1), jnp.take(vc, idx, axis=1)
+
+        lowered = jax.jit(gather_fn).lower(
+            _spec((lyr, src, h, s, dh)), _spec((lyr, src, h, s, dh)), _spec((dst,), jnp.int32)
+        )
+        arts["gather"][f"{src}to{dst}"] = _write(
+            out_dir, f"gather_{cfg.name}_b{src}to{dst}.hlo.txt", to_hlo_text(lowered)
+        )
+
+    # --- weights + param table ---
+    offset = 0
+    table = []
+    blobs = []
+    for n in names:
+        arr = np.asarray(params[n], np.float32)
+        assert arr.shape == shapes[n], (n, arr.shape, shapes[n])
+        blobs.append(arr.tobytes())
+        table.append({"name": n, "shape": list(arr.shape), "offset": offset, "numel": arr.size})
+        offset += arr.size
+    weights_file = f"weights_{cfg.name}.bin"
+    with open(os.path.join(out_dir, weights_file), "wb") as f:
+        f.write(b"".join(blobs))
+
+    return {
+        "config": {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": cfg.max_seq,
+            "prompt_len": cfg.prompt_len,
+            "vocab": cfg.vocab,
+            "n_params": cfg.n_params(),
+        },
+        "params": table,
+        "weights_file": weights_file,
+        "artifacts": arts,
+    }
+
+
+def export_signals(out_dir: str, vocab: int, buckets=BATCH_BUCKETS):
+    out = {}
+    for b in buckets:
+        lowered = jax.jit(lambda lg, q: signals(lg, q)).lower(
+            _spec((b, vocab)), _spec((vocab,))
+        )
+        out[str(b)] = _write(out_dir, f"signals_b{b}.hlo.txt", to_hlo_text(lowered))
+    return out
+
+
+def save_params_npz(params, path):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params_npz(path):
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="sm,lg")
+    ap.add_argument("--steps", type=int, default=None, help="override train steps (smoke builds)")
+    ap.add_argument("--corpus", type=int, default=None)
+    ap.add_argument("--retrain", action="store_true", help="ignore cached params npz")
+    ap.add_argument(
+        "--continue-from-cache",
+        action="store_true",
+        help="continue training from the cached params npz for --steps more steps",
+    )
+    ap.add_argument("--peak-lr", type=float, default=None)
+    ap.add_argument("--eval-n", type=int, default=50)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "vocab": {
+            "chars": tokenizer.VOCAB_CHARS,
+            "vocab_size": tokenizer.VOCAB_SIZE,
+            "pad": tokenizer.PAD_ID,
+            "bos": tokenizer.BOS_ID,
+            "eos": tokenizer.EOS_ID,
+        },
+        "buckets": list(BATCH_BUCKETS),
+        "models": {},
+        "signals": export_signals(out_dir, tokenizer.VOCAB_SIZE),
+    }
+
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        cache = os.path.join(out_dir, f"params_{name}.npz")
+        if os.path.exists(cache) and args.continue_from_cache:
+            print(f"[aot] continuing training for {name} from {cache}")
+            params, metrics = train.train_model(
+                cfg,
+                steps=args.steps,
+                corpus_n=args.corpus,
+                peak_lr=args.peak_lr,
+                init_from=load_params_npz(cache),
+            )
+            save_params_npz(params, cache)
+        elif os.path.exists(cache) and not args.retrain:
+            print(f"[aot] loading cached params for {name} from {cache}")
+            params, metrics = load_params_npz(cache), {"cached": True}
+        else:
+            params, metrics = train.train_model(
+                cfg, steps=args.steps, corpus_n=args.corpus, peak_lr=args.peak_lr
+            )
+            save_params_npz(params, cache)
+        frag = export_model(cfg, params, out_dir)
+        if args.eval_n:
+            accs = {}
+            for ds in ("gsm_synth", "math_synth"):
+                accs[ds] = train.greedy_eval(cfg, params, ds, n=args.eval_n)
+                print(f"[aot] {name} greedy acc on {ds}: {accs[ds]:.3f}")
+            metrics["greedy_acc"] = accs
+        frag["training"] = metrics
+        manifest["models"][name] = frag
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest + artifacts to {out_dir} in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

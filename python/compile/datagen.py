@@ -1,0 +1,176 @@
+"""Synthetic dataset generators (training-corpus side).
+
+Two datasets mirror the paper's benchmarks in *shape*:
+
+- ``gsm_synth``  — GSM8K stand-in: 2–3 step arithmetic word problems with a
+  short natural-language surface form and an exact integer answer.
+- ``math_synth`` — MATH500 stand-in: harder 3–4 step expression / modular
+  arithmetic problems (larger operands, negative results, ``mod``).
+
+Every sample is ``(question, chain_of_thought, answer:int)``. The serialized
+training string is::
+
+    <bos>q: {question}\na:{cot} #### {answer}\n<eos>
+
+The Rust evaluator (``rust/src/data/``) re-implements exactly the same
+templates so that serving-time problems are in-distribution for the
+build-time-trained models. **Template strings are a contract** — change them
+in both places or accuracy collapses.
+
+Randomness uses an explicit linear-congruential generator (same constants as
+``rust/src/util/rng.rs``'s split-mix fallback) so corpora are reproducible
+across machines and languages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class Lcg:
+    """64-bit splitmix-style deterministic generator (matches rust util::rng::SplitMix64)."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n)."""
+        return self.next_u64() % n
+
+    def range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] inclusive."""
+        return lo + self.below(hi - lo + 1)
+
+
+@dataclass
+class Sample:
+    question: str
+    cot: str
+    answer: int
+
+    @property
+    def response(self) -> str:
+        return f"{self.cot} #### {self.answer}"
+
+    def prompt(self) -> str:
+        return f"q: {self.question}\na:"
+
+    def full_text(self) -> str:
+        return f"q: {self.question}\na:{self.response}\n"
+
+
+NAMES = ["tom", "amy", "sam", "mia", "leo", "zoe", "max", "eva"]
+ITEMS = ["apples", "coins", "books", "pens", "cards", "shells"]
+
+
+def gen_gsm(rng: Lcg) -> Sample:
+    """One GSM-synth sample. Mirrors rust/src/data/gsm.rs exactly."""
+    t = rng.below(5)
+    name = NAMES[rng.below(len(NAMES))]
+    item = ITEMS[rng.below(len(ITEMS))]
+    if t == 0:
+        a, b = rng.range(10, 89), rng.range(10, 89)
+        c = rng.range(2, min(a + b - 1, 60))
+        x, y = a + b, a + b - c
+        q = f"{name} has {a} {item}, buys {b} more, gives {c} away. how many {item} now?"
+        cot = f" {a}+{b}={x}. {x}-{c}={y}."
+        return Sample(q, cot, y)
+    if t == 1:
+        a, b = rng.range(10, 89), rng.range(10, 89)
+        y = a + b
+        q = f"{name} has {a} {item} and finds {b} more. how many {item} in total?"
+        cot = f" {a}+{b}={y}."
+        return Sample(q, cot, y)
+    if t == 2:
+        a, b = rng.range(2, 9), rng.range(3, 12)
+        y = a * b
+        q = f"{name} has {a} boxes of {b} {item} each. how many {item} in total?"
+        cot = f" {a}*{b}={y}."
+        return Sample(q, cot, y)
+    if t == 3:
+        a = rng.range(30, 99)
+        c = rng.range(5, a - 5)
+        b = rng.range(5, 60)
+        x, y = a - c, a - c + b
+        q = f"{name} has {a} {item}, loses {c}, then finds {b}. how many {item} now?"
+        cot = f" {a}-{c}={x}. {x}+{b}={y}."
+        return Sample(q, cot, y)
+    a = rng.range(10, 60)
+    b, k = rng.range(2, 9), rng.range(2, 9)
+    x, y = b * k, a + b * k
+    q = f"{name} had {a} {item}, then bought {b} packs of {k}. how many {item} now?"
+    cot = f" {b}*{k}={x}. {a}+{x}={y}."
+    return Sample(q, cot, y)
+
+
+def gen_math(rng: Lcg) -> Sample:
+    """One MATH-synth sample. Mirrors rust/src/data/math.rs exactly."""
+    t = rng.below(5)
+    if t == 0:
+        a, b = rng.range(3, 19), rng.range(3, 19)
+        c, d = rng.range(2, 49), rng.range(3, 19)
+        x = a * b
+        y = x + c
+        z = y % d
+        q = f"compute ({a}*{b}+{c}) mod {d}."
+        cot = f" {a}*{b}={x}. {x}+{c}={y}. {y} mod {d}={z}."
+        return Sample(q, cot, z)
+    if t == 1:
+        a, b = rng.range(5, 49), rng.range(5, 49)
+        c, d = rng.range(5, 29), rng.range(5, 29)
+        x, y = a + b, c - d
+        z = x * y
+        q = f"compute ({a}+{b})*({c}-{d})."
+        cot = f" {a}+{b}={x}. {c}-{d}={y}. {x}*{y}={z}."
+        return Sample(q, cot, z)
+    if t == 2:
+        a, b = rng.range(3, 19), rng.range(3, 19)
+        c, d = rng.range(3, 19), rng.range(3, 19)
+        x, y = a * b, c * d
+        z = x - y
+        q = f"compute {a}*{b}-{c}*{d}."
+        cot = f" {a}*{b}={x}. {c}*{d}={y}. {x}-{y}={z}."
+        return Sample(q, cot, z)
+    if t == 3:
+        a = rng.range(4, 25)
+        b = rng.range(3, 99)
+        x = a * a
+        z = x + b
+        q = f"let x={a}. compute x*x+{b}."
+        cot = f" {a}*{a}={x}. {x}+{b}={z}."
+        return Sample(q, cot, z)
+    a, b, c = rng.range(10, 89), rng.range(10, 89), rng.range(10, 89)
+    d = rng.range(3, 19)
+    x = a + b
+    y = x + c
+    z = y % d
+    q = f"compute ({a}+{b}+{c}) mod {d}."
+    cot = f" {a}+{b}={x}. {x}+{c}={y}. {y} mod {d}={z}."
+    return Sample(q, cot, z)
+
+
+GENERATORS = {"gsm_synth": gen_gsm, "math_synth": gen_math}
+
+
+def generate(dataset: str, n: int, seed: int) -> list[Sample]:
+    rng = Lcg(seed)
+    gen = GENERATORS[dataset]
+    return [gen(rng) for _ in range(n)]
+
+
+def mixed_corpus(n: int, seed: int) -> list[Sample]:
+    """50/50 gsm/math mix used for training both model sizes."""
+    rng = Lcg(seed)
+    out = []
+    for i in range(n):
+        out.append(gen_gsm(rng) if i % 2 == 0 else gen_math(rng))
+    return out

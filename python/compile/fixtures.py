@@ -1,0 +1,86 @@
+"""Cross-language numeric fixtures.
+
+Replays a short greedy generation for each exported model **in JAX** and
+records the token trace plus the prefill logits row. The Rust integration
+suite (rust/tests/runtime_integration.rs) replays the same prompt through
+the PJRT path and asserts agreement — locking the whole
+artifact/weights/runtime chain across the language boundary.
+
+Run after `compile.aot` (uses the cached params npz):
+
+    python -m compile.fixtures --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import tokenizer
+from .aot import load_params_npz
+from .model import CONFIGS, decode_step, prefill
+
+FIXTURE_PROMPTS = {
+    "gsm": "q: mia has 3 boxes of 4 pens each. how many pens in total?\na:",
+    "math": "q: compute (4*5+3) mod 7.\na:",
+}
+
+
+def greedy_trace(cfg, params, prompt: str, max_new: int = 48):
+    ids, length = tokenizer.encode_prompt(prompt, cfg.prompt_len)
+    pre = jax.jit(lambda p, t, l: prefill(cfg, p, t, l))
+    dec = jax.jit(lambda p, tok, pos, kc, vc: decode_step(cfg, p, tok, pos, kc, vc, use_pallas=True))
+    logits, kc, vc = pre(params, jnp.asarray([ids], jnp.int32), jnp.int32(length))
+    first_logits = [float(x) for x in logits[0]]
+    out = []
+    pos = length
+    tok = int(jnp.argmax(logits[0]))
+    for _ in range(max_new):
+        if tok == tokenizer.EOS_ID or pos >= cfg.max_seq:
+            break
+        out.append(tok)
+        logits, kc, vc = dec(params, jnp.asarray([tok], jnp.int32), jnp.int32(pos), kc, vc)
+        pos += 1
+        tok = int(jnp.argmax(logits[0]))
+    return {
+        "prompt": prompt,
+        "prompt_len": length,
+        "tokens": out,
+        "text": tokenizer.decode(out),
+        "first_logits": first_logits,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--max-new", type=int, default=48)
+    args = ap.parse_args()
+
+    fixtures = {}
+    for name, cfg in CONFIGS.items():
+        npz = os.path.join(args.out, f"params_{name}.npz")
+        if not os.path.exists(npz):
+            print(f"[fixtures] skipping {name}: no cached params at {npz}")
+            continue
+        params = load_params_npz(npz)
+        fixtures[name] = {
+            key: greedy_trace(cfg, params, prompt, args.max_new)
+            for key, prompt in FIXTURE_PROMPTS.items()
+        }
+        print(f"[fixtures] {name}: " + ", ".join(
+            f"{k}={fixtures[name][k]['text']!r}" for k in fixtures[name]
+        ))
+
+    path = os.path.join(args.out, "fixtures.json")
+    with open(path, "w") as f:
+        json.dump(fixtures, f, indent=1)
+    print(f"[fixtures] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

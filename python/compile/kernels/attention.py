@@ -1,0 +1,86 @@
+"""Fused single-query decode attention kernel (Pallas, L1).
+
+The decode hot-spot: at each generation step every alive branch attends its
+single new query against the whole KV cache. Rethought for TPU-style
+Pallas (DESIGN.md §Hardware-Adaptation):
+
+- grid = (H,): one program instance per head; each program streams the
+  whole branch-batch tile for its head — q [B, Dh], K/V [B, S, Dh] — into
+  VMEM (B·S·Dh·4 B ≈ 0.7 MiB/head at B=32, S=224, Dh=32: comfortably
+  resident) and computes the masked online softmax + p·V contraction for
+  all branches at once. The q·Kᵀ and p·V products are the MXU work on
+  real hardware.
+- masking uses an additive bias row (0 for slots ≤ pos, -1e30 beyond),
+  precomputed in the L2 graph, so the kernel needs no scalar plumbing.
+
+Why per-head rather than per-(branch, head): Pallas `interpret=True`
+lowers the grid to a *sequential* XLA while-loop; a (B, H) grid costs
+B·H loop iterations each carrying full-array copies (measured 335 ms per
+decode step at B=32 on the CPU testbed — see EXPERIMENTS.md §Perf). A
+per-head grid keeps the same VMEM story on TPU (streaming K/V tiles per
+program) while the batch dimension stays vectorized VPU/MXU work.
+
+Lowered with ``interpret=True`` for CPU-PJRT execution; numerics asserted
+against ``ref.decode_attention_ref`` in ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    """One head: q [B, Dh], K/V [B, S, Dh], bias [S] → out [B, Dh]."""
+    q = q_ref[...].astype(jnp.float32)  # [B, Dh]
+    k = k_ref[...].astype(jnp.float32)  # [B, S, Dh]
+    v = v_ref[...].astype(jnp.float32)  # [B, S, Dh]
+    bias = bias_ref[...].astype(jnp.float32)  # [S]
+
+    # q·Kᵀ for every branch of this head (MXU contraction on TPU).
+    scores = jnp.einsum("bsd,bd->bs", k, q) * scale + bias[None, :]  # [B, S]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores - m)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum("bs,bsd->bd", w, v) / denom  # [B, Dh]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, bias, *, interpret: bool = True):
+    """Fused masked single-query attention over the KV cache.
+
+    Args:
+      q:    [B, H, Dh] current-step queries.
+      k:    [B, H, S, Dh] key cache.
+      v:    [B, H, S, Dh] value cache.
+      bias: [S] additive mask row (0 where slot ≤ pos, -1e30 beyond). Shared
+        by all branches: every branch of a request sits at the same
+        position, which is what makes the fixed-shape bucket batching of
+        the Rust engine sound.
+      interpret: Pallas interpret mode (mandatory on CPU PJRT).
+
+    Returns:
+      [B, H, Dh] attention outputs (float32).
+    """
+    b, h, s, dh = k.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_decode_attn_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            # None dims are squeezed away inside the kernel body; the grid
+            # index j selects the head.
+            pl.BlockSpec((b, None, dh), lambda j: (0, j, 0)),
+            pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((s,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, None, dh), lambda j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, bias)
+    return out

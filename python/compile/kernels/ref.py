@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations that the Pallas kernels in
+``signals.py`` and ``attention.py`` are tested against (``pytest
+python/tests``). They are also importable by ``model.py`` through the
+``use_pallas=False`` escape hatch so the whole L2 graph can be built without
+Pallas for differential testing.
+
+Numerics follow the paper's Algorithm 2 exactly:
+  confidence  C = max_v p(v)
+  entropy     H = -sum_v p(v) * log(p(v) + eps)
+  KL          D = KL(p || q) = sum_v p(v) * (log p(v) - log q(v))
+with p = softmax(logits), q = softmax(q_logits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def log_softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=axis, keepdims=True))
+
+
+def signals_ref(logits: jax.Array, q_logits: jax.Array):
+    """Reference latent-informativeness signals.
+
+    Args:
+      logits:   [B, V] next-token logits per branch.
+      q_logits: [V] unconditional (BOS-context) reference logits.
+
+    Returns:
+      (kl [B], confidence [B], entropy [B]) all float32.
+    """
+    logp = log_softmax(logits.astype(jnp.float32))
+    p = jnp.exp(logp)
+    logq = log_softmax(q_logits.astype(jnp.float32))
+    kl = jnp.sum(p * (logp - logq[None, :]), axis=-1)
+    conf = jnp.max(p, axis=-1)
+    ent = -jnp.sum(p * jnp.log(p + EPS), axis=-1)
+    return kl, conf, ent
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Reference single-query attention over a KV cache.
+
+    Args:
+      q:   [B, H, Dh] query for the current position.
+      k:   [B, H, S, Dh] key cache (slots > pos are garbage).
+      v:   [B, H, S, Dh] value cache.
+      pos: scalar int32 — current position; keys at slot j are valid iff
+           j <= pos.
+
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    s = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    mask = jnp.arange(s)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", w, v)

@@ -1,0 +1,97 @@
+"""Fused latent-informativeness signal kernel (Pallas, L1).
+
+One VMEM-resident pass over a ``[block_b, V]`` tile of branch logits
+computes all three of the paper's per-step signals simultaneously:
+
+  KL(p‖q)   — information content vs the unconditional reference q,
+  confidence — max_v p(v),
+  entropy    — -Σ p log(p+ε),
+
+instead of four separate softmax/max/entropy/KL lowerings. On a real TPU
+this saves ~4× the HBM reads of the logits tensor (the tile plus the q row
+fit trivially in VMEM: 32×64 f32 = 8 KiB + 256 B); the reductions run on
+the VPU. On this image the kernel is lowered with ``interpret=True`` so it
+becomes plain HLO and runs on the CPU PJRT client — the *structure*
+(single fused pass, row-wise reductions, [-3,3]-safe numerics) is what we
+validate; TPU perf is estimated in DESIGN.md §7.
+
+Contract mirrored by ``ref.signals_ref`` and asserted in
+``python/tests/test_signals.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+
+def _signals_kernel(logits_ref, q_ref, kl_ref, conf_ref, ent_ref):
+    """Kernel body: one [block_b, V] tile → three [block_b] outputs."""
+    x = logits_ref[...].astype(jnp.float32)  # [bb, V]
+    q = q_ref[...].astype(jnp.float32)  # [V]
+
+    # Stable log-softmax of the branch rows.
+    m = jnp.max(x, axis=-1, keepdims=True)
+    sx = x - m
+    lse = jnp.log(jnp.sum(jnp.exp(sx), axis=-1, keepdims=True))
+    logp = sx - lse
+    p = jnp.exp(logp)
+
+    # Stable log-softmax of the reference row (recomputed per tile; it is a
+    # 64-float vector, cheaper to recompute on the VPU than to stage).
+    qm = jnp.max(q)
+    sq = q - qm
+    logq = sq - jnp.log(jnp.sum(jnp.exp(sq)))
+
+    kl_ref[...] = jnp.sum(p * (logp - logq[None, :]), axis=-1)
+    conf_ref[...] = jnp.max(p, axis=-1)
+    ent_ref[...] = -jnp.sum(p * jnp.log(p + EPS), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def signals(logits: jax.Array, q_logits: jax.Array, *, block_b: int = 32, interpret: bool = True):
+    """Fused (KL, confidence, entropy) over branch logits.
+
+    Args:
+      logits:   [B, V] float — per-branch next-token logits.
+      q_logits: [V] float — unconditional reference logits.
+      block_b:  branch-tile size (grid dimension).
+      interpret: lower the Pallas kernel in interpret mode (required for
+        CPU-PJRT execution; see DESIGN.md §Hardware-Adaptation).
+
+    Returns:
+      (kl, confidence, entropy), each [B] float32.
+    """
+    b, v = logits.shape
+    bb = min(block_b, b)
+    if b % bb != 0:  # pad to a whole number of tiles
+        pad = (-b) % bb
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    padded_b = logits.shape[0]
+
+    grid = (padded_b // bb,)
+    kl, conf, ent = pl.pallas_call(
+        _signals_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, v), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded_b,), jnp.float32),
+            jax.ShapeDtypeStruct((padded_b,), jnp.float32),
+            jax.ShapeDtypeStruct((padded_b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, q_logits)
+    return kl[:b], conf[:b], ent[:b]

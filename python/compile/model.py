@@ -1,0 +1,249 @@
+"""L2: GPT-style decoder-only transformer in JAX (build-time only).
+
+Defines the compute graphs that are AOT-lowered to HLO text by ``aot.py``
+and executed from the Rust engine via PJRT:
+
+- ``prefill(params, tokens[B,P], length)`` — full causal pass over the
+  (padded) prompt; returns last-real-token logits and the primed KV caches.
+- ``decode_step(params, token[B], pos, k_cache, v_cache)`` — one
+  autoregressive step for every branch in the batch; calls the Pallas
+  decode-attention kernel (L1) and returns logits + updated caches.
+
+Model-size roles (paper substitution, DESIGN.md §2):
+- ``sm`` plays DeepSeek-R1-Distill-Qwen-1.5B (weaker reasoner),
+- ``lg`` plays Qwen2.5-7B-Instruct (stronger reasoner).
+
+Parameters are a flat ``dict[str, jax.Array]`` with deterministic ordering
+(``param_names``) — the same order in which ``aot.py`` writes ``weights.bin``
+and in which the Rust runtime feeds buffers to the executables.
+
+KV-cache layout: ``[layers, B, heads, max_seq, head_dim]`` float32. All
+branches of a request share the same position (they start from one prompt
+and step in lockstep), so ``pos`` is a scalar — this is what makes the Rust
+engine's fixed-shape bucket batching sound.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import tokenizer
+from .kernels import ref as kref
+from .kernels.attention import decode_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for one model size."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    max_seq: int = 224
+    prompt_len: int = 96
+    vocab: int = tokenizer.VOCAB_SIZE
+    ffn_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.d_model * self.ffn_mult
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        """Deterministic (insertion-ordered) name → shape map."""
+        d, v, s, f = self.d_model, self.vocab, self.max_seq, self.d_ffn
+        shapes: dict[str, tuple[int, ...]] = {
+            "tok_emb": (v, d),
+            "pos_emb": (s, d),
+        }
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes[p + "ln1_g"] = (d,)
+            shapes[p + "ln1_b"] = (d,)
+            shapes[p + "wq"] = (d, d)
+            shapes[p + "wk"] = (d, d)
+            shapes[p + "wv"] = (d, d)
+            shapes[p + "wo"] = (d, d)
+            shapes[p + "ln2_g"] = (d,)
+            shapes[p + "ln2_b"] = (d,)
+            shapes[p + "w1"] = (d, f)
+            shapes[p + "b1"] = (f,)
+            shapes[p + "w2"] = (f, d)
+            shapes[p + "b2"] = (d,)
+        shapes["lnf_g"] = (d,)
+        shapes["lnf_b"] = (d,)
+        shapes["head"] = (d, v)
+        return shapes
+
+    def param_names(self) -> list[str]:
+        return list(self.param_shapes().keys())
+
+    def n_params(self) -> int:
+        return sum(math.prod(s) for s in self.param_shapes().values())
+
+
+# The two model sizes used throughout the repo (see DESIGN.md §2).
+CONFIGS: dict[str, ModelConfig] = {
+    # Sized for the single-core CPU testbed (see DESIGN.md §2): "sm" plays
+    # the weak reasoner (DeepSeek-1.5B role), "lg" the strong one (Qwen-7B
+    # role). What matters for the paper's claims is the capability *gap*.
+    "sm": ModelConfig(name="sm", d_model=96, n_layers=2, n_heads=4),
+    "lg": ModelConfig(name="lg", d_model=160, n_layers=3, n_heads=5),
+}
+
+# Batch buckets the Rust engine compacts alive branch sets into.
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    params = {}
+    shapes = cfg.param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for (name, shape), k in zip(shapes.items(), keys):
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w2")):
+                std *= resid_scale
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):  # [..., d] -> [..., H, Dh]
+    return x.reshape(*x.shape[:-1], n_heads, x.shape[-1] // n_heads)
+
+
+def prefill(cfg: ModelConfig, params, tokens, length):
+    """Full causal pass over the padded prompt.
+
+    Args:
+      tokens: [B, P] int32, BOS + prompt chars, PAD beyond ``length``.
+      length: scalar int32 — true prompt length (shared across the batch:
+        branches replicate one request's prompt).
+
+    Returns:
+      logits [B, V] at position ``length - 1``,
+      k_cache, v_cache [L, B, H, S, Dh] primed in slots [0, P).
+    """
+    b, p = tokens.shape
+    h, dh, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :p, :]
+
+    causal = jnp.tril(jnp.ones((p, p), jnp.bool_))
+    bias = jnp.where(causal, 0.0, -1e30)[None, None, :, :]  # [1,1,P,P]
+    scale = 1.0 / math.sqrt(dh)
+
+    k_cache = jnp.zeros((cfg.n_layers, b, h, s, dh), jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, b, h, s, dh), jnp.float32)
+
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        hdd = _ln(x, params[pref + "ln1_g"], params[pref + "ln1_b"])
+        q = _split_heads(hdd @ params[pref + "wq"], h)  # [B,P,H,Dh]
+        k = _split_heads(hdd @ params[pref + "wk"], h)
+        v = _split_heads(hdd @ params[pref + "wv"], h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias
+        w = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, p, cfg.d_model)
+        x = x + att @ params[pref + "wo"]
+        hdd = _ln(x, params[pref + "ln2_g"], params[pref + "ln2_b"])
+        x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
+
+        k_cache = k_cache.at[i, :, :, :p, :].set(k.transpose(0, 2, 1, 3))
+        v_cache = v_cache.at[i, :, :, :p, :].set(v.transpose(0, 2, 1, 3))
+
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["head"]  # [B, P, V]
+    last = jnp.take_along_axis(
+        logits, (length - 1)[None, None, None].astype(jnp.int32).repeat(b, 0), axis=1
+    )[:, 0, :]
+    return last, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_pallas=True):
+    """One autoregressive step for every branch in the bucket.
+
+    Args:
+      token: [B] int32 — tokens sampled at the previous step.
+      pos:   scalar int32 — slot this step writes (== current seq length).
+      k_cache, v_cache: [L, B, H, S, Dh].
+      use_pallas: route attention through the L1 Pallas kernel (default) or
+        the pure-jnp oracle (differential testing).
+
+    Returns:
+      logits [B, V], updated caches.
+    """
+    b = token.shape[0]
+    h, dh, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, d]
+
+    # Additive mask row shared by all branches: slots <= pos are visible
+    # (the new K/V is written at slot pos before attention).
+    bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        hdd = _ln(x, params[pref + "ln1_g"], params[pref + "ln1_b"])
+        q = _split_heads(hdd @ params[pref + "wq"], h)  # [B,H,Dh]
+        k = _split_heads(hdd @ params[pref + "wk"], h)
+        v = _split_heads(hdd @ params[pref + "wv"], h)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, :, :, None, :], (i, 0, 0, pos, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, :, :, None, :], (i, 0, 0, pos, 0)
+        )
+        if use_pallas:
+            att = decode_attention(q, k_cache[i], v_cache[i], bias)
+        else:
+            att = kref.decode_attention_ref(q, k_cache[i], v_cache[i], pos)
+        x = x + att.reshape(b, cfg.d_model) @ params[pref + "wo"]
+        hdd = _ln(x, params[pref + "ln2_g"], params[pref + "ln2_b"])
+        x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
+
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"], k_cache, v_cache
+
+
+def forward_train(cfg: ModelConfig, params, tokens):
+    """Teacher-forced logits over a [B, T] batch (training only, no cache)."""
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    bias = jnp.where(causal, 0.0, -1e30)[None, None, :, :]
+    scale = 1.0 / math.sqrt(dh)
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        hdd = _ln(x, params[pref + "ln1_g"], params[pref + "ln1_b"])
+        q = _split_heads(hdd @ params[pref + "wq"], h)
+        k = _split_heads(hdd @ params[pref + "wk"], h)
+        v = _split_heads(hdd @ params[pref + "wv"], h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias
+        w = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, t, cfg.d_model)
+        x = x + att @ params[pref + "wo"]
+        hdd = _ln(x, params[pref + "ln2_g"], params[pref + "ln2_b"])
+        x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"]

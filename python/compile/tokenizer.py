@@ -1,0 +1,55 @@
+"""Character-level tokenizer shared between the Python compile path and the
+Rust serving path.
+
+The vocabulary is a *fixed contract*: the Rust tokenizer
+(``rust/src/tokenizer/mod.rs``) re-implements exactly this mapping, and the
+AOT manifest embeds ``VOCAB_CHARS`` so the Rust side can verify agreement at
+startup. Any change here is an artifact-breaking change.
+
+Layout:
+  id 0 = <pad>, id 1 = <bos>, id 2 = <eos>,
+  ids 3.. = ``VOCAB_CHARS[i - 3]``,
+  remaining ids up to ``VOCAB_SIZE`` are unused padding slots (so the model's
+  logit dimension is a friendly power of two for the Pallas kernels).
+"""
+
+from __future__ import annotations
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+NUM_SPECIALS = 3
+
+# 51 printable characters; everything the synthetic datasets emit.
+VOCAB_CHARS = "\n 0123456789+-*/=().,?#%:abcdefghijklmnopqrstuvwxyz'"
+
+# Logit dimension (power of two; last ids are unused).
+VOCAB_SIZE = 64
+
+_CHAR_TO_ID = {c: i + NUM_SPECIALS for i, c in enumerate(VOCAB_CHARS)}
+_ID_TO_CHAR = {i + NUM_SPECIALS: c for i, c in enumerate(VOCAB_CHARS)}
+
+assert len(VOCAB_CHARS) + NUM_SPECIALS <= VOCAB_SIZE
+
+
+def encode(text: str) -> list[int]:
+    """Encode ``text`` to token ids. Raises on out-of-vocabulary chars."""
+    try:
+        return [_CHAR_TO_ID[c] for c in text]
+    except KeyError as e:  # pragma: no cover - guarded by dataset generators
+        raise ValueError(f"out-of-vocabulary character: {e.args[0]!r}") from None
+
+
+def decode(ids) -> str:
+    """Decode token ids to text, skipping specials and unused slots."""
+    return "".join(_ID_TO_CHAR.get(int(i), "") for i in ids)
+
+
+def encode_prompt(text: str, max_len: int) -> tuple[list[int], int]:
+    """BOS + text, padded with PAD to ``max_len``. Returns (ids, true_len)."""
+    ids = [BOS_ID] + encode(text)
+    if len(ids) > max_len:
+        raise ValueError(f"prompt too long: {len(ids)} > {max_len}")
+    true_len = len(ids)
+    ids = ids + [PAD_ID] * (max_len - len(ids))
+    return ids, true_len

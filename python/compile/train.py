@@ -1,0 +1,163 @@
+"""Build-time trainer for the two tiny reasoner models.
+
+Runs ONCE inside ``make artifacts`` (never on the request path): trains
+``sm`` and ``lg`` on a mixed gsm/math synthetic corpus with a hand-rolled
+AdamW (the image has no optax) and hands the trained parameters to
+``aot.py`` for export.
+
+Loss is next-token cross-entropy masked to the *response* region
+(CoT + answer + EOS) — the model learns to reason, not to memorize prompts.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, tokenizer
+from .model import CONFIGS, ModelConfig, forward_train, init_params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _loss_fn(params, cfg: ModelConfig, tokens, mask):
+    """Masked next-token CE. tokens [B,T] int32; mask [B,T] f32 on targets."""
+    logits = forward_train(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def train_step(params, opt, cfg: ModelConfig, tokens, mask, lr, *, b1=0.9, b2=0.98, eps=1e-9, wd=0.01):
+    loss, grads = jax.value_and_grad(_loss_fn)(params, cfg, tokens, mask)
+    step = opt["step"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1, bc2 = 1 - b1**t, 1 - b2**t
+
+    def upd(p, m_, v_):
+        return p - lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + wd * p)
+
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}, loss
+
+
+def build_corpus(n: int, seed: int, seq_len: int):
+    """Tokenized corpus: tokens [n, seq_len] int32, mask [n, seq_len] f32.
+
+    Each row: <bos> prompt response \n <eos> <pad>*. Mask is 1 on the
+    response region (incl. the terminating EOS), 0 on prompt and padding.
+    """
+    samples = datagen.mixed_corpus(n, seed)
+    toks = np.zeros((n, seq_len), np.int32)
+    mask = np.zeros((n, seq_len), np.float32)
+    kept = 0
+    for s in samples:
+        prompt_ids = [tokenizer.BOS_ID] + tokenizer.encode(s.prompt())
+        resp_ids = tokenizer.encode(s.response + "\n") + [tokenizer.EOS_ID]
+        ids = prompt_ids + resp_ids
+        if len(ids) > seq_len:
+            continue
+        toks[kept, : len(ids)] = ids
+        mask[kept, len(prompt_ids) : len(ids)] = 1.0
+        kept += 1
+    return toks[:kept], mask[:kept]
+
+
+def cosine_lr(step, total, peak, warmup=100):
+    if step < warmup:
+        return peak * step / max(warmup, 1)
+    frac = (step - warmup) / max(total - warmup, 1)
+    return peak * 0.5 * (1 + math.cos(math.pi * frac))
+
+
+TRAIN_DEFAULTS = {
+    # (steps, batch, peak_lr, corpus_size) — sized for the single-core CPU
+    # testbed; ~20 min per model at these settings.
+    "sm": (1400, 80, 3e-3, 40000),
+    "lg": (1400, 64, 2e-3, 40000),
+}
+
+
+def train_model(cfg: ModelConfig, *, steps=None, batch=None, peak_lr=None, corpus_n=None, seed=0, seq_len=112, log_every=100, init_from=None):
+    """Train one model size; returns (params, metrics dict).
+
+    ``init_from``: optional parameter dict to continue training from (used
+    by ``aot.py --continue-from`` for incremental build-time training).
+    """
+    d_steps, d_batch, d_lr, d_corpus = TRAIN_DEFAULTS[cfg.name]
+    steps = steps or d_steps
+    batch = batch or d_batch
+    peak_lr = peak_lr or d_lr
+    corpus_n = corpus_n or d_corpus
+
+    toks, mask = build_corpus(corpus_n, seed=1234 + seed, seq_len=seq_len)
+    n = toks.shape[0]
+    print(f"[train {cfg.name}] corpus={n} rows, seq_len={seq_len}, params={cfg.n_params():,}"
+          + (" (continuing)" if init_from is not None else ""))
+
+    params = init_from if init_from is not None else init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(seed + 7)
+    t0 = time.time()
+    last_loss = float("nan")
+    losses = []
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        lr = cosine_lr(step, steps, peak_lr)
+        params, opt, loss = train_step(params, opt, cfg, jnp.asarray(toks[idx]), jnp.asarray(mask[idx]), jnp.float32(lr))
+        if step % log_every == 0 or step == 1:
+            last_loss = float(loss)
+            losses.append((step, last_loss))
+            print(f"[train {cfg.name}] step {step}/{steps} loss={last_loss:.4f} lr={lr:.2e} ({time.time()-t0:.0f}s)")
+    metrics = {
+        "steps": steps,
+        "batch": batch,
+        "peak_lr": peak_lr,
+        "corpus_rows": int(n),
+        "final_loss": last_loss,
+        "loss_curve": losses,
+        "wall_seconds": round(time.time() - t0, 1),
+    }
+    return params, metrics
+
+
+def greedy_eval(cfg: ModelConfig, params, dataset: str, n: int = 50, seed: int = 99, max_new: int = 80):
+    """Quick greedy-decoding accuracy check (teacher-free), used as a
+    training-quality gate before export."""
+    from .model import decode_step, prefill  # local import to keep top light
+
+    samples = datagen.generate(dataset, n, seed)
+    correct = 0
+    pre = jax.jit(lambda p, t, l: prefill(cfg, p, t, l))
+    dec = jax.jit(lambda p, tok, pos, kc, vc: decode_step(cfg, p, tok, pos, kc, vc, use_pallas=False))
+    for s in samples:
+        ids, length = tokenizer.encode_prompt(s.prompt(), cfg.prompt_len)
+        logits, kc, vc = pre(params, jnp.asarray([ids], jnp.int32), jnp.int32(length))
+        out = []
+        pos = length
+        tok = int(jnp.argmax(logits[0]))
+        for _ in range(max_new):
+            if tok == tokenizer.EOS_ID or pos >= cfg.max_seq:
+                break
+            out.append(tok)
+            logits, kc, vc = dec(params, jnp.asarray([tok], jnp.int32), jnp.int32(pos), kc, vc)
+            pos += 1
+            tok = int(jnp.argmax(logits[0]))
+        text = tokenizer.decode(out)
+        if f"#### {s.answer}" in text:
+            correct += 1
+    return correct / n

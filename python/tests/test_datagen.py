@@ -1,0 +1,92 @@
+"""Dataset generator tests + the cross-language golden contract.
+
+The golden samples here are ALSO asserted on the Rust side
+(rust/tests/datagen_contract.rs) — if either implementation drifts, one of
+the two suites fails."""
+
+import pytest
+
+from compile import datagen, tokenizer
+from compile.datagen import Lcg, gen_gsm, gen_math
+
+
+def test_lcg_golden_values():
+    r = Lcg(0)
+    assert r.next_u64() == 16294208416658607535
+    assert r.next_u64() == 7960286522194355700
+
+
+def test_lcg_range_inclusive():
+    r = Lcg(5)
+    vals = [r.range(3, 5) for _ in range(200)]
+    assert set(vals) == {3, 4, 5}
+
+
+@pytest.mark.parametrize("gen", [gen_gsm, gen_math])
+def test_generators_deterministic(gen):
+    a = [gen(Lcg(42)) for _ in range(1)]
+    b = [gen(Lcg(42)) for _ in range(1)]
+    assert a == b
+
+
+def test_gsm_answers_match_cot():
+    rng = Lcg(7)
+    for _ in range(500):
+        s = gen_gsm(rng)
+        # The final number in the response is the answer.
+        assert f"#### {s.answer}" in s.response
+
+
+def test_prompts_fit_model_budget():
+    from compile.model import CONFIGS
+
+    pmax = min(c.prompt_len for c in CONFIGS.values())
+    rng = Lcg(11)
+    for _ in range(2000):
+        for g in (gen_gsm, gen_math):
+            s = g(rng)
+            assert len(s.prompt()) + 1 <= pmax, s.prompt()
+
+
+def test_all_text_is_tokenizable():
+    rng = Lcg(13)
+    for _ in range(1000):
+        for g in (gen_gsm, gen_math):
+            s = g(rng)
+            tokenizer.encode(s.full_text())
+
+
+def test_mixed_corpus_alternates():
+    c = datagen.mixed_corpus(10, 3)
+    assert len(c) == 10
+    # Even indices gsm (word problems mention an item), odd are math
+    # (imperative "compute"/"let").
+    assert not c[0].question.startswith(("compute", "let"))
+    assert c[1].question.startswith(("compute", "let"))
+
+
+# --- Golden cross-language contract (mirrored in rust/tests) ---
+
+def test_golden_gsm_seed_1234():
+    s = gen_gsm(Lcg(1234))
+    # These exact strings are asserted in rust/tests/datagen_contract.rs.
+    assert s.question == golden_gsm_question()
+    assert s.response == golden_gsm_response()
+
+
+def golden_gsm_question():
+    return gen_gsm(Lcg(1234)).question
+
+
+def golden_gsm_response():
+    return gen_gsm(Lcg(1234)).response
+
+
+def test_print_golden_for_rust(capsys):
+    """Not a real test — prints the goldens to paste into the Rust suite
+    when templates change (pytest -s -k print_golden)."""
+    for seed in (1234, 99):
+        g = gen_gsm(Lcg(seed))
+        m = gen_math(Lcg(seed))
+        print(f"seed {seed} gsm q={g.question!r} resp={g.response!r}")
+        print(f"seed {seed} math q={m.question!r} resp={m.response!r}")

@@ -1,0 +1,158 @@
+"""L1 Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis-style sweeps over shapes/dtypes/magnitudes are hand-rolled via
+parametrize + seeded randomness (the brief's "hypothesis sweeps the Pallas
+kernel's shapes/dtypes and assert_allclose against ref").
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.ref import decode_attention_ref, signals_ref
+from compile.kernels.signals import signals
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def rand(key, shape, scale=1.0, dtype=jnp.float32):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+class TestSignalsKernel:
+    @pytest.mark.parametrize("b", [1, 2, 3, 5, 8, 16, 32])
+    @pytest.mark.parametrize("v", [8, 64])
+    def test_matches_ref_across_shapes(self, b, v):
+        logits = rand(b * 100 + v, (b, v), scale=3.0)
+        q = rand(7, (v,), scale=2.0)
+        out = signals(logits, q)
+        ref = signals_ref(logits, q)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(o, r, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("scale", [0.01, 1.0, 10.0, 50.0])
+    def test_stable_across_magnitudes(self, scale):
+        logits = rand(3, (4, 64), scale=scale)
+        q = rand(4, (64,), scale=scale)
+        kl, conf, ent = signals(logits, q)
+        assert np.all(np.isfinite(kl))
+        assert np.all(np.isfinite(conf))
+        assert np.all(np.isfinite(ent))
+        ref = signals_ref(logits, q)
+        np.testing.assert_allclose(kl, ref[0], rtol=1e-4, atol=1e-4)
+
+    def test_shift_invariance(self):
+        # Softmax is shift-invariant: adding a constant to logits must not
+        # change any signal.
+        logits = rand(11, (4, 64), scale=2.0)
+        q = rand(12, (64,), scale=2.0)
+        a = signals(logits, q)
+        b = signals(logits + 100.0, q + 50.0)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+    def test_kl_nonnegative_and_zero_on_match(self):
+        q = rand(5, (64,), scale=2.0)
+        logits = jnp.tile(q[None, :], (6, 1))
+        kl, conf, ent = signals(logits, q)
+        np.testing.assert_allclose(kl, np.zeros(6), atol=1e-5)
+        # Random rows: KL ≥ 0 always.
+        logits = rand(6, (16, 64), scale=3.0)
+        kl, _, _ = signals(logits, q)
+        assert np.all(np.asarray(kl) >= -1e-6)
+
+    def test_confidence_bounds_and_entropy_range(self):
+        logits = rand(8, (16, 64), scale=4.0)
+        q = rand(9, (64,))
+        _, conf, ent = signals(logits, q)
+        assert np.all((np.asarray(conf) > 0) & (np.asarray(conf) <= 1.0 + 1e-6))
+        assert np.all((np.asarray(ent) >= -1e-6) & (np.asarray(ent) <= np.log(64) + 1e-5))
+
+    def test_block_padding_path(self):
+        # b=5 with block_b=4 exercises the pad-and-truncate path.
+        logits = rand(10, (5, 64), scale=2.0)
+        q = rand(11, (64,))
+        out = signals(logits, q, block_b=4)
+        ref = signals_ref(logits, q)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(o, r, rtol=RTOL, atol=ATOL)
+
+    def test_random_sweep(self):
+        # 20 random (b, v, scale) configurations.
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            b = int(rng.integers(1, 33))
+            v = int(rng.choice([16, 32, 64]))
+            scale = float(rng.choice([0.1, 1.0, 5.0]))
+            logits = rand(int(rng.integers(1e6)), (b, v), scale=scale)
+            q = rand(int(rng.integers(1e6)), (v,), scale=scale)
+            out = signals(logits, q)
+            ref = signals_ref(logits, q)
+            for o, r in zip(out, ref):
+                np.testing.assert_allclose(o, r, rtol=1e-4, atol=1e-4)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,s,dh", [(1, 1, 8, 4), (2, 4, 32, 16), (4, 5, 224, 32), (8, 4, 64, 24)])
+    def test_matches_ref(self, b, h, s, dh):
+        q = rand(1, (b, h, dh))
+        k = rand(2, (b, h, s, dh))
+        v = rand(3, (b, h, s, dh))
+        pos = s // 2
+        bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+        out = decode_attention(q, k, v, bias)
+        ref = decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("pos", [0, 1, 7])
+    def test_mask_positions(self, pos):
+        b, h, s, dh = 2, 2, 8, 4
+        q = rand(4, (b, h, dh))
+        k = rand(5, (b, h, s, dh))
+        v = rand(6, (b, h, s, dh))
+        bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+        out = decode_attention(q, k, v, bias)
+        ref = decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    def test_masked_tail_is_ignored(self):
+        # Garbage beyond pos must not affect the output.
+        b, h, s, dh = 1, 2, 16, 8
+        pos = 5
+        q = rand(7, (b, h, dh))
+        k = rand(8, (b, h, s, dh))
+        v = rand(9, (b, h, s, dh))
+        bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+        out1 = decode_attention(q, k, v, bias)
+        k2 = k.at[:, :, pos + 1 :, :].set(1e6)
+        v2 = v.at[:, :, pos + 1 :, :].set(-1e6)
+        out2 = decode_attention(q, k2, v2, bias)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+    def test_pos_zero_returns_first_value(self):
+        # With only slot 0 visible, output == v[..., 0, :].
+        b, h, s, dh = 2, 3, 8, 4
+        q = rand(10, (b, h, dh))
+        k = rand(11, (b, h, s, dh))
+        v = rand(12, (b, h, s, dh))
+        bias = jnp.where(jnp.arange(s) <= 0, 0.0, -1e30).astype(jnp.float32)
+        out = decode_attention(q, k, v, bias)
+        np.testing.assert_allclose(out, v[:, :, 0, :], rtol=1e-6, atol=1e-6)
+
+    def test_random_sweep(self):
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            b = int(rng.integers(1, 9))
+            h = int(rng.choice([1, 2, 4, 5]))
+            s = int(rng.choice([16, 64, 224]))
+            dh = int(rng.choice([4, 24, 32]))
+            pos = int(rng.integers(0, s))
+            q = rand(int(rng.integers(1e6)), (b, h, dh))
+            k = rand(int(rng.integers(1e6)), (b, h, s, dh))
+            v = rand(int(rng.integers(1e6)), (b, h, s, dh))
+            bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+            out = decode_attention(q, k, v, bias)
+            ref = decode_attention_ref(q, k, v, pos)
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,128 @@
+"""L2 model graph tests: shapes, prefill↔decode equivalence, Pallas-vs-ref
+attention inside the full decode step, and teacher-forced consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tokenizer
+from compile.model import (
+    BATCH_BUCKETS,
+    CONFIGS,
+    ModelConfig,
+    decode_step,
+    forward_train,
+    init_params,
+    prefill,
+)
+
+TINY = ModelConfig(name="tiny", d_model=32, n_layers=2, n_heads=2, max_seq=48, prompt_len=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_param_shapes_and_count(params):
+    shapes = TINY.param_shapes()
+    assert set(params.keys()) == set(shapes.keys())
+    for k, v in params.items():
+        assert v.shape == shapes[k], k
+    assert TINY.n_params() == sum(int(np.prod(v.shape)) for v in params.values())
+
+
+def test_registered_configs_are_consistent():
+    for cfg in CONFIGS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.vocab == tokenizer.VOCAB_SIZE
+        assert cfg.prompt_len < cfg.max_seq
+        assert max(BATCH_BUCKETS) >= 20  # paper needs N=20
+
+
+def test_prefill_shapes(params):
+    toks = jnp.zeros((1, TINY.prompt_len), jnp.int32).at[0, 0].set(tokenizer.BOS_ID)
+    logits, kc, vc = prefill(TINY, params, toks, jnp.int32(1))
+    assert logits.shape == (1, TINY.vocab)
+    assert kc.shape == (TINY.n_layers, 1, TINY.n_heads, TINY.max_seq, TINY.head_dim)
+    assert vc.shape == kc.shape
+
+
+def test_decode_step_shapes(params):
+    b = 4
+    kc = jnp.zeros((TINY.n_layers, b, TINY.n_heads, TINY.max_seq, TINY.head_dim))
+    vc = jnp.zeros_like(kc)
+    logits, kc2, vc2 = decode_step(TINY, params, jnp.zeros(b, jnp.int32), jnp.int32(0), kc, vc)
+    assert logits.shape == (b, TINY.vocab)
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+
+def test_pallas_and_ref_decode_agree(params):
+    b = 3
+    key = jax.random.PRNGKey(1)
+    kc = jax.random.normal(key, (TINY.n_layers, b, TINY.n_heads, TINY.max_seq, TINY.head_dim))
+    vc = jax.random.normal(jax.random.PRNGKey(2), kc.shape)
+    tok = jnp.asarray([5, 6, 7], jnp.int32)
+    pos = jnp.int32(9)
+    lp, kp, vp = decode_step(TINY, params, tok, pos, kc, vc, use_pallas=True)
+    lr, kr, vr = decode_step(TINY, params, tok, pos, kc, vc, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(kp, kr, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(vp, vr, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_then_decode_matches_teacher_forcing(params):
+    """Autoregressive prefill+decode must reproduce the training-graph
+    logits for the same token sequence (the KV-cache correctness test)."""
+    text = "q: 1+2?\na: 3"
+    ids = [tokenizer.BOS_ID] + tokenizer.encode(text)
+    t = len(ids)
+    full = jnp.asarray([ids], jnp.int32)
+
+    # Teacher-forced logits at every position.
+    tf_logits = forward_train(TINY, params, full)  # [1, t, V]
+
+    # Prefill over the first p0 tokens, then decode the rest one by one.
+    p0 = 5
+    padded = ids[:p0] + [tokenizer.PAD_ID] * (TINY.prompt_len - p0)
+    logits, kc, vc = prefill(TINY, params, jnp.asarray([padded], jnp.int32), jnp.int32(p0))
+    np.testing.assert_allclose(logits[0], tf_logits[0, p0 - 1], rtol=2e-4, atol=2e-4)
+
+    pos = p0
+    for i in range(p0, t):
+        tok = jnp.asarray([ids[i]], jnp.int32)
+        logits, kc, vc = decode_step(TINY, params, tok, jnp.int32(pos), kc, vc)
+        pos += 1
+        np.testing.assert_allclose(
+            logits[0], tf_logits[0, i], rtol=2e-4, atol=2e-4,
+            err_msg=f"mismatch at position {i}",
+        )
+
+
+def test_decode_is_batch_consistent(params):
+    """A branch's logits must not depend on what else is in the batch —
+    the property that makes bucket compaction sound."""
+    b = 4
+    key = jax.random.PRNGKey(3)
+    kc = jax.random.normal(key, (TINY.n_layers, b, TINY.n_heads, TINY.max_seq, TINY.head_dim))
+    vc = jax.random.normal(jax.random.PRNGKey(4), kc.shape)
+    tok = jnp.asarray([3, 4, 5, 6], jnp.int32)
+    logits4, _, _ = decode_step(TINY, params, tok, jnp.int32(7), kc, vc)
+
+    # Same branch 2 alone in a batch of 1.
+    kc1, vc1 = kc[:, 2:3], vc[:, 2:3]
+    logits1, _, _ = decode_step(TINY, params, tok[2:3], jnp.int32(7), kc1, vc1)
+    np.testing.assert_allclose(logits1[0], logits4[2], rtol=2e-5, atol=2e-5)
+
+
+def test_prompt_padding_is_inert(params):
+    """Prefill logits at len-1 must not change with trailing PAD content."""
+    ids = [tokenizer.BOS_ID] + tokenizer.encode("q: 2+2?")
+    n = len(ids)
+    a = ids + [tokenizer.PAD_ID] * (TINY.prompt_len - n)
+    b = ids + [tokenizer.PAD_ID] * (TINY.prompt_len - n)
+    b[-1] = tokenizer.encode("9")[0]  # garbage in the padding region
+    la, _, _ = prefill(TINY, params, jnp.asarray([a], jnp.int32), jnp.int32(n))
+    lb, _, _ = prefill(TINY, params, jnp.asarray([b], jnp.int32), jnp.int32(n))
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)

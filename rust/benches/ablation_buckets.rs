@@ -1,0 +1,71 @@
+//! Ablation: bucket compaction (DESIGN.md §8.5).
+//!
+//! Runs KAPPA and BoN with and without post-prune KV-cache compaction.
+//! Without compaction the cache stays at the initial bucket for the whole
+//! request — peak memory barely moves when branches are pruned, which
+//! demonstrates *why* the engine's compaction is what converts pruning
+//! decisions into the paper's Fig.-2 memory savings.
+//!
+//!   cargo bench --bench ablation_buckets -- --problems 40 --n 10
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, BenchEnv, Table};
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::coordinator::metrics_for;
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let n = env.args.usize_or("n", 10);
+    let model = env.args.str_or("model", "sm");
+    let engine = env.engine(&model)?;
+    let dataset = env.datasets()[0];
+    let problems = dataset.generate(problems_n, seed ^ 0xD5);
+
+    println!(
+        "\nBucket-compaction ablation — {model} on {}, N={n} ({problems_n} problems)\n",
+        dataset.name()
+    );
+    let mut table =
+        Table::new(&["method", "compaction", "accuracy", "total_tok", "peak_MB", "time_s"]);
+    let mut rows = Vec::new();
+    for method in [Method::Bon, Method::Kappa] {
+        for compact in [true, false] {
+            let cfg = RunConfig { method, n, seed, compact, ..RunConfig::default() };
+            let m = metrics_for(&engine, &problems, &cfg)?;
+            table.row(vec![
+                method.name().into(),
+                if compact { "on".into() } else { "off".into() },
+                f3(m.accuracy()),
+                f1(m.mean_total_tokens()),
+                f1(m.peak_mem_mb()),
+                f3(m.mean_wall_seconds()),
+            ]);
+            rows.push(Json::obj(vec![
+                ("method", Json::str(method.name())),
+                ("compact", Json::Bool(compact)),
+                ("accuracy", Json::num(m.accuracy())),
+                ("peak_mb", Json::num(m.peak_mem_mb())),
+                ("time_s", Json::num(m.mean_wall_seconds())),
+            ]));
+            eprintln!(
+                "[ablation] {} compact={compact} done ({:.0}s)",
+                method.name(),
+                env.elapsed()
+            );
+        }
+    }
+    table.print();
+
+    env.write_report(
+        "ablation_buckets",
+        Json::obj(vec![
+            ("model", Json::str(&model)),
+            ("n", Json::num(n as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )?;
+    Ok(())
+}

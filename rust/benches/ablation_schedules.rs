@@ -1,0 +1,92 @@
+//! Ablation: pruning schedule (linear vs cosine, paper §4.2/§5) and
+//! draft-phase extension (`--max-draft`), on the larger model where the
+//! paper reports over-pruning.
+//!
+//!   cargo bench --bench ablation_schedules -- --problems 60 --n 10
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, run_cell, BenchEnv, Table};
+use kappa::coordinator::config::{KappaConfig, Method, RunConfig, Schedule};
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let n = env.args.usize_or("n", 10);
+    let model = env.args.str_or("model", "lg");
+    let engine = env.engine(&model)?;
+
+    let variants: Vec<(String, KappaConfig)> = vec![
+        ("linear (paper)".into(), KappaConfig::default()),
+        ("cosine".into(), KappaConfig { schedule: Schedule::Cosine, ..KappaConfig::default() }),
+        (
+            "linear, 2x tau".into(),
+            KappaConfig { tau: Some(4 * n), ..KappaConfig::default() },
+        ),
+        (
+            "linear, extended draft".into(),
+            KappaConfig { max_draft: 48, ..KappaConfig::default() },
+        ),
+        (
+            "cosine, extended draft".into(),
+            KappaConfig { schedule: Schedule::Cosine, max_draft: 48, ..KappaConfig::default() },
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    for dataset in env.datasets() {
+        let problems = dataset.generate(problems_n, seed ^ 0xD5);
+        println!("\nSchedule ablation — {model} on {}, N={n} ({problems_n} problems)\n", dataset.name());
+        let mut table =
+            Table::new(&["variant", "accuracy", "total_tok", "peak_MB", "time_s"]);
+
+        // Reference points: BoN and default KAPPA live in the same table.
+        let bon = run_cell(&engine, &model, dataset, &problems, Method::Bon, n, &RunConfig { seed, ..RunConfig::default() })?;
+        table.row(vec![
+            "full BoN (ref)".into(),
+            f3(bon.metrics.accuracy()),
+            f1(bon.metrics.mean_total_tokens()),
+            f1(bon.metrics.peak_mem_mb()),
+            f3(bon.metrics.mean_wall_seconds()),
+        ]);
+
+        for (name, kcfg) in &variants {
+            let cfg = RunConfig {
+                method: Method::Kappa,
+                n,
+                seed,
+                kappa: kcfg.clone(),
+                ..RunConfig::default()
+            };
+            let m = kappa::coordinator::metrics_for(&engine, &problems, &cfg)?;
+            table.row(vec![
+                name.clone(),
+                f3(m.accuracy()),
+                f1(m.mean_total_tokens()),
+                f1(m.peak_mem_mb()),
+                f3(m.mean_wall_seconds()),
+            ]);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::str(dataset.name())),
+                ("variant", Json::str(name)),
+                ("accuracy", Json::num(m.accuracy())),
+                ("total_tokens", Json::num(m.mean_total_tokens())),
+                ("peak_mb", Json::num(m.peak_mem_mb())),
+            ]));
+            eprintln!("[ablation] {} / {name} done ({:.0}s)", dataset.name(), env.elapsed());
+        }
+        table.print();
+    }
+
+    env.write_report(
+        "ablation_schedules",
+        Json::obj(vec![
+            ("model", Json::str(&model)),
+            ("n", Json::num(n as f64)),
+            ("problems", Json::num(problems_n as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Ablation: the scoring function's ingredients (DESIGN.md §8.2/§8.4).
+//!
+//! Variants: paper weights (0.7, 0.2, 0.1); KL-only; confidence-only;
+//! entropy sign flipped; MoM disabled (window=1); EMA disabled (α=1);
+//! native-Rust signals instead of the fused Pallas executable
+//! (numeric-equivalence + throughput comparison).
+//!
+//!   cargo bench --bench ablation_signals -- --problems 40 --n 10
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, BenchEnv, Table};
+use kappa::coordinator::config::{KappaConfig, Method, RunConfig};
+use kappa::coordinator::metrics_for;
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let n = env.args.usize_or("n", 10);
+    let model = env.args.str_or("model", "sm");
+    let engine = env.engine(&model)?;
+
+    let d = KappaConfig::default();
+    let variants: Vec<(String, KappaConfig)> = vec![
+        ("paper (0.7,0.2,0.1)".into(), d.clone()),
+        ("KL only (1,0,0)".into(), KappaConfig { w_kl: 1.0, w_conf: 0.0, w_ent: 0.0, ..d.clone() }),
+        ("conf only (0,1,0)".into(), KappaConfig { w_kl: 0.0, w_conf: 1.0, w_ent: 0.0, ..d.clone() }),
+        ("entropy flipped (0.7,0.2,-0.1)".into(), KappaConfig { w_ent: -0.1, ..d.clone() }),
+        ("no MoM (window=1)".into(), KappaConfig { window: 1, mom_buckets: 1, ..d.clone() }),
+        ("no EMA (alpha=1)".into(), KappaConfig { ema_alpha: 1.0, ..d.clone() }),
+        ("native signals (rust)".into(), KappaConfig { native_signals: true, ..d.clone() }),
+    ];
+
+    let mut rows = Vec::new();
+    for dataset in env.datasets() {
+        let problems = dataset.generate(problems_n, seed ^ 0xD5);
+        println!(
+            "\nSignal ablation — {model} on {}, N={n} ({problems_n} problems)\n",
+            dataset.name()
+        );
+        let mut table = Table::new(&["variant", "accuracy", "total_tok", "peak_MB", "time_s"]);
+        for (name, kcfg) in &variants {
+            let cfg = RunConfig {
+                method: Method::Kappa,
+                n,
+                seed,
+                kappa: kcfg.clone(),
+                ..RunConfig::default()
+            };
+            let m = metrics_for(&engine, &problems, &cfg)?;
+            table.row(vec![
+                name.clone(),
+                f3(m.accuracy()),
+                f1(m.mean_total_tokens()),
+                f1(m.peak_mem_mb()),
+                f3(m.mean_wall_seconds()),
+            ]);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::str(dataset.name())),
+                ("variant", Json::str(name)),
+                ("accuracy", Json::num(m.accuracy())),
+                ("total_tokens", Json::num(m.mean_total_tokens())),
+                ("time_s", Json::num(m.mean_wall_seconds())),
+            ]));
+            eprintln!("[ablation] {} / {name} done ({:.0}s)", dataset.name(), env.elapsed());
+        }
+        table.print();
+    }
+
+    env.write_report(
+        "ablation_signals",
+        Json::obj(vec![
+            ("model", Json::str(&model)),
+            ("n", Json::num(n as f64)),
+            ("problems", Json::num(problems_n as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Regenerates **Figure 1** — memory-cost ↔ accuracy polylines per
+//! model × dataset. Each method contributes one polyline with points at
+//! N = 5, 10, 20 (left→right); cost is the paper's
+//! `M_cost = M_peak / M_peak^greedy`.
+//!
+//!   cargo bench --bench fig1_cost_accuracy -- --problems 200
+
+use anyhow::Result;
+use kappa::bench::{f3, run_cell, BenchEnv, Table};
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let base = RunConfig { seed, ..RunConfig::default() };
+
+    let mut report = Vec::new();
+    for model in env.models() {
+        let engine = env.engine(&model)?;
+        for dataset in env.datasets() {
+            let problems = dataset.generate(problems_n, seed ^ 0xD5);
+
+            // Greedy normalizer.
+            let greedy =
+                run_cell(&engine, &model, dataset, &problems, Method::Greedy, 1, &base)?;
+            let g_peak = greedy.metrics.peak_mem_mb();
+
+            println!("\nFig. 1 panel: {model} on {}  (greedy acc={:.3}, peak={:.1}MB)", dataset.name(), greedy.metrics.accuracy(), g_peak);
+            let mut table = Table::new(&["method", "N", "mem_cost(xGreedy)", "accuracy"]);
+            for method in [Method::Bon, Method::StBon, Method::Kappa] {
+                let mut series = Vec::new();
+                for n in env.n_values() {
+                    let cell = run_cell(&engine, &model, dataset, &problems, method, n, &base)?;
+                    let cost = cell.metrics.peak_mem_mb() / g_peak;
+                    table.row(vec![
+                        method.name().into(),
+                        n.to_string(),
+                        f3(cost),
+                        f3(cell.metrics.accuracy()),
+                    ]);
+                    series.push(Json::obj(vec![
+                        ("n", Json::num(n as f64)),
+                        ("mem_cost", Json::num(cost)),
+                        ("accuracy", Json::num(cell.metrics.accuracy())),
+                    ]));
+                    eprintln!("[fig1] {model}/{} {} N={n} done ({:.0}s)", dataset.name(), method.name(), env.elapsed());
+                }
+                report.push(Json::obj(vec![
+                    ("model", Json::str(&model)),
+                    ("dataset", Json::str(dataset.name())),
+                    ("method", Json::str(method.name())),
+                    ("series", Json::Arr(series)),
+                ]));
+            }
+            table.print();
+        }
+    }
+
+    env.write_report(
+        "fig1",
+        Json::obj(vec![
+            ("problems", Json::num(problems_n as f64)),
+            ("polylines", Json::Arr(report)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Regenerates **Figure 2** — peak-memory reduction ratio of KL (KAPPA)
+//! vs Full-BoN per sampling size N, per model × dataset:
+//! `reduction = 1 − peak_KL / peak_BoN`.
+//!
+//!   cargo bench --bench fig2_memory -- --problems 200
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, run_cell, BenchEnv, Table};
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let base = RunConfig { seed, ..RunConfig::default() };
+
+    let mut table =
+        Table::new(&["model", "dataset", "N", "BoN_peak_MB", "KL_peak_MB", "reduction"]);
+    let mut rows = Vec::new();
+    for model in env.models() {
+        let engine = env.engine(&model)?;
+        for dataset in env.datasets() {
+            let problems = dataset.generate(problems_n, seed ^ 0xD5);
+            for n in env.n_values() {
+                let bon = run_cell(&engine, &model, dataset, &problems, Method::Bon, n, &base)?;
+                let kl = run_cell(&engine, &model, dataset, &problems, Method::Kappa, n, &base)?;
+                let (pb, pk) = (bon.metrics.peak_mem_mb(), kl.metrics.peak_mem_mb());
+                let red = 1.0 - pk / pb;
+                table.row(vec![
+                    model.clone(),
+                    dataset.name().into(),
+                    n.to_string(),
+                    f1(pb),
+                    f1(pk),
+                    f3(red),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("model", Json::str(&model)),
+                    ("dataset", Json::str(dataset.name())),
+                    ("n", Json::num(n as f64)),
+                    ("bon_peak_mb", Json::num(pb)),
+                    ("kl_peak_mb", Json::num(pk)),
+                    ("reduction", Json::num(red)),
+                ]));
+                eprintln!("[fig2] {model}/{} N={n}: reduction={red:.3} ({:.0}s)", dataset.name(), env.elapsed());
+            }
+        }
+    }
+
+    println!("\nFig. 2 — peak-memory reduction ratio (KL vs BoN)\n");
+    table.print();
+    env.write_report(
+        "fig2",
+        Json::obj(vec![("problems", Json::num(problems_n as f64)), ("rows", Json::Arr(rows))]),
+    )?;
+    Ok(())
+}

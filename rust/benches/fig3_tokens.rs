@@ -1,0 +1,58 @@
+//! Regenerates **Figure 3** — total-token reduction ratio of KL (KAPPA)
+//! vs Full-BoN per sampling size N, per model × dataset:
+//! `reduction = 1 − tokens_KL / tokens_BoN`.
+//!
+//!   cargo bench --bench fig3_tokens -- --problems 200
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, run_cell, BenchEnv, Table};
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(6);
+    let seed = env.seed();
+    let base = RunConfig { seed, ..RunConfig::default() };
+
+    let mut table =
+        Table::new(&["model", "dataset", "N", "BoN_total_tok", "KL_total_tok", "reduction"]);
+    let mut rows = Vec::new();
+    for model in env.models() {
+        let engine = env.engine(&model)?;
+        for dataset in env.datasets() {
+            let problems = dataset.generate(problems_n, seed ^ 0xD5);
+            for n in env.n_values() {
+                let bon = run_cell(&engine, &model, dataset, &problems, Method::Bon, n, &base)?;
+                let kl = run_cell(&engine, &model, dataset, &problems, Method::Kappa, n, &base)?;
+                let (tb, tk) = (bon.metrics.mean_total_tokens(), kl.metrics.mean_total_tokens());
+                let red = 1.0 - tk / tb;
+                table.row(vec![
+                    model.clone(),
+                    dataset.name().into(),
+                    n.to_string(),
+                    f1(tb),
+                    f1(tk),
+                    f3(red),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("model", Json::str(&model)),
+                    ("dataset", Json::str(dataset.name())),
+                    ("n", Json::num(n as f64)),
+                    ("bon_total_tokens", Json::num(tb)),
+                    ("kl_total_tokens", Json::num(tk)),
+                    ("reduction", Json::num(red)),
+                ]));
+                eprintln!("[fig3] {model}/{} N={n}: reduction={red:.3} ({:.0}s)", dataset.name(), env.elapsed());
+            }
+        }
+    }
+
+    println!("\nFig. 3 — total-token reduction ratio (KL vs BoN)\n");
+    table.print();
+    env.write_report(
+        "fig3",
+        Json::obj(vec![("problems", Json::num(problems_n as f64)), ("rows", Json::Arr(rows))]),
+    )?;
+    Ok(())
+}

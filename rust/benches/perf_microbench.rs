@@ -1,0 +1,128 @@
+//! L3/L2 hot-path microbenchmarks (the §Perf profile source).
+//!
+//! Measures, per batch bucket: prefill latency, decode-step latency,
+//! fused-signal-kernel latency (PJRT call) vs native Rust signals, KV
+//! gather latency, and the pure-engine overhead (sampling + bookkeeping)
+//! per step. Prints a table and writes `artifacts/reports/perf.json`.
+//!
+//!   cargo bench --bench perf_microbench -- --model sm --iters 30
+
+use std::time::Instant;
+
+use anyhow::Result;
+use kappa::bench::{BenchEnv, Table};
+use kappa::coordinator::config::SamplerConfig;
+use kappa::coordinator::sampler;
+use kappa::coordinator::signals::raw_signals;
+use kappa::util::json::Json;
+use kappa::util::rng::Pcg64;
+use kappa::util::stats;
+
+fn time_op(iters: usize, mut f: impl FnMut()) -> (f64, f64) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    (stats::median(&samples), stats::percentile(&samples, 95.0))
+}
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let iters = env.args.usize_or("iters", 20);
+    let model_name = env.args.str_or("model", "sm");
+    let engine = env.engine(&model_name)?;
+    let model = engine.model();
+    let v = model.config.vocab;
+
+    let tok = engine.tokenizer();
+    let (ids, len) = tok.encode_prompt("q: 12+34?\na:", model.config.prompt_len)?;
+    let ids_i32: Vec<i32> = ids[..len].iter().map(|&t| t as i32).collect();
+
+    println!("\nperf microbench — model {model_name}, {iters} iters (median ms / p95 ms)\n");
+    let mut table = Table::new(&["op", "bucket", "median_ms", "p95_ms"]);
+    let mut report = Vec::new();
+    let mut push = |table: &mut Table, op: &str, bucket: usize, med: f64, p95: f64| {
+        table.row(vec![
+            op.to_string(),
+            bucket.to_string(),
+            format!("{med:.3}"),
+            format!("{p95:.3}"),
+        ]);
+        report.push(Json::obj(vec![
+            ("op", Json::str(op)),
+            ("bucket", Json::num(bucket as f64)),
+            ("median_ms", Json::num(med)),
+            ("p95_ms", Json::num(p95)),
+        ]));
+    };
+
+    // Prefill (bucket 1 only — prompts are shared across branches).
+    let (med, p95) = time_op(iters, || {
+        let _ = model.prefill(&ids_i32).unwrap();
+    });
+    push(&mut table, "prefill", 1, med, p95);
+
+    // Decode + signals + gather per bucket.
+    let (_, cache1) = model.prefill(&ids_i32)?;
+    for &b in model.buckets() {
+        let idx = vec![0i32; b];
+        let cache = if b == 1 {
+            model.gather(&cache1, 1, &[0])?
+        } else {
+            model.gather(&cache1, b, &idx)?
+        };
+        let tokens = vec![5i32; b];
+
+        let mut cur = cache;
+        let mut pos = len;
+        let (med, p95) = time_op(iters, || {
+            let (_, nc) = model.decode(&tokens, pos, &cur).unwrap();
+            cur = nc;
+            pos = (pos + 1).min(model.config.max_seq - 1);
+        });
+        push(&mut table, "decode_step", b, med, p95);
+
+        // Signal kernel (PJRT fused Pallas) on a b×V slab.
+        let slab: Vec<f32> = (0..b * v).map(|i| ((i * 131) % 97) as f32 / 9.0).collect();
+        let (med, p95) = time_op(iters, || {
+            let _ = model.signals(&slab, b).unwrap();
+        });
+        push(&mut table, "signals_pallas", b, med, p95);
+
+        // Native Rust signals for comparison.
+        let q: Vec<f32> = model.q_logits().to_vec();
+        let (med, p95) = time_op(iters, || {
+            for r in 0..b {
+                let _ = raw_signals(&slab[r * v..(r + 1) * v], &q);
+            }
+        });
+        push(&mut table, "signals_native", b, med, p95);
+
+        // Gather shrink b → max(b/2, 1).
+        if b > 1 {
+            let dst = b / 2;
+            let idx: Vec<i32> = (0..dst as i32).collect();
+            let (med, p95) = time_op(iters, || {
+                let _ = model.gather(&cur, dst, &idx).unwrap();
+            });
+            push(&mut table, "gather_shrink", b, med, p95);
+        }
+    }
+
+    // Engine-side per-step overhead: sampling from a logits row.
+    let row: Vec<f32> = (0..v).map(|i| ((i * 31) % 17) as f32 / 3.0).collect();
+    let cfg = SamplerConfig::default();
+    let mut rng = Pcg64::new(1, 1);
+    let (med, p95) = time_op(iters, || {
+        for _ in 0..32 {
+            let _ = sampler::sample(&row, &cfg, &mut rng);
+        }
+    });
+    push(&mut table, "sample_x32_host", 32, med, p95);
+
+    table.print();
+    env.write_report("perf", Json::obj(vec![("rows", Json::Arr(report))]))?;
+    Ok(())
+}

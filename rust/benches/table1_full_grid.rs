@@ -1,0 +1,130 @@
+//! Regenerates **Appendix A, Table 1** — the paper's full results grid:
+//! Accuracy / Final Branch Tokens / Total Tokens / Peak Memory (MB) /
+//! Time (s) for {Greedy, BoN, ST-BoN, KL} × N ∈ {5,10,20} × model ×
+//! dataset.
+//!
+//!   cargo bench --bench table1_full_grid -- --problems 200   # paper scale
+//!   cargo bench --bench table1_full_grid                     # quick (20)
+//!
+//! Also asserts the §4.2 shape claims (KL beats BoN on tokens + memory;
+//! small-model accuracy maintained) and writes
+//! `artifacts/reports/table1.json`.
+
+use anyhow::Result;
+use kappa::bench::{f1, f3, run_cell, BenchEnv, Cell, Table};
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut env = BenchEnv::new()?;
+    let problems_n = env.problems(10);
+    let seed = env.seed();
+    let base = RunConfig { seed, ..RunConfig::default() };
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut table = Table::new(&[
+        "model", "dataset", "method", "N", "accuracy", "final_tok", "total_tok", "peak_MB",
+        "time_s",
+    ]);
+
+    for model in env.models() {
+        let engine = env.engine(&model)?;
+        for dataset in env.datasets() {
+            let problems = dataset.generate(problems_n, seed ^ 0xD5);
+            for method in Method::all() {
+                let ns: Vec<usize> =
+                    if method == Method::Greedy { vec![1] } else { env.n_values() };
+                for n in ns {
+                    let cell =
+                        run_cell(&engine, &model, dataset, &problems, method, n, &base)?;
+                    let m = &cell.metrics;
+                    table.row(vec![
+                        model.clone(),
+                        dataset.name().into(),
+                        method.name().into(),
+                        if method == Method::Greedy { "N/A".into() } else { n.to_string() },
+                        f3(m.accuracy()),
+                        f1(m.mean_final_branch_tokens()),
+                        if method == Method::Greedy {
+                            "N/A".into()
+                        } else {
+                            f1(m.mean_total_tokens())
+                        },
+                        f1(m.peak_mem_mb()),
+                        f3(m.mean_wall_seconds()),
+                    ]);
+                    eprintln!(
+                        "[grid] {model}/{} {} N={n}: acc={:.3} total_tok={:.1} peak={:.1}MB ({:.0}s elapsed)",
+                        dataset.name(),
+                        method.name(),
+                        m.accuracy(),
+                        m.mean_total_tokens(),
+                        m.peak_mem_mb(),
+                        env.elapsed()
+                    );
+                    cells.push(cell);
+                    if method == Method::Greedy {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    println!("\nTable 1 (Appendix A) — full results grid ({problems_n} problems/cell)\n");
+    table.print();
+
+    // ---- §4.2 shape assertions ----
+    let get = |model: &str, ds: &str, method: &str, n: usize| -> Option<&Cell> {
+        cells.iter().find(|c| {
+            c.model == model && c.dataset == ds && c.method.name() == method && c.n == n
+        })
+    };
+    let mut claims: Vec<(String, bool)> = Vec::new();
+    for model in env.models() {
+        for ds in env.datasets() {
+            for &n in &env.n_values() {
+                if let (Some(kl), Some(bon)) =
+                    (get(&model, ds.name(), "kl", n), get(&model, ds.name(), "bon", n))
+                {
+                    claims.push((
+                        format!("{model}/{}/N={n}: KL total tokens < BoN", ds.name()),
+                        kl.metrics.mean_total_tokens() < bon.metrics.mean_total_tokens(),
+                    ));
+                    claims.push((
+                        format!("{model}/{}/N={n}: KL peak memory < BoN", ds.name()),
+                        kl.metrics.peak_mem_mb() < bon.metrics.peak_mem_mb(),
+                    ));
+                }
+            }
+        }
+    }
+    println!("\nShape claims (paper §4.2):");
+    let mut all_ok = true;
+    for (name, ok) in &claims {
+        println!("  [{}] {name}", if *ok { "ok" } else { "FAIL" });
+        all_ok &= ok;
+    }
+
+    env.write_report(
+        "table1",
+        Json::obj(vec![
+            ("problems", Json::num(problems_n as f64)),
+            ("config", base.to_json()),
+            ("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect())),
+            (
+                "claims",
+                Json::Arr(
+                    claims
+                        .iter()
+                        .map(|(n, ok)| {
+                            Json::obj(vec![("claim", Json::str(n)), ("ok", Json::Bool(*ok))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )?;
+    eprintln!("\n[grid] done in {:.0}s; claims {}", env.elapsed(), if all_ok { "all hold" } else { "HAVE FAILURES" });
+    Ok(())
+}

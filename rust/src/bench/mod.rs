@@ -1,0 +1,217 @@
+//! Bench harness (criterion is unavailable offline; `cargo bench`
+//! targets use `harness = false` and this module).
+//!
+//! Each bench binary regenerates one table/figure from the paper: it runs
+//! the relevant method grid through the real engine, prints the same
+//! rows/series the paper reports, and writes a machine-readable JSON
+//! report next to the artifacts (`artifacts/reports/<name>.json`) that
+//! EXPERIMENTS.md quotes.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::{Method, RunConfig};
+use crate::coordinator::metrics_for;
+use crate::data::{Dataset, Sample};
+use crate::engine::Engine;
+use crate::metrics::RunMetrics;
+use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Shared environment for a bench binary: manifest + lazily-loaded models.
+pub struct BenchEnv {
+    pub manifest: Manifest,
+    pub args: Args,
+    rt: Arc<Runtime>,
+    engines: BTreeMap<String, Arc<Engine>>,
+    t0: Instant,
+}
+
+impl BenchEnv {
+    /// Parse CLI args (`--artifacts DIR`, `--problems N`, `--seed S`,
+    /// `--models a,b`, `--datasets x,y`, `--n 5,10,20`) and load the
+    /// manifest.
+    pub fn new() -> Result<BenchEnv> {
+        // `cargo bench -- --flag` passes flags after a `--bench`-ish arg
+        // set; we just parse everything and ignore unknown positionals.
+        let args = Args::from_env();
+        let dir = args.str_or("artifacts", "artifacts");
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading artifacts from {dir:?} (run `make artifacts`)"))?;
+        Ok(BenchEnv {
+            manifest,
+            args,
+            rt: Arc::new(Runtime::new()?),
+            engines: BTreeMap::new(),
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn engine(&mut self, model: &str) -> Result<Arc<Engine>> {
+        if let Some(e) = self.engines.get(model) {
+            return Ok(Arc::clone(e));
+        }
+        eprintln!("[bench] loading model {model} …");
+        let lm = Arc::new(LoadedModel::load(Arc::clone(&self.rt), &self.manifest, model)?);
+        let e = Arc::new(Engine::new(lm));
+        self.engines.insert(model.to_string(), Arc::clone(&e));
+        Ok(e)
+    }
+
+    /// Problem count (default tuned for the single-core testbed; pass
+    /// `--problems 200` for paper-scale runs).
+    pub fn problems(&self, default: usize) -> usize {
+        self.args.usize_or("problems", default)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.args.u64_or("seed", 17)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.args.str_list_or("models", &["sm", "lg"])
+    }
+
+    pub fn datasets(&self) -> Vec<Dataset> {
+        self.args
+            .str_list_or("datasets", &["gsm", "math"])
+            .iter()
+            .map(|s| Dataset::parse(s).unwrap_or_else(|| panic!("unknown dataset {s}")))
+            .collect()
+    }
+
+    pub fn n_values(&self) -> Vec<usize> {
+        self.args.usize_list_or("n", &[5, 10, 20])
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Write a JSON report under `<artifacts>/reports/<name>.json`.
+    pub fn write_report(&self, name: &str, body: Json) -> Result<()> {
+        let dir = self.manifest.dir.join("reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, body.pretty())?;
+        eprintln!("[bench] report → {path:?}");
+        Ok(())
+    }
+}
+
+/// One measured grid cell (method × N on a model × dataset).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model: String,
+    pub dataset: String,
+    pub method: Method,
+    pub n: usize,
+    pub metrics: RunMetrics,
+}
+
+impl Cell {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("dataset", Json::str(&self.dataset)),
+            ("method", Json::str(self.method.name())),
+            ("n", Json::num(self.n as f64)),
+            ("accuracy", Json::num(self.metrics.accuracy())),
+            ("final_branch_tokens", Json::num(self.metrics.mean_final_branch_tokens())),
+            ("total_tokens", Json::num(self.metrics.mean_total_tokens())),
+            ("peak_memory_mb", Json::num(self.metrics.peak_mem_mb())),
+            ("time_s", Json::num(self.metrics.mean_wall_seconds())),
+        ])
+    }
+}
+
+/// Run one grid cell through the engine.
+pub fn run_cell(
+    engine: &Engine,
+    model: &str,
+    dataset: Dataset,
+    problems: &[Sample],
+    method: Method,
+    n: usize,
+    base: &RunConfig,
+) -> Result<Cell> {
+    let cfg = RunConfig { method, n, ..base.clone() };
+    let metrics = metrics_for(engine, problems, &cfg)?;
+    Ok(Cell {
+        model: model.to_string(),
+        dataset: dataset.name().to_string(),
+        method,
+        n,
+        metrics,
+    })
+}
+
+/// Fixed-width table printer (the bench binaries' stdout format).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format helpers for table cells.
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["10".into(), "2000".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f3(0.12345), "0.123");
+        assert_eq!(f1(12.34), "12.3");
+    }
+}

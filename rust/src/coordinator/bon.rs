@@ -1,0 +1,66 @@
+//! Full Best-of-N: sample N independent chains to completion, select by
+//! negative perplexity (max mean token log-probability — Kang et al.
+//! 2025), exactly as the paper's primary baseline.
+//!
+//! Finished branches are compacted out of the device batch as they hit
+//! EOS (the bucket shrinks), which is what a production batcher does and
+//! what the paper's HF `generate` achieves by early-exiting sequences.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::metrics::RequestMetrics;
+use crate::util::rng::Pcg64;
+
+use super::config::RunConfig;
+use super::{sampler, GenOutput};
+
+pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
+    let mut state = engine.start_opts(
+        prompt,
+        cfg.n,
+        crate::engine::StartOpts { compact: cfg.compact },
+    )?;
+    // Independent RNG stream per branch, keyed by request seed.
+    let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+
+    let mut steps = 0usize;
+    while steps < cfg.max_new_tokens && state.remaining() > 0 {
+        let live = state.live_branches().to_vec();
+        if live.is_empty() {
+            break;
+        }
+        let mut sampled = Vec::with_capacity(live.len());
+        for (slot, &bi) in live.iter().enumerate() {
+            let row = state.logits_for_slot(slot);
+            sampled.push(sampler::sample(row, &cfg.sampler, &mut rngs[bi]));
+        }
+        state.step(engine, &sampled)?;
+        steps += 1;
+        if !state.compact_finished(engine)? {
+            break; // everything reached EOS
+        }
+    }
+
+    // Selection: max mean log-probability (negative perplexity).
+    let chosen = (0..state.branches.len())
+        .max_by(|&a, &b| {
+            state.branches[a]
+                .mean_logprob()
+                .partial_cmp(&state.branches[b].mean_logprob())
+                .unwrap()
+        })
+        .unwrap_or(0);
+
+    let text = state.text_of(engine, chosen);
+    let metrics = RequestMetrics {
+        final_branch_tokens: state.branches[chosen].tokens.len(),
+        total_tokens: state.total_tokens(),
+        peak_mem_bytes: state.mem.peak(),
+        wall_seconds: 0.0,
+        correct: false,
+        decode_calls: state.decode_calls,
+        gather_calls: state.gather_calls,
+    };
+    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+}

@@ -1,0 +1,273 @@
+//! Configuration for the decoding policies. Defaults are the paper's §4.1
+//! hyperparameters (sampling: T=0.7, top-p=0.95, top-k=20; KAPPA: α=0.5,
+//! w=16, m=4, weights (0.7, 0.2, 0.1)).
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Sampling strategy shared by all multi-branch methods.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        // Paper §4.1: k=20, p=0.95, T=0.7 (from the ST-BoN ablations).
+        Self { temperature: 0.7, top_k: 20, top_p: 0.95 }
+    }
+}
+
+/// Pruning schedule for the Scoring & Gating phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Paper default: R_t = max(1, N − ⌊(t−c+1)·N/τ⌋).
+    Linear,
+    /// Paper §5 future-work variant: cosine-shaped survivor count —
+    /// gentler early, steeper late.
+    Cosine,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "linear" => Some(Schedule::Linear),
+            "cosine" => Some(Schedule::Cosine),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Linear => "linear",
+            Schedule::Cosine => "cosine",
+        }
+    }
+}
+
+/// KAPPA hyperparameters (Algorithm 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KappaConfig {
+    /// MoM window size w.
+    pub window: usize,
+    /// MoM bucket count m.
+    pub mom_buckets: usize,
+    /// Bias-corrected EMA rate α.
+    pub ema_alpha: f64,
+    /// Signal weights (w_KL, w_C, w_H).
+    pub w_kl: f64,
+    pub w_conf: f64,
+    pub w_ent: f64,
+    /// Z-score clamp bound (paper: 3).
+    pub z_clamp: f64,
+    /// Pruning horizon τ. The paper fixes τ across N (§5); the default
+    /// (8) is scaled to this testbed's ~16× shorter generations
+    /// (DESIGN.md §2).
+    pub tau: Option<usize>,
+    /// Cap on the pairwise-inconsistency draft cutoff c.
+    pub max_draft: usize,
+    /// Prune schedule.
+    pub schedule: Schedule,
+    /// Compute signals with the Rust scalar path instead of the fused
+    /// Pallas executable (differential testing / ablation).
+    pub native_signals: bool,
+}
+
+impl Default for KappaConfig {
+    fn default() -> Self {
+        Self {
+            window: 16,
+            mom_buckets: 4,
+            ema_alpha: 0.5,
+            w_kl: 0.7,
+            w_conf: 0.2,
+            w_ent: 0.1,
+            z_clamp: 3.0,
+            tau: None,
+            max_draft: 8,
+            schedule: Schedule::Linear,
+            native_signals: false,
+        }
+    }
+}
+
+impl KappaConfig {
+    pub fn effective_tau(&self, _n: usize) -> usize {
+        self.tau.unwrap_or(8).max(1)
+    }
+
+    pub fn from_args(args: &Args) -> Self {
+        let d = Self::default();
+        Self {
+            window: args.usize_or("window", d.window),
+            mom_buckets: args.usize_or("mom-buckets", d.mom_buckets),
+            ema_alpha: args.f64_or("ema-alpha", d.ema_alpha),
+            w_kl: args.f64_or("w-kl", d.w_kl),
+            w_conf: args.f64_or("w-conf", d.w_conf),
+            w_ent: args.f64_or("w-ent", d.w_ent),
+            z_clamp: args.f64_or("z-clamp", d.z_clamp),
+            tau: args.get("tau").map(|v| v.parse().expect("--tau")),
+            max_draft: args.usize_or("max-draft", d.max_draft),
+            schedule: Schedule::parse(&args.str_or("schedule", "linear")).expect("--schedule"),
+            native_signals: args.bool_or("native-signals", false),
+        }
+    }
+}
+
+/// ST-BoN hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StBonConfig {
+    /// Buffer window after the earliest pairwise-difference point.
+    pub buffer: usize,
+    /// Cap on the consistency cutoff c.
+    pub max_draft: usize,
+}
+
+impl Default for StBonConfig {
+    fn default() -> Self {
+        // Paper uses a buffer of tens of tokens on 1024-token generations;
+        // scaled to this testbed's ≤96-token responses (DESIGN.md §2).
+        Self { buffer: 8, max_draft: 8 }
+    }
+}
+
+/// Decoding method — the paper's four compared systems.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Greedy,
+    /// Full Best-of-N with negative-perplexity selection.
+    Bon,
+    /// Self-Truncation Best-of-N (Wang et al. 2025).
+    StBon,
+    /// KAPPA (the paper's "KL" rows).
+    Kappa,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(Method::Greedy),
+            "bon" | "full-bon" => Some(Method::Bon),
+            "stbon" | "st-bon" => Some(Method::StBon),
+            "kappa" | "kl" => Some(Method::Kappa),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Greedy => "greedy",
+            Method::Bon => "bon",
+            Method::StBon => "stbon",
+            Method::Kappa => "kl",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa]
+    }
+}
+
+/// Everything needed to reproduce one experiment run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub method: Method,
+    pub n: usize,
+    pub max_new_tokens: usize,
+    pub sampler: SamplerConfig,
+    pub kappa: KappaConfig,
+    pub stbon: StBonConfig,
+    pub seed: u64,
+    /// Bucket compaction after pruning/finish (disable only for the
+    /// `ablation_buckets` bench).
+    pub compact: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::Kappa,
+            n: 5,
+            max_new_tokens: 96,
+            sampler: SamplerConfig::default(),
+            kappa: KappaConfig::default(),
+            stbon: StBonConfig::default(),
+            seed: 0,
+            compact: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// JSON summary embedded in bench reports for replayability.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.name())),
+            ("n", Json::num(self.n as f64)),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            ("temperature", Json::num(self.sampler.temperature as f64)),
+            ("top_k", Json::num(self.sampler.top_k as f64)),
+            ("top_p", Json::num(self.sampler.top_p as f64)),
+            ("ema_alpha", Json::num(self.kappa.ema_alpha)),
+            ("window", Json::num(self.kappa.window as f64)),
+            ("mom_buckets", Json::num(self.kappa.mom_buckets as f64)),
+            ("w_kl", Json::num(self.kappa.w_kl)),
+            ("w_conf", Json::num(self.kappa.w_conf)),
+            ("w_ent", Json::num(self.kappa.w_ent)),
+            ("schedule", Json::str(self.kappa.schedule.name())),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let s = SamplerConfig::default();
+        assert_eq!(s.temperature, 0.7);
+        assert_eq!(s.top_k, 20);
+        assert_eq!(s.top_p, 0.95);
+        let k = KappaConfig::default();
+        assert_eq!(k.ema_alpha, 0.5);
+        assert_eq!(k.window, 16);
+        assert_eq!(k.mom_buckets, 4);
+        assert_eq!((k.w_kl, k.w_conf, k.w_ent), (0.7, 0.2, 0.1));
+        assert_eq!(k.z_clamp, 3.0);
+        assert_eq!(k.schedule, Schedule::Linear);
+    }
+
+    #[test]
+    fn tau_default_scales_with_n() {
+        let k = KappaConfig::default();
+        assert_eq!(k.effective_tau(5), 8);
+        assert_eq!(k.effective_tau(20), 8); // τ fixed across N (paper §5)
+        let k2 = KappaConfig { tau: Some(7), ..KappaConfig::default() };
+        assert_eq!(k2.effective_tau(20), 7);
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("KL"), Some(Method::Kappa));
+        assert_eq!(Method::parse("bon"), Some(Method::Bon));
+        assert_eq!(Method::parse("st-bon"), Some(Method::StBon));
+        assert_eq!(Method::parse("greedy"), Some(Method::Greedy));
+        assert_eq!(Method::parse("x"), None);
+    }
+
+    #[test]
+    fn kappa_from_args_overrides() {
+        let args = crate::util::cli::Args::parse(
+            "--ema-alpha 0.3 --schedule cosine --tau 12".split_whitespace().map(String::from),
+        );
+        let k = KappaConfig::from_args(&args);
+        assert_eq!(k.ema_alpha, 0.3);
+        assert_eq!(k.schedule, Schedule::Cosine);
+        assert_eq!(k.tau, Some(12));
+        assert_eq!(k.window, 16); // untouched default
+    }
+}

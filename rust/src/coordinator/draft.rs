@@ -1,0 +1,98 @@
+//! Draft-phase cutoff detection.
+//!
+//! Both ST-BoN and KAPPA define the draft cutoff `c` as the earliest step
+//! at which all branches are **pairwise inconsistent** (Wang et al. 2025):
+//! no two branches share an identical generated prefix. Divergence is
+//! monotone (prefixes never re-converge), so it suffices to check whether
+//! any two branches' token sequences are still equal.
+
+/// True when every pair of sequences differs (the cutoff condition).
+pub fn all_pairwise_inconsistent(seqs: &[&[u32]]) -> bool {
+    for i in 0..seqs.len() {
+        for j in (i + 1)..seqs.len() {
+            if seqs[i] == seqs[j] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Token-overlap consistency between two equal-position sequences over
+/// their first `upto` tokens: fraction of positions that agree. This is
+/// the serving-side stand-in for ST-BoN's latent "early sampling
+/// consistency" (we score agreement in sampled-token space rather than
+/// hidden-state space — DESIGN.md §2 documents the substitution).
+pub fn token_consistency(a: &[u32], b: &[u32], upto: usize) -> f64 {
+    let n = upto.min(a.len()).min(b.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let same = (0..n).filter(|&i| a[i] == b[i]).count();
+    same as f64 / n as f64
+}
+
+/// ST-BoN chain selection: the branch most consistent with all the others
+/// (sum of pairwise consistencies over the first `upto` tokens). Ties →
+/// lowest index.
+pub fn most_consistent(seqs: &[&[u32]], upto: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f64::NEG_INFINITY;
+    for i in 0..seqs.len() {
+        let mut s = 0.0;
+        for j in 0..seqs.len() {
+            if i != j {
+                s += token_consistency(seqs[i], seqs[j], upto);
+            }
+        }
+        if s > best_score {
+            best_score = s;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_inconsistency() {
+        let a = vec![1u32, 2, 3];
+        let b = vec![1u32, 2, 4];
+        let c = vec![1u32, 2, 3];
+        assert!(all_pairwise_inconsistent(&[&a, &b]));
+        assert!(!all_pairwise_inconsistent(&[&a, &b, &c])); // a == c
+        assert!(all_pairwise_inconsistent(&[&a]));
+        assert!(all_pairwise_inconsistent(&[]));
+    }
+
+    #[test]
+    fn consistency_fraction() {
+        let a = vec![1u32, 2, 3, 4];
+        let b = vec![1u32, 2, 9, 9];
+        assert_eq!(token_consistency(&a, &b, 4), 0.5);
+        assert_eq!(token_consistency(&a, &b, 2), 1.0);
+        assert_eq!(token_consistency(&a, &b, 0), 0.0);
+        assert_eq!(token_consistency(&[], &b, 4), 0.0);
+    }
+
+    #[test]
+    fn consistency_is_symmetric() {
+        let a = vec![5u32, 6, 7];
+        let b = vec![5u32, 0, 7];
+        assert_eq!(token_consistency(&a, &b, 3), token_consistency(&b, &a, 3));
+    }
+
+    #[test]
+    fn most_consistent_finds_the_medoid() {
+        // Three near-identical chains + one outlier.
+        let a = vec![1u32, 2, 3, 4];
+        let b = vec![1u32, 2, 3, 5];
+        let c = vec![1u32, 2, 3, 4];
+        let d = vec![9u32, 9, 9, 9];
+        let pick = most_consistent(&[&a, &b, &c, &d], 4);
+        assert!(pick == 0 || pick == 2); // one of the identical pair
+    }
+}

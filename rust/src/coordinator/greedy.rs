@@ -1,0 +1,32 @@
+//! Greedy decoding — the paper's cost baseline (M_cost is normalized by
+//! greedy's peak memory).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::metrics::RequestMetrics;
+
+use super::config::RunConfig;
+use super::{sampler, GenOutput};
+
+pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig) -> Result<GenOutput> {
+    let mut state = engine.start(prompt, 1)?;
+    let mut steps = 0usize;
+    while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
+        let tok = sampler::argmax(state.logits_for_slot(0));
+        let lp = sampler::token_logprob(state.logits_for_slot(0), tok as usize);
+        state.step(engine, &[(tok, lp)])?;
+        steps += 1;
+    }
+    let text = state.text_of(engine, 0);
+    let metrics = RequestMetrics {
+        final_branch_tokens: state.branches[0].tokens.len(),
+        total_tokens: state.total_tokens(),
+        peak_mem_bytes: state.mem.peak(),
+        wall_seconds: 0.0,
+        correct: false,
+        decode_calls: state.decode_calls,
+        gather_calls: state.gather_calls,
+    };
+    Ok(GenOutput { text, chosen_branch: 0, metrics })
+}

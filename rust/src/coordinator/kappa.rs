@@ -1,0 +1,190 @@
+//! KAPPA — the KL-Adjusted Pruned Path Algorithm (paper Algorithm 2).
+//!
+//! Phase I  (Draft):        sample N branches in parallel until the
+//!                          pairwise-inconsistency cutoff `c`.
+//! Phase II (Scoring & Gating): for up to τ steps, score every candidate
+//!                          with the fused (KL, confidence, entropy)
+//!                          signal kernel, robustify ΔI with
+//!                          median-of-means, smooth with bias-corrected
+//!                          EMA, z-normalize across branches, combine with
+//!                          (w_KL, w_C, w_H) and fold into the
+//!                          trajectory-weighted score; prune to the
+//!                          schedule's survivor count each step.
+//! Phase III (Continuation): decode the sole survivor to EOS.
+//!
+//! Branches that reach EOS during scoring stay in the candidate pool with
+//! a frozen score (their text is complete and they cost nothing further) —
+//! pruning removes candidates, whether finished or live.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::metrics::RequestMetrics;
+use crate::util::rng::Pcg64;
+
+use super::config::RunConfig;
+use super::signals::{combine_scores, raw_signals, BranchSignalState};
+use super::{draft, sampler, schedule, GenOutput};
+
+pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
+    let n = cfg.n;
+    let mut state = engine.start_opts(prompt, n, crate::engine::StartOpts { compact: cfg.compact })?;
+    let mut rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+    let kcfg = &cfg.kappa;
+    let tau = kcfg.effective_tau(n);
+
+    let mut steps = 0usize; // generated tokens per branch so far
+
+    // ---- Phase I: Draft (exploration) ----
+    while steps < cfg.max_new_tokens && state.remaining() > 0 {
+        let seqs: Vec<&[u32]> =
+            state.live_branches().iter().map(|&bi| state.branches[bi].tokens.as_slice()).collect();
+        if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= kcfg.max_draft {
+            break;
+        }
+        let live = state.live_branches().to_vec();
+        if live.is_empty() {
+            break;
+        }
+        let mut sampled = Vec::with_capacity(live.len());
+        for (slot, &bi) in live.iter().enumerate() {
+            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
+        }
+        state.step(engine, &sampled)?;
+        steps += 1;
+        if !state.compact_finished(engine)? {
+            break;
+        }
+    }
+
+    // ---- Phase II: Scoring & Gating (selection over horizon τ) ----
+    // Candidates: every branch not pruned (finished branches keep their
+    // frozen trajectory score). `sig` runs parallel to `state.branches`.
+    let mut sig: Vec<BranchSignalState> =
+        (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
+
+    let mut k = 0usize; // gating step index (1-based in the schedule)
+    while k < tau && steps < cfg.max_new_tokens && state.remaining() > 0 {
+        let live = state.live_branches().to_vec();
+        if live.is_empty() {
+            break;
+        }
+        k += 1;
+
+        // -- Signals for the live rows (fused Pallas kernel, or native).
+        let rows = live.len();
+        let (kl, conf, ent) = if kcfg.native_signals {
+            let q = engine.model().q_logits();
+            let mut kl = Vec::with_capacity(rows);
+            let mut cf = Vec::with_capacity(rows);
+            let mut en = Vec::with_capacity(rows);
+            for slot in 0..rows {
+                let (a, b, c) = raw_signals(state.logits_for_slot(slot), q);
+                kl.push(a);
+                cf.push(b);
+                en.push(c);
+            }
+            (kl, cf, en)
+        } else {
+            let slab = state.live_logits();
+            let (a, b, c) = engine.model().signals(&slab, rows)?;
+            (
+                a.into_iter().map(|x| x as f64).collect(),
+                b.into_iter().map(|x| x as f64).collect(),
+                c.into_iter().map(|x| x as f64).collect(),
+            )
+        };
+
+        // -- Robustified KL information change per live branch.
+        let mut ema = Vec::with_capacity(rows);
+        for (slot, &bi) in live.iter().enumerate() {
+            ema.push(sig[bi].update_kl(kl[slot], kcfg));
+        }
+
+        // -- Across-branch z-norm + weighted combine + trajectory update.
+        combine_scores(&mut sig, &live, &ema, &conf, &ent, steps + 1, kcfg);
+
+        // -- One-step continuation for the next scoring round.
+        let mut sampled = Vec::with_capacity(rows);
+        for (slot, &bi) in live.iter().enumerate() {
+            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
+        }
+        state.step(engine, &sampled)?;
+        steps += 1;
+
+        // -- Gating: prune candidates down to the schedule's target.
+        let candidates: Vec<usize> = (0..state.branches.len())
+            .filter(|&bi| !state.branches[bi].pruned)
+            .collect();
+        let target = schedule::survivors(kcfg.schedule, n, k, tau).min(candidates.len()).max(1);
+        if target < candidates.len() {
+            let mut ranked = candidates.clone();
+            ranked.sort_by(|&a, &b| sig[b].score.partial_cmp(&sig[a].score).unwrap());
+            let keep: Vec<usize> = ranked[..target].to_vec();
+            // Device batch keeps only the unfinished survivors, in slot order.
+            let keep_live: Vec<usize> = state
+                .live_branches()
+                .iter()
+                .copied()
+                .filter(|bi| keep.contains(bi))
+                .collect();
+            if keep_live.is_empty() {
+                // All survivors already finished: mark the rest pruned and
+                // exit the gating loop.
+                for &bi in &candidates {
+                    if !keep.contains(&bi) {
+                        state.branches[bi].pruned = true;
+                    }
+                }
+                break;
+            }
+            state.retain_branches(engine, &keep_live)?;
+            // Mark finished non-kept candidates as pruned (they were not
+            // live, so retain_branches couldn't see them).
+            for &bi in &candidates {
+                if !keep.contains(&bi) {
+                    state.branches[bi].pruned = true;
+                }
+            }
+        }
+        if !state.compact_finished(engine)? {
+            break;
+        }
+    }
+
+    // ---- Phase III: Continuation (exploitation) ----
+    // Winner: highest trajectory score among unpruned candidates (ties →
+    // lowest index, per Algorithm 2 line 27).
+    let candidates: Vec<usize> =
+        (0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned).collect();
+    let chosen = candidates
+        .iter()
+        .copied()
+        .max_by(|&a, &b| sig[a].score.partial_cmp(&sig[b].score).unwrap())
+        .unwrap_or(0);
+
+    if !state.branches[chosen].finished {
+        // Drop any other still-live branches, keep decoding the winner.
+        if state.live_branches().contains(&chosen) {
+            state.retain_branches(engine, &[chosen])?;
+            let mut rng = rngs[chosen].clone();
+            while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
+                let (tok, lp) = sampler::sample(state.logits_for_slot(0), &cfg.sampler, &mut rng);
+                state.step(engine, &[(tok, lp)])?;
+                steps += 1;
+            }
+        }
+    }
+
+    let text = state.text_of(engine, chosen);
+    let metrics = RequestMetrics {
+        final_branch_tokens: state.branches[chosen].tokens.len(),
+        total_tokens: state.total_tokens(),
+        peak_mem_bytes: state.mem.peak(),
+        wall_seconds: 0.0,
+        correct: false,
+        decode_calls: state.decode_calls,
+        gather_calls: state.gather_calls,
+    };
+    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+}

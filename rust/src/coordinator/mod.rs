@@ -1,0 +1,63 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Four decoding policies over the shared [`crate::engine::Engine`]:
+//! [`greedy`], [`bon`] (Full Best-of-N), [`stbon`] (Self-Truncation BoN)
+//! and [`kappa`] (the paper's method, "KL" in its tables). Each consumes a
+//! prompt and produces a [`GenOutput`] with the chosen text and the
+//! request metrics the paper reports.
+
+pub mod bon;
+pub mod config;
+pub mod draft;
+pub mod greedy;
+pub mod kappa;
+pub mod sampler;
+pub mod schedule;
+pub mod signals;
+pub mod stbon;
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::metrics::RequestMetrics;
+
+use config::{Method, RunConfig};
+
+/// Result of one decoded request.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    /// Generated text of the selected branch.
+    pub text: String,
+    /// Index of the selected branch.
+    pub chosen_branch: usize,
+    /// Per-request metrics (correctness left false; the evaluator fills it).
+    pub metrics: RequestMetrics,
+}
+
+/// Dispatch a request through the configured method.
+pub fn run_method(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
+    match cfg.method {
+        Method::Greedy => greedy::run(engine, prompt, cfg),
+        Method::Bon => bon::run(engine, prompt, cfg, seed),
+        Method::StBon => stbon::run(engine, prompt, cfg, seed),
+        Method::Kappa => kappa::run(engine, prompt, cfg, seed),
+    }
+}
+
+/// Convenience used by benches/tests: run a whole problem set and collect
+/// run-level metrics (accuracy filled from exact match).
+pub fn metrics_for(
+    engine: &Engine,
+    problems: &[crate::data::Sample],
+    cfg: &RunConfig,
+) -> Result<crate::metrics::RunMetrics> {
+    let mut run = crate::metrics::RunMetrics::default();
+    for (i, p) in problems.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let mut out = run_method(engine, &p.prompt(), cfg, cfg.seed.wrapping_add(i as u64))?;
+        out.metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        out.metrics.correct = crate::data::eval::is_correct(&out.text, p.answer);
+        run.push(out.metrics);
+    }
+    Ok(run)
+}

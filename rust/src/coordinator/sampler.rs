@@ -1,0 +1,161 @@
+//! Token sampling: temperature → top-k → top-p (nucleus) → categorical
+//! draw, matching the paper's §4.1 strategy (k=20, p=0.95, T=0.7).
+//!
+//! Also returns the **full-softmax** log-probability of the drawn token —
+//! the quantity BoN's negative-perplexity selection accumulates (the
+//! filtered distribution is only used for the draw itself, as in HF
+//! `generate`).
+
+use crate::util::rng::Pcg64;
+
+use super::config::SamplerConfig;
+
+/// log-sum-exp over a logits row (numerically stable).
+pub fn log_sum_exp(logits: &[f32]) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let s: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Full-softmax log p(token) for a logits row.
+pub fn token_logprob(logits: &[f32], token: usize) -> f64 {
+    logits[token] as f64 - log_sum_exp(logits)
+}
+
+/// Greedy argmax (ties → lowest id, matching jnp.argmax).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Sample one token. Returns `(token, full_softmax_logprob)`.
+pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64) {
+    let v = logits.len();
+    debug_assert!(v > 0);
+
+    // Temperature scaling on a working copy of (index, logit).
+    let inv_t = 1.0 / cfg.temperature.max(1e-6);
+    let mut scaled: Vec<(usize, f32)> = logits.iter().map(|&x| x * inv_t).enumerate().collect();
+
+    // Top-k: keep the k highest-logit tokens.
+    let k = cfg.top_k.clamp(1, v);
+    scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scaled.truncate(k);
+
+    // Softmax over the survivors.
+    let m = scaled[0].1;
+    let mut probs: Vec<f64> = scaled.iter().map(|&(_, x)| ((x - m) as f64).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+
+    // Top-p: smallest prefix (in descending prob order) with mass ≥ p.
+    let mut cut = probs.len();
+    if cfg.top_p < 1.0 {
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= cfg.top_p as f64 {
+                cut = i + 1;
+                break;
+            }
+        }
+    }
+    let probs = &probs[..cut];
+    let z: f64 = probs.iter().sum();
+
+    // Categorical draw.
+    let mut u = rng.next_f64() * z;
+    let mut chosen = cut - 1;
+    for (i, &p) in probs.iter().enumerate() {
+        if u < p {
+            chosen = i;
+            break;
+        }
+        u -= p;
+    }
+    let token = scaled[chosen].0;
+    (token as u32, token_logprob(logits, token))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(t: f32, k: usize, p: f32) -> SamplerConfig {
+        SamplerConfig { temperature: t, top_k: k, top_p: p }
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0]), 0); // tie → lowest id
+    }
+
+    #[test]
+    fn logprob_is_normalized() {
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        let total: f64 = (0..4).map(|i| token_logprob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_k_1_is_greedy() {
+        let logits = vec![0.0f32, 9.0, 1.0, 2.0];
+        let mut rng = Pcg64::new(1, 1);
+        for _ in 0..20 {
+            let (t, _) = sample(&logits, &cfg(0.7, 1, 1.0), &mut rng);
+            assert_eq!(t, 1);
+        }
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // One dominant token (p≈0.88) + tail; top_p=0.5 keeps only it.
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 4.0;
+        let mut rng = Pcg64::new(2, 2);
+        for _ in 0..50 {
+            let (t, _) = sample(&logits, &cfg(1.0, 10, 0.5), &mut rng);
+            assert_eq!(t, 3);
+        }
+    }
+
+    #[test]
+    fn sampling_distribution_roughly_matches() {
+        // Two tokens with 2:1 odds after temperature=1.
+        let logits = vec![(2.0f64).ln() as f32, 0.0];
+        let mut rng = Pcg64::new(3, 3);
+        let c = cfg(1.0, 2, 1.0);
+        let n = 20000;
+        let mut count0 = 0;
+        for _ in 0..n {
+            if sample(&logits, &c, &mut rng).0 == 0 {
+                count0 += 1;
+            }
+        }
+        let frac = count0 as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 / 3.0).collect();
+        let c = SamplerConfig::default();
+        let a: Vec<u32> = {
+            let mut rng = Pcg64::new(42, 7);
+            (0..32).map(|_| sample(&logits, &c, &mut rng).0).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Pcg64::new(42, 7);
+            (0..32).map(|_| sample(&logits, &c, &mut rng).0).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,72 @@
+//! Pruning schedules: target survivor counts over the Scoring & Gating
+//! horizon (Algorithm 2 line 24, plus the cosine variant from §5).
+
+use super::config::Schedule;
+
+/// Target number of surviving branches after gating step `k` (1-based,
+/// `k = t − c + 1 ∈ [1, τ]`) out of `n` starting branches.
+///
+/// - Linear (paper): `R = N − ⌊k·N/τ⌋`, floored at 1 (the paper's formula
+///   reaches 0 at k = τ; one branch must survive to the continuation
+///   phase).
+/// - Cosine (paper §5): `R = 1 + ⌊(N−1)·(1+cos(π·k/τ))/2⌋` — prunes
+///   gently early, aggressively late.
+pub fn survivors(schedule: Schedule, n: usize, k: usize, tau: usize) -> usize {
+    debug_assert!(k >= 1 && tau >= 1);
+    let k = k.min(tau);
+    match schedule {
+        Schedule::Linear => {
+            let pruned = (k * n) / tau;
+            n.saturating_sub(pruned).max(1)
+        }
+        Schedule::Cosine => {
+            let frac = (1.0 + (std::f64::consts::PI * k as f64 / tau as f64).cos()) / 2.0;
+            1 + ((n - 1) as f64 * frac).round() as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_reaches_one_at_tau() {
+        for n in [2, 5, 10, 20] {
+            let tau = 2 * n;
+            assert_eq!(survivors(Schedule::Linear, n, tau, tau), 1);
+            // Monotone non-increasing.
+            let mut prev = n;
+            for k in 1..=tau {
+                let r = survivors(Schedule::Linear, n, k, tau);
+                assert!(r <= prev && r >= 1);
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn linear_matches_paper_formula_until_floor() {
+        // N=10, τ=20: R_k = 10 − ⌊k/2⌋ for k < 18.
+        for k in 1..18 {
+            assert_eq!(survivors(Schedule::Linear, 10, k, 20), 10 - (k * 10) / 20);
+        }
+    }
+
+    #[test]
+    fn cosine_is_gentler_early() {
+        let (n, tau) = (20, 40);
+        for k in 1..tau / 4 {
+            let lin = survivors(Schedule::Linear, n, k, tau);
+            let cos = survivors(Schedule::Cosine, n, k, tau);
+            assert!(cos >= lin, "k={k}: cosine {cos} < linear {lin}");
+        }
+        assert_eq!(survivors(Schedule::Cosine, n, tau, tau), 1);
+    }
+
+    #[test]
+    fn k_clamped_to_tau() {
+        assert_eq!(survivors(Schedule::Linear, 5, 99, 10), 1);
+        assert_eq!(survivors(Schedule::Cosine, 5, 99, 10), 1);
+    }
+}

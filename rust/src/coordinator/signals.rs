@@ -1,0 +1,237 @@
+//! The latent-informativeness signal pipeline (Algorithm 2 lines 13–21).
+//!
+//! Per step, per alive branch:
+//!   1. raw signals — KL(p_t‖q), confidence, entropy. On the hot path
+//!      these come from the fused Pallas executable
+//!      ([`crate::runtime::LoadedModel::signals`]); [`raw_signals`] is the
+//!      bit-compatible native Rust path used for differential testing and
+//!      the `--native-signals` ablation.
+//!   2. information change ΔI_t = D_t − D_{t−1} (D_{c−1} ≡ 0),
+//!   3. median-of-means over the last `w` ΔI values in `m` buckets,
+//!   4. bias-corrected EMA with rate α,
+//!   5. across-branch z-normalization + clamp (done in
+//!      [`combine_scores`], since it needs all branches at once),
+//!   6. weighted instantaneous score and trajectory-weighted total
+//!      S_t = Σ_{t'} ω_{t',t} s_{t'} with ω ∝ t'.
+
+use crate::util::stats;
+
+use super::config::KappaConfig;
+
+/// Matches `EPS` in `python/compile/kernels/ref.py`.
+pub const EPS: f64 = 1e-9;
+
+/// Native (KL, confidence, entropy) for one logits row against reference
+/// logits `q`. Must agree with the Pallas kernel to ~1e-5.
+pub fn raw_signals(logits: &[f32], q_logits: &[f32]) -> (f64, f64, f64) {
+    let logp = log_softmax(logits);
+    let logq = log_softmax(q_logits);
+    let mut kl = 0.0;
+    let mut conf = f64::NEG_INFINITY;
+    let mut ent = 0.0;
+    for i in 0..logp.len() {
+        let p = logp[i].exp();
+        kl += p * (logp[i] - logq[i]);
+        conf = conf.max(p);
+        ent -= p * (p + EPS).ln();
+    }
+    (kl, conf, ent)
+}
+
+fn log_softmax(x: &[f32]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = (x.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>()).ln() + m;
+    x.iter().map(|&v| v as f64 - lse).collect()
+}
+
+/// Per-branch running state for the KAPPA score.
+#[derive(Debug, Clone)]
+pub struct BranchSignalState {
+    /// D_{t−1}: previous KL divergence (0 at initialization, per paper).
+    prev_kl: f64,
+    /// Ring buffer of the last `window` ΔI values.
+    delta_window: Vec<f64>,
+    window: usize,
+    /// Un-bias-corrected EMA accumulator.
+    ema: f64,
+    /// Steps since scoring started (for bias correction exponent).
+    steps: usize,
+    /// Trajectory score numerator Σ t'·s_{t'} and denominator Σ t'.
+    traj_num: f64,
+    traj_den: f64,
+    /// Latest trajectory-weighted score S_t.
+    pub score: f64,
+}
+
+impl BranchSignalState {
+    pub fn new(window: usize) -> Self {
+        Self {
+            prev_kl: 0.0,
+            delta_window: Vec::with_capacity(window),
+            window: window.max(1),
+            ema: 0.0,
+            steps: 0,
+            traj_num: 0.0,
+            traj_den: 0.0,
+            score: 0.0,
+        }
+    }
+
+    /// Feed this step's raw KL divergence; returns the bias-corrected,
+    /// MoM-robustified EMA of ΔI (Algorithm 2 lines 14–17).
+    pub fn update_kl(&mut self, kl: f64, cfg: &KappaConfig) -> f64 {
+        let delta = kl - self.prev_kl;
+        self.prev_kl = kl;
+        if self.delta_window.len() == self.window {
+            self.delta_window.remove(0);
+        }
+        self.delta_window.push(delta);
+
+        let robust = stats::median_of_means(&self.delta_window, cfg.mom_buckets);
+
+        self.steps += 1;
+        let a = cfg.ema_alpha;
+        self.ema = a * robust + (1.0 - a) * self.ema;
+        // Bias correction: EMA_t / (1 − (1−α)^t).
+        let corr = 1.0 - (1.0 - a).powi(self.steps as i32);
+        self.ema / corr.max(1e-12)
+    }
+
+    /// Accumulate the instantaneous score s_t into the trajectory-weighted
+    /// total with weight ∝ t (later steps count more); `t` is the global
+    /// decode position, so weights grow along the generation.
+    pub fn update_trajectory(&mut self, s_t: f64, t: usize) {
+        let w = t as f64;
+        self.traj_num += w * s_t;
+        self.traj_den += w;
+        self.score = if self.traj_den > 0.0 { self.traj_num / self.traj_den } else { 0.0 };
+    }
+}
+
+/// Step-level score combination across alive branches (Algorithm 2 lines
+/// 19–21): z-normalize each signal across branches, clamp, weight, sum —
+/// then fold into each branch's trajectory score.
+///
+/// `sig` is the full per-branch state array; `live[i]` names the branch
+/// whose signals sit at row `i` of `ema`/`conf`/`ent`. `t` is the decode
+/// position. Returns the per-row instantaneous scores.
+pub fn combine_scores(
+    sig: &mut [BranchSignalState],
+    live: &[usize],
+    ema: &[f64],
+    conf: &[f64],
+    ent: &[f64],
+    t: usize,
+    cfg: &KappaConfig,
+) -> Vec<f64> {
+    debug_assert_eq!(live.len(), ema.len());
+    let eps = 1e-8;
+    let zn_ema = stats::z_normalize(ema, eps, cfg.z_clamp);
+    let zn_conf = stats::z_normalize(conf, eps, cfg.z_clamp);
+    let zn_ent = stats::z_normalize(ent, eps, cfg.z_clamp);
+    let mut out = Vec::with_capacity(live.len());
+    for (i, &bi) in live.iter().enumerate() {
+        let s_t = cfg.w_kl * zn_ema[i] + cfg.w_conf * zn_conf[i] + cfg.w_ent * zn_ent[i];
+        sig[bi].update_trajectory(s_t, t);
+        out.push(s_t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_signals_sanity() {
+        // Uniform p == uniform q → KL 0, conf 1/V, ent ln(V).
+        let v = 8usize;
+        let logits = vec![0f32; v];
+        let (kl, conf, ent) = raw_signals(&logits, &logits);
+        assert!(kl.abs() < 1e-9);
+        assert!((conf - 1.0 / v as f64).abs() < 1e-9);
+        assert!((ent - (v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_positive_when_distributions_differ() {
+        let p = vec![5.0f32, 0.0, 0.0, 0.0];
+        let q = vec![0.0f32, 0.0, 0.0, 5.0];
+        let (kl, conf, _) = raw_signals(&p, &q);
+        assert!(kl > 1.0);
+        assert!(conf > 0.9);
+    }
+
+    #[test]
+    fn ema_bias_correction_first_step() {
+        // First update: EMA/(1−(1−α)) = α·x/α = x (after MoM of a single
+        // sample, which is the sample itself).
+        let cfg = KappaConfig::default();
+        let mut st = BranchSignalState::new(cfg.window);
+        let out = st.update_kl(2.0, &cfg); // ΔI = 2.0
+        assert!((out - 2.0).abs() < 1e-9, "{out}");
+    }
+
+    #[test]
+    fn ema_converges_to_constant_signal() {
+        let cfg = KappaConfig::default();
+        let mut st = BranchSignalState::new(cfg.window);
+        let mut kl = 0.0;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            kl += 0.5; // constant ΔI of 0.5
+            last = st.update_kl(kl, &cfg);
+        }
+        assert!((last - 0.5).abs() < 1e-6, "{last}");
+    }
+
+    #[test]
+    fn trajectory_weights_favor_recent() {
+        let mut st = BranchSignalState::new(4);
+        // Early bad scores, later good: trajectory must end positive and
+        // above the plain mean.
+        let scores = [-1.0, -1.0, 1.0, 1.0];
+        for (i, &s) in scores.iter().enumerate() {
+            st.update_trajectory(s, i + 1);
+        }
+        assert!(st.score > 0.0);
+        // ω ∝ t: (−1·1 −1·2 +1·3 +1·4)/10 = 0.4
+        assert!((st.score - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_scores_ranks_better_branch_higher() {
+        let cfg = KappaConfig::default();
+        let mut sig = vec![BranchSignalState::new(cfg.window), BranchSignalState::new(cfg.window)];
+        // Branch 0: high EMA, high confidence, branch 1 low.
+        let s =
+            combine_scores(&mut sig, &[0, 1], &[1.0, -1.0], &[0.9, 0.1], &[1.0, 1.0], 5, &cfg);
+        assert!(s[0] > s[1]);
+        assert!(sig[0].score > sig[1].score);
+    }
+
+    #[test]
+    fn combine_scores_respects_live_mapping() {
+        let cfg = KappaConfig::default();
+        let mut sig: Vec<BranchSignalState> =
+            (0..3).map(|_| BranchSignalState::new(cfg.window)).collect();
+        // Only branches 2 and 0 are live, in that slot order.
+        combine_scores(&mut sig, &[2, 0], &[5.0, -5.0], &[0.5, 0.5], &[0.5, 0.5], 3, &cfg);
+        assert!(sig[2].score > sig[0].score);
+        assert_eq!(sig[1].score, 0.0); // untouched
+    }
+
+    #[test]
+    fn mom_window_absorbs_spikes() {
+        let cfg = KappaConfig::default();
+        let mut st = BranchSignalState::new(cfg.window);
+        let mut kl = 0.0;
+        for _ in 0..16 {
+            kl += 0.1;
+            st.update_kl(kl, &cfg);
+        }
+        // One huge KL spike: MoM keeps the smoothed estimate near 0.1.
+        let out = st.update_kl(kl + 100.0, &cfg);
+        assert!(out < 1.0, "spike leaked through: {out}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Self-Truncation Best-of-N (Wang et al. 2025) — the efficiency baseline.
+//!
+//! 1. Sample N branches until the earliest point where all are pairwise
+//!    inconsistent (cutoff `c`, capped at `max_draft`),
+//! 2. keep sampling for a fixed buffer window so divergences become
+//!    pronounced,
+//! 3. self-estimate the best chain by early sampling consistency (the
+//!    branch most consistent with the others over the draft+buffer
+//!    region; token-space consistency — DESIGN.md §2 documents the
+//!    hidden-state → token-space substitution),
+//! 4. truncate all others and decode the winner to completion.
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::metrics::RequestMetrics;
+use crate::util::rng::Pcg64;
+
+use super::config::RunConfig;
+use super::{draft, sampler, GenOutput};
+
+pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
+    let mut state = engine.start_opts(
+        prompt,
+        cfg.n,
+        crate::engine::StartOpts { compact: cfg.compact },
+    )?;
+    let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+
+    let mut steps = 0usize;
+    let mut cutoff: Option<usize> = None;
+
+    // Phase 1+2: draft until pairwise inconsistency, then buffer window.
+    while steps < cfg.max_new_tokens && state.remaining() > 0 {
+        if cutoff.is_none() {
+            let seqs: Vec<&[u32]> =
+                state.live_branches().iter().map(|&bi| state.branches[bi].tokens.as_slice()).collect();
+            if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= cfg.stbon.max_draft
+            {
+                cutoff = Some(steps);
+            }
+        }
+        if let Some(c) = cutoff {
+            if steps >= c + cfg.stbon.buffer {
+                break;
+            }
+        }
+        let live = state.live_branches().to_vec();
+        if live.is_empty() {
+            break;
+        }
+        let mut sampled = Vec::with_capacity(live.len());
+        for (slot, &bi) in live.iter().enumerate() {
+            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
+        }
+        state.step(engine, &sampled)?;
+        steps += 1;
+        if !state.compact_finished(engine)? {
+            break;
+        }
+    }
+
+    // Phase 3: self-estimate the winner by early consistency across ALL
+    // branches (finished ones included — their prefixes still vote).
+    let upto = cutoff.map(|c| c + cfg.stbon.buffer).unwrap_or(steps).max(1);
+    let seqs: Vec<&[u32]> = state.branches.iter().map(|b| b.tokens.as_slice()).collect();
+    let chosen = draft::most_consistent(&seqs, upto);
+
+    // Phase 4: truncate everything else; decode the winner to completion.
+    if !state.branches[chosen].finished {
+        state.retain_branches(engine, &[chosen])?;
+        let mut rng = rngs[chosen].clone();
+        while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
+            let (tok, lp) = sampler::sample(state.logits_for_slot(0), &cfg.sampler, &mut rng);
+            state.step(engine, &[(tok, lp)])?;
+            steps += 1;
+        }
+    }
+
+    let text = state.text_of(engine, chosen);
+    let metrics = RequestMetrics {
+        final_branch_tokens: state.branches[chosen].tokens.len(),
+        total_tokens: state.total_tokens(),
+        peak_mem_bytes: state.mem.peak(),
+        wall_seconds: 0.0,
+        correct: false,
+        decode_calls: state.decode_calls,
+        gather_calls: state.gather_calls,
+    };
+    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+}

@@ -1,0 +1,85 @@
+//! Answer extraction + exact-match scoring.
+//!
+//! The paper extracts `\boxed{…}` post-hoc and scores exact match
+//! (Accuracy = N_match / N_total). Our char-level models are trained to
+//! emit a `#### <int>` marker instead (same role, vocabulary-friendly);
+//! extraction takes the *last* marker in the generated text, mirroring the
+//! "final answer" convention.
+
+/// Extract the final `#### <int>` answer from generated text, if any.
+pub fn extract_answer(text: &str) -> Option<i64> {
+    let mut result = None;
+    let mut rest = text;
+    while let Some(idx) = rest.find("####") {
+        let after = &rest[idx + 4..];
+        let trimmed = after.trim_start_matches(' ');
+        let end = trimmed
+            .char_indices()
+            .take_while(|(i, c)| c.is_ascii_digit() || (*i == 0 && *c == '-'))
+            .map(|(i, c)| i + c.len_utf8())
+            .last()
+            .unwrap_or(0);
+        if end > 0 {
+            if let Ok(v) = trimmed[..end].parse::<i64>() {
+                result = Some(v);
+            }
+        }
+        rest = &rest[idx + 4..];
+    }
+    result
+}
+
+/// Exact-match correctness for one generation.
+pub fn is_correct(text: &str, expected: i64) -> bool {
+    extract_answer(text) == Some(expected)
+}
+
+/// Accuracy over a batch of (generation, expected) pairs.
+pub fn accuracy(pairs: &[(String, i64)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let hits = pairs.iter().filter(|(t, e)| is_correct(t, *e)).count();
+    hits as f64 / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_simple() {
+        assert_eq!(extract_answer(" 12+3=15. #### 15\n"), Some(15));
+        assert_eq!(extract_answer("#### -42"), Some(-42));
+        assert_eq!(extract_answer("####7"), Some(7));
+    }
+
+    #[test]
+    fn takes_last_marker() {
+        assert_eq!(extract_answer("#### 1 then #### 2"), Some(2));
+        // A trailing marker without digits must not clobber a valid one.
+        assert_eq!(extract_answer("#### 3 junk ####"), Some(3));
+    }
+
+    #[test]
+    fn none_when_missing() {
+        assert_eq!(extract_answer("no answer here"), None);
+        assert_eq!(extract_answer("#### abc"), None);
+        assert_eq!(extract_answer(""), None);
+        assert_eq!(extract_answer("#### -"), None);
+    }
+
+    #[test]
+    fn correctness_and_accuracy() {
+        assert!(is_correct("x #### 5", 5));
+        assert!(!is_correct("x #### 5", 6));
+        let pairs = vec![
+            ("#### 1".to_string(), 1),
+            ("#### 2".to_string(), 3),
+            ("nothing".to_string(), 4),
+            ("#### 4".to_string(), 4),
+        ];
+        assert_eq!(accuracy(&pairs), 0.5);
+        assert_eq!(accuracy(&[]), 0.0);
+    }
+}

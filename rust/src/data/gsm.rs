@@ -1,0 +1,125 @@
+//! GSM8K-synth generator — exact mirror of `datagen.gen_gsm` in
+//! `python/compile/datagen.py` (same RNG draws, same template strings).
+
+use super::Sample;
+use crate::util::rng::SplitMix64;
+
+pub const NAMES: [&str; 8] = ["tom", "amy", "sam", "mia", "leo", "zoe", "max", "eva"];
+pub const ITEMS: [&str; 6] = ["apples", "coins", "books", "pens", "cards", "shells"];
+
+pub fn gen(rng: &mut SplitMix64) -> Sample {
+    let t = rng.below(5);
+    let name = NAMES[rng.below(NAMES.len() as u64) as usize];
+    let item = ITEMS[rng.below(ITEMS.len() as u64) as usize];
+    match t {
+        0 => {
+            let a = rng.range(10, 89);
+            let b = rng.range(10, 89);
+            let c = rng.range(2, (a + b - 1).min(60));
+            let (x, y) = (a + b, a + b - c);
+            Sample {
+                question: format!(
+                    "{name} has {a} {item}, buys {b} more, gives {c} away. how many {item} now?"
+                ),
+                cot: format!(" {a}+{b}={x}. {x}-{c}={y}."),
+                answer: y,
+            }
+        }
+        1 => {
+            let a = rng.range(10, 89);
+            let b = rng.range(10, 89);
+            let y = a + b;
+            Sample {
+                question: format!(
+                    "{name} has {a} {item} and finds {b} more. how many {item} in total?"
+                ),
+                cot: format!(" {a}+{b}={y}."),
+                answer: y,
+            }
+        }
+        2 => {
+            let a = rng.range(2, 9);
+            let b = rng.range(3, 12);
+            let y = a * b;
+            Sample {
+                question: format!(
+                    "{name} has {a} boxes of {b} {item} each. how many {item} in total?"
+                ),
+                cot: format!(" {a}*{b}={y}."),
+                answer: y,
+            }
+        }
+        3 => {
+            let a = rng.range(30, 99);
+            let c = rng.range(5, a - 5);
+            let b = rng.range(5, 60);
+            let (x, y) = (a - c, a - c + b);
+            Sample {
+                question: format!(
+                    "{name} has {a} {item}, loses {c}, then finds {b}. how many {item} now?"
+                ),
+                cot: format!(" {a}-{c}={x}. {x}+{b}={y}."),
+                answer: y,
+            }
+        }
+        _ => {
+            let a = rng.range(10, 60);
+            let b = rng.range(2, 9);
+            let k = rng.range(2, 9);
+            let (x, y) = (b * k, a + b * k);
+            Sample {
+                question: format!(
+                    "{name} had {a} {item}, then bought {b} packs of {k}. how many {item} now?"
+                ),
+                cot: format!(" {b}*{k}={x}. {a}+{x}={y}."),
+                answer: y,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answers_nonnegative_and_bounded() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..2000 {
+            let s = gen(&mut rng);
+            assert!((0..=999).contains(&s.answer), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn covers_all_templates() {
+        let mut rng = SplitMix64::new(5);
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            let s = gen(&mut rng);
+            let q = &s.question;
+            if q.contains("gives") {
+                seen[0] = true;
+            } else if q.contains("finds") && q.contains("in total") {
+                seen[1] = true;
+            } else if q.contains("boxes of") {
+                seen[2] = true;
+            } else if q.contains("loses") {
+                seen[3] = true;
+            } else if q.contains("packs of") {
+                seen[4] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn vocabulary_is_encodable() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..500 {
+            let s = gen(&mut rng);
+            tok.encode(&format!("{}{}\n", s.prompt(), s.response())).unwrap();
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! MATH500-synth generator — exact mirror of `datagen.gen_math` in
+//! `python/compile/datagen.py` (same RNG draws, same template strings).
+//! Harder than GSM-synth: more steps, larger operands, negatives, `mod`.
+
+use super::Sample;
+use crate::util::rng::SplitMix64;
+
+pub fn gen(rng: &mut SplitMix64) -> Sample {
+    let t = rng.below(5);
+    match t {
+        0 => {
+            let a = rng.range(3, 19);
+            let b = rng.range(3, 19);
+            let c = rng.range(2, 49);
+            let d = rng.range(3, 19);
+            let x = a * b;
+            let y = x + c;
+            let z = y % d;
+            Sample {
+                question: format!("compute ({a}*{b}+{c}) mod {d}."),
+                cot: format!(" {a}*{b}={x}. {x}+{c}={y}. {y} mod {d}={z}."),
+                answer: z,
+            }
+        }
+        1 => {
+            let a = rng.range(5, 49);
+            let b = rng.range(5, 49);
+            let c = rng.range(5, 29);
+            let d = rng.range(5, 29);
+            let (x, y) = (a + b, c - d);
+            let z = x * y;
+            Sample {
+                question: format!("compute ({a}+{b})*({c}-{d})."),
+                cot: format!(" {a}+{b}={x}. {c}-{d}={y}. {x}*{y}={z}."),
+                answer: z,
+            }
+        }
+        2 => {
+            let a = rng.range(3, 19);
+            let b = rng.range(3, 19);
+            let c = rng.range(3, 19);
+            let d = rng.range(3, 19);
+            let (x, y) = (a * b, c * d);
+            let z = x - y;
+            Sample {
+                question: format!("compute {a}*{b}-{c}*{d}."),
+                cot: format!(" {a}*{b}={x}. {c}*{d}={y}. {x}-{y}={z}."),
+                answer: z,
+            }
+        }
+        3 => {
+            let a = rng.range(4, 25);
+            let b = rng.range(3, 99);
+            let x = a * a;
+            let z = x + b;
+            Sample {
+                question: format!("let x={a}. compute x*x+{b}."),
+                cot: format!(" {a}*{a}={x}. {x}+{b}={z}."),
+                answer: z,
+            }
+        }
+        _ => {
+            let a = rng.range(10, 89);
+            let b = rng.range(10, 89);
+            let c = rng.range(10, 89);
+            let d = rng.range(3, 19);
+            let x = a + b;
+            let y = x + c;
+            let z = y % d;
+            Sample {
+                question: format!("compute ({a}+{b}+{c}) mod {d}."),
+                cot: format!(" {a}+{b}={x}. {x}+{c}={y}. {y} mod {d}={z}."),
+                answer: z,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negative_answers_occur() {
+        // Templates 1 and 2 can go negative — the tokenizer must see '-'.
+        let mut rng = SplitMix64::new(2);
+        let any_negative = (0..2000).any(|_| gen(&mut rng).answer < 0);
+        assert!(any_negative);
+    }
+
+    #[test]
+    fn mod_results_in_range() {
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..2000 {
+            let s = gen(&mut rng);
+            if s.question.contains(" mod ") {
+                assert!((0..19).contains(&s.answer), "{s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn vocabulary_is_encodable() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..500 {
+            let s = gen(&mut rng);
+            tok.encode(&format!("{}{}\n", s.prompt(), s.response())).unwrap();
+        }
+    }
+}

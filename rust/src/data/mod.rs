@@ -1,0 +1,116 @@
+//! Synthetic evaluation workloads (serving-side twin of
+//! `python/compile/datagen.py`).
+//!
+//! The templates below are a **cross-language contract**: the Python side
+//! trains on exactly these surface forms, so the Rust-generated eval
+//! problems are in-distribution. `python/tests/test_datagen_contract.py`
+//! locks the two implementations together with golden samples.
+
+pub mod eval;
+pub mod gsm;
+pub mod math;
+
+use crate::util::rng::SplitMix64;
+
+/// One reasoning problem: natural-language question, reference
+/// chain-of-thought, exact integer answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub question: String,
+    pub cot: String,
+    pub answer: i64,
+}
+
+impl Sample {
+    /// The serving prompt (what the client submits).
+    pub fn prompt(&self) -> String {
+        format!("q: {}\na:", self.question)
+    }
+
+    /// The reference response (CoT + answer marker), used in tests.
+    pub fn response(&self) -> String {
+        format!("{} #### {}", self.cot, self.answer)
+    }
+}
+
+/// Dataset identifiers, mirroring the paper's two benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// GSM8K stand-in: 1–2 step arithmetic word problems.
+    GsmSynth,
+    /// MATH500 stand-in: 2–3 step expression / modular problems.
+    MathSynth,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s {
+            "gsm" | "gsm_synth" | "gsm-synth" => Some(Dataset::GsmSynth),
+            "math" | "math_synth" | "math-synth" => Some(Dataset::MathSynth),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::GsmSynth => "gsm_synth",
+            Dataset::MathSynth => "math_synth",
+        }
+    }
+
+    pub fn generate_one(&self, rng: &mut SplitMix64) -> Sample {
+        match self {
+            Dataset::GsmSynth => gsm::gen(rng),
+            Dataset::MathSynth => math::gen(rng),
+        }
+    }
+
+    /// Deterministic problem set for a given seed.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| self.generate_one(&mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::GsmSynth.generate(5, 42);
+        let b = Dataset::GsmSynth.generate(5, 42);
+        assert_eq!(a, b);
+        let c = Dataset::GsmSynth.generate(5, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prompts_fit_model_prompt_len() {
+        // prompt_len is 96 in python/compile/model.py; BOS + prompt must fit.
+        for ds in [Dataset::GsmSynth, Dataset::MathSynth] {
+            for s in ds.generate(2000, 7) {
+                assert!(s.prompt().len() + 1 <= 96, "prompt too long: {:?}", s.prompt());
+            }
+        }
+    }
+
+    #[test]
+    fn cot_answers_are_consistent() {
+        // The reference CoT's final equation must produce the answer.
+        for ds in [Dataset::GsmSynth, Dataset::MathSynth] {
+            for s in ds.generate(500, 11) {
+                let resp = s.response();
+                let got = eval::extract_answer(&resp);
+                assert_eq!(got, Some(s.answer), "bad sample {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_parse_names() {
+        assert_eq!(Dataset::parse("gsm"), Some(Dataset::GsmSynth));
+        assert_eq!(Dataset::parse("math_synth"), Some(Dataset::MathSynth));
+        assert_eq!(Dataset::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,343 @@
+//! The decode engine: bucketed branch-batched generation over the
+//! AOT-compiled executables, with KV-cache lifecycle management and
+//! byte-accurate memory accounting.
+//!
+//! Layering:
+//! - [`Engine`] — one per loaded model; owns no request state.
+//! - [`GenState`] — one per request; tracks every branch's token
+//!   sequence, the device-resident KV cache (shaped to the smallest
+//!   bucket holding the live branches), the current logits slab, and the
+//!   request's [`MemTracker`].
+//!
+//! The policies in `crate::coordinator` drive `GenState` through a
+//! sample → step → (optionally) drop-branches loop. Branch *identity* is
+//! stable: policies address branches by index into [`GenState::branches`];
+//! the mapping to device slots is internal.
+
+pub mod mem;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use mem::MemTracker;
+
+use crate::runtime::{KvCache, LoadedModel};
+use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
+
+/// One candidate chain-of-thought branch.
+#[derive(Debug, Clone, Default)]
+pub struct Branch {
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<u32>,
+    /// Sum of log p(token) under the full softmax at each sampled step —
+    /// negative-perplexity selection for BoN (Kang et al. 2025).
+    pub logprob_sum: f64,
+    /// Reached EOS (or max length).
+    pub finished: bool,
+    /// Dropped by a policy decision (pruned) — distinct from `finished`.
+    pub pruned: bool,
+}
+
+impl Branch {
+    /// Mean token log-probability (the BoN selection score).
+    pub fn mean_logprob(&self) -> f64 {
+        if self.tokens.is_empty() {
+            f64::NEG_INFINITY
+        } else {
+            self.logprob_sum / self.tokens.len() as f64
+        }
+    }
+}
+
+/// Engine for one loaded model.
+pub struct Engine {
+    model: Arc<LoadedModel>,
+    tokenizer: Tokenizer,
+}
+
+impl Engine {
+    pub fn new(model: Arc<LoadedModel>) -> Engine {
+        Engine { model, tokenizer: Tokenizer::new() }
+    }
+
+    pub fn model(&self) -> &LoadedModel {
+        &self.model
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Begin a request: prefill the prompt once (bucket 1), broadcast the
+    /// primed cache to the bucket holding `n` branches, and return the
+    /// initial state. The prefill logits seed every branch's first sample.
+    pub fn start(&self, prompt: &str, n: usize) -> Result<GenState> {
+        self.start_opts(prompt, n, StartOpts::default())
+    }
+
+    /// [`Engine::start`] with options (see [`StartOpts`]).
+    pub fn start_opts(&self, prompt: &str, n: usize, opts: StartOpts) -> Result<GenState> {
+        if n == 0 {
+            bail!("need at least one branch");
+        }
+        let cfg = &self.model.config;
+        let (ids, prompt_len) =
+            self.tokenizer.encode_prompt(prompt, cfg.prompt_len).context("encoding prompt")?;
+        let ids_i32: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
+
+        let mut mem = MemTracker::new();
+        // Constant floor: model weights (mirrors the paper where the model
+        // dominates greedy's peak and is shared by all methods).
+        mem.alloc("weights", cfg.n_params * 4);
+
+        // Paged-allocator model (see engine::mem docs): KV bytes follow
+        // `bucket × stored_tokens × bytes_per_token`.
+        let bpt = cfg.kv_bytes_per_token();
+        let (logits_row, cache1) = self.model.prefill(&ids_i32[..prompt_len.max(1)])?;
+        mem.set_component("kv", prompt_len * bpt);
+
+        // Broadcast the single primed cache across the branch bucket.
+        let bucket = self.model.bucket_for(n)?;
+        let cache = if bucket == 1 {
+            cache1
+        } else {
+            let idx = vec![0i32; bucket];
+            let c = self.model.gather(&cache1, bucket, &idx)?;
+            mem.set_component("kv", bucket * prompt_len * bpt);
+            c
+        };
+
+        // Replicate prefill logits to every branch row (identical until
+        // the first sampled token diverges them).
+        let v = cfg.vocab;
+        let mut logits = vec![0f32; bucket * v];
+        for s in 0..n {
+            logits[s * v..(s + 1) * v].copy_from_slice(&logits_row);
+        }
+        mem.set_component("logits", bucket * v * 4);
+
+        Ok(GenState {
+            branches: vec![Branch::default(); n],
+            slots: (0..n).collect(),
+            cache,
+            logits,
+            pos: prompt_len,
+            prompt_len,
+            max_seq: cfg.max_seq,
+            vocab: v,
+            mem,
+            decode_calls: 0,
+            gather_calls: 0,
+            min_bucket: if opts.compact { 1 } else { bucket },
+        })
+    }
+}
+
+/// Options for [`Engine::start_opts`].
+#[derive(Debug, Clone, Copy)]
+pub struct StartOpts {
+    /// When false, the KV cache never shrinks below the initial bucket —
+    /// the "no bucket compaction" ablation (`ablation_buckets` bench),
+    /// demonstrating that KAPPA's memory savings come from compaction.
+    pub compact: bool,
+}
+
+impl Default for StartOpts {
+    fn default() -> Self {
+        Self { compact: true }
+    }
+}
+
+/// Per-request generation state (see module docs).
+pub struct GenState {
+    /// All branches ever created for this request (stable identity).
+    pub branches: Vec<Branch>,
+    /// `slots[i]` = branch index occupying device row `i`.
+    slots: Vec<usize>,
+    cache: KvCache,
+    /// Current logits slab `[bucket * vocab]`; rows beyond `slots.len()`
+    /// are stale padding.
+    logits: Vec<f32>,
+    /// Next cache slot to write (== prompt_len + generated steps).
+    pos: usize,
+    pub prompt_len: usize,
+    max_seq: usize,
+    vocab: usize,
+    pub mem: MemTracker,
+    pub decode_calls: usize,
+    pub gather_calls: usize,
+    /// Bucket floor (ablation: disables compaction when set to the
+    /// initial bucket).
+    min_bucket: usize,
+}
+
+impl GenState {
+    /// Branch indices currently on device (sampling order).
+    pub fn live_branches(&self) -> &[usize] {
+        &self.slots
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.cache.bucket
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Steps left before the sequence budget is exhausted.
+    pub fn remaining(&self) -> usize {
+        self.max_seq.saturating_sub(self.pos)
+    }
+
+    /// Logits row for a device slot.
+    pub fn logits_for_slot(&self, slot: usize) -> &[f32] {
+        &self.logits[slot * self.vocab..(slot + 1) * self.vocab]
+    }
+
+    /// Logits rows for all live slots, flattened (input to the fused
+    /// signal kernel).
+    pub fn live_logits(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.slots.len() * self.vocab);
+        for s in 0..self.slots.len() {
+            out.extend_from_slice(self.logits_for_slot(s));
+        }
+        out
+    }
+
+    /// Advance every live branch by one token. `sampled[i]` is the token
+    /// + its full-softmax log-prob for slot `i`. Marks EOS/length-capped
+    /// branches finished (they stay on device until [`Self::compact`]).
+    pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
+        if sampled.len() != self.slots.len() {
+            bail!("step: {} samples for {} slots", sampled.len(), self.slots.len());
+        }
+        if self.pos >= self.max_seq {
+            bail!("step: sequence budget exhausted");
+        }
+        let bucket = self.cache.bucket;
+        let mut tokens_i32 = vec![PAD_ID as i32; bucket];
+        for (slot, &(tok, logprob)) in sampled.iter().enumerate() {
+            let bi = self.slots[slot];
+            let b = &mut self.branches[bi];
+            if !b.finished {
+                b.tokens.push(tok);
+                b.logprob_sum += logprob;
+                if tok == EOS_ID {
+                    b.finished = true;
+                }
+            }
+            tokens_i32[slot] = tok as i32;
+        }
+
+        let (logits, new_cache) = engine.model.decode(&tokens_i32, self.pos, &self.cache)?;
+        self.decode_calls += 1;
+        self.logits = logits;
+        self.cache = new_cache;
+        self.pos += 1;
+        // Paged-allocator model: the bucket's caches grew by one token.
+        self.mem
+            .set_component("kv", bucket * self.pos * engine.model.config.kv_bytes_per_token());
+
+        // Length cap: if the budget is now exhausted, everything finishes.
+        if self.pos >= self.max_seq {
+            for &bi in &self.slots {
+                self.branches[bi].finished = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Keep only `keep` (branch indices; must be live). Re-gathers the KV
+    /// cache into the smallest fitting bucket and accounts the memory
+    /// transition (dst allocated while src still held — the true device
+    /// high-water mark). Branches not kept and not finished are marked
+    /// pruned.
+    pub fn retain_branches(&mut self, engine: &Engine, keep: &[usize]) -> Result<()> {
+        if keep.is_empty() {
+            bail!("retain_branches: must keep at least one branch");
+        }
+        let mut keep_slots = Vec::with_capacity(keep.len());
+        for &bi in keep {
+            match self.slots.iter().position(|&s| s == bi) {
+                Some(slot) => keep_slots.push(slot),
+                None => bail!("retain_branches: branch {bi} is not live"),
+            }
+        }
+
+        for &bi in self.slots.iter() {
+            if !keep.contains(&bi) && !self.branches[bi].finished {
+                self.branches[bi].pruned = true;
+            }
+        }
+
+        let new_bucket = engine.model.bucket_for(keep.len())?.max(self.min_bucket);
+        let old_bucket = self.cache.bucket;
+
+        // Device gather indices: destination row i ← source slot
+        // keep_slots[i]; pad rows repeat row 0 (their outputs are ignored).
+        let mut idx = vec![keep_slots[0] as i32; new_bucket];
+        for (i, &s) in keep_slots.iter().enumerate() {
+            idx[i] = s as i32;
+        }
+
+        if new_bucket != old_bucket || keep_slots.iter().enumerate().any(|(i, &s)| i != s) {
+            let new_cache = engine.model.gather(&self.cache, new_bucket, &idx)?;
+            self.gather_calls += 1;
+            // Paged-allocator model: pruning frees the dropped branches'
+            // pages; no copy transient is accounted (the device-side
+            // gather is a compute optimization, not part of the paper's
+            // allocator metric — see engine::mem docs).
+            let bpt = engine.model.config.kv_bytes_per_token();
+            self.mem.set_component("kv", new_bucket * self.pos * bpt);
+            self.cache = new_cache;
+
+            // Re-pack the logits slab to match the new slot order.
+            let v = self.vocab;
+            let mut new_logits = vec![0f32; new_bucket * v];
+            for (i, &s) in keep_slots.iter().enumerate() {
+                new_logits[i * v..(i + 1) * v].copy_from_slice(&self.logits[s * v..(s + 1) * v]);
+            }
+            self.mem.set_component("logits", new_bucket * v * 4);
+            self.logits = new_logits;
+        }
+
+        self.slots = keep.to_vec();
+        Ok(())
+    }
+
+    /// Remove finished branches from the device batch (their text is
+    /// complete). Returns false if no live branch remains afterwards.
+    pub fn compact_finished(&mut self, engine: &Engine) -> Result<bool> {
+        let keep: Vec<usize> =
+            self.slots.iter().copied().filter(|&bi| !self.branches[bi].finished).collect();
+        if keep.is_empty() {
+            return Ok(false);
+        }
+        if keep.len() != self.slots.len() {
+            self.retain_branches(engine, &keep)?;
+        }
+        Ok(true)
+    }
+
+    /// All live branches finished?
+    pub fn all_finished(&self) -> bool {
+        self.slots.iter().all(|&bi| self.branches[bi].finished)
+    }
+
+    /// Total generated tokens across every branch (the paper's "Total
+    /// Tokens" column counts all branch generation).
+    pub fn total_tokens(&self) -> usize {
+        self.branches.iter().map(|b| b.tokens.len()).sum()
+    }
+
+    /// Decode a branch's generated text.
+    pub fn text_of(&self, engine: &Engine, branch: usize) -> String {
+        engine.tokenizer.decode(&self.branches[branch].tokens)
+    }
+}

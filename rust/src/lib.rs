@@ -1,0 +1,39 @@
+//! # KAPPA — KL-Adjusted Pruned Path Algorithm
+//!
+//! Production-quality reproduction of *"Inference-Time Chain-of-Thought
+//! Pruning with Latent Informativeness Signals"* (Li, Huang, Saxena et
+//! al., 2025) as a three-layer Rust + JAX + Pallas serving stack:
+//!
+//! - **L3 (this crate)** — the serving coordinator: decode engine over
+//!   AOT-compiled XLA executables, KV-cache manager with byte-accurate
+//!   memory accounting, the KAPPA policy and its baselines (greedy,
+//!   Full-BoN, ST-BoN), a batched request server, metrics, and the bench
+//!   harness that regenerates every table/figure in the paper.
+//! - **L2** — `python/compile/model.py`: JAX transformer graphs, lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! - **L1** — `python/compile/kernels/`: Pallas kernels (fused
+//!   KL/confidence/entropy signals; fused decode attention).
+//!
+//! Python never runs on the request path: `make artifacts` → the Rust
+//! binary is self-contained.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod testing;
+pub mod tokenizer;
+pub mod util;
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::config::{KappaConfig, Method, RunConfig, SamplerConfig};
+    pub use crate::data::{eval, Dataset, Sample};
+    pub use crate::engine::Engine;
+    pub use crate::metrics::RunMetrics;
+    pub use crate::runtime::{LoadedModel, Manifest, Runtime};
+    pub use crate::tokenizer::Tokenizer;
+}

@@ -1,0 +1,250 @@
+//! `kappa` — the serving launcher.
+//!
+//! Subcommands:
+//!   info                         — print manifest / model / artifact summary
+//!   generate --prompt "…"        — decode one prompt with any method
+//!   run      --dataset gsm …     — evaluate a method over a problem set
+//!   serve    --requests N …      — boot the batched server and replay a
+//!                                  synthetic request trace (latency report)
+//!
+//! Common flags: --artifacts DIR, --model sm|lg, --method greedy|bon|stbon|kl,
+//! --n N, --seed S, --max-new T, plus every KAPPA hyperparameter
+//! (--ema-alpha, --window, --mom-buckets, --w-kl/--w-conf/--w-ent,
+//! --schedule linear|cosine, --tau, --native-signals).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use kappa::coordinator::config::{KappaConfig, Method, RunConfig, SamplerConfig, StBonConfig};
+use kappa::coordinator::{metrics_for, run_method};
+use kappa::data::{eval, Dataset};
+use kappa::engine::Engine;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+use kappa::server::Server;
+use kappa::util::cli::Args;
+use kappa::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "generate" => generate(&args),
+        "run" => run(&args),
+        "serve" => serve(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `kappa help`"),
+    }
+}
+
+const HELP: &str = "\
+kappa — inference-time chain-of-thought pruning (KAPPA) serving stack
+
+USAGE:
+  kappa info     [--artifacts DIR]
+  kappa generate --prompt TEXT [--model sm] [--method kl] [--n 5] [--seed 0]
+  kappa run      [--dataset gsm|math] [--model sm] [--method kl] [--n 5]
+                 [--problems 50] [--seed 17] [--json]
+  kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
+                 [--requests 20] [--dataset gsm]
+
+KAPPA hyperparameters (defaults = paper §4.1):
+  --ema-alpha 0.5  --window 16  --mom-buckets 4
+  --w-kl 0.7  --w-conf 0.2  --w-ent 0.1  --z-clamp 3
+  --schedule linear|cosine  --tau STEPS  --max-draft 24  --native-signals
+Sampling: --temperature 0.7 --top-k 20 --top-p 0.95  --max-new 96
+";
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let method = Method::parse(&args.str_or("method", "kl"))
+        .context("--method must be greedy|bon|stbon|kl")?;
+    Ok(RunConfig {
+        method,
+        n: args.usize_or("n", 5),
+        max_new_tokens: args.usize_or("max-new", 96),
+        sampler: SamplerConfig {
+            temperature: args.f64_or("temperature", 0.7) as f32,
+            top_k: args.usize_or("top-k", 20),
+            top_p: args.f64_or("top-p", 0.95) as f32,
+        },
+        kappa: KappaConfig::from_args(args),
+        stbon: StBonConfig {
+            buffer: args.usize_or("buffer", StBonConfig::default().buffer),
+            max_draft: args.usize_or("max-draft", StBonConfig::default().max_draft),
+        },
+        seed: args.u64_or("seed", 0),
+        compact: args.bool_or("compact", true),
+    })
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let tok = kappa::tokenizer::Tokenizer::new();
+    tok.verify_manifest(
+        &manifest.vocab.chars,
+        manifest.vocab.vocab_size,
+        manifest.vocab.pad,
+        manifest.vocab.bos,
+        manifest.vocab.eos,
+    )?;
+    let rt = Arc::new(Runtime::new()?);
+    let model = LoadedModel::load(rt, &manifest, &args.str_or("model", "sm"))?;
+    Ok(Engine::new(Arc::new(model)))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {:?}", m.dir);
+    println!("vocab: {} chars (+3 specials), logit dim {}", m.vocab.chars.len(), m.vocab.vocab_size);
+    println!("batch buckets: {:?}", m.buckets);
+    for (name, mm) in &m.models {
+        let c = &mm.config;
+        println!(
+            "model {name}: d={} L={} H={} Dh={} S={} P={} params={}",
+            c.d_model, c.n_layers, c.n_heads, c.head_dim, c.max_seq, c.prompt_len, c.n_params
+        );
+        println!(
+            "  artifacts: 1 prefill, {} decode bucket(s), {} gather pair(s)",
+            mm.decode.len(),
+            mm.gather.len()
+        );
+        for (ds, acc) in &mm.greedy_acc {
+            println!("  greedy acc @ export on {ds}: {acc:.3}");
+        }
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let prompt = args.get("prompt").context("--prompt required")?.to_string();
+    let cfg = run_config(args)?;
+    let engine = load_engine(args)?;
+    let t0 = std::time::Instant::now();
+    let out = run_method(&engine, &prompt, &cfg, cfg.seed)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", out.text);
+    eprintln!(
+        "[{} n={}] branch={} final_tokens={} total_tokens={} peak_mem={:.1}MB {:.2}s answer={:?}",
+        cfg.method.name(),
+        cfg.n,
+        out.chosen_branch,
+        out.metrics.final_branch_tokens,
+        out.metrics.total_tokens,
+        out.metrics.peak_mem_bytes as f64 / (1024.0 * 1024.0),
+        dt,
+        eval::extract_answer(&out.text),
+    );
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let dataset =
+        Dataset::parse(&args.str_or("dataset", "gsm")).context("--dataset must be gsm|math")?;
+    let n_problems = args.usize_or("problems", 50);
+    let cfg = run_config(args)?;
+    let engine = load_engine(args)?;
+    let problems = dataset.generate(n_problems, args.u64_or("data-seed", 99));
+
+    let t0 = std::time::Instant::now();
+    let metrics = metrics_for(&engine, &problems, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    if args.has("json") {
+        let j = kappa::util::json::Json::obj(vec![
+            ("dataset", kappa::util::json::Json::str(dataset.name())),
+            ("model", kappa::util::json::Json::str(args.str_or("model", "sm"))),
+            ("config", cfg.to_json()),
+            ("problems", kappa::util::json::Json::num(n_problems as f64)),
+            ("accuracy", kappa::util::json::Json::num(metrics.accuracy())),
+            (
+                "final_branch_tokens",
+                kappa::util::json::Json::num(metrics.mean_final_branch_tokens()),
+            ),
+            ("total_tokens", kappa::util::json::Json::num(metrics.mean_total_tokens())),
+            ("peak_memory_mb", kappa::util::json::Json::num(metrics.peak_mem_mb())),
+            ("mean_time_s", kappa::util::json::Json::num(metrics.mean_wall_seconds())),
+            ("wall_s", kappa::util::json::Json::num(dt)),
+        ]);
+        println!("{}", j.pretty());
+    } else {
+        println!(
+            "{} on {} ({} problems, N={}): acc={:.3} final_tok={:.1} total_tok={:.1} peak={:.1}MB mean_time={:.2}s wall={:.1}s",
+            cfg.method.name(),
+            dataset.name(),
+            n_problems,
+            cfg.n,
+            metrics.accuracy(),
+            metrics.mean_final_branch_tokens(),
+            metrics.mean_total_tokens(),
+            metrics.peak_mem_mb(),
+            metrics.mean_wall_seconds(),
+            dt,
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let dataset =
+        Dataset::parse(&args.str_or("dataset", "gsm")).context("--dataset must be gsm|math")?;
+    let n_requests = args.usize_or("requests", 20);
+    let workers = args.usize_or("workers", 1);
+    let dir = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "sm");
+
+    eprintln!("[serve] booting {workers} worker(s) for model {model} …");
+    let server = Server::start(&dir, &model, workers, cfg.clone())?;
+
+    let problems = dataset.generate(n_requests, args.u64_or("data-seed", 99));
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = server.submit_all(&prompts, cfg.seed);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat = Vec::new();
+    let mut queue = Vec::new();
+    let mut correct = 0usize;
+    let mut total_tokens = 0usize;
+    let mut errors = 0usize;
+    for (resp, prob) in responses.iter().zip(&problems) {
+        match resp {
+            Ok(r) => {
+                lat.push(r.queue_seconds + r.service_seconds);
+                queue.push(r.queue_seconds);
+                total_tokens += r.output.metrics.total_tokens;
+                if eval::is_correct(&r.output.text, prob.answer) {
+                    correct += 1;
+                }
+            }
+            Err(e) => {
+                errors += 1;
+                eprintln!("[serve] request failed: {e:#}");
+            }
+        }
+    }
+    println!(
+        "served {} requests ({} errors) in {:.2}s — {:.2} req/s, {:.0} tok/s",
+        n_requests,
+        errors,
+        wall,
+        n_requests as f64 / wall,
+        total_tokens as f64 / wall,
+    );
+    println!(
+        "latency p50={:.2}s p95={:.2}s max={:.2}s (queue p50={:.2}s)  accuracy={:.3}",
+        stats::percentile(&lat, 50.0),
+        stats::percentile(&lat, 95.0),
+        stats::percentile(&lat, 100.0),
+        stats::percentile(&queue, 50.0),
+        correct as f64 / n_requests.max(1) as f64,
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Request- and run-level metrics matching the paper's reporting columns:
+//! Accuracy, Final Branch Tokens, Total Tokens, Peak Memory (MB), Time (s).
+
+use crate::util::stats;
+
+/// Metrics for one request (one problem).
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    /// Tokens in the selected (returned) branch.
+    pub final_branch_tokens: usize,
+    /// Tokens generated across all branches (the cost of the method).
+    pub total_tokens: usize,
+    /// Accounted peak memory in bytes (see `engine::mem`).
+    pub peak_mem_bytes: usize,
+    /// Wall time for the request.
+    pub wall_seconds: f64,
+    /// Exact-match correctness against the reference answer.
+    pub correct: bool,
+    /// XLA decode-step executions (profiling).
+    pub decode_calls: usize,
+    /// KV gather/compaction executions (profiling).
+    pub gather_calls: usize,
+}
+
+/// Aggregated metrics over a problem set — one row of the paper's
+/// Appendix A table.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub requests: Vec<RequestMetrics>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, m: RequestMetrics) {
+        self.requests.push(m);
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().filter(|r| r.correct).count() as f64 / self.requests.len() as f64
+    }
+
+    pub fn mean_final_branch_tokens(&self) -> f64 {
+        stats::mean(&self.collect(|r| r.final_branch_tokens as f64))
+    }
+
+    pub fn mean_total_tokens(&self) -> f64 {
+        stats::mean(&self.collect(|r| r.total_tokens as f64))
+    }
+
+    /// Peak memory in MB — the paper reports the max over the run.
+    pub fn peak_mem_mb(&self) -> f64 {
+        self.requests.iter().map(|r| r.peak_mem_bytes).max().unwrap_or(0) as f64 / (1024.0 * 1024.0)
+    }
+
+    pub fn mean_wall_seconds(&self) -> f64 {
+        stats::mean(&self.collect(|r| r.wall_seconds))
+    }
+
+    pub fn total_wall_seconds(&self) -> f64 {
+        self.requests.iter().map(|r| r.wall_seconds).sum()
+    }
+
+    pub fn p50_wall_seconds(&self) -> f64 {
+        stats::percentile(&self.collect(|r| r.wall_seconds), 50.0)
+    }
+
+    pub fn p95_wall_seconds(&self) -> f64 {
+        stats::percentile(&self.collect(|r| r.wall_seconds), 95.0)
+    }
+
+    pub fn throughput_tokens_per_sec(&self) -> f64 {
+        let t = self.total_wall_seconds();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.total_tokens).sum::<usize>() as f64 / t
+    }
+
+    fn collect(&self, f: impl Fn(&RequestMetrics) -> f64) -> Vec<f64> {
+        self.requests.iter().map(f).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(correct: bool, total: usize, peak: usize, wall: f64) -> RequestMetrics {
+        RequestMetrics {
+            final_branch_tokens: total / 2,
+            total_tokens: total,
+            peak_mem_bytes: peak,
+            wall_seconds: wall,
+            correct,
+            decode_calls: 0,
+            gather_calls: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = RunMetrics::default();
+        m.push(req(true, 100, 10 << 20, 1.0));
+        m.push(req(false, 200, 20 << 20, 3.0));
+        assert_eq!(m.accuracy(), 0.5);
+        assert_eq!(m.mean_total_tokens(), 150.0);
+        assert_eq!(m.peak_mem_mb(), 20.0);
+        assert_eq!(m.mean_wall_seconds(), 2.0);
+        assert!((m.throughput_tokens_per_sec() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = RunMetrics::default();
+        assert_eq!(m.accuracy(), 0.0);
+        assert_eq!(m.peak_mem_mb(), 0.0);
+        assert_eq!(m.throughput_tokens_per_sec(), 0.0);
+    }
+}

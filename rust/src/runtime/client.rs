@@ -1,0 +1,125 @@
+//! PJRT client wrapper: HLO-text loading, compilation caching, and
+//! host↔device transfer helpers.
+//!
+//! Executables are compiled once per artifact path and memoized; the hot
+//! path then only pays `execute_b` dispatch. Interchange is HLO **text**
+//! (not serialized proto) — see DESIGN.md §3.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Shared PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: Mutex<BTreeMap<PathBuf, std::sync::Arc<PjRtLoadedExecutable>>>,
+    /// (path, compile wall time) log for DESIGN.md §Perf bookkeeping.
+    compile_log: Mutex<Vec<(PathBuf, f64)>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(BTreeMap::new()), compile_log: Mutex::new(Vec::new()) })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO-text artifact (memoized by path).
+    pub fn load_executable(&self, path: &Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.lock().unwrap().push((path.to_path_buf(), dt));
+        self.cache.lock().unwrap().insert(path.to_path_buf(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Total wall-clock spent in compilation so far (seconds).
+    pub fn compile_seconds(&self) -> f64 {
+        self.compile_log.lock().unwrap().iter().map(|(_, t)| t).sum()
+    }
+
+    // ---- host → device helpers ----
+
+    pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("f32 upload")
+    }
+
+    pub fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("i32 upload")
+    }
+
+    pub fn i32_scalar(&self, v: i32) -> Result<PjRtBuffer> {
+        self.i32_buffer(&[v], &[])
+    }
+
+    // ---- device → host helpers ----
+
+    /// Pull an f32 buffer to a host vector.
+    pub fn to_host_f32(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().context("device→host literal")?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests that need real artifacts live in `rust/tests/`
+    //! (integration) — unit tests here only cover pure logic.
+    use super::*;
+
+    #[test]
+    fn client_boots_and_caches() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.client().device_count() >= 1);
+        assert_eq!(rt.compiled_count(), 0);
+        assert_eq!(rt.compile_seconds(), 0.0);
+    }
+
+    #[test]
+    fn buffers_roundtrip() {
+        let rt = Runtime::new().unwrap();
+        let buf = rt.f32_buffer(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let back = Runtime::to_host_f32(&buf).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_buffer() {
+        let rt = Runtime::new().unwrap();
+        let buf = rt.i32_scalar(7).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn missing_artifact_is_context_error() {
+        let rt = Runtime::new().unwrap();
+        let err = match rt.load_executable(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("foo.hlo.txt"), "{msg}");
+    }
+}

@@ -1,0 +1,300 @@
+//! Typed view over `artifacts/manifest.json` — the contract written by
+//! `python/compile/aot.py` and consumed by the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Supported manifest format (bump in both aot.py and here on change).
+pub const FORMAT_VERSION: i64 = 1;
+
+#[derive(Debug, Clone)]
+pub struct VocabInfo {
+    pub chars: String,
+    pub vocab_size: usize,
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    /// f32 elements in one branch's K (or V) cache slice `[L, 1, H, S, Dh]`.
+    pub fn cache_elems_per_branch(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Bytes of KV cache (both K and V) per branch at full capacity.
+    pub fn kv_bytes_per_branch(&self) -> usize {
+        2 * 4 * self.cache_elems_per_branch()
+    }
+
+    /// Bytes of KV cache one branch needs per *stored token* (both K and
+    /// V) — the unit of the engine's paged-allocator memory model.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * 4 * self.n_layers * self.n_heads * self.head_dim
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize, // in f32 elements
+    pub numel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub config: ModelConfig,
+    pub params: Vec<ParamEntry>,
+    pub weights_file: PathBuf,
+    pub prefill: PathBuf,
+    pub decode: BTreeMap<usize, PathBuf>,
+    /// (src_bucket, dst_bucket) → gather HLO path.
+    pub gather: BTreeMap<(usize, usize), PathBuf>,
+    /// Greedy accuracy measured at export time (training-quality gate).
+    pub greedy_acc: BTreeMap<String, f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: VocabInfo,
+    pub buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub signals: BTreeMap<usize, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Manifest> {
+        let version = j.get("format_version").and_then(Json::as_i64).unwrap_or(-1);
+        if version != FORMAT_VERSION {
+            bail!("manifest format {version} != supported {FORMAT_VERSION}");
+        }
+
+        let v = j.get("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
+        let vocab = VocabInfo {
+            chars: v.get("chars").and_then(Json::as_str).unwrap_or_default().to_string(),
+            vocab_size: v.get("vocab_size").and_then(Json::as_usize).unwrap_or(0),
+            pad: v.get("pad").and_then(Json::as_usize).unwrap_or(0) as u32,
+            bos: v.get("bos").and_then(Json::as_usize).unwrap_or(0) as u32,
+            eos: v.get("eos").and_then(Json::as_usize).unwrap_or(0) as u32,
+        };
+
+        let buckets: Vec<usize> = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let mut signals = BTreeMap::new();
+        if let Some(m) = j.get("signals").and_then(Json::as_obj) {
+            for (k, v) in m {
+                let b: usize = k.parse().context("signals bucket key")?;
+                signals.insert(b, dir.join(v.as_str().ok_or_else(|| anyhow!("signals path"))?));
+            }
+        }
+
+        let mut models = BTreeMap::new();
+        let mm = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("missing models"))?;
+        for (name, mj) in mm {
+            models.insert(name.clone(), Self::model_from_json(name, mj, &dir)?);
+        }
+
+        Ok(Manifest { dir, vocab, buckets, models, signals })
+    }
+
+    fn model_from_json(name: &str, mj: &Json, dir: &Path) -> Result<ModelManifest> {
+        let c = mj.get("config").ok_or_else(|| anyhow!("model {name}: missing config"))?;
+        let get = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("model {name}: config.{k}"))
+        };
+        let config = ModelConfig {
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            prompt_len: get("prompt_len")?,
+            vocab: get("vocab")?,
+            n_params: get("n_params")?,
+        };
+
+        let mut params = Vec::new();
+        for pj in mj.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+            params.push(ParamEntry {
+                name: pj.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: pj
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                offset: pj.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                numel: pj.get("numel").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        if params.is_empty() {
+            bail!("model {name}: empty param table");
+        }
+
+        let arts = mj.get("artifacts").ok_or_else(|| anyhow!("model {name}: artifacts"))?;
+        let prefill = dir.join(
+            arts.get("prefill")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("model {name}: artifacts.prefill"))?,
+        );
+        let mut decode = BTreeMap::new();
+        for (k, v) in arts.get("decode").and_then(Json::as_obj).into_iter().flatten() {
+            decode.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
+        }
+        let mut gather = BTreeMap::new();
+        for (k, v) in arts.get("gather").and_then(Json::as_obj).into_iter().flatten() {
+            let (s, d) = k
+                .split_once("to")
+                .ok_or_else(|| anyhow!("model {name}: bad gather key {k}"))?;
+            gather
+                .insert((s.parse::<usize>()?, d.parse::<usize>()?), dir.join(v.as_str().unwrap_or_default()));
+        }
+
+        let mut greedy_acc = BTreeMap::new();
+        if let Some(accs) = mj.at(&["training", "greedy_acc"]).and_then(Json::as_obj) {
+            for (k, v) in accs {
+                if let Some(x) = v.as_f64() {
+                    greedy_acc.insert(k.clone(), x);
+                }
+            }
+        }
+
+        Ok(ModelManifest {
+            name: name.to_string(),
+            config,
+            params,
+            weights_file: dir.join(
+                mj.get("weights_file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name}: weights_file"))?,
+            ),
+            prefill,
+            decode,
+            gather,
+            greedy_acc,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    /// Smallest bucket that can hold `n` branches.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("no bucket holds {n} branches (max {:?})", self.buckets.last()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "format_version": 1,
+          "vocab": {"chars": "ab", "vocab_size": 8, "pad": 0, "bos": 1, "eos": 2},
+          "buckets": [1, 2, 4],
+          "signals": {"1": "signals_b1.hlo.txt"},
+          "models": {
+            "sm": {
+              "config": {"d_model": 8, "n_layers": 1, "n_heads": 2, "head_dim": 4,
+                          "max_seq": 16, "prompt_len": 8, "vocab": 8, "n_params": 10},
+              "params": [{"name": "tok_emb", "shape": [8, 8], "offset": 0, "numel": 64}],
+              "weights_file": "weights_sm.bin",
+              "artifacts": {
+                "prefill": "prefill_sm_b1.hlo.txt",
+                "decode": {"1": "decode_sm_b1.hlo.txt", "2": "decode_sm_b2.hlo.txt"},
+                "gather": {"1to2": "gather_sm_b1to2.hlo.txt"}
+              },
+              "training": {"greedy_acc": {"gsm_synth": 0.5}}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let j = json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.buckets, vec![1, 2, 4]);
+        let sm = m.model("sm").unwrap();
+        assert_eq!(sm.config.d_model, 8);
+        assert_eq!(sm.decode.len(), 2);
+        assert_eq!(sm.gather.get(&(1, 2)).unwrap(), &PathBuf::from("/tmp/a/gather_sm_b1to2.hlo.txt"));
+        assert_eq!(sm.greedy_acc["gsm_synth"], 0.5);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let j = json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert_eq!(m.bucket_for(2).unwrap(), 2);
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert!(m.bucket_for(5).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = tiny_manifest_json().replace("\"format_version\": 1", "\"format_version\": 9");
+        let j = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn kv_bytes_math() {
+        let c = ModelConfig {
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            max_seq: 16,
+            prompt_len: 8,
+            vocab: 8,
+            n_params: 0,
+        };
+        assert_eq!(c.cache_elems_per_branch(), 2 * 2 * 16 * 4);
+        assert_eq!(c.kv_bytes_per_branch(), 2 * 4 * 256);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime layer: artifact loading, compilation caching, weight
+//! upload, and the device-resident model handle. Everything above this
+//! module (engine, coordinator, server) is backend-agnostic Rust;
+//! everything below is the `xla` crate's PJRT C API.
+
+pub mod client;
+pub mod manifest;
+pub mod model;
+pub mod weights;
+
+pub use client::Runtime;
+pub use manifest::{Manifest, ModelConfig, ModelManifest, ParamEntry};
+pub use model::{KvCache, LoadedModel};

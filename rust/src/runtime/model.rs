@@ -1,0 +1,215 @@
+//! `LoadedModel` — the executable-backed model handle used by the engine.
+//!
+//! Owns the parameter buffers (uploaded to device once at load) and the
+//! compiled prefill/decode/gather/signal executables. All methods keep the
+//! KV caches **device-resident**: only logits (B×V f32, ≤ 8 KiB) and the
+//! three signal vectors cross the host boundary per step.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::Runtime;
+use super::manifest::{Manifest, ModelConfig, ModelManifest};
+use super::weights::load_weights;
+
+/// Device-resident KV cache for one bucketed branch batch.
+pub struct KvCache {
+    pub k: PjRtBuffer,
+    pub v: PjRtBuffer,
+    /// Batch bucket these buffers are shaped for.
+    pub bucket: usize,
+}
+
+pub struct LoadedModel {
+    rt: Arc<Runtime>,
+    pub name: String,
+    pub config: ModelConfig,
+    manifest: ModelManifest,
+    buckets: Vec<usize>,
+    signal_paths: std::collections::BTreeMap<usize, std::path::PathBuf>,
+    param_bufs: Vec<PjRtBuffer>,
+    /// Unconditional reference logits q (BOS-only context), computed once.
+    q_logits: Vec<f32>,
+}
+
+impl LoadedModel {
+    /// Load weights to device and compile the prefill graph; decode /
+    /// gather / signal executables compile lazily on first use (and are
+    /// memoized in the [`Runtime`] cache).
+    pub fn load(rt: Arc<Runtime>, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let mm = manifest.model(name)?.clone();
+        let weights = load_weights(&mm.weights_file, &mm.params)?;
+        let mut param_bufs = Vec::with_capacity(weights.len());
+        for (w, p) in weights.iter().zip(&mm.params) {
+            param_bufs.push(
+                rt.f32_buffer(w, &p.shape).with_context(|| format!("uploading {}", p.name))?,
+            );
+        }
+        let mut model = LoadedModel {
+            rt,
+            name: name.to_string(),
+            config: mm.config,
+            manifest: mm,
+            buckets: manifest.buckets.clone(),
+            signal_paths: manifest.signals.clone(),
+            param_bufs,
+            q_logits: Vec::new(),
+        };
+        // Reference distribution q: logits after a BOS-only prompt
+        // (Algorithm 2 line 9: "generate unconditional logits q from
+        // Beginning of Sentence token").
+        let bos = vec![crate::tokenizer::BOS_ID as i32];
+        let (q, _cache) = model.prefill(&bos)?;
+        model.q_logits = q;
+        Ok(model)
+    }
+
+    pub fn q_logits(&self) -> &[f32] {
+        &self.q_logits
+    }
+
+    /// Smallest bucket holding `n` branches.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("no bucket holds {n} branches"))
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Run the prompt pass. `prompt_ids` is the unpadded BOS+prompt token
+    /// sequence; padding to `prompt_len` happens here. Returns the logits
+    /// at the last real token and a bucket-1 KV cache primed with the
+    /// prompt keys/values.
+    pub fn prefill(&self, prompt_ids: &[i32]) -> Result<(Vec<f32>, KvCache)> {
+        let p = self.config.prompt_len;
+        if prompt_ids.is_empty() || prompt_ids.len() > p {
+            bail!("prompt length {} out of range 1..={p}", prompt_ids.len());
+        }
+        let mut padded = prompt_ids.to_vec();
+        padded.resize(p, crate::tokenizer::PAD_ID as i32);
+
+        let exe = self.rt.load_executable(&self.manifest.prefill)?;
+        let tokens = self.rt.i32_buffer(&padded, &[1, p])?;
+        let len = self.rt.i32_scalar(prompt_ids.len() as i32)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tokens);
+        args.push(&len);
+        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        if out.len() != 3 {
+            bail!("prefill returned {} outputs, expected 3", out.len());
+        }
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = Runtime::to_host_f32(&out[0])?;
+        Ok((logits, KvCache { k, v, bucket: 1 }))
+    }
+
+    /// One decode step for a bucketed batch. `tokens.len()` must equal
+    /// `cache.bucket`; `pos` is the slot this step writes. Returns the
+    /// flattened `[bucket * vocab]` logits and the successor cache.
+    pub fn decode(&self, tokens: &[i32], pos: usize, cache: &KvCache) -> Result<(Vec<f32>, KvCache)> {
+        let b = cache.bucket;
+        if tokens.len() != b {
+            bail!("decode: {} tokens for bucket {b}", tokens.len());
+        }
+        if pos >= self.config.max_seq {
+            bail!("decode: pos {pos} >= max_seq {}", self.config.max_seq);
+        }
+        let path = self
+            .manifest
+            .decode
+            .get(&b)
+            .ok_or_else(|| anyhow!("no decode artifact for bucket {b}"))?;
+        let exe = self.rt.load_executable(path)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_scalar(pos as i32)?;
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok);
+        args.push(&posb);
+        args.push(&cache.k);
+        args.push(&cache.v);
+        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        if out.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", out.len());
+        }
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = Runtime::to_host_f32(&out[0])?;
+        Ok((logits, KvCache { k, v, bucket: b }))
+    }
+
+    /// Re-index branches: `indices[i]` selects which source branch fills
+    /// destination slot `i`. Serves both broadcast (src bucket 1 → N) and
+    /// post-prune compaction (shrink to the smallest fitting bucket).
+    pub fn gather(&self, cache: &KvCache, dst_bucket: usize, indices: &[i32]) -> Result<KvCache> {
+        if indices.len() != dst_bucket {
+            bail!("gather: {} indices for dst bucket {dst_bucket}", indices.len());
+        }
+        for &i in indices {
+            if i < 0 || i as usize >= cache.bucket {
+                bail!("gather: index {i} out of source bucket {}", cache.bucket);
+            }
+        }
+        let path = self
+            .manifest
+            .gather
+            .get(&(cache.bucket, dst_bucket))
+            .ok_or_else(|| anyhow!("no gather artifact {}to{}", cache.bucket, dst_bucket))?;
+        let exe = self.rt.load_executable(path)?;
+        let idx = self.rt.i32_buffer(indices, &[dst_bucket])?;
+        let args: Vec<&PjRtBuffer> = vec![&cache.k, &cache.v, &idx];
+        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        if out.len() != 2 {
+            bail!("gather returned {} outputs, expected 2", out.len());
+        }
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        Ok(KvCache { k, v, bucket: dst_bucket })
+    }
+
+    /// Fused L1 signal kernel: per-branch (KL(p‖q), confidence, entropy)
+    /// for a `[rows × vocab]` logits slab (rows ≤ some bucket).
+    pub fn signals(&self, logits: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let v = self.config.vocab;
+        if logits.len() != rows * v {
+            bail!("signals: {} logits for {rows} rows × {v}", logits.len());
+        }
+        let bucket = self.bucket_for(rows)?;
+        let path = self
+            .signal_paths
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no signals artifact for bucket {bucket}"))?;
+        let exe = self.rt.load_executable(path)?;
+
+        // Pad rows up to the bucket (padding rows are discarded below).
+        let mut slab = logits.to_vec();
+        slab.resize(bucket * v, 0.0);
+        let lg = self.rt.f32_buffer(&slab, &[bucket, v])?;
+        let q = self.rt.f32_buffer(&self.q_logits, &[v])?;
+        let out = exe.execute_b(&[&lg, &q])?.swap_remove(0);
+        if out.len() != 3 {
+            bail!("signals returned {} outputs, expected 3", out.len());
+        }
+        let mut kl = Runtime::to_host_f32(&out[0])?;
+        let mut conf = Runtime::to_host_f32(&out[1])?;
+        let mut ent = Runtime::to_host_f32(&out[2])?;
+        kl.truncate(rows);
+        conf.truncate(rows);
+        ent.truncate(rows);
+        Ok((kl, conf, ent))
+    }
+
+    /// Bytes of device KV cache held by a cache object of this model.
+    pub fn kv_bytes(&self, bucket: usize) -> usize {
+        bucket * self.config.kv_bytes_per_branch()
+    }
+}

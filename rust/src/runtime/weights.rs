@@ -1,0 +1,85 @@
+//! Weight loading: `weights_{m}.bin` (flat little-endian f32, in manifest
+//! param-table order) → host literals → device buffers fed to every
+//! executable call.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ParamEntry;
+
+/// Read the flat f32 blob and split it into per-parameter host vectors.
+pub fn load_weights(path: &Path, params: &[ParamEntry]) -> Result<Vec<Vec<f32>>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading weights {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("weights file {path:?} not a multiple of 4 bytes");
+    }
+    let total = bytes.len() / 4;
+    let expected: usize = params.iter().map(|p| p.numel).sum();
+    if total != expected {
+        bail!("weights file {path:?} has {total} f32s, manifest expects {expected}");
+    }
+
+    let mut out = Vec::with_capacity(params.len());
+    for p in params {
+        let numel: usize = p.shape.iter().product();
+        if numel != p.numel {
+            bail!("param {}: shape {:?} inconsistent with numel {}", p.name, p.shape, p.numel);
+        }
+        let start = p.offset * 4;
+        let end = start + p.numel * 4;
+        if end > bytes.len() {
+            bail!("param {} overruns weights file", p.name);
+        }
+        let mut v = Vec::with_capacity(p.numel);
+        for chunk in bytes[start..end].chunks_exact(4) {
+            v.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(vals: &[f32]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("kappa_w_{}.bin", vals.len()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        for v in vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        path
+    }
+
+    fn entry(name: &str, shape: Vec<usize>, offset: usize) -> ParamEntry {
+        let numel = shape.iter().product();
+        ParamEntry { name: name.into(), shape, offset, numel }
+    }
+
+    #[test]
+    fn splits_params() {
+        let path = write_tmp(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let params = vec![entry("a", vec![2, 2], 0), entry("b", vec![2], 4)];
+        let w = load_weights(&path, &params).unwrap();
+        assert_eq!(w[0], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w[1], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn size_mismatch_fails() {
+        let path = write_tmp(&[1.0, 2.0]);
+        let params = vec![entry("a", vec![3], 0)];
+        assert!(load_weights(&path, &params).is_err());
+    }
+
+    #[test]
+    fn shape_numel_mismatch_fails() {
+        let path = write_tmp(&[1.0, 2.0, 3.0]);
+        let mut p = entry("a", vec![3], 0);
+        p.numel = 2; // corrupt
+        assert!(load_weights(&path, &[p]).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Batched request server (leader/worker, channel-based).
+//!
+//! PJRT client handles are not `Send` (`Rc` internally), so each worker
+//! thread owns a full engine stack — its own PJRT client, weight buffers
+//! and compiled executables — and drains a shared request queue. Branch
+//! parallelism *within* a request is the engine's bucketed batching; the
+//! server adds request-level concurrency on top (one in-flight request
+//! per worker).
+//!
+//! This mirrors the deployment shape of the paper's setting ("number of
+//! GPUs varying based on N"): one worker ≈ one accelerator.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::{run_method, GenOutput};
+use crate::engine::Engine;
+use crate::runtime::{LoadedModel, Manifest, Runtime};
+
+/// One queued request.
+struct Request {
+    prompt: String,
+    seed: u64,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+}
+
+/// Server reply: the generation plus queueing/service telemetry.
+#[derive(Debug)]
+pub struct Response {
+    pub output: GenOutput,
+    pub queue_seconds: f64,
+    pub service_seconds: f64,
+    pub worker: usize,
+}
+
+/// Handle to the running server.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    run_cfg: RunConfig,
+}
+
+impl Server {
+    /// Boot `n_workers` worker threads, each loading `model_name` from
+    /// `artifacts_dir`. Blocks until every worker reports ready (so
+    /// startup failures surface immediately rather than on first submit).
+    pub fn start(
+        artifacts_dir: &str,
+        model_name: &str,
+        n_workers: usize,
+        run_cfg: RunConfig,
+    ) -> Result<Server> {
+        let n_workers = n_workers.max(1);
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let ready = ready_tx.clone();
+            let dir = artifacts_dir.to_string();
+            let model = model_name.to_string();
+            let cfg = run_cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("kappa-serve-{w}"))
+                    .spawn(move || worker_loop(w, &dir, &model, cfg, rx, ready))
+                    .context("spawning worker")?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            ready_rx.recv().map_err(|_| anyhow!("worker died during startup"))??;
+        }
+        Ok(Server { tx: Some(tx), workers, run_cfg })
+    }
+
+    pub fn run_config(&self) -> &RunConfig {
+        &self.run_cfg
+    }
+
+    /// Enqueue a request; returns the response channel.
+    pub fn submit(&self, prompt: &str, seed: u64) -> Receiver<Result<Response>> {
+        let (resp_tx, resp_rx) = channel();
+        let req = Request {
+            prompt: prompt.to_string(),
+            seed,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        self.tx.as_ref().expect("server alive").send(req).expect("workers alive");
+        resp_rx
+    }
+
+    /// Submit many prompts and wait for all responses (submission order).
+    pub fn submit_all(&self, prompts: &[String], seed0: u64) -> Vec<Result<Response>> {
+        let rxs: Vec<_> =
+            prompts.iter().enumerate().map(|(i, p)| self.submit(p, seed0 + i as u64)).collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped response"))))
+            .collect()
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    worker_id: usize,
+    artifacts_dir: &str,
+    model_name: &str,
+    cfg: RunConfig,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    ready: Sender<Result<()>>,
+) {
+    // Each worker owns its entire engine stack (PJRT is not Send).
+    let engine = (|| -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let rt = Arc::new(Runtime::new()?);
+        let model = Arc::new(LoadedModel::load(rt, &manifest, model_name)?);
+        Ok(Engine::new(model))
+    })();
+    let engine = match engine {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let req = match req {
+            Ok(r) => r,
+            Err(_) => break, // queue closed
+        };
+        let queue_seconds = req.enqueued.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let result = run_method(&engine, &req.prompt, &cfg, req.seed).map(|mut output| {
+            let service_seconds = t0.elapsed().as_secs_f64();
+            output.metrics.wall_seconds = service_seconds;
+            Response { output, queue_seconds, service_seconds, worker: worker_id }
+        });
+        let _ = req.resp.send(result);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal property-testing harness (stand-in for `proptest`, which is
+//! unavailable offline).
+//!
+//! [`check`] runs a property against `iters` randomly generated cases and
+//! panics with the seed + case index on the first failure, so any failure
+//! is reproducible by construction (generation is keyed off a fixed base
+//! seed + case index; there is no global RNG state).
+//!
+//! ```no_run
+//! use kappa::testing::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_f64(0..64, -1e3..1e3);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = {
+//!         let mut w = v.clone();
+//!         w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!         w
+//!     };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use std::ops::Range;
+
+use crate::util::rng::Pcg64;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed ^ 0x9E3779B97F4A7C15, case + 1) }
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn i64(&mut self, range: Range<i64>) -> i64 {
+        range.start + self.rng.below((range.end - range.start) as u64) as i64
+    }
+
+    pub fn f64(&mut self, range: Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    pub fn f32(&mut self, range: Range<f32>) -> f32 {
+        range.start + self.rng.next_f32() * (range.end - range.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Vector with random length in `len` and elements in `range`.
+    pub fn vec_f64(&mut self, len: Range<usize>, range: Range<f64>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(range.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, range: Range<f32>) -> Vec<f32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f32(range.clone())).collect()
+    }
+
+    pub fn vec_u32(&mut self, len: Range<usize>, range: Range<u64>) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u64(range.clone()) as u32).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+}
+
+/// Base seed; override with `KAPPA_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("KAPPA_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `property` against `iters` generated cases.
+pub fn check(name: &str, iters: u64, property: impl Fn(&mut Gen)) {
+    let seed = base_seed();
+    for case in 0..iters {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, case);
+            property(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case} (seed {seed:#x}); \
+                 replay with KAPPA_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 500, |g| {
+            let u = g.u64(5..10);
+            assert!((5..10).contains(&u));
+            let f = g.f64(-2.0..3.0);
+            assert!((-2.0..3.0).contains(&f));
+            let v = g.vec_f32(1..17, 0.0..1.0);
+            assert!(!v.is_empty() && v.len() < 17);
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Gen::new(1, 7);
+        let mut b = Gen::new(1, 7);
+        for _ in 0..32 {
+            assert_eq!(a.u64(0..1000), b.u64(0..1000));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+}

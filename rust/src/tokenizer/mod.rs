@@ -1,0 +1,128 @@
+//! Character-level tokenizer — Rust half of the contract defined in
+//! `python/compile/tokenizer.py`. The AOT manifest embeds the vocabulary
+//! string; [`Tokenizer::verify_manifest`] asserts at startup that both
+//! sides agree, so a drifted artifact set fails loudly instead of decoding
+//! garbage.
+
+use anyhow::{bail, Context, Result};
+
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const NUM_SPECIALS: u32 = 3;
+
+/// Must byte-match `tokenizer.VOCAB_CHARS` in the Python compile path.
+pub const VOCAB_CHARS: &str = "\n 0123456789+-*/=().,?#%:abcdefghijklmnopqrstuvwxyz'";
+
+/// Logit dimension (power of two; trailing ids are unused slots).
+pub const VOCAB_SIZE: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    char_to_id: [Option<u32>; 128],
+    id_to_char: Vec<Option<char>>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut char_to_id = [None; 128];
+        let mut id_to_char = vec![None; VOCAB_SIZE];
+        for (i, c) in VOCAB_CHARS.chars().enumerate() {
+            let id = i as u32 + NUM_SPECIALS;
+            char_to_id[c as usize] = Some(id);
+            id_to_char[id as usize] = Some(c);
+        }
+        Self { char_to_id, id_to_char }
+    }
+
+    /// Assert the manifest's embedded vocabulary matches this build.
+    pub fn verify_manifest(&self, chars: &str, vocab_size: usize, pad: u32, bos: u32, eos: u32) -> Result<()> {
+        if chars != VOCAB_CHARS {
+            bail!("tokenizer vocab drift: manifest={chars:?} build={VOCAB_CHARS:?}");
+        }
+        if vocab_size != VOCAB_SIZE || pad != PAD_ID || bos != BOS_ID || eos != EOS_ID {
+            bail!("tokenizer special/size drift (manifest vs build)");
+        }
+        Ok(())
+    }
+
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.chars()
+            .map(|c| {
+                self.char_to_id
+                    .get(c as usize)
+                    .copied()
+                    .flatten()
+                    .with_context(|| format!("out-of-vocabulary character {c:?}"))
+            })
+            .collect()
+    }
+
+    /// Decode, skipping specials and unused slots.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter().filter_map(|&id| self.id_to_char.get(id as usize).copied().flatten()).collect()
+    }
+
+    /// `BOS + text`, PAD-padded to `max_len`. Returns `(ids, true_len)` —
+    /// the exact layout `prefill_*.hlo` expects.
+    pub fn encode_prompt(&self, text: &str, max_len: usize) -> Result<(Vec<u32>, usize)> {
+        let mut ids = vec![BOS_ID];
+        ids.extend(self.encode(text)?);
+        if ids.len() > max_len {
+            bail!("prompt too long: {} > {max_len}", ids.len());
+        }
+        let true_len = ids.len();
+        ids.resize(max_len, PAD_ID);
+        Ok((ids, true_len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let text = "q: tom has 12 apples, buys 3 more. how many?\na: 12+3=15. #### 15\n";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_are_reserved() {
+        let t = Tokenizer::new();
+        let ids = t.encode("a").unwrap();
+        assert!(ids[0] >= NUM_SPECIALS);
+        assert_eq!(t.decode(&[PAD_ID, BOS_ID, EOS_ID]), "");
+    }
+
+    #[test]
+    fn oov_rejected() {
+        let t = Tokenizer::new();
+        assert!(t.encode("UPPER").is_err());
+        assert!(t.encode("emoji 😀").is_err());
+    }
+
+    #[test]
+    fn prompt_layout() {
+        let t = Tokenizer::new();
+        let (ids, len) = t.encode_prompt("ab", 8).unwrap();
+        assert_eq!(len, 3);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(&ids[3..], &[PAD_ID; 5]);
+        assert!(t.encode_prompt("abcdefgh", 4).is_err());
+    }
+
+    #[test]
+    fn vocab_fits() {
+        assert!(VOCAB_CHARS.chars().count() + NUM_SPECIALS as usize <= VOCAB_SIZE);
+    }
+}

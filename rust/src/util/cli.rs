@@ -1,0 +1,152 @@
+//! Tiny argument parser for the launcher and examples (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Typed getters parse on access and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `std::env::args().skip(1)`
+    /// in production via [`Args::from_env`].
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                args.present.push(key.clone());
+                if let Some(v) = inline_val {
+                    args.flags.insert(key, v);
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(key, it.next().unwrap());
+                } else {
+                    args.flags.insert(key, "true".to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.typed_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(other) => panic!("--{key}: expected boolean, got {other:?}"),
+        }
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("--{key}: cannot parse {v:?}: {e}"),
+            },
+        }
+    }
+
+    /// Comma-separated list, e.g. `--n 5,10,20`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{key}: bad item {s:?}: {e}")))
+                .collect(),
+        }
+    }
+
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse("run --n 10 --model=sm --verbose --rate 0.5 extra");
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize_or("n", 1), 10);
+        assert_eq!(a.str_or("model", "lg"), "sm");
+        assert!(a.has("verbose"));
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.f64_or("rate", 0.0), 0.5);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--n 5,10,20 --datasets gsm,math");
+        assert_eq!(a.usize_list_or("n", &[1]), vec![5, 10, 20]);
+        assert_eq!(a.str_list_or("datasets", &[]), vec!["gsm", "math"]);
+        assert_eq!(a.usize_list_or("other", &[3]), vec![3]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("--bias -1.5");
+        // "-1.5" does not start with --, so it is consumed as the value.
+        assert_eq!(a.f64_or("bias", 0.0), -1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_parse_panics() {
+        let a = parse("--n abc");
+        a.usize_or("n", 1);
+    }
+}

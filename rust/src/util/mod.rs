@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline image (no
+//! serde/rand/clap/tokio/criterion available): JSON, RNGs, CLI parsing,
+//! a thread pool, and the statistics helpers the signal pipeline uses.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

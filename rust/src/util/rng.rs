@@ -1,0 +1,163 @@
+//! Deterministic random-number generation.
+//!
+//! No `rand` crate offline, so the repo carries:
+//! - [`SplitMix64`] — the corpus/workload generator contract shared with
+//!   `python/compile/datagen.py` (same constants; corpora must be
+//!   reproducible cross-language).
+//! - [`Pcg64`] — the serving-path RNG (PCG-XSH-RR 64/32 pair widened to 64
+//!   bits of output per draw) used for branch sampling. Streams are keyed
+//!   by (seed, stream) so every branch draws independently and any run is
+//!   exactly replayable from its config.
+
+/// SplitMix64 — matches `datagen.Lcg` in the Python compile path.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n). (Modulo, to match the Python generator exactly.)
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+}
+
+/// PCG-XSH-RR with 64-bit state — serving-path sampling RNG.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Unbiased uniform in [0, n) via rejection.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_matches_python_constants() {
+        // Golden values cross-checked against python/compile/datagen.Lcg.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 16294208416658607535);
+        assert_eq!(r.next_u64(), 7960286522194355700);
+        let mut r = SplitMix64::new(1234);
+        let seq: Vec<u64> = (0..4).map(|_| r.below(100)).collect();
+        let mut r2 = SplitMix64::new(1234);
+        let seq2: Vec<u64> = (0..4).map(|_| r2.below(100)).collect();
+        assert_eq!(seq, seq2);
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let a: Vec<u32> = {
+            let mut r = Pcg64::new(7, 0);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut r = Pcg64::new(7, 1);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_ne!(a, b);
+        // Same (seed, stream) replays exactly.
+        let a2: Vec<u32> = {
+            let mut r = Pcg64::new(7, 0);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(42, 3);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_bounds() {
+        let mut r = Pcg64::new(9, 9);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(1, 1);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,145 @@
+//! Small statistics toolkit used by the signal pipeline, the metrics
+//! collector, and the bench harness (no external crates available).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for len < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (average of middle two for even length); 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        (v[n / 2 - 1] + v[n / 2]) / 2.0
+    }
+}
+
+/// Linear-interpolation percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Median-of-means over `m` buckets (Algorithm 2, Robustification step).
+///
+/// The window `xs` is split into `m` equal-size contiguous buckets (later
+/// elements first when the window is not divisible — matching the paper's
+/// "last w steps" semantics where newest data must not be dropped); the
+/// estimate is the median of the bucket means. Falls back to the plain
+/// mean when there are fewer samples than buckets.
+pub fn median_of_means(xs: &[f64], m: usize) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = m.max(1);
+    if xs.len() < m {
+        return mean(xs);
+    }
+    let bucket = xs.len() / m;
+    let start = xs.len() - bucket * m; // drop oldest remainder
+    let means: Vec<f64> =
+        (0..m).map(|k| mean(&xs[start + k * bucket..start + (k + 1) * bucket])).collect();
+    median(&means)
+}
+
+/// Z-score normalization across a slice, as in Algorithm 2 step 19:
+/// `(x - mu) / (sigma + eps)`, then clamped to [-clamp, clamp].
+pub fn z_normalize(xs: &[f64], eps: f64, clamp: f64) -> Vec<f64> {
+    let mu = mean(xs);
+    let sd = std_dev(xs);
+    xs.iter().map(|x| ((x - mu) / (sd + eps)).clamp(-clamp, clamp)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mom_is_robust_to_outliers() {
+        // 15 well-behaved samples + 1 huge outlier: MoM stays near 1,
+        // plain mean is dragged far away.
+        let mut xs = vec![1.0; 15];
+        xs.push(1e6);
+        let mom = median_of_means(&xs, 4);
+        assert!(mom < 10.0, "mom={mom}");
+        assert!(mean(&xs) > 1e4);
+    }
+
+    #[test]
+    fn mom_small_windows_fall_back() {
+        assert_eq!(median_of_means(&[5.0], 4), 5.0);
+        assert_eq!(median_of_means(&[1.0, 3.0], 4), 2.0);
+        assert_eq!(median_of_means(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn mom_keeps_newest_on_uneven_split() {
+        // 10 samples, 4 buckets → bucket size 2, oldest 2 dropped.
+        let xs = [100.0, 100.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        assert_eq!(median_of_means(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn z_norm_properties() {
+        let z = z_normalize(&[1.0, 2.0, 3.0, 4.0], 1e-8, 3.0);
+        assert!((mean(&z)).abs() < 1e-9);
+        assert!(z[0] < z[1] && z[1] < z[2] && z[2] < z[3]);
+        // Clamping bounds extreme outliers (raw z here is ≈3−ε).
+        let z = z_normalize(&[0.0; 12].iter().chain(&[1000.0]).copied().collect::<Vec<_>>(), 1e-8, 3.0);
+        assert_eq!(z[12], 3.0);
+    }
+
+    #[test]
+    fn z_norm_constant_input_is_zero() {
+        let z = z_normalize(&[5.0, 5.0, 5.0], 1e-8, 3.0);
+        assert!(z.iter().all(|v| v.abs() < 1e-6));
+    }
+}

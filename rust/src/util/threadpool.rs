@@ -1,0 +1,133 @@
+//! Fixed-size worker pool (no tokio offline; request-level parallelism in
+//! the server uses plain threads + channels).
+//!
+//! Jobs are `FnOnce() + Send` closures; `join` blocks until the queue
+//! drains. The pool is also used by the bench harness to overlap workload
+//! generation with engine warmup on multi-core hosts (this image has one
+//! core, but the code is written for the general case).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            let executed = Arc::clone(&executed);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("kappa-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                executed.fetch_add(1, Ordering::SeqCst);
+                                let (lock, cvar) = &*inflight;
+                                let mut cnt = lock.lock().unwrap();
+                                *cnt -= 1;
+                                cvar.notify_all();
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { sender: Some(tx), workers, inflight, executed }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.inflight;
+        *lock.lock().unwrap() += 1;
+        self.sender.as_ref().expect("pool alive").send(Box::new(f)).expect("workers alive");
+    }
+
+    /// Block until every enqueued job has finished.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.inflight;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cvar.wait(cnt).unwrap();
+        }
+    }
+
+    /// Total jobs executed since creation (metrics).
+    pub fn executed(&self) -> usize {
+        self.executed.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.executed(), 100);
+    }
+
+    #[test]
+    fn join_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

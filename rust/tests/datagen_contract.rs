@@ -1,0 +1,52 @@
+//! Cross-language dataset contract: the Rust generators must produce
+//! byte-identical samples to `python/compile/datagen.py` for the same
+//! seeds (the training corpus and serving workloads share one
+//! distribution). Goldens produced by
+//! `pytest python/tests/test_datagen.py -s -k print_golden`.
+
+use kappa::data::{gsm, math};
+use kappa::util::rng::SplitMix64;
+
+#[test]
+fn gsm_golden_seed_1234() {
+    let s = gsm::gen(&mut SplitMix64::new(1234));
+    assert_eq!(s.question, "leo has 29 cards, buys 79 more, gives 28 away. how many cards now?");
+    assert_eq!(s.response(), " 29+79=108. 108-28=80. #### 80");
+    assert_eq!(s.answer, 80);
+}
+
+#[test]
+fn math_golden_seed_1234() {
+    let s = math::gen(&mut SplitMix64::new(1234));
+    assert_eq!(s.question, "compute (19*15+5) mod 11.");
+    assert_eq!(s.response(), " 19*15=285. 285+5=290. 290 mod 11=4. #### 4");
+    assert_eq!(s.answer, 4);
+}
+
+#[test]
+fn gsm_golden_seed_99() {
+    let s = gsm::gen(&mut SplitMix64::new(99));
+    assert_eq!(s.question, "leo has 77 coins, loses 5, then finds 48. how many coins now?");
+    assert_eq!(s.response(), " 77-5=72. 72+48=120. #### 120");
+}
+
+#[test]
+fn math_golden_seed_99() {
+    let s = math::gen(&mut SplitMix64::new(99));
+    assert_eq!(s.question, "let x=10. compute x*x+18.");
+    assert_eq!(s.response(), " 10*10=100. 100+18=118. #### 118");
+}
+
+#[test]
+fn long_stream_stays_in_vocabulary_and_budget() {
+    // 5k samples per dataset: all encodable, prompts within the tightest
+    // model prompt budget (96 incl. BOS).
+    let tok = kappa::tokenizer::Tokenizer::new();
+    let mut rng = SplitMix64::new(0xFEED);
+    for i in 0..10_000 {
+        let s = if i % 2 == 0 { gsm::gen(&mut rng) } else { math::gen(&mut rng) };
+        let full = format!("{}{}\n", s.prompt(), s.response());
+        tok.encode(&full).expect("tokenizable");
+        assert!(s.prompt().len() + 1 <= 96);
+    }
+}

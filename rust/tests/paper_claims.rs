@@ -1,0 +1,117 @@
+//! The paper's §4.2 claims as executable assertions (small problem set;
+//! the full-scale version is `cargo bench --bench table1_full_grid`).
+//! Skips without artifacts.
+
+use std::sync::Arc;
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::coordinator::metrics_for;
+use kappa::data::Dataset;
+use kappa::engine::Engine;
+use kappa::metrics::RunMetrics;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+
+fn artifacts_dir() -> String {
+    std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn engine_for(model: &str) -> Option<Engine> {
+    let manifest = Manifest::load(artifacts_dir()).ok()?;
+    let rt = Arc::new(Runtime::new().ok()?);
+    let lm = LoadedModel::load(rt, &manifest, model).ok()?;
+    Some(Engine::new(Arc::new(lm)))
+}
+
+fn run(engine: &Engine, ds: Dataset, method: Method, n: usize, problems: usize) -> RunMetrics {
+    let cfg = RunConfig { method, n, max_new_tokens: 80, seed: 3, ..RunConfig::default() };
+    let set = ds.generate(problems, 1717);
+    metrics_for(engine, &set, &cfg).expect("run")
+}
+
+/// "KL consistently reduces total token generation compared to BoN" and
+/// "KL consistently lowers peak GPU memory compared to BoN" (§4.2).
+#[test]
+fn kl_beats_bon_on_cost_axes() {
+    let Some(engine) = engine_for("sm") else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    for ds in [Dataset::GsmSynth, Dataset::MathSynth] {
+        for n in [5, 10] {
+            let bon = run(&engine, ds, Method::Bon, n, 8);
+            let kl = run(&engine, ds, Method::Kappa, n, 8);
+            assert!(
+                kl.mean_total_tokens() < bon.mean_total_tokens(),
+                "{ds:?} N={n}: tokens {} !< {}",
+                kl.mean_total_tokens(),
+                bon.mean_total_tokens()
+            );
+            assert!(
+                kl.peak_mem_mb() < bon.peak_mem_mb(),
+                "{ds:?} N={n}: memory {} !< {}",
+                kl.peak_mem_mb(),
+                bon.peak_mem_mb()
+            );
+        }
+    }
+}
+
+/// Token reduction grows with N (the paper's Fig. 3 trend: the bigger the
+/// branch budget, the more KAPPA saves relative to BoN).
+#[test]
+fn token_reduction_grows_with_n() {
+    let Some(engine) = engine_for("sm") else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let ds = Dataset::GsmSynth;
+    let red = |n: usize| {
+        let bon = run(&engine, ds, Method::Bon, n, 8);
+        let kl = run(&engine, ds, Method::Kappa, n, 8);
+        1.0 - kl.mean_total_tokens() / bon.mean_total_tokens()
+    };
+    let (r5, r20) = (red(5), red(20));
+    assert!(
+        r20 > r5,
+        "reduction should grow with N: N=5 → {r5:.3}, N=20 → {r20:.3}"
+    );
+    assert!(r20 > 0.4, "N=20 reduction should be substantial, got {r20:.3}");
+}
+
+/// Greedy is the memory floor: every multi-branch method's peak is at or
+/// above greedy's (M_cost ≥ 1), and KAPPA's M_cost stays below BoN's.
+#[test]
+fn memory_cost_ordering() {
+    let Some(engine) = engine_for("sm") else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let ds = Dataset::MathSynth;
+    let greedy = run(&engine, ds, Method::Greedy, 1, 8);
+    let bon = run(&engine, ds, Method::Bon, 10, 8);
+    let kl = run(&engine, ds, Method::Kappa, 10, 8);
+    let g = greedy.peak_mem_mb();
+    assert!(bon.peak_mem_mb() / g >= 1.0);
+    assert!(kl.peak_mem_mb() / g >= 1.0);
+    assert!(kl.peak_mem_mb() < bon.peak_mem_mb());
+}
+
+/// ST-BoN and KAPPA land in the same cost regime (both truncate early);
+/// final-branch tokens stay in the same range as greedy's output length
+/// (the "Final Branch Tokens" column is method-invariant to first order).
+#[test]
+fn final_branch_tokens_are_method_invariant() {
+    let Some(engine) = engine_for("sm") else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let ds = Dataset::GsmSynth;
+    let greedy = run(&engine, ds, Method::Greedy, 1, 8).mean_final_branch_tokens();
+    for method in [Method::Bon, Method::StBon, Method::Kappa] {
+        let m = run(&engine, ds, method, 5, 8).mean_final_branch_tokens();
+        assert!(
+            m > 0.3 * greedy && m < 3.0 * greedy,
+            "{method:?}: final tokens {m:.1} far from greedy {greedy:.1}"
+        );
+    }
+}

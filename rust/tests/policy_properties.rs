@@ -1,0 +1,202 @@
+//! Property-based tests over the coordinator's pure components (no
+//! artifacts needed) using the in-repo prop harness.
+
+use kappa::coordinator::config::{KappaConfig, Schedule};
+use kappa::coordinator::draft::{all_pairwise_inconsistent, most_consistent, token_consistency};
+use kappa::coordinator::sampler::{self, token_logprob};
+use kappa::coordinator::schedule::survivors;
+use kappa::coordinator::signals::{combine_scores, raw_signals, BranchSignalState};
+use kappa::testing::check;
+use kappa::util::rng::Pcg64;
+use kappa::util::stats;
+
+#[test]
+fn prop_schedule_monotone_and_terminal() {
+    check("schedule monotone, ends at 1", 300, |g| {
+        let n = g.usize(2..33);
+        let tau = g.usize(1..80);
+        let schedule = if g.bool() { Schedule::Linear } else { Schedule::Cosine };
+        let mut prev = n;
+        for k in 1..=tau {
+            let r = survivors(schedule, n, k, tau);
+            assert!(r >= 1 && r <= n, "r={r} out of range");
+            assert!(r <= prev, "schedule not monotone at k={k}");
+            prev = r;
+        }
+        assert_eq!(survivors(schedule, n, tau, tau), 1);
+    });
+}
+
+#[test]
+fn prop_sampler_respects_top_k_support() {
+    check("sampled token is within top-k set", 300, |g| {
+        let v = g.usize(4..65);
+        let logits = g.vec_f32(v..v + 1, -8.0..8.0);
+        let k = g.usize(1..v + 1);
+        let cfg = kappa::coordinator::config::SamplerConfig {
+            temperature: g.f32(0.2..1.5),
+            top_k: k,
+            top_p: g.f32(0.1..1.0),
+        };
+        let mut rng = Pcg64::new(g.u64(0..u64::MAX / 2), 1);
+        let (tok, lp) = sampler::sample(&logits, &cfg, &mut rng);
+        // Token must be among the k highest logits.
+        let mut sorted: Vec<f32> = logits.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = sorted[k - 1];
+        assert!(
+            logits[tok as usize] >= threshold - 1e-6,
+            "token {tok} logit {} below top-{k} threshold {threshold}",
+            logits[tok as usize]
+        );
+        // Reported logprob is the full-softmax value.
+        assert!((lp - token_logprob(&logits, tok as usize)).abs() < 1e-12);
+        assert!(lp <= 0.0);
+    });
+}
+
+#[test]
+fn prop_raw_signals_invariants() {
+    check("KL ≥ 0, conf in (0,1], ent in [0, ln V]", 300, |g| {
+        let v = g.usize(2..65);
+        let logits = g.vec_f32(v..v + 1, -10.0..10.0);
+        let q = g.vec_f32(v..v + 1, -10.0..10.0);
+        let (kl, conf, ent) = raw_signals(&logits, &q);
+        assert!(kl >= -1e-9, "kl={kl}");
+        assert!(conf > 0.0 && conf <= 1.0 + 1e-9);
+        assert!(ent >= -1e-9 && ent <= (v as f64).ln() + 1e-6);
+    });
+}
+
+#[test]
+fn prop_mom_bounded_by_window_extremes() {
+    check("median-of-means within [min, max] of window", 300, |g| {
+        let xs = g.vec_f64(1..64, -100.0..100.0);
+        let m = g.usize(1..9);
+        let mom = stats::median_of_means(&xs, m);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(mom >= lo - 1e-9 && mom <= hi + 1e-9, "mom={mom} outside [{lo},{hi}]");
+    });
+}
+
+#[test]
+fn prop_zscore_bounded_and_centered() {
+    check("z-scores clamped and mean-centered", 300, |g| {
+        let xs = g.vec_f64(2..64, -50.0..50.0);
+        let clamp = g.f64(1.0..5.0);
+        let z = stats::z_normalize(&xs, 1e-8, clamp);
+        for v in &z {
+            assert!(v.abs() <= clamp + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_trajectory_score_bounded_by_instantaneous_extremes() {
+    check("S_t stays within [min s, max s]", 200, |g| {
+        let steps = g.usize(1..64);
+        let mut st = BranchSignalState::new(16);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for t in 1..=steps {
+            let s = g.f64(-3.0..3.0);
+            lo = lo.min(s);
+            hi = hi.max(s);
+            st.update_trajectory(s, t);
+        }
+        assert!(st.score >= lo - 1e-9 && st.score <= hi + 1e-9);
+    });
+}
+
+#[test]
+fn prop_combine_scores_weight_ordering() {
+    // With paper weights, a branch that dominates every signal must get
+    // the highest instantaneous score.
+    check("dominant branch wins the step", 200, |g| {
+        let n = g.usize(2..9);
+        let cfg = KappaConfig::default();
+        let mut sig: Vec<BranchSignalState> =
+            (0..n).map(|_| BranchSignalState::new(cfg.window)).collect();
+        let live: Vec<usize> = (0..n).collect();
+        let winner = g.usize(0..n);
+        let mut ema = vec![];
+        let mut conf = vec![];
+        let mut ent = vec![];
+        for i in 0..n {
+            if i == winner {
+                ema.push(g.f64(2.0..3.0));
+                conf.push(g.f64(0.8..0.9));
+                ent.push(g.f64(2.0..3.0));
+            } else {
+                ema.push(g.f64(-1.0..1.0));
+                conf.push(g.f64(0.1..0.7));
+                ent.push(g.f64(0.0..1.9));
+            }
+        }
+        let s = combine_scores(&mut sig, &live, &ema, &conf, &ent, 3, &cfg);
+        let max = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s[winner], max);
+    });
+}
+
+#[test]
+fn prop_pairwise_inconsistency_detects_duplicates() {
+    check("duplicate sequences are detected", 200, |g| {
+        let n = g.usize(2..8);
+        let len = g.usize(1..12);
+        let mut seqs: Vec<Vec<u32>> =
+            (0..n).map(|_| g.vec_u32(len..len + 1, 0..8)).collect();
+        // Force a duplicate pair.
+        let a = g.usize(0..n);
+        let mut b = g.usize(0..n);
+        if a == b {
+            b = (b + 1) % n;
+        }
+        seqs[b] = seqs[a].clone();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        assert!(!all_pairwise_inconsistent(&refs));
+    });
+}
+
+#[test]
+fn prop_consistency_in_unit_interval_and_medoid_valid() {
+    check("consistency ∈ [0,1]; medoid is a valid index", 200, |g| {
+        let n = g.usize(2..7);
+        let seqs: Vec<Vec<u32>> = (0..n).map(|_| g.vec_u32(1..16, 0..6)).collect();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let upto = g.usize(1..20);
+        for i in 0..n {
+            for j in 0..n {
+                let c = token_consistency(refs[i], refs[j], upto);
+                assert!((0.0..=1.0).contains(&c));
+            }
+        }
+        let pick = most_consistent(&refs, upto);
+        assert!(pick < n);
+    });
+}
+
+#[test]
+fn prop_ema_bounded_by_signal_range() {
+    check("bias-corrected EMA of bounded ΔI stays bounded", 200, |g| {
+        let cfg = KappaConfig {
+            ema_alpha: g.f64(0.05..1.0),
+            window: g.usize(1..32),
+            mom_buckets: g.usize(1..8),
+            ..KappaConfig::default()
+        };
+        let mut st = BranchSignalState::new(cfg.window);
+        let bound = g.f64(0.5..10.0);
+        let mut kl = 0.0;
+        for _ in 0..g.usize(1..64) {
+            let delta = g.f64(-bound..bound);
+            kl += delta;
+            let ema = st.update_kl(kl, &cfg);
+            assert!(
+                ema.abs() <= bound * 1.0001,
+                "ema {ema} exceeded ΔI bound {bound}"
+            );
+        }
+    });
+}

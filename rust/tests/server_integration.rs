@@ -1,0 +1,69 @@
+//! Server-level integration: boots the worker pool on real artifacts,
+//! pushes a small trace, checks responses and telemetry. Skips when
+//! artifacts are missing.
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::data::{eval, Dataset};
+use kappa::server::Server;
+
+fn artifacts_dir() -> String {
+    std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}
+
+#[test]
+fn server_serves_a_trace() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 64, ..RunConfig::default() };
+    let server = Server::start(&artifacts_dir(), "sm", 1, cfg).expect("boot server");
+
+    let problems = Dataset::GsmSynth.generate(4, 31);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let responses = server.submit_all(&prompts, 5);
+
+    assert_eq!(responses.len(), 4);
+    for (resp, prob) in responses.iter().zip(&problems) {
+        let r = resp.as_ref().expect("response ok");
+        assert!(r.service_seconds > 0.0);
+        assert!(r.output.metrics.total_tokens > 0);
+        // Answer may be wrong (tiny model), but the text must be decodable
+        // and extraction must not panic.
+        let _ = eval::is_correct(&r.output.text, prob.answer);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_bad_model_at_startup() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = RunConfig::default();
+    let err = Server::start(&artifacts_dir(), "nonexistent-model", 1, cfg);
+    assert!(err.is_err(), "startup must fail loudly for unknown model");
+}
+
+#[test]
+fn server_handles_oversized_prompt_gracefully() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = RunConfig { method: Method::Greedy, n: 1, ..RunConfig::default() };
+    let server = Server::start(&artifacts_dir(), "sm", 1, cfg).expect("boot");
+    let huge = "q: ".to_string() + &"1+".repeat(200) + "1?\na:";
+    let rx = server.submit(&huge, 0);
+    let resp = rx.recv().expect("channel alive");
+    assert!(resp.is_err(), "oversized prompt should error, not crash the worker");
+    // Worker must survive and serve the next request.
+    let ok = server.submit("q: 1+1?\na:", 0).recv().expect("alive");
+    assert!(ok.is_ok());
+    server.shutdown();
+}
