@@ -72,8 +72,9 @@ fn main() -> anyhow::Result<()> {
         k += 1;
         let live = state.live_branches().to_vec();
         let rows = live.len();
-        let slab = state.live_logits();
-        let (kl, conf, ent) = engine.model().signals(&slab, rows)?;
+        // Zero-copy: the engine's slab is already bucket-padded.
+        let (kl, conf, ent) =
+            engine.model().signals_padded(state.logits_slab(), rows, state.bucket())?;
         let mut ema = Vec::with_capacity(rows);
         for (slot, &bi) in live.iter().enumerate() {
             ema.push(sig[bi].update_kl(kl[slot] as f64, &kcfg));
@@ -105,7 +106,7 @@ fn main() -> anyhow::Result<()> {
         let target = target.min(candidates.len()).max(1);
         if target < candidates.len() {
             let mut ranked = candidates.clone();
-            ranked.sort_by(|&a, &b| sig[b].score.partial_cmp(&sig[a].score).unwrap());
+            ranked.sort_by(|&a, &b| kappa::util::stats::total_order(sig[b].score, sig[a].score));
             let keep = &ranked[..target];
             let keep_live: Vec<usize> = state
                 .live_branches()
@@ -139,7 +140,7 @@ fn main() -> anyhow::Result<()> {
     let chosen = survivors
         .iter()
         .copied()
-        .max_by(|&a, &b| sig[a].score.partial_cmp(&sig[b].score).unwrap())
+        .max_by(|&a, &b| kappa::util::stats::total_order(sig[a].score, sig[b].score))
         .unwrap_or(0);
     println!("\n— Phase III (continuation) — winner: branch {chosen} (S={:+.3})", sig[chosen].score);
     if !state.branches[chosen].finished && state.live_branches().contains(&chosen) {

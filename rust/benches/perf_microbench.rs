@@ -5,6 +5,16 @@
 //! gather latency, and the pure-engine overhead (sampling + bookkeeping)
 //! per step. Prints a table and writes `artifacts/reports/perf.json`.
 //!
+//! Zero-allocation hot-path rows (this PR's tracking targets):
+//! - `sample_x32_host`  — the scalar reference sampler, 32 rows/step.
+//! - `sample_batched`   — [`SamplerScratch::sample_slab`] over the same
+//!   32 rows; the acceptance target is ≥ 2× on the median.
+//! - `signals_padded`   — the borrowed-slab signal call (no row copy, no
+//!   re-pad, device-resident q).
+//! - the `counters` report block — host→device uploads per signals call;
+//!   1.0 means the steady state re-uploads nothing but the slab itself
+//!   (q re-upload would make it 2.0).
+//!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
 use std::time::Instant;
@@ -12,8 +22,8 @@ use std::time::Instant;
 use anyhow::Result;
 use kappa::bench::{BenchEnv, Table};
 use kappa::coordinator::config::SamplerConfig;
-use kappa::coordinator::sampler;
-use kappa::coordinator::signals::raw_signals;
+use kappa::coordinator::sampler::{self, SamplerScratch};
+use kappa::coordinator::signals::{raw_signals, SignalScratch};
 use kappa::util::json::Json;
 use kappa::util::rng::Pcg64;
 use kappa::util::stats;
@@ -58,6 +68,9 @@ fn main() -> Result<()> {
         ]));
     };
 
+    // (bucket, host→device uploads per signals_padded call).
+    let mut upload_counters: Vec<(usize, f64)> = Vec::new();
+
     // Prefill (bucket 1 only — prompts are shared across branches).
     let (med, p95) = time_op(iters, || {
         let _ = model.prefill(&ids_i32).unwrap();
@@ -84,12 +97,30 @@ fn main() -> Result<()> {
         });
         push(&mut table, "decode_step", b, med, p95);
 
-        // Signal kernel (PJRT fused Pallas) on a b×V slab.
+        // Legacy copy-and-pad entry point. `signals(slab, rows)` only
+        // pays the to_vec+resize copy when rows lands strictly inside
+        // the bucket (rows == bucket short-circuits to the zero-copy
+        // call, and for b == 2 rows = 1 is itself bucket 1), so bench
+        // rows = b − 1 for b ≥ 4 to keep a real before/after against
+        // signals_padded.
         let slab: Vec<f32> = (0..b * v).map(|i| ((i * 131) % 97) as f32 / 9.0).collect();
+        if b >= 4 {
+            let tight = &slab[..(b - 1) * v];
+            let (med, p95) = time_op(iters, || {
+                let _ = model.signals(tight, b - 1).unwrap();
+            });
+            push(&mut table, "signals_copy_pad", b, med, p95);
+        }
+
+        // Borrowed-slab signal call (zero host-side copies) + the
+        // uploads-per-call counter that proves q stays device-resident.
+        let uploads_before = model.runtime().upload_count();
         let (med, p95) = time_op(iters, || {
-            let _ = model.signals(&slab, b).unwrap();
+            let _ = model.signals_padded(&slab, b, b).unwrap();
         });
-        push(&mut table, "signals_pallas", b, med, p95);
+        push(&mut table, "signals_padded", b, med, p95);
+        let per_call = (model.runtime().upload_count() - uploads_before) as f64 / iters as f64;
+        upload_counters.push((b, per_call));
 
         // Native Rust signals for comparison.
         let q: Vec<f32> = model.q_logits().to_vec();
@@ -99,6 +130,16 @@ fn main() -> Result<()> {
             }
         });
         push(&mut table, "signals_native", b, med, p95);
+
+        // Scratch-based native signals (precomputed log q, reused row
+        // buffer) — the `--native-signals` hot loop.
+        let mut sig_scratch = SignalScratch::new(&q);
+        let (med, p95) = time_op(iters, || {
+            for r in 0..b {
+                let _ = sig_scratch.raw(&slab[r * v..(r + 1) * v]);
+            }
+        });
+        push(&mut table, "signals_native_scratch", b, med, p95);
 
         // Gather shrink b → max(b/2, 1).
         if b > 1 {
@@ -112,6 +153,7 @@ fn main() -> Result<()> {
     }
 
     // Engine-side per-step overhead: sampling from a logits row.
+    // Reference path: allocate + full-sort per token, 32 rows per step.
     let row: Vec<f32> = (0..v).map(|i| ((i * 31) % 17) as f32 / 3.0).collect();
     let cfg = SamplerConfig::default();
     let mut rng = Pcg64::new(1, 1);
@@ -122,7 +164,48 @@ fn main() -> Result<()> {
     });
     push(&mut table, "sample_x32_host", 32, med, p95);
 
+    // Batched scratch path over an equivalent 32-row slab: zero
+    // steady-state allocation, partial top-k selection. Acceptance
+    // target: ≥ 2× better median than sample_x32_host.
+    let slab32: Vec<f32> = (0..32 * v).map(|i| ((i * 31) % 17) as f32 / 3.0).collect();
+    let live32: Vec<usize> = (0..32).collect();
+    let mut rngs32: Vec<Pcg64> = (0..32).map(|i| Pcg64::new(1, i as u64 + 1)).collect();
+    let mut scratch = SamplerScratch::new();
+    let (med_batched, p95) = time_op(iters, || {
+        let _ = scratch.sample_slab(&slab32, v, &live32, &cfg, &mut rngs32);
+    });
+    push(&mut table, "sample_batched", 32, med_batched, p95);
+    // Guard the ratio: a 0-ms batched median (coarse timer) must not put
+    // a non-finite token into perf.json (Json::Num serializes "inf").
+    let speedup = if med_batched > 0.0 { med / med_batched } else { f64::INFINITY };
+
     table.print();
-    env.write_report("perf", Json::obj(vec![("rows", Json::Arr(report))]))?;
+    println!("\nsample_x32_host / sample_batched speedup: {speedup:.2}x (target ≥ 2x)");
+    let speedup_json = if speedup.is_finite() { Json::num(speedup) } else { Json::Null };
+    let mut counters = vec![("sample_speedup", speedup_json)];
+    for &(b, per_call) in &upload_counters {
+        println!(
+            "q_upload — uploads per signals_padded call (bucket {b}): {per_call:.2} \
+             (1.0 = slab only, q stays device-resident)"
+        );
+    }
+    counters.push((
+        "q_upload",
+        Json::Arr(
+            upload_counters
+                .iter()
+                .map(|&(b, per_call)| {
+                    Json::obj(vec![
+                        ("bucket", Json::num(b as f64)),
+                        ("uploads_per_signals_call", Json::num(per_call)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    env.write_report(
+        "perf",
+        Json::obj(vec![("rows", Json::Arr(report)), ("counters", Json::obj(counters))]),
+    )?;
     Ok(())
 }

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Tier-1 gate + hot-path smoke for the Rust serving stack.
+#
+#   ./rust/ci.sh            # fmt, clippy -D warnings, build, tests
+#   KAPPA_ARTIFACTS=... ./rust/ci.sh   # also runs the perf smoke bench
+#
+# The perf bench needs compiled AOT artifacts (`make artifacts`); when
+# they are absent the smoke step is skipped with a notice rather than
+# failing, so the lint/test gate stays usable in clean checkouts.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "[ci] cargo fmt --check"
+cargo fmt --check
+
+echo "[ci] cargo clippy (all targets, warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+echo "[ci] cargo build --release"
+cargo build --release
+
+echo "[ci] cargo test -q"
+cargo test -q
+
+ARTIFACTS="${KAPPA_ARTIFACTS:-artifacts}"
+if [ -f "$ARTIFACTS/manifest.json" ]; then
+    echo "[ci] perf smoke: cargo bench --bench perf_microbench -- --iters 3"
+    # With the vendored xla stub (rust/vendor/xla) the bench cannot
+    # execute HLO, so a failure here is expected and non-fatal unless
+    # KAPPA_CI_REQUIRE_PERF=1 (set it when building against the real
+    # PJRT-backed crate so perf-harness rot still fails the gate).
+    if ! cargo bench --bench perf_microbench -- --artifacts "$ARTIFACTS" --iters 3; then
+        if [ "${KAPPA_CI_REQUIRE_PERF:-0}" = "1" ]; then
+            echo "[ci] perf smoke FAILED (KAPPA_CI_REQUIRE_PERF=1)"; exit 1
+        fi
+        echo "[ci] perf smoke failed — expected under the vendored xla stub;" \
+             "rerun with a real PJRT backend and KAPPA_CI_REQUIRE_PERF=1"
+    fi
+else
+    echo "[ci] $ARTIFACTS/manifest.json missing — skipping perf smoke (run \`make artifacts\`)"
+fi
+
+echo "[ci] OK"

@@ -13,7 +13,8 @@ use crate::metrics::RequestMetrics;
 use crate::util::rng::Pcg64;
 
 use super::config::RunConfig;
-use super::{sampler, GenOutput};
+use super::sampler::SamplerScratch;
+use super::GenOutput;
 
 pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
     let mut state = engine.start_opts(
@@ -23,19 +24,19 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
     )?;
     // Independent RNG stream per branch, keyed by request seed.
     let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+    let vocab = engine.model().config.vocab;
+    let mut scratch = SamplerScratch::new();
+    let mut live: Vec<usize> = Vec::with_capacity(cfg.n);
 
     let mut steps = 0usize;
     while steps < cfg.max_new_tokens && state.remaining() > 0 {
-        let live = state.live_branches().to_vec();
+        live.clear();
+        live.extend_from_slice(state.live_branches());
         if live.is_empty() {
             break;
         }
-        let mut sampled = Vec::with_capacity(live.len());
-        for (slot, &bi) in live.iter().enumerate() {
-            let row = state.logits_for_slot(slot);
-            sampled.push(sampler::sample(row, &cfg.sampler, &mut rngs[bi]));
-        }
-        state.step(engine, &sampled)?;
+        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
+        state.step(engine, sampled)?;
         steps += 1;
         if !state.compact_finished(engine)? {
             break; // everything reached EOS
@@ -43,12 +44,14 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
     }
 
     // Selection: max mean log-probability (negative perplexity).
+    // `stats::total_order` keeps the comparison total on NaN and treats
+    // ±0.0 as equal, exactly as the seed's `partial_cmp` did.
     let chosen = (0..state.branches.len())
         .max_by(|&a, &b| {
-            state.branches[a]
-                .mean_logprob()
-                .partial_cmp(&state.branches[b].mean_logprob())
-                .unwrap()
+            crate::util::stats::total_order(
+                state.branches[a].mean_logprob(),
+                state.branches[b].mean_logprob(),
+            )
         })
         .unwrap_or(0);
 

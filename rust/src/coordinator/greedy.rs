@@ -13,8 +13,8 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig) -> Result<GenOutput> 
     let mut state = engine.start(prompt, 1)?;
     let mut steps = 0usize;
     while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-        let tok = sampler::argmax(state.logits_for_slot(0));
-        let lp = sampler::token_logprob(state.logits_for_slot(0), tok as usize);
+        // Fused argmax + logprob: one max scan instead of two.
+        let (tok, lp) = sampler::greedy_row(state.logits_for_slot(0));
         state.step(engine, &[(tok, lp)])?;
         steps += 1;
     }

@@ -15,16 +15,25 @@
 //! Branches that reach EOS during scoring stay in the candidate pool with
 //! a frozen score (their text is complete and they cost nothing further) —
 //! pruning removes candidates, whether finished or live.
+//!
+//! Hot-path discipline (see `crate::engine` module docs): one
+//! [`SamplerScratch`] serves every draw of the request; the signal step
+//! borrows the engine's bucket-padded logits slab instead of copying live
+//! rows; gating membership runs over a reusable boolean mask (no
+//! `contains` scans); and score ordering uses `f64::total_cmp`, so a NaN
+//! score degrades into a deterministic ranking instead of a panic.
 
 use anyhow::Result;
 
 use crate::engine::Engine;
 use crate::metrics::RequestMetrics;
 use crate::util::rng::Pcg64;
+use crate::util::stats;
 
 use super::config::RunConfig;
-use super::signals::{combine_scores, raw_signals, BranchSignalState};
-use super::{draft, sampler, schedule, GenOutput};
+use super::sampler::SamplerScratch;
+use super::signals::{combine_scores, BranchSignalState, SignalScratch};
+use super::{draft, schedule, GenOutput};
 
 pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
     let n = cfg.n;
@@ -32,6 +41,12 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
     let mut rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
     let kcfg = &cfg.kappa;
     let tau = kcfg.effective_tau(n);
+    let vocab = engine.model().config.vocab;
+
+    let mut scratch = SamplerScratch::new();
+    // Snapshot of the live branch list, reused every step (`step` mutates
+    // the state the list borrows from).
+    let mut live: Vec<usize> = Vec::with_capacity(n);
 
     let mut steps = 0usize; // generated tokens per branch so far
 
@@ -42,15 +57,13 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= kcfg.max_draft {
             break;
         }
-        let live = state.live_branches().to_vec();
+        live.clear();
+        live.extend_from_slice(state.live_branches());
         if live.is_empty() {
             break;
         }
-        let mut sampled = Vec::with_capacity(live.len());
-        for (slot, &bi) in live.iter().enumerate() {
-            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
-        }
-        state.step(engine, &sampled)?;
+        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
+        state.step(engine, sampled)?;
         steps += 1;
         if !state.compact_finished(engine)? {
             break;
@@ -62,41 +75,56 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
     // frozen trajectory score). `sig` runs parallel to `state.branches`.
     let mut sig: Vec<BranchSignalState> =
         (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
+    // Only the native ablation path needs the host-side q work.
+    let mut sig_scratch: Option<SignalScratch> =
+        if kcfg.native_signals { Some(SignalScratch::new(engine.model().q_logits())) } else { None };
+
+    // Per-step buffers, allocated once for the request. (The per-token
+    // sampling path below is fully allocation-free; `combine_scores`
+    // still builds its small z-norm temporaries each *gating* step,
+    // which runs at most τ times per request.)
+    let mut kl: Vec<f64> = Vec::with_capacity(n);
+    let mut conf: Vec<f64> = Vec::with_capacity(n);
+    let mut ent: Vec<f64> = Vec::with_capacity(n);
+    let mut ema: Vec<f64> = Vec::with_capacity(n);
+    let mut candidates: Vec<usize> = Vec::with_capacity(n);
+    let mut ranked: Vec<usize> = Vec::with_capacity(n);
+    let mut keep_live: Vec<usize> = Vec::with_capacity(n);
+    let mut keep_mask: Vec<bool> = vec![false; n];
 
     let mut k = 0usize; // gating step index (1-based in the schedule)
     while k < tau && steps < cfg.max_new_tokens && state.remaining() > 0 {
-        let live = state.live_branches().to_vec();
+        live.clear();
+        live.extend_from_slice(state.live_branches());
         if live.is_empty() {
             break;
         }
         k += 1;
+        let rows = live.len();
 
         // -- Signals for the live rows (fused Pallas kernel, or native).
-        let rows = live.len();
-        let (kl, conf, ent) = if kcfg.native_signals {
-            let q = engine.model().q_logits();
-            let mut kl = Vec::with_capacity(rows);
-            let mut cf = Vec::with_capacity(rows);
-            let mut en = Vec::with_capacity(rows);
+        // The Pallas path borrows the engine's already-padded slab: no
+        // row copy, no re-pad, no q upload.
+        kl.clear();
+        conf.clear();
+        ent.clear();
+        if let Some(scr) = sig_scratch.as_mut() {
             for slot in 0..rows {
-                let (a, b, c) = raw_signals(state.logits_for_slot(slot), q);
+                let (a, b, c) = scr.raw(state.logits_for_slot(slot));
                 kl.push(a);
-                cf.push(b);
-                en.push(c);
+                conf.push(b);
+                ent.push(c);
             }
-            (kl, cf, en)
         } else {
-            let slab = state.live_logits();
-            let (a, b, c) = engine.model().signals(&slab, rows)?;
-            (
-                a.into_iter().map(|x| x as f64).collect(),
-                b.into_iter().map(|x| x as f64).collect(),
-                c.into_iter().map(|x| x as f64).collect(),
-            )
-        };
+            let (a, b, c) =
+                engine.model().signals_padded(state.logits_slab(), rows, state.bucket())?;
+            kl.extend(a.into_iter().map(|x| x as f64));
+            conf.extend(b.into_iter().map(|x| x as f64));
+            ent.extend(c.into_iter().map(|x| x as f64));
+        }
 
         // -- Robustified KL information change per live branch.
-        let mut ema = Vec::with_capacity(rows);
+        ema.clear();
         for (slot, &bi) in live.iter().enumerate() {
             ema.push(sig[bi].update_kl(kl[slot], kcfg));
         }
@@ -105,34 +133,36 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         combine_scores(&mut sig, &live, &ema, &conf, &ent, steps + 1, kcfg);
 
         // -- One-step continuation for the next scoring round.
-        let mut sampled = Vec::with_capacity(rows);
-        for (slot, &bi) in live.iter().enumerate() {
-            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
-        }
-        state.step(engine, &sampled)?;
+        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
+        state.step(engine, sampled)?;
         steps += 1;
 
         // -- Gating: prune candidates down to the schedule's target.
-        let candidates: Vec<usize> = (0..state.branches.len())
-            .filter(|&bi| !state.branches[bi].pruned)
-            .collect();
+        candidates.clear();
+        candidates.extend((0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned));
         let target = schedule::survivors(kcfg.schedule, n, k, tau).min(candidates.len()).max(1);
         if target < candidates.len() {
-            let mut ranked = candidates.clone();
-            ranked.sort_by(|&a, &b| sig[b].score.partial_cmp(&sig[a].score).unwrap());
-            let keep: Vec<usize> = ranked[..target].to_vec();
+            ranked.clear();
+            ranked.extend_from_slice(&candidates);
+            // Strict total order (score desc, index asc): same permutation
+            // a stable sort under `partial_cmp` gave (see
+            // `stats::total_order` for the ±0.0/NaN semantics),
+            // allocation-free.
+            ranked.sort_unstable_by(|&a, &b| {
+                stats::total_order(sig[b].score, sig[a].score).then(a.cmp(&b))
+            });
+            keep_mask.iter_mut().for_each(|m| *m = false);
+            for &bi in &ranked[..target] {
+                keep_mask[bi] = true;
+            }
             // Device batch keeps only the unfinished survivors, in slot order.
-            let keep_live: Vec<usize> = state
-                .live_branches()
-                .iter()
-                .copied()
-                .filter(|bi| keep.contains(bi))
-                .collect();
+            keep_live.clear();
+            keep_live.extend(state.live_branches().iter().copied().filter(|&bi| keep_mask[bi]));
             if keep_live.is_empty() {
                 // All survivors already finished: mark the rest pruned and
                 // exit the gating loop.
                 for &bi in &candidates {
-                    if !keep.contains(&bi) {
+                    if !keep_mask[bi] {
                         state.branches[bi].pruned = true;
                     }
                 }
@@ -142,7 +172,7 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
             // Mark finished non-kept candidates as pruned (they were not
             // live, so retain_branches couldn't see them).
             for &bi in &candidates {
-                if !keep.contains(&bi) {
+                if !keep_mask[bi] {
                     state.branches[bi].pruned = true;
                 }
             }
@@ -154,13 +184,12 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
 
     // ---- Phase III: Continuation (exploitation) ----
     // Winner: highest trajectory score among unpruned candidates (ties →
-    // lowest index, per Algorithm 2 line 27).
-    let candidates: Vec<usize> =
-        (0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned).collect();
-    let chosen = candidates
-        .iter()
-        .copied()
-        .max_by(|&a, &b| sig[a].score.partial_cmp(&sig[b].score).unwrap())
+    // last max under the stable iteration order, as before; `total_cmp`
+    // only changes behavior when a score is NaN — deterministic ranking
+    // instead of a panic).
+    let chosen = (0..state.branches.len())
+        .filter(|&bi| !state.branches[bi].pruned)
+        .max_by(|&a, &b| stats::total_order(sig[a].score, sig[b].score))
         .unwrap_or(0);
 
     if !state.branches[chosen].finished {
@@ -169,7 +198,7 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
             state.retain_branches(engine, &[chosen])?;
             let mut rng = rngs[chosen].clone();
             while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-                let (tok, lp) = sampler::sample(state.logits_for_slot(0), &cfg.sampler, &mut rng);
+                let (tok, lp) = scratch.sample_row(state.logits_for_slot(0), &cfg.sampler, &mut rng);
                 state.step(engine, &[(tok, lp)])?;
                 steps += 1;
             }

@@ -5,6 +5,23 @@
 //! the quantity BoN's negative-perplexity selection accumulates (the
 //! filtered distribution is only used for the draw itself, as in HF
 //! `generate`).
+//!
+//! Two implementations share one contract:
+//!
+//! - [`sample`] — the scalar reference path: full descending sort of the
+//!   vocab, allocation per call. Kept as the differential-testing oracle.
+//! - [`SamplerScratch`] — the hot path: reusable buffers (zero steady-
+//!   state allocation), partial top-k selection via
+//!   `select_nth_unstable_by` (O(V + k log k) instead of O(V log V)),
+//!   and batched slab sampling for all live branches in one call.
+//!
+//! Both are **bit-identical** for every input (`tests/
+//! sampler_equivalence.rs` proves it property-wise): same drawn token,
+//! same logprob, same RNG consumption. Ordering everywhere uses
+//! [`f32::total_cmp`] on a `-0.0`-normalized key with the token index as
+//! tiebreak, which (a) reproduces the seed's stable-sort tie behavior
+//! exactly on ordinary floats and (b) degrades deterministically on NaN
+//! logits instead of panicking mid-request.
 
 use crate::util::rng::Pcg64;
 
@@ -12,7 +29,18 @@ use super::config::SamplerConfig;
 
 /// log-sum-exp over a logits row (numerically stable).
 pub fn log_sum_exp(logits: &[f32]) -> f64 {
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    lse_with_max(logits, m)
+}
+
+/// The shared max-then-sum tail of every log-sum-exp in this module.
+/// Single source of truth: `log_sum_exp`, [`greedy_row`], and
+/// [`SamplerScratch::sample_row`] all fuse their own max scan but must
+/// produce bit-identical sums, so the summation lives in exactly one
+/// place.
+#[inline]
+fn lse_with_max(logits: &[f32], raw_max: f32) -> f64 {
+    let m = raw_max as f64;
     let s: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
     m + s.ln()
 }
@@ -33,18 +61,47 @@ pub fn argmax(logits: &[f32]) -> u32 {
     best as u32
 }
 
+/// Total order used for candidate ranking: descending by scaled logit,
+/// ascending by token index on ties. `v + 0.0` canonicalizes `-0.0` to
+/// `+0.0` so the tie lands in the index tiebreak, matching what a stable
+/// sort under `partial_cmp` did; NaN orders via `total_cmp` (above +inf
+/// for positive NaN) instead of panicking.
+#[inline]
+fn rank_desc(a: &(u32, f32), b: &(u32, f32)) -> std::cmp::Ordering {
+    (b.1 + 0.0).total_cmp(&(a.1 + 0.0)).then(a.0.cmp(&b.0))
+}
+
+/// Greedy argmax + full-softmax logprob in one fused pass — bit-identical
+/// to `(argmax(logits), token_logprob(logits, argmax))` without the
+/// second max scan. Used by the greedy coordinator's hot loop.
+pub fn greedy_row(logits: &[f32]) -> (u32, f64) {
+    let mut best = 0usize;
+    let mut raw_max = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+        raw_max = raw_max.max(x);
+    }
+    (best as u32, logits[best] as f64 - lse_with_max(logits, raw_max))
+}
+
 /// Sample one token. Returns `(token, full_softmax_logprob)`.
+///
+/// Reference path — allocates per call. The hot loop uses
+/// [`SamplerScratch`], which is bit-identical.
 pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64) {
     let v = logits.len();
     debug_assert!(v > 0);
 
     // Temperature scaling on a working copy of (index, logit).
     let inv_t = 1.0 / cfg.temperature.max(1e-6);
-    let mut scaled: Vec<(usize, f32)> = logits.iter().map(|&x| x * inv_t).enumerate().collect();
+    let mut scaled: Vec<(u32, f32)> =
+        logits.iter().enumerate().map(|(i, &x)| (i as u32, x * inv_t)).collect();
 
     // Top-k: keep the k highest-logit tokens.
     let k = cfg.top_k.clamp(1, v);
-    scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scaled.sort_unstable_by(rank_desc);
     scaled.truncate(k);
 
     // Softmax over the survivors.
@@ -55,13 +112,22 @@ pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64
         *p /= z;
     }
 
+    let token = draw_top_p(&scaled, &probs, cfg.top_p, rng);
+    (token, token_logprob(logits, token as usize))
+}
+
+/// Shared tail of both implementations: top-p truncation over the
+/// descending candidate list + categorical draw. `probs` are the
+/// already-normalized softmax probabilities of `cand`.
+#[inline]
+fn draw_top_p(cand: &[(u32, f32)], probs: &[f64], top_p: f32, rng: &mut Pcg64) -> u32 {
     // Top-p: smallest prefix (in descending prob order) with mass ≥ p.
     let mut cut = probs.len();
-    if cfg.top_p < 1.0 {
+    if top_p < 1.0 {
         let mut acc = 0.0;
         for (i, &p) in probs.iter().enumerate() {
             acc += p;
-            if acc >= cfg.top_p as f64 {
+            if acc >= top_p as f64 {
                 cut = i + 1;
                 break;
             }
@@ -80,8 +146,105 @@ pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64
         }
         u -= p;
     }
-    let token = scaled[chosen].0;
-    (token as u32, token_logprob(logits, token))
+    cand[chosen].0
+}
+
+/// Reusable sampling state for the decode hot loop.
+///
+/// Owns every buffer the per-token algorithm needs, so the steady state
+/// performs **zero heap allocation**: buffers grow to the high-water mark
+/// on first use and are reused thereafter. One scratch serves a whole
+/// request (any number of rows/steps); it carries no cross-call sampling
+/// state, only capacity.
+#[derive(Debug, Default)]
+pub struct SamplerScratch {
+    /// (token index, temperature-scaled logit) candidates; high-water V.
+    cand: Vec<(u32, f32)>,
+    /// Normalized softmax probabilities of the top-k survivors.
+    probs: Vec<f64>,
+    /// Batch output of [`Self::sample_slab`].
+    out: Vec<(u32, f64)>,
+}
+
+impl SamplerScratch {
+    pub fn new() -> SamplerScratch {
+        SamplerScratch::default()
+    }
+
+    /// Sample one token from a logits row. Bit-identical to [`sample`]
+    /// (same token, same logprob, same RNG consumption) without the
+    /// per-call allocation and the full-vocab sort.
+    pub fn sample_row(&mut self, logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64) {
+        let v = logits.len();
+        debug_assert!(v > 0);
+        let inv_t = 1.0 / cfg.temperature.max(1e-6);
+
+        // One pass: scaled candidates + the raw-logits max the full-softmax
+        // log-sum-exp needs (identical op order to `log_sum_exp`).
+        self.cand.clear();
+        self.cand.reserve(v);
+        let mut raw_max = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            self.cand.push((i as u32, x * inv_t));
+            raw_max = raw_max.max(x);
+        }
+
+        // Partial top-k: select_nth puts the k best (under `rank_desc`)
+        // in front in O(V); only those k get sorted. The comparator is a
+        // strict total order (index tiebreak), so the resulting prefix is
+        // exactly the seed's stable descending sort truncated to k.
+        let k = cfg.top_k.clamp(1, v);
+        if k < v {
+            self.cand.select_nth_unstable_by(k - 1, rank_desc);
+            self.cand.truncate(k);
+        }
+        self.cand.sort_unstable_by(rank_desc);
+
+        // Softmax over the survivors (same op order as `sample`).
+        let m = self.cand[0].1;
+        self.probs.clear();
+        self.probs.reserve(k);
+        for &(_, x) in self.cand.iter() {
+            self.probs.push(((x - m) as f64).exp());
+        }
+        let z: f64 = self.probs.iter().sum();
+        for p in self.probs.iter_mut() {
+            *p /= z;
+        }
+
+        let token = draw_top_p(&self.cand, &self.probs, cfg.top_p, rng);
+
+        // Full-softmax logprob via the precomputed raw max (bit-identical
+        // to `token_logprob`: same max, same summation).
+        let lp = logits[token as usize] as f64 - lse_with_max(logits, raw_max);
+        (token, lp)
+    }
+
+    /// Sample every live row of a `[bucket × vocab]` logits slab in one
+    /// call. Row `i` draws from `rngs[live[i]]` (the per-branch stream),
+    /// preserving the exact RNG consumption of the scalar loop the
+    /// coordinators used to run. Returns the `(token, logprob)` pairs for
+    /// rows `0..live.len()`; the slice stays valid until the next call.
+    pub fn sample_slab(
+        &mut self,
+        slab: &[f32],
+        vocab: usize,
+        live: &[usize],
+        cfg: &SamplerConfig,
+        rngs: &mut [Pcg64],
+    ) -> &[(u32, f64)] {
+        debug_assert!(live.len() * vocab <= slab.len());
+        // `out` is moved aside so `sample_row` can borrow `self` mutably.
+        let mut out = std::mem::take(&mut self.out);
+        out.clear();
+        out.reserve(live.len());
+        for (slot, &bi) in live.iter().enumerate() {
+            let row = &slab[slot * vocab..(slot + 1) * vocab];
+            out.push(self.sample_row(row, cfg, &mut rngs[bi]));
+        }
+        self.out = out;
+        &self.out
+    }
 }
 
 #[cfg(test)]
@@ -157,5 +320,69 @@ mod tests {
             (0..32).map(|_| sample(&logits, &c, &mut rng).0).collect()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scratch_matches_reference_on_fixed_stream() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 / 3.0).collect();
+        let c = SamplerConfig::default();
+        let mut scratch = SamplerScratch::new();
+        let mut r1 = Pcg64::new(42, 7);
+        let mut r2 = Pcg64::new(42, 7);
+        for _ in 0..64 {
+            let a = sample(&logits, &c, &mut r1);
+            let b = scratch.sample_row(&logits, &c, &mut r2);
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn scratch_slab_matches_rowwise_loop() {
+        let v = 32usize;
+        let rows = 4usize;
+        let slab: Vec<f32> = (0..rows * v).map(|i| ((i * 131) % 97) as f32 / 9.0).collect();
+        let c = SamplerConfig::default();
+        let live: Vec<usize> = (0..rows).collect();
+        let mut rngs_a: Vec<Pcg64> = (0..rows).map(|i| Pcg64::new(9, i as u64 + 1)).collect();
+        let mut rngs_b = rngs_a.clone();
+
+        let mut scratch = SamplerScratch::new();
+        let got = scratch.sample_slab(&slab, v, &live, &c, &mut rngs_a).to_vec();
+        let want: Vec<(u32, f64)> = (0..rows)
+            .map(|s| sample(&slab[s * v..(s + 1) * v], &c, &mut rngs_b[s]))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_and_are_deterministic() {
+        let mut logits = vec![1.0f32; 16];
+        logits[3] = f32::NAN;
+        let c = SamplerConfig::default();
+        let mut scratch = SamplerScratch::new();
+        let mut r1 = Pcg64::new(5, 5);
+        let mut r2 = Pcg64::new(5, 5);
+        let a = sample(&logits, &c, &mut r1);
+        let b = scratch.sample_row(&logits, &c, &mut r2);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+
+    #[test]
+    fn negative_zero_ties_keep_index_order() {
+        // -0.0 and +0.0 scale to themselves; the seed's stable sort
+        // treated them as equal (index order). The canonicalized key must
+        // reproduce that, not put +0.0 first.
+        let logits = vec![0.0f32, -0.0, 0.0, -0.0];
+        let c = cfg(1.0, 4, 1.0);
+        let mut scratch = SamplerScratch::new();
+        for seed in 0..16u64 {
+            let mut r1 = Pcg64::new(seed, 1);
+            let mut r2 = Pcg64::new(seed, 1);
+            let a = sample(&logits, &c, &mut r1);
+            let b = scratch.sample_row(&logits, &c, &mut r2);
+            assert_eq!(a, b);
+        }
     }
 }

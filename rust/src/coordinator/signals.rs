@@ -23,15 +23,26 @@ pub const EPS: f64 = 1e-9;
 
 /// Native (KL, confidence, entropy) for one logits row against reference
 /// logits `q`. Must agree with the Pallas kernel to ~1e-5.
+///
+/// Reference path — allocates and recomputes `log_softmax(q)` per call.
+/// The `--native-signals` hot loop uses [`SignalScratch`], which is
+/// bit-identical (same float ops in the same order) with zero
+/// steady-state allocation.
 pub fn raw_signals(logits: &[f32], q_logits: &[f32]) -> (f64, f64, f64) {
     let logp = log_softmax(logits);
     let logq = log_softmax(q_logits);
+    signals_from_log_probs(&logp, &logq)
+}
+
+/// The shared accumulation loop over precomputed log-probabilities.
+#[inline]
+fn signals_from_log_probs(logp: &[f64], logq: &[f64]) -> (f64, f64, f64) {
     let mut kl = 0.0;
     let mut conf = f64::NEG_INFINITY;
     let mut ent = 0.0;
-    for i in 0..logp.len() {
-        let p = logp[i].exp();
-        kl += p * (logp[i] - logq[i]);
+    for (&lp, &lq) in logp.iter().zip(logq.iter()) {
+        let p = lp.exp();
+        kl += p * (lp - lq);
         conf = conf.max(p);
         ent -= p * (p + EPS).ln();
     }
@@ -39,9 +50,42 @@ pub fn raw_signals(logits: &[f32], q_logits: &[f32]) -> (f64, f64, f64) {
 }
 
 fn log_softmax(x: &[f32]) -> Vec<f64> {
+    let mut out = Vec::new();
+    log_softmax_into(x, &mut out);
+    out
+}
+
+fn log_softmax_into(x: &[f32], out: &mut Vec<f64>) {
     let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
     let lse = (x.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>()).ln() + m;
-    x.iter().map(|&v| v as f64 - lse).collect()
+    out.clear();
+    out.extend(x.iter().map(|&v| v as f64 - lse));
+}
+
+/// Reusable native-signals state: `log_softmax(q)` is computed **once**
+/// (q is the fixed BOS-reference distribution for the whole request) and
+/// the per-row log-prob buffer is reused, so the `--native-signals`
+/// scoring step performs no allocation and no redundant q work.
+/// Bit-identical to [`raw_signals`] for the same `q`.
+#[derive(Debug, Clone)]
+pub struct SignalScratch {
+    logq: Vec<f64>,
+    logp: Vec<f64>,
+}
+
+impl SignalScratch {
+    pub fn new(q_logits: &[f32]) -> SignalScratch {
+        let mut logq = Vec::new();
+        log_softmax_into(q_logits, &mut logq);
+        SignalScratch { logq, logp: Vec::new() }
+    }
+
+    /// Native (KL, confidence, entropy) for one logits row.
+    pub fn raw(&mut self, logits: &[f32]) -> (f64, f64, f64) {
+        debug_assert_eq!(logits.len(), self.logq.len());
+        log_softmax_into(logits, &mut self.logp);
+        signals_from_log_probs(&self.logp, &self.logq)
+    }
 }
 
 /// Per-branch running state for the KAPPA score.
@@ -151,6 +195,22 @@ mod tests {
         assert!(kl.abs() < 1e-9);
         assert!((conf - 1.0 / v as f64).abs() < 1e-9);
         assert!((ent - (v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scratch_matches_reference_bitwise() {
+        let v = 48usize;
+        let q: Vec<f32> = (0..v).map(|i| ((i * 7) % 13) as f32 / 4.0 - 1.0).collect();
+        let mut scratch = SignalScratch::new(&q);
+        for row in 0..8 {
+            let logits: Vec<f32> =
+                (0..v).map(|i| ((i * 31 + row * 17) % 23) as f32 / 3.0 - 2.0).collect();
+            let a = raw_signals(&logits, &q);
+            let b = scratch.raw(&logits);
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+            assert_eq!(a.2.to_bits(), b.2.to_bits());
+        }
     }
 
     #[test]

@@ -17,7 +17,8 @@ use crate::metrics::RequestMetrics;
 use crate::util::rng::Pcg64;
 
 use super::config::RunConfig;
-use super::{draft, sampler, GenOutput};
+use super::sampler::SamplerScratch;
+use super::{draft, GenOutput};
 
 pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
     let mut state = engine.start_opts(
@@ -26,6 +27,9 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         crate::engine::StartOpts { compact: cfg.compact },
     )?;
     let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+    let vocab = engine.model().config.vocab;
+    let mut scratch = SamplerScratch::new();
+    let mut live: Vec<usize> = Vec::with_capacity(cfg.n);
 
     let mut steps = 0usize;
     let mut cutoff: Option<usize> = None;
@@ -45,15 +49,13 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
                 break;
             }
         }
-        let live = state.live_branches().to_vec();
+        live.clear();
+        live.extend_from_slice(state.live_branches());
         if live.is_empty() {
             break;
         }
-        let mut sampled = Vec::with_capacity(live.len());
-        for (slot, &bi) in live.iter().enumerate() {
-            sampled.push(sampler::sample(state.logits_for_slot(slot), &cfg.sampler, &mut rngs[bi]));
-        }
-        state.step(engine, &sampled)?;
+        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
+        state.step(engine, sampled)?;
         steps += 1;
         if !state.compact_finished(engine)? {
             break;
@@ -71,7 +73,7 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         state.retain_branches(engine, &[chosen])?;
         let mut rng = rngs[chosen].clone();
         while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-            let (tok, lp) = sampler::sample(state.logits_for_slot(0), &cfg.sampler, &mut rng);
+            let (tok, lp) = scratch.sample_row(state.logits_for_slot(0), &cfg.sampler, &mut rng);
             state.step(engine, &[(tok, lp)])?;
             steps += 1;
         }

@@ -13,6 +13,33 @@
 //! sample → step → (optionally) drop-branches loop. Branch *identity* is
 //! stable: policies address branches by index into [`GenState::branches`];
 //! the mapping to device slots is internal.
+//!
+//! # Hot-path performance notes
+//!
+//! The steady-state decode step is allocation-free on the host side,
+//! and later PRs must not reintroduce slab copies. The invariants:
+//!
+//! - **The logits slab is borrowed, never copied.** [`GenState::
+//!   logits_slab`] hands the signal path the engine's own
+//!   `[bucket × vocab]` buffer — it is *already padded to the bucket*
+//!   (rows ≥ `n_live` are stale padding the signal kernel discards), so
+//!   the old `live_logits()` row-copy and the runtime-side
+//!   `to_vec()`+`resize` re-pad are both gone. Pass it straight to
+//!   [`crate::runtime::LoadedModel::signals_padded`] with
+//!   `rows = n_live()` and `bucket = bucket()`.
+//! - **Step/retain bookkeeping reuses scratch buffers.** The decode
+//!   token vector, the branch→slot index map, the keep mask, the gather
+//!   index vector, and the repacked-logits spare buffer are all
+//!   `GenState` fields that grow to their high-water mark once and are
+//!   reused every step; membership tests are O(1) mask lookups, not
+//!   `contains` scans.
+//! - **Device-resident buffers.** The KV cache and the model's reference
+//!   distribution `q` never cross the host boundary after load; per step
+//!   only the decoded logits slab (device→host, allocated inside the
+//!   `xla` crate) and one bucket-sized token vector (host→device) move.
+//! - **Sampling is scratch-based.** Coordinators draw every live row
+//!   through one [`crate::coordinator::sampler::SamplerScratch`] per
+//!   request; see its docs for the zero-allocation contract.
 
 pub mod mem;
 
@@ -130,6 +157,13 @@ impl Engine {
             decode_calls: 0,
             gather_calls: 0,
             min_bucket: if opts.compact { 1 } else { bucket },
+            tokens_scratch: Vec::with_capacity(bucket),
+            slot_of: vec![-1; n],
+            keep_mask: vec![false; n],
+            keep_slots: Vec::with_capacity(n),
+            keep_scratch: Vec::with_capacity(n),
+            gather_idx: Vec::with_capacity(bucket),
+            logits_spare: Vec::new(),
         })
     }
 }
@@ -170,6 +204,21 @@ pub struct GenState {
     /// Bucket floor (ablation: disables compaction when set to the
     /// initial bucket).
     min_bucket: usize,
+    // ---- reusable hot-path scratch (see module docs) ----
+    /// Bucket-sized decode token vector.
+    tokens_scratch: Vec<i32>,
+    /// branch index → device slot (−1 when not live); rebuilt per retain.
+    slot_of: Vec<i32>,
+    /// branch index → kept this retain? (O(1) membership, no scans).
+    keep_mask: Vec<bool>,
+    /// Device slots of the kept branches, in keep order.
+    keep_slots: Vec<usize>,
+    /// Unfinished-branch list for [`Self::compact_finished`].
+    keep_scratch: Vec<usize>,
+    /// Gather index vector (dst bucket sized).
+    gather_idx: Vec<i32>,
+    /// Spare logits buffer swapped in when the slab is repacked.
+    logits_spare: Vec<f32>,
 }
 
 impl GenState {
@@ -200,19 +249,20 @@ impl GenState {
         &self.logits[slot * self.vocab..(slot + 1) * self.vocab]
     }
 
-    /// Logits rows for all live slots, flattened (input to the fused
-    /// signal kernel).
-    pub fn live_logits(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.slots.len() * self.vocab);
-        for s in 0..self.slots.len() {
-            out.extend_from_slice(self.logits_for_slot(s));
-        }
-        out
+    /// The engine's full `[bucket × vocab]` logits slab, borrowed.
+    ///
+    /// Rows `0..n_live()` are the live branches in slot order; rows
+    /// beyond are stale padding. This is the input the fused signal
+    /// kernel wants (already bucket-padded — hand it to
+    /// [`LoadedModel::signals_padded`] with `rows = n_live()`,
+    /// `bucket = bucket()`), replacing the old copying `live_logits()`.
+    pub fn logits_slab(&self) -> &[f32] {
+        &self.logits
     }
 
     /// Advance every live branch by one token. `sampled[i]` is the token
     /// + its full-softmax log-prob for slot `i`. Marks EOS/length-capped
-    /// branches finished (they stay on device until [`Self::compact`]).
+    /// branches finished (they stay on device until compaction).
     pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
         if sampled.len() != self.slots.len() {
             bail!("step: {} samples for {} slots", sampled.len(), self.slots.len());
@@ -221,7 +271,8 @@ impl GenState {
             bail!("step: sequence budget exhausted");
         }
         let bucket = self.cache.bucket;
-        let mut tokens_i32 = vec![PAD_ID as i32; bucket];
+        self.tokens_scratch.clear();
+        self.tokens_scratch.resize(bucket, PAD_ID as i32);
         for (slot, &(tok, logprob)) in sampled.iter().enumerate() {
             let bi = self.slots[slot];
             let b = &mut self.branches[bi];
@@ -232,10 +283,10 @@ impl GenState {
                     b.finished = true;
                 }
             }
-            tokens_i32[slot] = tok as i32;
+            self.tokens_scratch[slot] = tok as i32;
         }
 
-        let (logits, new_cache) = engine.model.decode(&tokens_i32, self.pos, &self.cache)?;
+        let (logits, new_cache) = engine.model.decode(&self.tokens_scratch, self.pos, &self.cache)?;
         self.decode_calls += 1;
         self.logits = logits;
         self.cache = new_cache;
@@ -258,20 +309,34 @@ impl GenState {
     /// transition (dst allocated while src still held — the true device
     /// high-water mark). Branches not kept and not finished are marked
     /// pruned.
+    ///
+    /// All bookkeeping is O(branches) over reusable buffers — no
+    /// `contains` scans, no per-call allocation past the high-water mark.
     pub fn retain_branches(&mut self, engine: &Engine, keep: &[usize]) -> Result<()> {
         if keep.is_empty() {
             bail!("retain_branches: must keep at least one branch");
         }
-        let mut keep_slots = Vec::with_capacity(keep.len());
+        let nb = self.branches.len();
+
+        // Rebuild the branch→slot map and the keep mask.
+        self.slot_of.clear();
+        self.slot_of.resize(nb, -1);
+        for (slot, &bi) in self.slots.iter().enumerate() {
+            self.slot_of[bi] = slot as i32;
+        }
+        self.keep_mask.clear();
+        self.keep_mask.resize(nb, false);
+        self.keep_slots.clear();
         for &bi in keep {
-            match self.slots.iter().position(|&s| s == bi) {
-                Some(slot) => keep_slots.push(slot),
-                None => bail!("retain_branches: branch {bi} is not live"),
+            if bi >= nb || self.slot_of[bi] < 0 {
+                bail!("retain_branches: branch {bi} is not live");
             }
+            self.keep_mask[bi] = true;
+            self.keep_slots.push(self.slot_of[bi] as usize);
         }
 
         for &bi in self.slots.iter() {
-            if !keep.contains(&bi) && !self.branches[bi].finished {
+            if !self.keep_mask[bi] && !self.branches[bi].finished {
                 self.branches[bi].pruned = true;
             }
         }
@@ -281,13 +346,14 @@ impl GenState {
 
         // Device gather indices: destination row i ← source slot
         // keep_slots[i]; pad rows repeat row 0 (their outputs are ignored).
-        let mut idx = vec![keep_slots[0] as i32; new_bucket];
-        for (i, &s) in keep_slots.iter().enumerate() {
-            idx[i] = s as i32;
+        self.gather_idx.clear();
+        self.gather_idx.resize(new_bucket, self.keep_slots[0] as i32);
+        for (i, &s) in self.keep_slots.iter().enumerate() {
+            self.gather_idx[i] = s as i32;
         }
 
-        if new_bucket != old_bucket || keep_slots.iter().enumerate().any(|(i, &s)| i != s) {
-            let new_cache = engine.model.gather(&self.cache, new_bucket, &idx)?;
+        if new_bucket != old_bucket || self.keep_slots.iter().enumerate().any(|(i, &s)| i != s) {
+            let new_cache = engine.model.gather(&self.cache, new_bucket, &self.gather_idx)?;
             self.gather_calls += 1;
             // Paged-allocator model: pruning frees the dropped branches'
             // pages; no copy transient is accounted (the device-side
@@ -297,31 +363,41 @@ impl GenState {
             self.mem.set_component("kv", new_bucket * self.pos * bpt);
             self.cache = new_cache;
 
-            // Re-pack the logits slab to match the new slot order.
+            // Re-pack the logits slab to match the new slot order, into
+            // the spare buffer (swapped, not reallocated).
             let v = self.vocab;
-            let mut new_logits = vec![0f32; new_bucket * v];
-            for (i, &s) in keep_slots.iter().enumerate() {
-                new_logits[i * v..(i + 1) * v].copy_from_slice(&self.logits[s * v..(s + 1) * v]);
+            self.logits_spare.clear();
+            self.logits_spare.resize(new_bucket * v, 0.0);
+            for (i, &s) in self.keep_slots.iter().enumerate() {
+                self.logits_spare[i * v..(i + 1) * v]
+                    .copy_from_slice(&self.logits[s * v..(s + 1) * v]);
             }
             self.mem.set_component("logits", new_bucket * v * 4);
-            self.logits = new_logits;
+            std::mem::swap(&mut self.logits, &mut self.logits_spare);
         }
 
-        self.slots = keep.to_vec();
+        self.slots.clear();
+        self.slots.extend_from_slice(keep);
         Ok(())
     }
 
     /// Remove finished branches from the device batch (their text is
     /// complete). Returns false if no live branch remains afterwards.
     pub fn compact_finished(&mut self, engine: &Engine) -> Result<bool> {
-        let keep: Vec<usize> =
-            self.slots.iter().copied().filter(|&bi| !self.branches[bi].finished).collect();
+        // The unfinished list lives in a reusable buffer; it is moved out
+        // for the duration of the `retain_branches` call (which needs
+        // `&mut self`) and restored after.
+        let mut keep = std::mem::take(&mut self.keep_scratch);
+        keep.clear();
+        keep.extend(self.slots.iter().copied().filter(|&bi| !self.branches[bi].finished));
         if keep.is_empty() {
+            self.keep_scratch = keep;
             return Ok(false);
         }
-        if keep.len() != self.slots.len() {
-            self.retain_branches(engine, &keep)?;
-        }
+        let result =
+            if keep.len() != self.slots.len() { self.retain_branches(engine, &keep) } else { Ok(()) };
+        self.keep_scratch = keep;
+        result?;
         Ok(true)
     }
 

@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -19,12 +20,20 @@ pub struct Runtime {
     cache: Mutex<BTreeMap<PathBuf, std::sync::Arc<PjRtLoadedExecutable>>>,
     /// (path, compile wall time) log for DESIGN.md §Perf bookkeeping.
     compile_log: Mutex<Vec<(PathBuf, f64)>>,
+    /// Host→device transfers issued so far (perf_microbench asserts the
+    /// steady-state decode step stops re-uploading constants like `q`).
+    uploads: AtomicUsize,
 }
 
 impl Runtime {
     pub fn new() -> Result<Runtime> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(BTreeMap::new()), compile_log: Mutex::new(Vec::new()) })
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(BTreeMap::new()),
+            compile_log: Mutex::new(Vec::new()),
+            uploads: AtomicUsize::new(0),
+        })
     }
 
     pub fn client(&self) -> &PjRtClient {
@@ -59,13 +68,20 @@ impl Runtime {
         self.compile_log.lock().unwrap().iter().map(|(_, t)| t).sum()
     }
 
+    /// Number of host→device transfers issued so far.
+    pub fn upload_count(&self) -> usize {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
     // ---- host → device helpers ----
 
     pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
         self.client.buffer_from_host_buffer(data, dims, None).context("f32 upload")
     }
 
     pub fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
         self.client.buffer_from_host_buffer(data, dims, None).context("i32 upload")
     }
 
@@ -99,9 +115,11 @@ mod tests {
     #[test]
     fn buffers_roundtrip() {
         let rt = Runtime::new().unwrap();
+        let before = rt.upload_count();
         let buf = rt.f32_buffer(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
         let back = Runtime::to_host_f32(&buf).unwrap();
         assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(rt.upload_count(), before + 1);
     }
 
     #[test]

@@ -4,11 +4,20 @@
 //! compiled prefill/decode/gather/signal executables. All methods keep the
 //! KV caches **device-resident**: only logits (B×V f32, ≤ 8 KiB) and the
 //! three signal vectors cross the host boundary per step.
+//!
+//! Steady-state dispatch is lock-free: every executable handle is
+//! resolved through a per-bucket [`ExeCell`] (compile-once, then a plain
+//! atomic load), so the decode loop never touches the [`Runtime`]'s
+//! `Mutex<BTreeMap>` path cache. The reference distribution `q` is
+//! uploaded to device once at load ([`LoadedModel::q_device`]) — the old
+//! per-call re-upload in `signals` is gone.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::PjRtBuffer;
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
 
 use super::client::Runtime;
 use super::manifest::{Manifest, ModelConfig, ModelManifest};
@@ -22,24 +31,59 @@ pub struct KvCache {
     pub bucket: usize,
 }
 
+/// An artifact path plus its compile-once executable handle.
+///
+/// First use pays the [`Runtime::load_executable`] path (compile +
+/// memoize under a mutex); every later use is a lock-free `OnceLock`
+/// read. One cell exists per (op, bucket) so the steady-state decode
+/// step performs zero map-under-mutex lookups.
+struct ExeCell {
+    path: PathBuf,
+    exe: OnceLock<Arc<PjRtLoadedExecutable>>,
+}
+
+impl ExeCell {
+    fn new(path: PathBuf) -> ExeCell {
+        ExeCell { path, exe: OnceLock::new() }
+    }
+
+    fn get(&self, rt: &Runtime) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exe.get() {
+            return Ok(Arc::clone(e));
+        }
+        let e = rt.load_executable(&self.path)?;
+        // A racing thread may have set the cell first; either way the
+        // stored handle is for the same artifact.
+        let _ = self.exe.set(Arc::clone(&e));
+        Ok(e)
+    }
+}
+
 pub struct LoadedModel {
     rt: Arc<Runtime>,
     pub name: String,
     pub config: ModelConfig,
-    manifest: ModelManifest,
     buckets: Vec<usize>,
-    signal_paths: std::collections::BTreeMap<usize, std::path::PathBuf>,
     param_bufs: Vec<PjRtBuffer>,
     /// Unconditional reference logits q (BOS-only context), computed once.
     q_logits: Vec<f32>,
+    /// `q` uploaded to device once at load; reused by every signals call.
+    q_buf: OnceLock<PjRtBuffer>,
+    prefill_exe: ExeCell,
+    /// bucket → decode executable.
+    decode_exes: BTreeMap<usize, ExeCell>,
+    /// (src bucket, dst bucket) → gather executable.
+    gather_exes: BTreeMap<(usize, usize), ExeCell>,
+    /// bucket → fused signal-kernel executable.
+    signal_exes: BTreeMap<usize, ExeCell>,
 }
 
 impl LoadedModel {
     /// Load weights to device and compile the prefill graph; decode /
-    /// gather / signal executables compile lazily on first use (and are
-    /// memoized in the [`Runtime`] cache).
+    /// gather / signal executables compile lazily on first use into
+    /// per-bucket [`ExeCell`]s.
     pub fn load(rt: Arc<Runtime>, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
-        let mm = manifest.model(name)?.clone();
+        let mm: ModelManifest = manifest.model(name)?.clone();
         let weights = load_weights(&mm.weights_file, &mm.params)?;
         let mut param_bufs = Vec::with_capacity(weights.len());
         for (w, p) in weights.iter().zip(&mm.params) {
@@ -47,27 +91,48 @@ impl LoadedModel {
                 rt.f32_buffer(w, &p.shape).with_context(|| format!("uploading {}", p.name))?,
             );
         }
+        let decode_exes =
+            mm.decode.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let gather_exes =
+            mm.gather.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
+        let signal_exes =
+            manifest.signals.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let mut model = LoadedModel {
             rt,
             name: name.to_string(),
             config: mm.config,
-            manifest: mm,
             buckets: manifest.buckets.clone(),
-            signal_paths: manifest.signals.clone(),
+            prefill_exe: ExeCell::new(mm.prefill.clone()),
+            decode_exes,
+            gather_exes,
+            signal_exes,
             param_bufs,
             q_logits: Vec::new(),
+            q_buf: OnceLock::new(),
         };
         // Reference distribution q: logits after a BOS-only prompt
         // (Algorithm 2 line 9: "generate unconditional logits q from
         // Beginning of Sentence token").
         let bos = vec![crate::tokenizer::BOS_ID as i32];
         let (q, _cache) = model.prefill(&bos)?;
+        let q_dev = model.rt.f32_buffer(&q, &[model.config.vocab]).context("uploading q")?;
+        let _ = model.q_buf.set(q_dev);
         model.q_logits = q;
         Ok(model)
     }
 
     pub fn q_logits(&self) -> &[f32] {
         &self.q_logits
+    }
+
+    /// Device-resident reference distribution (uploaded once at load).
+    pub fn q_device(&self) -> &PjRtBuffer {
+        self.q_buf.get().expect("q uploaded during load")
+    }
+
+    /// The shared runtime (exposed for bench counters/diagnostics).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
     }
 
     /// Smallest bucket holding `n` branches.
@@ -95,7 +160,7 @@ impl LoadedModel {
         let mut padded = prompt_ids.to_vec();
         padded.resize(p, crate::tokenizer::PAD_ID as i32);
 
-        let exe = self.rt.load_executable(&self.manifest.prefill)?;
+        let exe = self.prefill_exe.get(&self.rt)?;
         let tokens = self.rt.i32_buffer(&padded, &[1, p])?;
         let len = self.rt.i32_scalar(prompt_ids.len() as i32)?;
 
@@ -123,12 +188,11 @@ impl LoadedModel {
         if pos >= self.config.max_seq {
             bail!("decode: pos {pos} >= max_seq {}", self.config.max_seq);
         }
-        let path = self
-            .manifest
-            .decode
+        let cell = self
+            .decode_exes
             .get(&b)
             .ok_or_else(|| anyhow!("no decode artifact for bucket {b}"))?;
-        let exe = self.rt.load_executable(path)?;
+        let exe = cell.get(&self.rt)?;
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
@@ -159,12 +223,11 @@ impl LoadedModel {
                 bail!("gather: index {i} out of source bucket {}", cache.bucket);
             }
         }
-        let path = self
-            .manifest
-            .gather
+        let cell = self
+            .gather_exes
             .get(&(cache.bucket, dst_bucket))
             .ok_or_else(|| anyhow!("no gather artifact {}to{}", cache.bucket, dst_bucket))?;
-        let exe = self.rt.load_executable(path)?;
+        let exe = cell.get(&self.rt)?;
         let idx = self.rt.i32_buffer(indices, &[dst_bucket])?;
         let args: Vec<&PjRtBuffer> = vec![&cache.k, &cache.v, &idx];
         let mut out = exe.execute_b(&args)?.swap_remove(0);
@@ -176,26 +239,30 @@ impl LoadedModel {
         Ok(KvCache { k, v, bucket: dst_bucket })
     }
 
-    /// Fused L1 signal kernel: per-branch (KL(p‖q), confidence, entropy)
-    /// for a `[rows × vocab]` logits slab (rows ≤ some bucket).
-    pub fn signals(&self, logits: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    /// Fused L1 signal kernel over an **already bucket-padded** logits
+    /// slab — the zero-copy hot path. `slab` must be exactly
+    /// `bucket × vocab` long (the engine's own slab qualifies; see
+    /// [`crate::engine::GenState::logits_slab`]), `bucket` must be one of
+    /// the compiled buckets, and only rows `0..rows` are meaningful —
+    /// padding rows' outputs are computed and discarded. Per call this
+    /// performs exactly one host→device transfer (the slab); `q` is
+    /// already device-resident.
+    pub fn signals_padded(
+        &self,
+        slab: &[f32],
+        rows: usize,
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let v = self.config.vocab;
-        if logits.len() != rows * v {
-            bail!("signals: {} logits for {rows} rows × {v}", logits.len());
-        }
-        let bucket = self.bucket_for(rows)?;
-        let path = self
-            .signal_paths
+        signals_shape_check(rows, bucket, slab.len(), v)?;
+        let cell = self
+            .signal_exes
             .get(&bucket)
             .ok_or_else(|| anyhow!("no signals artifact for bucket {bucket}"))?;
-        let exe = self.rt.load_executable(path)?;
+        let exe = cell.get(&self.rt)?;
 
-        // Pad rows up to the bucket (padding rows are discarded below).
-        let mut slab = logits.to_vec();
-        slab.resize(bucket * v, 0.0);
-        let lg = self.rt.f32_buffer(&slab, &[bucket, v])?;
-        let q = self.rt.f32_buffer(&self.q_logits, &[v])?;
-        let out = exe.execute_b(&[&lg, &q])?.swap_remove(0);
+        let lg = self.rt.f32_buffer(slab, &[bucket, v])?;
+        let out = exe.execute_b(&[&lg, self.q_device()])?.swap_remove(0);
         if out.len() != 3 {
             bail!("signals returned {} outputs, expected 3", out.len());
         }
@@ -208,8 +275,65 @@ impl LoadedModel {
         Ok((kl, conf, ent))
     }
 
+    /// Fused L1 signal kernel for a tight `[rows × vocab]` logits slab.
+    ///
+    /// Compatibility wrapper: pads a copy of the slab up to the smallest
+    /// fitting bucket, then defers to [`Self::signals_padded`]. The
+    /// decode hot path should call `signals_padded` with the engine's
+    /// borrowed slab instead — no copy, no pad, no `q` re-upload.
+    pub fn signals(&self, logits: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let v = self.config.vocab;
+        if logits.len() != rows * v {
+            bail!("signals: {} logits for {rows} rows × {v}", logits.len());
+        }
+        let bucket = self.bucket_for(rows)?;
+        if rows == bucket {
+            // Already exactly bucket-shaped (e.g. rows equals the largest
+            // bucket): no padding copy needed.
+            return self.signals_padded(logits, rows, bucket);
+        }
+        let mut slab = logits.to_vec();
+        slab.resize(bucket * v, 0.0);
+        self.signals_padded(&slab, rows, bucket)
+    }
+
     /// Bytes of device KV cache held by a cache object of this model.
     pub fn kv_bytes(&self, bucket: usize) -> usize {
         bucket * self.config.kv_bytes_per_branch()
+    }
+}
+
+/// Shape contract for [`LoadedModel::signals_padded`], factored out so
+/// the boundary cases are unit-testable without compiled artifacts.
+/// Violations are `Err`s, never panics — a mis-shaped slab must degrade
+/// into a failed request, not take the server down.
+pub fn signals_shape_check(rows: usize, bucket: usize, slab_len: usize, vocab: usize) -> Result<()> {
+    if rows == 0 || rows > bucket {
+        bail!("signals: rows {rows} out of range 1..={bucket}");
+    }
+    if slab_len != bucket * vocab {
+        bail!("signals: slab length {slab_len} != bucket {bucket} × vocab {vocab}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_check_accepts_rows_equal_to_bucket() {
+        // Regression: `rows` equal to the largest bucket is a legal
+        // (tight) slab — historically the pad path was the only one
+        // exercised and a full bucket hit the copying branch.
+        assert!(signals_shape_check(32, 32, 32 * 64, 64).is_ok());
+        assert!(signals_shape_check(1, 1, 64, 64).is_ok());
+    }
+
+    #[test]
+    fn shape_check_rejects_bad_shapes_without_panicking() {
+        assert!(signals_shape_check(0, 4, 4 * 64, 64).is_err());
+        assert!(signals_shape_check(5, 4, 4 * 64, 64).is_err());
+        assert!(signals_shape_check(4, 4, 3 * 64, 64).is_err());
     }
 }

@@ -19,12 +19,15 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Median (average of middle two for even length); 0.0 for empty input.
+/// `total_cmp` keeps the sort total when a sample is NaN (a NaN signal
+/// value must degrade deterministically, not panic mid-request — see the
+/// hot-path notes in `crate::engine`).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -39,7 +42,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -70,6 +73,15 @@ pub fn median_of_means(xs: &[f64], m: usize) -> f64 {
     let means: Vec<f64> =
         (0..m).map(|k| mean(&xs[start + k * bucket..start + (k + 1) * bucket])).collect();
     median(&means)
+}
+
+/// Canonical total *ascending* order for scores/log-probs: `total_cmp`
+/// on a `-0.0`-normalized value, so ±0.0 compare equal (matching what
+/// `partial_cmp` treated as `Equal` before the `total_cmp` migration)
+/// while NaN orders deterministically instead of panicking. The f32
+/// analogue for sampler candidates lives in `coordinator::sampler`.
+pub fn total_order(a: f64, b: f64) -> std::cmp::Ordering {
+    (a + 0.0).total_cmp(&(b + 0.0))
 }
 
 /// Z-score normalization across a slice, as in Algorithm 2 step 19:
@@ -111,6 +123,27 @@ mod tests {
         let mom = median_of_means(&xs, 4);
         assert!(mom < 10.0, "mom={mom}");
         assert!(mean(&xs) > 1e4);
+    }
+
+    #[test]
+    fn total_order_matches_partial_cmp_semantics() {
+        use std::cmp::Ordering;
+        assert_eq!(total_order(-0.0, 0.0), Ordering::Equal); // seed tie behavior
+        assert_eq!(total_order(1.0, 2.0), Ordering::Less);
+        assert_eq!(total_order(2.0, 1.0), Ordering::Greater);
+        // NaN is ordered (greater than +inf for positive NaN), not a panic.
+        assert_eq!(total_order(f64::NAN, f64::INFINITY), Ordering::Greater);
+    }
+
+    #[test]
+    fn median_and_percentile_tolerate_nan() {
+        // Regression: a NaN signal value (e.g. from a NaN logit row)
+        // must degrade deterministically, not panic the sort.
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        // total_cmp sorts the NaN last: median of [1,2,3,NaN] = 2.5.
+        assert_eq!(median(&xs), 2.5);
+        let p = percentile(&xs, 95.0); // interpolates into the NaN tail
+        assert!(p.is_nan());
     }
 
     #[test]

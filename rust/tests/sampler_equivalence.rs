@@ -1,0 +1,267 @@
+//! Equivalence proofs for the zero-allocation decode hot path.
+//!
+//! The batched scratch sampler ([`SamplerScratch`]) replaced the seed's
+//! allocate-and-fully-sort implementation; paper results must not move.
+//! These property tests pin three layers of equivalence:
+//!
+//! 1. `seed_sample` (a verbatim copy of the original implementation,
+//!    frozen here as the oracle) ≡ `sampler::sample` (the refreshed
+//!    scalar reference) on every non-NaN input,
+//! 2. `sampler::sample` ≡ `SamplerScratch::sample_row` on **all** inputs
+//!    (including NaN rows, where the seed would have panicked),
+//! 3. the row-wise loop ≡ `SamplerScratch::sample_slab` over multi-row
+//!    slabs with per-branch RNG streams.
+//!
+//! "Equivalent" means bit-identical `(token, logprob)` and identical RNG
+//! consumption — checked by comparing the generators' next outputs after
+//! each stream.
+
+use kappa::coordinator::config::SamplerConfig;
+use kappa::coordinator::sampler::{self, SamplerScratch};
+use kappa::testing::check;
+use kappa::util::rng::Pcg64;
+
+/// Verbatim seed implementation (pre-refactor), kept as the oracle.
+/// Panics on NaN via `partial_cmp().unwrap()` — exactly why callers only
+/// hand it non-NaN rows.
+fn seed_sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64) {
+    let v = logits.len();
+    let inv_t = 1.0 / cfg.temperature.max(1e-6);
+    let mut scaled: Vec<(usize, f32)> = logits.iter().map(|&x| x * inv_t).enumerate().collect();
+
+    let k = cfg.top_k.clamp(1, v);
+    scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scaled.truncate(k);
+
+    let m = scaled[0].1;
+    let mut probs: Vec<f64> = scaled.iter().map(|&(_, x)| ((x - m) as f64).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+
+    let mut cut = probs.len();
+    if cfg.top_p < 1.0 {
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= cfg.top_p as f64 {
+                cut = i + 1;
+                break;
+            }
+        }
+    }
+    let probs = &probs[..cut];
+    let z: f64 = probs.iter().sum();
+
+    let mut u = rng.next_f64() * z;
+    let mut chosen = cut - 1;
+    for (i, &p) in probs.iter().enumerate() {
+        if u < p {
+            chosen = i;
+            break;
+        }
+        u -= p;
+    }
+    let token = scaled[chosen].0;
+    (token as u32, sampler::token_logprob(logits, token))
+}
+
+fn assert_same_draw(a: (u32, f64), b: (u32, f64), what: &str) {
+    assert_eq!(a.0, b.0, "{what}: tokens differ");
+    assert_eq!(
+        a.1.to_bits(),
+        b.1.to_bits(),
+        "{what}: logprobs differ ({} vs {})",
+        a.1,
+        b.1
+    );
+}
+
+/// Random sampler config spanning the paper grid and beyond.
+fn gen_cfg(g: &mut kappa::testing::Gen, v: usize) -> SamplerConfig {
+    SamplerConfig {
+        temperature: g.f32(0.05..2.5),
+        top_k: g.usize(1..v + 2), // deliberately allows k > v (clamped)
+        top_p: g.f32(0.05..1.1).min(1.0),
+    }
+}
+
+#[test]
+fn prop_seed_scalar_and_scratch_agree_on_random_rows() {
+    check("seed == scalar == scratch on random logits", 400, |g| {
+        let v = g.usize(2..96);
+        let logits = g.vec_f32(v..v + 1, -12.0..12.0);
+        let cfg = gen_cfg(g, v);
+        let seed = g.u64(0..u64::MAX / 2);
+
+        let mut scratch = SamplerScratch::new();
+        let mut r0 = Pcg64::new(seed, 1);
+        let mut r1 = Pcg64::new(seed, 1);
+        let mut r2 = Pcg64::new(seed, 1);
+        // 8-step streams: equivalence must hold along the stream, not
+        // just for one draw.
+        for step in 0..8 {
+            let a = seed_sample(&logits, &cfg, &mut r0);
+            let b = sampler::sample(&logits, &cfg, &mut r1);
+            let c = scratch.sample_row(&logits, &cfg, &mut r2);
+            assert_same_draw(a, b, &format!("seed vs scalar, step {step}"));
+            assert_same_draw(b, c, &format!("scalar vs scratch, step {step}"));
+        }
+        // Identical RNG consumption → identical generator state after.
+        assert_eq!(r0.next_u32(), r1.next_u32());
+        assert_eq!(r1.next_u32(), r2.next_u32());
+    });
+}
+
+#[test]
+fn prop_equivalence_on_adversarial_ties() {
+    check("ties and duplicated logits keep seed tie-breaking", 400, |g| {
+        let v = g.usize(4..64);
+        // Draw from a tiny value set so duplicate logits are dense; mix
+        // in ±0.0, which the seed's stable sort treated as equal.
+        let palette = [-1.0f32, 0.0, -0.0, 0.5, 0.5, 2.0];
+        let logits: Vec<f32> = (0..v).map(|_| *g.choose(&palette)).collect();
+        let cfg = gen_cfg(g, v);
+        let seed = g.u64(0..u64::MAX / 2);
+
+        let mut scratch = SamplerScratch::new();
+        let mut r0 = Pcg64::new(seed, 9);
+        let mut r1 = Pcg64::new(seed, 9);
+        let mut r2 = Pcg64::new(seed, 9);
+        for _ in 0..8 {
+            let a = seed_sample(&logits, &cfg, &mut r0);
+            let b = sampler::sample(&logits, &cfg, &mut r1);
+            let c = scratch.sample_row(&logits, &cfg, &mut r2);
+            assert_same_draw(a, b, "ties: seed vs scalar");
+            assert_same_draw(b, c, "ties: scalar vs scratch");
+        }
+    });
+}
+
+#[test]
+fn prop_all_equal_logits_match_and_cover_support() {
+    check("uniform rows: equivalent and in-range", 200, |g| {
+        let v = g.usize(2..48);
+        let logits = vec![g.f32(-3.0..3.0); v];
+        let cfg = gen_cfg(g, v);
+        let seed = g.u64(0..u64::MAX / 2);
+
+        let mut scratch = SamplerScratch::new();
+        let mut r0 = Pcg64::new(seed, 3);
+        let mut r1 = Pcg64::new(seed, 3);
+        for _ in 0..8 {
+            let a = seed_sample(&logits, &cfg, &mut r0);
+            let b = scratch.sample_row(&logits, &cfg, &mut r1);
+            assert_same_draw(a, b, "uniform row");
+            assert!((b.0 as usize) < v);
+        }
+    });
+}
+
+#[test]
+fn prop_nan_rows_no_panic_and_scalar_scratch_agree() {
+    // The seed oracle would panic here; the refactored paths must
+    // instead degrade deterministically and identically.
+    check("NaN rows: scalar == scratch, no panic", 300, |g| {
+        let v = g.usize(4..48);
+        let mut logits = g.vec_f32(v..v + 1, -6.0..6.0);
+        for _ in 0..g.usize(1..4) {
+            let at = g.usize(0..v);
+            logits[at] = f32::NAN;
+        }
+        let cfg = gen_cfg(g, v);
+        let seed = g.u64(0..u64::MAX / 2);
+
+        let mut scratch = SamplerScratch::new();
+        let mut r1 = Pcg64::new(seed, 5);
+        let mut r2 = Pcg64::new(seed, 5);
+        for _ in 0..4 {
+            let b = sampler::sample(&logits, &cfg, &mut r1);
+            let c = scratch.sample_row(&logits, &cfg, &mut r2);
+            assert_eq!(b.0, c.0, "NaN row: tokens differ");
+            // logprob may legitimately be NaN; require identical bits.
+            assert_eq!(b.1.to_bits(), c.1.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_slab_equals_rowwise_loop() {
+    check("sample_slab == per-row scalar loop", 300, |g| {
+        let v = g.usize(4..48);
+        let rows = g.usize(1..9);
+        let bucket = rows + g.usize(0..3); // slab may carry stale padding rows
+        let mut slab = g.vec_f32(bucket * v..bucket * v + 1, -8.0..8.0);
+        // Stale padding rows must not influence live rows: poison them.
+        for x in slab[rows * v..].iter_mut() {
+            *x = 1e30;
+        }
+        let cfg = gen_cfg(g, v);
+        let seed = g.u64(0..u64::MAX / 2);
+        let live: Vec<usize> = (0..rows).collect();
+
+        let mut rngs_a: Vec<Pcg64> =
+            (0..rows).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+        let mut rngs_b = rngs_a.clone();
+
+        let mut scratch = SamplerScratch::new();
+        let got = scratch.sample_slab(&slab, v, &live, &cfg, &mut rngs_a).to_vec();
+        assert_eq!(got.len(), rows);
+        for (slot, &bi) in live.iter().enumerate() {
+            let want = sampler::sample(&slab[slot * v..(slot + 1) * v], &cfg, &mut rngs_b[bi]);
+            assert_same_draw(want, got[slot], &format!("slab row {slot}"));
+        }
+        for (a, b) in rngs_a.iter_mut().zip(rngs_b.iter_mut()) {
+            assert_eq!(a.next_u32(), b.next_u32(), "RNG stream diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_scratch_reuse_across_shapes_is_stateless() {
+    // One scratch, many vocab sizes and configs in sequence: earlier
+    // calls must not leak into later ones.
+    check("scratch reuse leaks nothing", 200, |g| {
+        let mut scratch = SamplerScratch::new();
+        for _ in 0..6 {
+            let v = g.usize(2..80);
+            let logits = g.vec_f32(v..v + 1, -10.0..10.0);
+            let cfg = gen_cfg(g, v);
+            let seed = g.u64(0..u64::MAX / 2);
+            let mut r1 = Pcg64::new(seed, 2);
+            let mut r2 = Pcg64::new(seed, 2);
+            let fresh = SamplerScratch::new().sample_row(&logits, &cfg, &mut r1);
+            let reused = scratch.sample_row(&logits, &cfg, &mut r2);
+            assert_same_draw(fresh, reused, "fresh vs reused scratch");
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_row_matches_argmax_plus_logprob() {
+    check("greedy_row == argmax + token_logprob", 300, |g| {
+        let v = g.usize(2..80);
+        let logits = g.vec_f32(v..v + 1, -10.0..10.0);
+        let (tok, lp) = sampler::greedy_row(&logits);
+        assert_eq!(tok, sampler::argmax(&logits));
+        assert_eq!(
+            lp.to_bits(),
+            sampler::token_logprob(&logits, tok as usize).to_bits()
+        );
+    });
+}
+
+#[test]
+fn deterministic_given_seed_holds_for_scratch_streams() {
+    // The seed suite pinned `sample` determinism; the property extends
+    // to the batched path: same (seed, stream) → same token stream.
+    let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 / 3.0).collect();
+    let cfg = SamplerConfig::default();
+    let run = || -> Vec<u32> {
+        let mut scratch = SamplerScratch::new();
+        let mut rng = Pcg64::new(42, 7);
+        (0..32).map(|_| scratch.sample_row(&logits, &cfg, &mut rng).0).collect()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,193 @@
+//! Offline, API-compatible subset of [dtolnay/anyhow].
+//!
+//! The build environment has no crates.io access, so the repo vendors the
+//! slice of `anyhow` it actually uses: [`Error`] (a boxed message with a
+//! context chain), the [`Context`] extension trait for `Result`/`Option`,
+//! the [`anyhow!`]/[`bail!`] macros, and the [`Result`] alias. Display
+//! formatting matches the upstream crate: `{e}` prints the outermost
+//! context, `{e:#}` prints the full `outer: ...: root` chain.
+//!
+//! Intentionally *not* implemented (unused by this repo): downcasting,
+//! backtraces, `ensure!`.
+
+use std::fmt;
+
+/// Error: an outermost message plus the chain of underlying causes,
+/// newest first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The `outer: ...: root` chain, newest first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream Debug prints the message plus a "Caused by" list.
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any std error inside an `anyhow::Result` function. `Error`
+// itself deliberately does NOT implement `std::error::Error`, exactly as
+// upstream, so this blanket impl cannot conflict with `From<Error>`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension adding `.context(..)` / `.with_context(..)` to fallible
+/// values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($msg:expr $(,)?) => { $crate::Error::msg($msg) };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*).into()) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chain_alternate_display() {
+        let r: Result<()> = Err(io_err()).context("opening config");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing thing");
+    }
+
+    #[test]
+    fn with_context_and_macros() {
+        let r: Result<()> = Err(io_err()).with_context(|| format!("step {}", 3));
+        assert!(format!("{:#}", r.unwrap_err()).starts_with("step 3"));
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("empty");
+        assert_eq!(format!("{}", r.unwrap_err()), "empty");
+        let r: Result<i32> = Some(5).context("unused");
+        assert_eq!(r.unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn nested_context_orders_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("inner").context("outer");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner: missing thing");
+        assert_eq!(e.root_cause(), "missing thing");
+    }
+}
