@@ -6,6 +6,11 @@ Exports, per model size m ∈ {sm, lg}:
 
   artifacts/prefill_{m}_b1.hlo.txt        prompt pass (branches share prompts)
   artifacts/decode_{m}_b{B}.hlo.txt       one step per batch bucket B
+  artifacts/superstep_{m}_b{B}.hlo.txt    fused decode+signals superstep: one
+                                          dispatch runs the forward pass AND
+                                          scores the fresh logits against the
+                                          device-resident q, so gated tokens
+                                          never re-upload the logits slab
   artifacts/gather_{m}_b{S}to{D}.hlo.txt  KV-cache gather: branch broadcast
                                           (S=1) and post-prune compaction
   artifacts/weights_{m}.bin               flat little-endian f32 params
@@ -35,6 +40,24 @@ from .kernels.signals import signals
 from .model import BATCH_BUCKETS, CONFIGS, ModelConfig, decode_step, prefill
 
 FORMAT_VERSION = 1
+
+
+def superstep(cfg: ModelConfig, params: dict, token, pos, k_cache, v_cache, q_logits):
+    """Fused decode→signals superstep: one dispatch per gated token.
+
+    Chains ``model.decode_step`` into ``kernels.signals.signals`` so the
+    freshly produced ``[B, V]`` logits are scored on-device against the
+    device-resident reference ``q`` — the logits never cross the host
+    boundary between decoding and scoring. Returns
+    ``(logits, kl, conf, ent, k_cache, v_cache)``; the runtime downloads
+    the logits once (for sampling) and the three ``[B]`` signal vectors,
+    and donates the predecessor k/v buffers into the successor cache.
+    """
+    logits, k_cache, v_cache = decode_step(
+        cfg, params, token, pos, k_cache, v_cache, use_pallas=True
+    )
+    kl, conf, ent = signals(logits, q_logits)
+    return logits, kl, conf, ent, k_cache, v_cache
 
 
 def to_hlo_text(lowered) -> str:
@@ -75,7 +98,7 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
     n_p = len(names)
     param_specs = [_spec(shapes[n]) for n in names]
     lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
-    arts: dict = {"decode": {}, "gather": {}}
+    arts: dict = {"decode": {}, "superstep": {}, "gather": {}}
 
     def as_dict(flat):
         return dict(zip(names, flat))
@@ -107,6 +130,28 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
         )
         arts["decode"][str(b)] = _write(
             out_dir, f"decode_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lowered)
+        )
+
+    # --- fused decode+signals superstep per bucket ---
+    # Same argument prefix as decode (params, token, pos, k, v) plus the
+    # device-resident q as the final input, so the Rust side reuses one
+    # persistent argument table for both executables.
+    for b in buckets:
+        def superstep_fn(*args):
+            p = as_dict(args[:n_p])
+            token, pos, kc, vc, q = args[n_p : n_p + 5]
+            return superstep(cfg, p, token, pos, kc, vc, q)
+
+        lowered = jax.jit(superstep_fn).lower(
+            *param_specs,
+            _spec((b,), jnp.int32),
+            _spec((), jnp.int32),
+            _spec((lyr, b, h, s, dh)),
+            _spec((lyr, b, h, s, dh)),
+            _spec((cfg.vocab,)),
+        )
+        arts["superstep"][str(b)] = _write(
+            out_dir, f"superstep_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lowered)
         )
 
     # --- KV gather (broadcast / compaction) ---

@@ -1,0 +1,80 @@
+"""Fused decode→signals superstep vs the unfused two-dispatch sequence.
+
+The Rust engine routes gated tokens through one superstep dispatch and
+trusts it to be *bit-identical* to ``decode_step`` followed by
+``signals`` on the downloaded logits (the unfused differential oracle it
+keeps alive). These tests pin that contract at the graph level, where it
+is cheap to sweep buckets and degenerate inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import superstep
+from compile.kernels.signals import signals
+from compile.model import CONFIGS, ModelConfig, decode_step, init_params, prefill
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["sm"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1)
+    _, k1, v1 = prefill(cfg, params, tokens, jnp.int32(4))
+    q = jax.random.normal(jax.random.PRNGKey(9), (cfg.vocab,), jnp.float32)
+    return cfg, params, k1, v1, q
+
+
+def broadcast_cache(c, b):
+    return jnp.repeat(c, b, axis=1)
+
+
+class TestSuperstepParity:
+    @pytest.mark.parametrize("b", [1, 2, 4, 8])
+    def test_bit_identical_to_unfused(self, setup, b):
+        cfg, params, k1, v1, q = setup
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+        pos = jnp.int32(4)
+
+        lg_f, kl_f, conf_f, ent_f, k_f, v_f = superstep(cfg, params, token, pos, kc, vc, q)
+        lg_u, k_u, v_u = decode_step(cfg, params, token, pos, kc, vc, use_pallas=True)
+        kl_u, conf_u, ent_u = signals(lg_u, q)
+
+        # Same ops in the same order on both paths → bitwise equality.
+        for got, want in [
+            (lg_f, lg_u), (kl_f, kl_u), (conf_f, conf_u), (ent_f, ent_u),
+            (k_f, k_u), (v_f, v_u),
+        ]:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_padding_rows_do_not_leak_into_live_rows(self, setup):
+        # Live rows' outputs must not depend on what occupies padding
+        # rows (stale branches after compaction): decode rows are
+        # independent and the signal reductions are row-wise.
+        cfg, params, k1, v1, q = setup
+        b = 4
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token_a = jnp.array([3, 5, 0, 0], jnp.int32)
+        token_b = jnp.array([3, 5, 7, 9], jnp.int32)  # different padding rows
+        pos = jnp.int32(4)
+
+        out_a = superstep(cfg, params, token_a, pos, kc, vc, q)
+        out_b = superstep(cfg, params, token_b, pos, kc, vc, q)
+        for oa, ob in zip(out_a[:4], out_b[:4]):  # logits, kl, conf, ent
+            np.testing.assert_array_equal(np.asarray(oa)[:2], np.asarray(ob)[:2])
+
+    def test_nan_q_degrades_not_crashes(self, setup):
+        # A poisoned reference distribution must produce NaN signals, not
+        # an exception — the Rust side degrades NaN scores via total_cmp.
+        cfg, params, k1, v1, q = setup
+        bad_q = q.at[0].set(jnp.nan)
+        token = jnp.zeros((1,), jnp.int32)
+        lg, kl, conf, ent, _, _ = superstep(cfg, params, token, jnp.int32(4), k1, v1, bad_q)
+        assert np.all(np.isfinite(np.asarray(lg)))  # decode untouched by q
+        assert np.all(np.isnan(np.asarray(kl)))  # KL vs poisoned q is NaN
+        # conf/entropy only involve p — they stay finite.
+        assert np.all(np.isfinite(np.asarray(conf)))
+        assert np.all(np.isfinite(np.asarray(ent)))

@@ -5,19 +5,62 @@
 //! gather latency, and the pure-engine overhead (sampling + bookkeeping)
 //! per step. Prints a table and writes `artifacts/reports/perf.json`.
 //!
-//! Zero-allocation hot-path rows (this PR's tracking targets):
+//! Zero-allocation hot-path rows (tracking targets):
 //! - `sample_x32_host`  — the scalar reference sampler, 32 rows/step.
 //! - `sample_batched`   — [`SamplerScratch::sample_slab`] over the same
 //!   32 rows; the acceptance target is ≥ 2× on the median.
 //! - `signals_padded`   — the borrowed-slab signal call (no row copy, no
 //!   re-pad, device-resident q).
+//! - `superstep_fused` vs `decode_then_signals` — the gated-token hot
+//!   path (one fused dispatch, slab downloaded once, KV donated) against
+//!   the unfused two-dispatch sequence it replaced. The bench **asserts**
+//!   the slab-transfer budget: fused = exactly one `[bucket × vocab]`
+//!   crossing per token (the download), unfused = two (the download plus
+//!   the signal path's re-upload).
+//! - `allocs_per_token` — measured by a counting global allocator around
+//!   the fused/unfused loops; the engine-side contribution is zero
+//!   (staging buffers at their high-water mark).
 //! - the `counters` report block — host→device uploads per signals call;
 //!   1.0 means the steady state re-uploads nothing but the slab itself
 //!   (q re-upload would make it 2.0).
 //!
+//! Besides `perf.json`, writes `BENCH_decode.json` (per-bucket fused vs
+//! unfused medians + counters) so the decode-path perf trajectory is
+//! machine-readable across PRs.
+//!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+/// Counting allocator: `allocs_per_token` is a hard measurement, not an
+/// estimate. Counts alloc/realloc events (dealloc is free-ish and not a
+/// steady-state signal).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 use anyhow::Result;
 use kappa::bench::{BenchEnv, Table};
@@ -70,6 +113,8 @@ fn main() -> Result<()> {
 
     // (bucket, host→device uploads per signals_padded call).
     let mut upload_counters: Vec<(usize, f64)> = Vec::new();
+    // Per-bucket BENCH_decode.json rows (fused vs unfused + counters).
+    let mut decode_rows: Vec<Json> = Vec::new();
 
     // Prefill (bucket 1 only — prompts are shared across branches).
     let (med, p95) = time_op(iters, || {
@@ -141,6 +186,74 @@ fn main() -> Result<()> {
         });
         push(&mut table, "signals_native_scratch", b, med, p95);
 
+        // Gated-token hot path: the fused decode+signals superstep vs
+        // the unfused decode → signals_padded sequence it replaced. The
+        // slab-transfer counters are asserted, not just reported — this
+        // is the PR's "exactly one slab crossing per gated token"
+        // invariant.
+        if model.has_superstep(b) {
+            let mut sup_cache = model.gather(&cache1, b, &idx)?;
+            let (mut lg, mut skl, mut scf, mut sen) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let mut pos_f = len;
+            // Warm-up compiles the executable and grows the staging
+            // buffers to their high-water mark.
+            model.superstep_into(
+                &tokens, pos_f, &mut sup_cache, &mut lg, &mut skl, &mut scf, &mut sen,
+            )?;
+            pos_f += 1;
+            let a0 = alloc_count();
+            let (su0, sd0) = model.runtime().slab_transfers();
+            let (med_fused, p95) = time_op(iters, || {
+                model
+                    .superstep_into(
+                        &tokens, pos_f, &mut sup_cache, &mut lg, &mut skl, &mut scf, &mut sen,
+                    )
+                    .unwrap();
+                pos_f = (pos_f + 1).min(model.config.max_seq - 1);
+            });
+            let (su1, sd1) = model.runtime().slab_transfers();
+            let allocs_fused = (alloc_count() - a0) as f64 / iters as f64;
+            let slab_fused = ((su1 - su0) + (sd1 - sd0)) as f64 / iters as f64;
+            assert_eq!(su1 - su0, 0, "superstep re-uploaded the logits slab");
+            assert_eq!(sd1 - sd0, iters, "superstep must download the slab exactly once per token");
+            push(&mut table, "superstep_fused", b, med_fused, p95);
+
+            // Unfused comparator (the differential oracle): decode,
+            // download the slab, re-upload it to the signal executable.
+            let mut unf_cache = model.gather(&cache1, b, &idx)?;
+            let mut pos_u = len;
+            let a0 = alloc_count();
+            let (su0, sd0) = model.runtime().slab_transfers();
+            let (med_unfused, p95) = time_op(iters, || {
+                let (lg, nc) = model.decode(&tokens, pos_u, &unf_cache).unwrap();
+                unf_cache = nc;
+                let _ = model.signals_padded(&lg, b, b).unwrap();
+                pos_u = (pos_u + 1).min(model.config.max_seq - 1);
+            });
+            let (su1, sd1) = model.runtime().slab_transfers();
+            let allocs_unfused = (alloc_count() - a0) as f64 / iters as f64;
+            let slab_unfused = ((su1 - su0) + (sd1 - sd0)) as f64 / iters as f64;
+            assert_eq!(su1 - su0, iters, "unfused path re-uploads the slab once per token");
+            assert_eq!(sd1 - sd0, iters, "unfused path downloads the slab once per token");
+            push(&mut table, "decode_then_signals", b, med_unfused, p95);
+            println!(
+                "allocs_per_token (bucket {b}): fused {allocs_fused:.2}, \
+                 unfused {allocs_unfused:.2}"
+            );
+
+            decode_rows.push(Json::obj(vec![
+                ("bucket", Json::num(b as f64)),
+                ("superstep_fused_median_ms", Json::num(med_fused)),
+                ("decode_then_signals_median_ms", Json::num(med_unfused)),
+                ("allocs_per_token_fused", Json::num(allocs_fused)),
+                ("allocs_per_token_unfused", Json::num(allocs_unfused)),
+                // Measured (and asserted above): fused = 1.0, unfused = 2.0.
+                ("slab_transfers_per_token_fused", Json::num(slab_fused)),
+                ("slab_transfers_per_token_unfused", Json::num(slab_unfused)),
+            ]));
+        }
+
         // Gather shrink b → max(b/2, 1).
         if b > 1 {
             let dst = b / 2;
@@ -206,6 +319,17 @@ fn main() -> Result<()> {
     env.write_report(
         "perf",
         Json::obj(vec![("rows", Json::Arr(report)), ("counters", Json::obj(counters))]),
+    )?;
+    // Machine-readable decode-path trajectory: fused vs unfused medians
+    // and the per-token allocation/transfer counters, one row per
+    // bucket. Downstream tooling diffs this file across PRs.
+    env.write_report(
+        "BENCH_decode",
+        Json::obj(vec![
+            ("model", Json::str(&model_name)),
+            ("iters", Json::num(iters as f64)),
+            ("rows", Json::Arr(decode_rows)),
+        ]),
     )?;
     Ok(())
 }

@@ -5,6 +5,10 @@
 //! Finished branches are compacted out of the device batch as they hit
 //! EOS (the bucket shrinks), which is what a production batcher does and
 //! what the paper's HF `generate` achieves by early-exiting sequences.
+//!
+//! BoN never gates, so every token takes the plain (non-superstep)
+//! decode path — which still donates the predecessor KV cache and lands
+//! logits in the engine's reusable slab (`GenState::step`).
 
 use anyhow::Result;
 

@@ -17,11 +17,16 @@
 //! pruning removes candidates, whether finished or live.
 //!
 //! Hot-path discipline (see `crate::engine` module docs): one
-//! [`SamplerScratch`] serves every draw of the request; the signal step
-//! borrows the engine's bucket-padded logits slab instead of copying live
-//! rows; gating membership runs over a reusable boolean mask (no
-//! `contains` scans); and score ordering uses `f64::total_cmp`, so a NaN
-//! score degrades into a deterministic ranking instead of a panic.
+//! [`SamplerScratch`] serves every draw of the request; gating steps run
+//! the fused decode+signals **superstep** (`GenState::step_fused`), so
+//! the (KL, confidence, entropy) rows ride back with the forward pass —
+//! the logits slab crosses the host boundary once per gated token and is
+//! never re-uploaded. Only the phase boundary (the first gating step,
+//! whose slab came from a draft-phase decode) and superstep-less
+//! artifact sets fall back to the unfused borrowed-slab
+//! `signals_padded` call. Gating membership runs over a reusable boolean
+//! mask (no `contains` scans); score ordering uses `f64::total_cmp`, so
+//! a NaN score degrades into a deterministic ranking instead of a panic.
 
 use anyhow::Result;
 
@@ -102,9 +107,12 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         k += 1;
         let rows = live.len();
 
-        // -- Signals for the live rows (fused Pallas kernel, or native).
-        // The Pallas path borrows the engine's already-padded slab: no
-        // row copy, no re-pad, no q upload.
+        // -- Signals for the live rows. Steady state: they rode back
+        // with the superstep that produced this slab (`fused_signals`) —
+        // zero extra dispatches, zero slab re-upload. Fallbacks: the
+        // native ablation, or the unfused borrowed-slab call for the
+        // first gating step (draft-phase slab) / superstep-less
+        // artifacts.
         kl.clear();
         conf.clear();
         ent.clear();
@@ -115,6 +123,10 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
                 conf.push(b);
                 ent.push(c);
             }
+        } else if let Some((a, b, c)) = state.fused_signals() {
+            kl.extend(a.iter().map(|&x| x as f64));
+            conf.extend(b.iter().map(|&x| x as f64));
+            ent.extend(c.iter().map(|&x| x as f64));
         } else {
             let (a, b, c) =
                 engine.model().signals_padded(state.logits_slab(), rows, state.bucket())?;
@@ -132,9 +144,17 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         // -- Across-branch z-norm + weighted combine + trajectory update.
         combine_scores(&mut sig, &live, &ema, &conf, &ent, steps + 1, kcfg);
 
-        // -- One-step continuation for the next scoring round.
+        // -- One-step continuation for the next scoring round, through
+        // the fused superstep: the new slab's signals come back with the
+        // same dispatch and are consumed at the top of the next
+        // iteration. The native ablation scores on the host instead, so
+        // it keeps the plain decode executable.
         let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
-        state.step(engine, sampled)?;
+        if sig_scratch.is_some() {
+            state.step(engine, sampled)?;
+        } else {
+            state.step_fused(engine, sampled)?;
+        }
         steps += 1;
 
         // -- Gating: prune candidates down to the schedule's target.

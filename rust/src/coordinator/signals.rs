@@ -2,10 +2,13 @@
 //!
 //! Per step, per alive branch:
 //!   1. raw signals — KL(p_t‖q), confidence, entropy. On the hot path
-//!      these come from the fused Pallas executable
-//!      ([`crate::runtime::LoadedModel::signals`]); [`raw_signals`] is the
-//!      bit-compatible native Rust path used for differential testing and
-//!      the `--native-signals` ablation.
+//!      these ride back with the fused decode+signals superstep
+//!      ([`crate::runtime::LoadedModel::superstep_into`], cached on
+//!      `GenState` as `fused_signals`); the standalone signal executable
+//!      ([`crate::runtime::LoadedModel::signals_padded`]) serves the
+//!      phase-boundary step and superstep-less artifact sets, and
+//!      [`raw_signals`] is the bit-compatible native Rust path used for
+//!      differential testing and the `--native-signals` ablation.
 //!   2. information change ΔI_t = D_t − D_{t−1} (D_{c−1} ≡ 0),
 //!   3. median-of-means over the last `w` ΔI values in `m` buckets,
 //!   4. bias-corrected EMA with rate α,

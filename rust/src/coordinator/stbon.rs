@@ -9,6 +9,10 @@
 //!    region; token-space consistency — DESIGN.md §2 documents the
 //!    hidden-state → token-space substitution),
 //! 4. truncate all others and decode the winner to completion.
+//!
+//! ST-BoN scores consistency in token space (no latent signals), so all
+//! phases use the plain donated decode path (`GenState::step`) — the
+//! fused decode+signals superstep is KAPPA's gating-phase tool.
 
 use anyhow::Result;
 

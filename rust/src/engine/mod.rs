@@ -35,8 +35,17 @@
 //!   `contains` scans.
 //! - **Device-resident buffers.** The KV cache and the model's reference
 //!   distribution `q` never cross the host boundary after load; per step
-//!   only the decoded logits slab (device→host, allocated inside the
-//!   `xla` crate) and one bucket-sized token vector (host→device) move.
+//!   only the decoded logits slab (device→host, into the engine's
+//!   reusable slab buffer) and one bucket-sized token vector
+//!   (host→device) move. Successor KV caches reuse the predecessor's
+//!   device memory via buffer donation ([`LoadedModel::decode_into`]).
+//! - **Gated tokens are one dispatch.** [`GenState::step_fused`] routes
+//!   through the fused decode+signals superstep: the slab is downloaded
+//!   once for sampling and scored on-device — it is never re-uploaded.
+//!   The per-slot signal rows are cached on `GenState`
+//!   ([`GenState::fused_signals`]) and follow every retain/compaction
+//!   repack, so the gating policy reads them for free. Plain
+//!   [`GenState::step`] (non-gated tokens) invalidates them.
 //! - **Sampling is scratch-based.** Coordinators draw every live row
 //!   through one [`crate::coordinator::sampler::SamplerScratch`] per
 //!   request; see its docs for the zero-allocation contract.
@@ -164,6 +173,11 @@ impl Engine {
             keep_scratch: Vec::with_capacity(n),
             gather_idx: Vec::with_capacity(bucket),
             logits_spare: Vec::new(),
+            sig_kl: Vec::new(),
+            sig_conf: Vec::new(),
+            sig_ent: Vec::new(),
+            sig_spare: Vec::new(),
+            fused_valid: false,
         })
     }
 }
@@ -219,6 +233,42 @@ pub struct GenState {
     gather_idx: Vec<i32>,
     /// Spare logits buffer swapped in when the slab is repacked.
     logits_spare: Vec<f32>,
+    /// Per-slot fused signals from the last superstep (bucket-length,
+    /// rows ≥ `n_live()` are padding scores); meaningful only while
+    /// `fused_valid`. `sig_spare` is their (bucket-sized) repack spare —
+    /// kept separate from `logits_spare` so the swap in [`repack_rows`]
+    /// never trades the slab-sized capacity for a row-sized one.
+    sig_kl: Vec<f32>,
+    sig_conf: Vec<f32>,
+    sig_ent: Vec<f32>,
+    sig_spare: Vec<f32>,
+    /// Whether `sig_*` describe the current logits slab. Set by
+    /// [`Self::step_fused`], maintained across retain/compaction
+    /// repacks, cleared by plain [`Self::step`].
+    fused_valid: bool,
+}
+
+/// Repack a row-major `[rows × width]` buffer so destination row `i`
+/// holds source row `keep_slots[i]`; rows `keep_slots.len()..new_rows`
+/// are zero-filled padding. The result is built in `spare` and swapped
+/// in, so both buffers grow once to their high-water mark and every
+/// later call is allocation-free. Factored out of the engine so the
+/// permutation logic is unit-testable without compiled artifacts
+/// (`tests/fused_step_equivalence.rs`).
+pub fn repack_rows(
+    src: &mut Vec<f32>,
+    spare: &mut Vec<f32>,
+    keep_slots: &[usize],
+    width: usize,
+    new_rows: usize,
+) {
+    debug_assert!(keep_slots.len() <= new_rows);
+    spare.clear();
+    spare.resize(new_rows * width, 0.0);
+    for (i, &s) in keep_slots.iter().enumerate() {
+        spare[i * width..(i + 1) * width].copy_from_slice(&src[s * width..(s + 1) * width]);
+    }
+    std::mem::swap(src, spare);
 }
 
 impl GenState {
@@ -260,10 +310,10 @@ impl GenState {
         &self.logits
     }
 
-    /// Advance every live branch by one token. `sampled[i]` is the token
-    /// + its full-softmax log-prob for slot `i`. Marks EOS/length-capped
-    /// branches finished (they stay on device until compaction).
-    pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
+    /// Token bookkeeping shared by [`Self::step`] and
+    /// [`Self::step_fused`]: record the sampled tokens/log-probs and
+    /// fill the bucket-sized decode token scratch.
+    fn begin_step(&mut self, sampled: &[(u32, f64)]) -> Result<()> {
         if sampled.len() != self.slots.len() {
             bail!("step: {} samples for {} slots", sampled.len(), self.slots.len());
         }
@@ -285,23 +335,96 @@ impl GenState {
             }
             self.tokens_scratch[slot] = tok as i32;
         }
+        Ok(())
+    }
 
-        let (logits, new_cache) = engine.model.decode(&self.tokens_scratch, self.pos, &self.cache)?;
+    /// Position/memory bookkeeping shared by both step flavours.
+    fn finish_step(&mut self, engine: &Engine) {
         self.decode_calls += 1;
-        self.logits = logits;
-        self.cache = new_cache;
         self.pos += 1;
         // Paged-allocator model: the bucket's caches grew by one token.
-        self.mem
-            .set_component("kv", bucket * self.pos * engine.model.config.kv_bytes_per_token());
-
+        self.mem.set_component(
+            "kv",
+            self.cache.bucket * self.pos * engine.model.config.kv_bytes_per_token(),
+        );
         // Length cap: if the budget is now exhausted, everything finishes.
         if self.pos >= self.max_seq {
             for &bi in &self.slots {
                 self.branches[bi].finished = true;
             }
         }
+    }
+
+    /// Advance every live branch by one token. `sampled[i]` is the token
+    /// + its full-softmax log-prob for slot `i`. Marks EOS/length-capped
+    /// branches finished (they stay on device until compaction).
+    ///
+    /// Non-gated path: plain decode executable, logits downloaded into
+    /// the engine's slab in place, predecessor KV donated into the
+    /// successor. Invalidates any cached fused signals.
+    pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
+        self.begin_step(sampled)?;
+        engine
+            .model
+            .decode_into(&self.tokens_scratch, self.pos, &mut self.cache, &mut self.logits)?;
+        self.fused_valid = false;
+        self.finish_step(engine);
         Ok(())
+    }
+
+    /// [`Self::step`] through the fused decode+signals superstep — the
+    /// gated-token path. The produced slab's (KL, confidence, entropy)
+    /// rows come back with the same dispatch and are cached for
+    /// [`Self::fused_signals`]; the slab is downloaded once and never
+    /// re-uploaded. Falls back to decode + `signals_padded` (same
+    /// results, one extra slab round-trip) when the loaded artifact set
+    /// has no superstep for the current bucket.
+    pub fn step_fused(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
+        self.begin_step(sampled)?;
+        let bucket = self.cache.bucket;
+        if engine.model.has_superstep(bucket) {
+            engine.model.superstep_into(
+                &self.tokens_scratch,
+                self.pos,
+                &mut self.cache,
+                &mut self.logits,
+                &mut self.sig_kl,
+                &mut self.sig_conf,
+                &mut self.sig_ent,
+            )?;
+        } else {
+            engine.model.decode_into(
+                &self.tokens_scratch,
+                self.pos,
+                &mut self.cache,
+                &mut self.logits,
+            )?;
+            // Unfused fallback scores all bucket rows (padding included)
+            // to mirror the superstep's output shape exactly.
+            engine.model.signals_padded_into(
+                &self.logits,
+                bucket,
+                bucket,
+                &mut self.sig_kl,
+                &mut self.sig_conf,
+                &mut self.sig_ent,
+            )?;
+        }
+        self.fused_valid = true;
+        self.finish_step(engine);
+        Ok(())
+    }
+
+    /// Per-slot `(kl, conf, ent)` rows for the **current** logits slab,
+    /// truncated to the live rows — `None` when the slab came from a
+    /// plain [`Self::step`]. Rows are in slot order and survive
+    /// retain/compaction repacks.
+    pub fn fused_signals(&self) -> Option<(&[f32], &[f32], &[f32])> {
+        if !self.fused_valid {
+            return None;
+        }
+        let n = self.slots.len();
+        Some((&self.sig_kl[..n], &self.sig_conf[..n], &self.sig_ent[..n]))
     }
 
     /// Keep only `keep` (branch indices; must be live). Re-gathers the KV
@@ -364,16 +487,18 @@ impl GenState {
             self.cache = new_cache;
 
             // Re-pack the logits slab to match the new slot order, into
-            // the spare buffer (swapped, not reallocated).
+            // the spare buffer (swapped, not reallocated) — and the
+            // cached fused-signal rows with the same permutation, so
+            // they stay valid across pruning/compaction.
             let v = self.vocab;
-            self.logits_spare.clear();
-            self.logits_spare.resize(new_bucket * v, 0.0);
-            for (i, &s) in self.keep_slots.iter().enumerate() {
-                self.logits_spare[i * v..(i + 1) * v]
-                    .copy_from_slice(&self.logits[s * v..(s + 1) * v]);
+            repack_rows(&mut self.logits, &mut self.logits_spare, &self.keep_slots, v, new_bucket);
+            if self.fused_valid {
+                let (ks, nb) = (&self.keep_slots, new_bucket);
+                repack_rows(&mut self.sig_kl, &mut self.sig_spare, ks, 1, nb);
+                repack_rows(&mut self.sig_conf, &mut self.sig_spare, ks, 1, nb);
+                repack_rows(&mut self.sig_ent, &mut self.sig_spare, ks, 1, nb);
             }
             self.mem.set_component("logits", new_bucket * v * 4);
-            std::mem::swap(&mut self.logits, &mut self.logits_spare);
         }
 
         self.slots.clear();

@@ -23,6 +23,15 @@ pub struct Runtime {
     /// Host→device transfers issued so far (perf_microbench asserts the
     /// steady-state decode step stops re-uploading constants like `q`).
     uploads: AtomicUsize,
+    /// Device→host transfers issued so far.
+    downloads: AtomicUsize,
+    /// `[bucket × vocab]` logits-slab crossings of the host boundary, in
+    /// each direction — the transfers that dominate per-token PCIe/ICI
+    /// traffic. `LoadedModel` notes them at the exact call sites;
+    /// perf_microbench asserts the fused superstep moves exactly one
+    /// slab per gated token (the download; the re-upload is gone).
+    slab_uploads: AtomicUsize,
+    slab_downloads: AtomicUsize,
 }
 
 impl Runtime {
@@ -33,6 +42,9 @@ impl Runtime {
             cache: Mutex::new(BTreeMap::new()),
             compile_log: Mutex::new(Vec::new()),
             uploads: AtomicUsize::new(0),
+            downloads: AtomicUsize::new(0),
+            slab_uploads: AtomicUsize::new(0),
+            slab_downloads: AtomicUsize::new(0),
         })
     }
 
@@ -73,6 +85,27 @@ impl Runtime {
         self.uploads.load(Ordering::Relaxed)
     }
 
+    /// Number of device→host transfers issued so far.
+    pub fn download_count(&self) -> usize {
+        self.downloads.load(Ordering::Relaxed)
+    }
+
+    /// Note a `[bucket × vocab]` logits-slab host→device upload.
+    pub fn note_slab_upload(&self) {
+        self.slab_uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Note a `[bucket × vocab]` logits-slab device→host download.
+    pub fn note_slab_download(&self) {
+        self.slab_downloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (slab uploads, slab downloads) so far — the per-token transfer
+    /// budget the superstep invariant is stated in.
+    pub fn slab_transfers(&self) -> (usize, usize) {
+        (self.slab_uploads.load(Ordering::Relaxed), self.slab_downloads.load(Ordering::Relaxed))
+    }
+
     // ---- host → device helpers ----
 
     pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
@@ -91,10 +124,28 @@ impl Runtime {
 
     // ---- device → host helpers ----
 
-    /// Pull an f32 buffer to a host vector.
-    pub fn to_host_f32(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+    /// Pull an f32 buffer into a fresh host vector.
+    ///
+    /// Cold-path convenience (load-time q, prefill). The per-token paths
+    /// go through [`Self::to_host_f32_into`], which reuses a
+    /// caller-owned staging buffer instead of allocating a `Vec` (and,
+    /// inside the `xla` crate, a `Literal`) per call.
+    pub fn to_host_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
         let lit = buf.to_literal_sync().context("device→host literal")?;
         Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Pull an f32 buffer into a reusable host staging buffer —
+    /// zero-allocation once `out` has grown to its high-water mark.
+    ///
+    /// On real hardware `out` plays the persistent pinned staging
+    /// allocation handed to `PJRT_Buffer_ToHostBuffer`; the stub's
+    /// [`PjRtBuffer::copy_into`] documents the mapping. Every steady-
+    /// state decode/superstep download routes through here.
+    pub fn to_host_f32_into(&self, buf: &PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        buf.copy_into(out).context("device→host copy")
     }
 }
 
@@ -117,9 +168,34 @@ mod tests {
         let rt = Runtime::new().unwrap();
         let before = rt.upload_count();
         let buf = rt.f32_buffer(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
-        let back = Runtime::to_host_f32(&buf).unwrap();
+        let back = rt.to_host_f32(&buf).unwrap();
         assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(rt.upload_count(), before + 1);
+        assert_eq!(rt.download_count(), 1);
+    }
+
+    #[test]
+    fn staging_download_reuses_buffer_and_counts() {
+        let rt = Runtime::new().unwrap();
+        let buf = rt.f32_buffer(&[5.0, 6.0], &[2]).unwrap();
+        let mut staging: Vec<f32> = Vec::with_capacity(4);
+        let base = staging.as_ptr();
+        rt.to_host_f32_into(&buf, &mut staging).unwrap();
+        rt.to_host_f32_into(&buf, &mut staging).unwrap();
+        assert_eq!(staging, vec![5.0, 6.0]);
+        // High-water-mark contract: no reallocation within capacity.
+        assert_eq!(staging.as_ptr(), base);
+        assert_eq!(rt.download_count(), 2);
+    }
+
+    #[test]
+    fn slab_transfer_counters() {
+        let rt = Runtime::new().unwrap();
+        assert_eq!(rt.slab_transfers(), (0, 0));
+        rt.note_slab_upload();
+        rt.note_slab_download();
+        rt.note_slab_download();
+        assert_eq!(rt.slab_transfers(), (1, 2));
     }
 
     #[test]

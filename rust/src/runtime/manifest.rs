@@ -66,6 +66,11 @@ pub struct ModelManifest {
     pub weights_file: PathBuf,
     pub prefill: PathBuf,
     pub decode: BTreeMap<usize, PathBuf>,
+    /// bucket → fused decode+signals superstep HLO path. Optional in the
+    /// manifest (older artifact sets predate the superstep); when a
+    /// bucket is absent the runtime falls back to the unfused
+    /// decode → signals sequence for gated tokens.
+    pub superstep: BTreeMap<usize, PathBuf>,
     /// (src_bucket, dst_bucket) → gather HLO path.
     pub gather: BTreeMap<(usize, usize), PathBuf>,
     /// Greedy accuracy measured at export time (training-quality gate).
@@ -174,6 +179,10 @@ impl Manifest {
         for (k, v) in arts.get("decode").and_then(Json::as_obj).into_iter().flatten() {
             decode.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
         }
+        let mut superstep = BTreeMap::new();
+        for (k, v) in arts.get("superstep").and_then(Json::as_obj).into_iter().flatten() {
+            superstep.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
+        }
         let mut gather = BTreeMap::new();
         for (k, v) in arts.get("gather").and_then(Json::as_obj).into_iter().flatten() {
             let (s, d) = k
@@ -203,6 +212,7 @@ impl Manifest {
             ),
             prefill,
             decode,
+            superstep,
             gather,
             greedy_acc,
         })
@@ -243,6 +253,7 @@ mod tests {
               "artifacts": {
                 "prefill": "prefill_sm_b1.hlo.txt",
                 "decode": {"1": "decode_sm_b1.hlo.txt", "2": "decode_sm_b2.hlo.txt"},
+                "superstep": {"1": "superstep_sm_b1.hlo.txt"},
                 "gather": {"1to2": "gather_sm_b1to2.hlo.txt"}
               },
               "training": {"greedy_acc": {"gsm_synth": 0.5}}
@@ -260,9 +271,23 @@ mod tests {
         let sm = m.model("sm").unwrap();
         assert_eq!(sm.config.d_model, 8);
         assert_eq!(sm.decode.len(), 2);
+        assert_eq!(
+            sm.superstep.get(&1).unwrap(),
+            &PathBuf::from("/tmp/a/superstep_sm_b1.hlo.txt")
+        );
         assert_eq!(sm.gather.get(&(1, 2)).unwrap(), &PathBuf::from("/tmp/a/gather_sm_b1to2.hlo.txt"));
         assert_eq!(sm.greedy_acc["gsm_synth"], 0.5);
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn superstep_is_optional_for_older_artifact_sets() {
+        let text =
+            tiny_manifest_json().replace(r#""superstep": {"1": "superstep_sm_b1.hlo.txt"},"#, "");
+        assert!(!text.contains("superstep"), "replace must strip the key");
+        let j = json::parse(&text).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("sm").unwrap().superstep.is_empty());
     }
 
     #[test]

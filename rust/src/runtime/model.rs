@@ -11,10 +11,33 @@
 //! `Mutex<BTreeMap>` path cache. The reference distribution `q` is
 //! uploaded to device once at load ([`LoadedModel::q_device`]) — the old
 //! per-call re-upload in `signals` is gone.
+//!
+//! # Superstep + argument-table dispatch (the per-token contract)
+//!
+//! Gated tokens run the fused **decode+signals superstep**
+//! ([`LoadedModel::superstep_into`]): one dispatch executes the forward
+//! pass *and* scores the fresh logits on-device against the resident
+//! `q`, so the `[bucket × vocab]` slab crosses the host boundary exactly
+//! once per token (the download for sampling) and is never re-uploaded.
+//! Non-gated tokens use the plain decode executable
+//! ([`LoadedModel::decode_into`]); the unfused
+//! `decode` → [`LoadedModel::signals_padded`] pair stays alive as the
+//! differential oracle (`tests/fused_step_equivalence.rs`).
+//!
+//! Every hot dispatch goes through the **persistent argument table**:
+//! the parameter handles are collected once at load into
+//! [`LoadedModel::param_table`] and passed as the prefix of
+//! `execute_prefixed`/`execute_b_donated`; only the 2–5 step inputs ride
+//! in a fixed-size stack tail. The per-step `Vec<&PjRtBuffer>` rebuild
+//! is gone. KV successor caches reuse the predecessor's device memory
+//! via buffer **donation** (PJRT input/output aliasing — see the `xla`
+//! crate's `execute_b_donated` docs), and logits/signal downloads land
+//! in caller-owned staging buffers — zero steady-state host allocation
+//! and zero successor k/v device allocation per token.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{PjRtBuffer, PjRtLoadedExecutable};
@@ -64,14 +87,26 @@ pub struct LoadedModel {
     pub name: String,
     pub config: ModelConfig,
     buckets: Vec<usize>,
-    param_bufs: Vec<PjRtBuffer>,
+    /// Persistent argument table: the parameter handles, collected once
+    /// at load in manifest order. Passed by reference as the prefix of
+    /// every prefill/decode/superstep dispatch
+    /// (`execute_prefixed`/`execute_b_donated`) — one table serves every
+    /// bucket, since all model executables share the same parameter
+    /// prefix; only the small per-step tail differs. Never rebuilt.
+    param_table: Vec<PjRtBuffer>,
     /// Unconditional reference logits q (BOS-only context), computed once.
     q_logits: Vec<f32>,
     /// `q` uploaded to device once at load; reused by every signals call.
     q_buf: OnceLock<PjRtBuffer>,
+    /// Reusable padded-prompt scratch for [`Self::prefill`] (Mutex: the
+    /// prompt pass runs once per request, never in the per-token loop,
+    /// so the uncontended lock is off the hot path).
+    prefill_scratch: Mutex<Vec<i32>>,
     prefill_exe: ExeCell,
     /// bucket → decode executable.
     decode_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → fused decode+signals superstep executable.
+    superstep_exes: BTreeMap<usize, ExeCell>,
     /// (src bucket, dst bucket) → gather executable.
     gather_exes: BTreeMap<(usize, usize), ExeCell>,
     /// bucket → fused signal-kernel executable.
@@ -85,14 +120,16 @@ impl LoadedModel {
     pub fn load(rt: Arc<Runtime>, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
         let mm: ModelManifest = manifest.model(name)?.clone();
         let weights = load_weights(&mm.weights_file, &mm.params)?;
-        let mut param_bufs = Vec::with_capacity(weights.len());
+        let mut param_table = Vec::with_capacity(weights.len());
         for (w, p) in weights.iter().zip(&mm.params) {
-            param_bufs.push(
+            param_table.push(
                 rt.f32_buffer(w, &p.shape).with_context(|| format!("uploading {}", p.name))?,
             );
         }
         let decode_exes =
             mm.decode.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let superstep_exes =
+            mm.superstep.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let gather_exes =
             mm.gather.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let signal_exes =
@@ -104,11 +141,13 @@ impl LoadedModel {
             buckets: manifest.buckets.clone(),
             prefill_exe: ExeCell::new(mm.prefill.clone()),
             decode_exes,
+            superstep_exes,
             gather_exes,
             signal_exes,
-            param_bufs,
+            param_table,
             q_logits: Vec::new(),
             q_buf: OnceLock::new(),
+            prefill_scratch: Mutex::new(Vec::new()),
         };
         // Reference distribution q: logits after a BOS-only prompt
         // (Algorithm 2 line 9: "generate unconditional logits q from
@@ -157,37 +196,54 @@ impl LoadedModel {
         if prompt_ids.is_empty() || prompt_ids.len() > p {
             bail!("prompt length {} out of range 1..={p}", prompt_ids.len());
         }
-        let mut padded = prompt_ids.to_vec();
-        padded.resize(p, crate::tokenizer::PAD_ID as i32);
-
         let exe = self.prefill_exe.get(&self.rt)?;
-        let tokens = self.rt.i32_buffer(&padded, &[1, p])?;
+        // Padded prompt rides in a reusable scratch buffer (grown once to
+        // `prompt_len`, then allocation-free), uploaded before the guard
+        // drops.
+        let tokens = {
+            let mut padded = self.prefill_scratch.lock().unwrap();
+            padded.clear();
+            padded.extend_from_slice(prompt_ids);
+            padded.resize(p, crate::tokenizer::PAD_ID as i32);
+            self.rt.i32_buffer(&padded, &[1, p])?
+        };
         let len = self.rt.i32_scalar(prompt_ids.len() as i32)?;
 
-        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
-        args.push(&tokens);
-        args.push(&len);
-        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        let mut out = exe.execute_prefixed(&self.param_table, &[&tokens, &len])?.swap_remove(0);
         if out.len() != 3 {
             bail!("prefill returned {} outputs, expected 3", out.len());
         }
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
-        let logits = Runtime::to_host_f32(&out[0])?;
+        let logits = self.rt.to_host_f32(&out[0])?;
         Ok((logits, KvCache { k, v, bucket: 1 }))
     }
 
-    /// One decode step for a bucketed batch. `tokens.len()` must equal
-    /// `cache.bucket`; `pos` is the slot this step writes. Returns the
-    /// flattened `[bucket * vocab]` logits and the successor cache.
-    pub fn decode(&self, tokens: &[i32], pos: usize, cache: &KvCache) -> Result<(Vec<f32>, KvCache)> {
-        let b = cache.bucket;
-        if tokens.len() != b {
-            bail!("decode: {} tokens for bucket {b}", tokens.len());
+    /// Shared step-shape contract for decode/superstep dispatches.
+    fn check_step(&self, tokens: &[i32], pos: usize, bucket: usize) -> Result<()> {
+        if tokens.len() != bucket {
+            bail!("decode: {} tokens for bucket {bucket}", tokens.len());
         }
         if pos >= self.config.max_seq {
             bail!("decode: pos {pos} >= max_seq {}", self.config.max_seq);
         }
+        Ok(())
+    }
+
+    /// One decode step for a bucketed batch — the **unfused oracle**
+    /// path. `tokens.len()` must equal `cache.bucket`; `pos` is the slot
+    /// this step writes. Returns the flattened `[bucket * vocab]` logits
+    /// and a freshly allocated successor cache (the predecessor stays
+    /// valid — differential tests and benches re-step from one cache).
+    /// The engine's per-token loop uses [`Self::decode_into`] instead.
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        pos: usize,
+        cache: &KvCache,
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let b = cache.bucket;
+        self.check_step(tokens, pos, b)?;
         let cell = self
             .decode_exes
             .get(&b)
@@ -196,19 +252,115 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
-        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
-        args.push(&tok);
-        args.push(&posb);
-        args.push(&cache.k);
-        args.push(&cache.v);
-        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        let mut out = exe
+            .execute_prefixed(&self.param_table, &[&tok, &posb, &cache.k, &cache.v])?
+            .swap_remove(0);
         if out.len() != 3 {
             bail!("decode returned {} outputs, expected 3", out.len());
         }
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
-        let logits = Runtime::to_host_f32(&out[0])?;
+        self.rt.note_slab_download();
+        let logits = self.rt.to_host_f32(&out[0])?;
         Ok((logits, KvCache { k, v, bucket: b }))
+    }
+
+    /// One decode step on the zero-allocation hot path: the logits land
+    /// in the caller's reusable `logits_out` staging buffer and the
+    /// predecessor k/v are **donated** — `cache`'s handles are replaced
+    /// in place by the successor buffers, which alias the same device
+    /// memory on real hardware (no per-token KV allocation).
+    pub fn decode_into(
+        &self,
+        tokens: &[i32],
+        pos: usize,
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step(tokens, pos, b)?;
+        let cell = self
+            .decode_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no decode artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_scalar(pos as i32)?;
+        let mut out = exe
+            .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
+            .swap_remove(0);
+        if out.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", out.len());
+        }
+        // Donation contract: the stale k/v handles are dropped here, in
+        // the same statement that installs their aliased successors.
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        Ok(())
+    }
+
+    /// Whether a fused decode+signals superstep executable exists for
+    /// `bucket` (older artifact sets predate it — callers fall back to
+    /// the unfused decode → signals sequence).
+    pub fn has_superstep(&self, bucket: usize) -> bool {
+        self.superstep_exes.contains_key(&bucket)
+    }
+
+    /// Fused **decode+signals superstep** — the gated-token hot path.
+    ///
+    /// One dispatch runs the decode forward pass and scores the fresh
+    /// logits on-device against the device-resident `q`, returning the
+    /// logits (into `logits_out`, for sampling) plus the three signal
+    /// vectors (bucket-length; rows ≥ live count are padding scores the
+    /// caller discards). Per call the `[bucket × vocab]` slab crosses
+    /// the host boundary exactly once (the download) — the unfused
+    /// path's re-upload through [`Self::signals_padded`] never happens —
+    /// and the predecessor k/v are donated exactly as in
+    /// [`Self::decode_into`]. Bit-identical to `decode` followed by
+    /// `signals_padded` on the downloaded slab
+    /// (`tests/fused_step_equivalence.rs` pins this).
+    #[allow(clippy::too_many_arguments)]
+    pub fn superstep_into(
+        &self,
+        tokens: &[i32],
+        pos: usize,
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+        kl_out: &mut Vec<f32>,
+        conf_out: &mut Vec<f32>,
+        ent_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step(tokens, pos, b)?;
+        let cell = self
+            .superstep_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no superstep artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_scalar(pos as i32)?;
+        let mut out = exe
+            .execute_b_donated(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[2, 3],
+            )?
+            .swap_remove(0);
+        if out.len() != 6 {
+            bail!("superstep returned {} outputs, expected 6", out.len());
+        }
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        self.rt.to_host_f32_into(&out[1], kl_out)?;
+        self.rt.to_host_f32_into(&out[2], conf_out)?;
+        self.rt.to_host_f32_into(&out[3], ent_out)?;
+        Ok(())
     }
 
     /// Re-index branches: `indices[i]` selects which source branch fills
@@ -229,8 +381,10 @@ impl LoadedModel {
             .ok_or_else(|| anyhow!("no gather artifact {}to{}", cache.bucket, dst_bucket))?;
         let exe = cell.get(&self.rt)?;
         let idx = self.rt.i32_buffer(indices, &[dst_bucket])?;
-        let args: Vec<&PjRtBuffer> = vec![&cache.k, &cache.v, &idx];
-        let mut out = exe.execute_b(&args)?.swap_remove(0);
+        // No parameter prefix; the three operands ride in the stack tail
+        // (no per-call argument-vector build). The source cache is
+        // *not* donated: broadcast reuses one primed cache repeatedly.
+        let mut out = exe.execute_prefixed(&[], &[&cache.k, &cache.v, &idx])?.swap_remove(0);
         if out.len() != 2 {
             bail!("gather returned {} outputs, expected 2", out.len());
         }
@@ -253,6 +407,27 @@ impl LoadedModel {
         rows: usize,
         bucket: usize,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
+        self.signals_padded_into(slab, rows, bucket, &mut kl, &mut conf, &mut ent)?;
+        Ok((kl, conf, ent))
+    }
+
+    /// [`Self::signals_padded`] writing into caller-owned staging
+    /// buffers (truncated to `rows`) — allocation-free once they reach
+    /// their high-water mark. Still pays the slab re-upload; on gated
+    /// tokens the engine avoids this entirely via
+    /// [`Self::superstep_into`], keeping this entry point as the unfused
+    /// differential oracle and the fallback for artifact sets without a
+    /// superstep.
+    pub fn signals_padded_into(
+        &self,
+        slab: &[f32],
+        rows: usize,
+        bucket: usize,
+        kl_out: &mut Vec<f32>,
+        conf_out: &mut Vec<f32>,
+        ent_out: &mut Vec<f32>,
+    ) -> Result<()> {
         let v = self.config.vocab;
         signals_shape_check(rows, bucket, slab.len(), v)?;
         let cell = self
@@ -261,18 +436,19 @@ impl LoadedModel {
             .ok_or_else(|| anyhow!("no signals artifact for bucket {bucket}"))?;
         let exe = cell.get(&self.rt)?;
 
+        self.rt.note_slab_upload();
         let lg = self.rt.f32_buffer(slab, &[bucket, v])?;
-        let out = exe.execute_b(&[&lg, self.q_device()])?.swap_remove(0);
+        let out = exe.execute_prefixed(&[], &[&lg, self.q_device()])?.swap_remove(0);
         if out.len() != 3 {
             bail!("signals returned {} outputs, expected 3", out.len());
         }
-        let mut kl = Runtime::to_host_f32(&out[0])?;
-        let mut conf = Runtime::to_host_f32(&out[1])?;
-        let mut ent = Runtime::to_host_f32(&out[2])?;
-        kl.truncate(rows);
-        conf.truncate(rows);
-        ent.truncate(rows);
-        Ok((kl, conf, ent))
+        self.rt.to_host_f32_into(&out[0], kl_out)?;
+        self.rt.to_host_f32_into(&out[1], conf_out)?;
+        self.rt.to_host_f32_into(&out[2], ent_out)?;
+        kl_out.truncate(rows);
+        conf_out.truncate(rows);
+        ent_out.truncate(rows);
+        Ok(())
     }
 
     /// Fused L1 signal kernel for a tight `[rows × vocab]` logits slab.

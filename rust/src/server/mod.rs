@@ -86,8 +86,12 @@ impl Server {
         &self.run_cfg
     }
 
-    /// Enqueue a request; returns the response channel.
-    pub fn submit(&self, prompt: &str, seed: u64) -> Receiver<Result<Response>> {
+    /// Enqueue a request; returns the response channel, or `Err` when
+    /// the queue is closed — every worker has died (or the server is
+    /// shutting down). A dead pool degrades into failed submissions the
+    /// caller can report or retry elsewhere; it must never panic the
+    /// submitting thread.
+    pub fn submit(&self, prompt: &str, seed: u64) -> Result<Receiver<Result<Response>>> {
         let (resp_tx, resp_rx) = channel();
         let req = Request {
             prompt: prompt.to_string(),
@@ -95,16 +99,23 @@ impl Server {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        self.tx.as_ref().expect("server alive").send(req).expect("workers alive");
-        resp_rx
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
+        tx.send(req)
+            .map_err(|_| anyhow!("request queue closed — all workers have exited"))?;
+        Ok(resp_rx)
     }
 
-    /// Submit many prompts and wait for all responses (submission order).
+    /// Submit many prompts and wait for all responses (submission
+    /// order). Prompts that could not be enqueued (closed queue) come
+    /// back as `Err` entries in the same positions.
     pub fn submit_all(&self, prompts: &[String], seed0: u64) -> Vec<Result<Response>> {
         let rxs: Vec<_> =
             prompts.iter().enumerate().map(|(i, p)| self.submit(p, seed0 + i as u64)).collect();
         rxs.into_iter()
-            .map(|rx| rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped response"))))
+            .map(|rx| match rx {
+                Ok(rx) => rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped response"))),
+                Err(e) => Err(e),
+            })
             .collect()
     }
 
@@ -169,5 +180,23 @@ fn worker_loop(
             Response { output, queue_seconds, service_seconds, worker: worker_id }
         });
         let _ = req.resp.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_errs_instead_of_panicking_when_queue_closed() {
+        // A server whose workers have all exited: the shared receiver is
+        // gone, so the request channel is closed.
+        let (tx, rx) = channel::<Request>();
+        drop(rx);
+        let server = Server { tx: Some(tx), workers: Vec::new(), run_cfg: RunConfig::default() };
+        assert!(server.submit("q: 1+1?\na:", 0).is_err());
+        let out = server.submit_all(&["a".to_string(), "b".to_string()], 0);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.is_err()), "closed queue must yield Errs");
     }
 }

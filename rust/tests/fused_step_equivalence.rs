@@ -1,0 +1,235 @@
+//! Fused-superstep parity suite: the decode+signals superstep must be
+//! **bit-identical** to the unfused `decode` → `signals_padded` sequence
+//! it replaced — same logits, same (KL, confidence, entropy) — across
+//! buckets, padding rows, and NaN-poisoned inputs. The unfused pair
+//! stays alive precisely so this differential oracle keeps running.
+//!
+//! Artifact-gated tests skip (loudly) when `artifacts/` is absent; the
+//! pure-logic tests at the bottom (signal-row repack permutation) always
+//! run.
+
+use std::sync::Arc;
+
+use kappa::engine::{repack_rows, Engine};
+use kappa::runtime::{KvCache, LoadedModel, Manifest, Runtime};
+
+fn artifacts_dir() -> String {
+    std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn load() -> Option<Arc<Engine>> {
+    let manifest = match Manifest::load(artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts — run `make artifacts`): {e:#}");
+            return None;
+        }
+    };
+    let rt = Arc::new(Runtime::new().expect("pjrt client"));
+    let model = LoadedModel::load(rt, &manifest, "sm").expect("load sm");
+    Some(Arc::new(Engine::new(Arc::new(model))))
+}
+
+/// Prefill a short prompt and broadcast the primed cache to `bucket`.
+fn primed_cache(engine: &Engine, bucket: usize) -> (Vec<i32>, usize, KvCache) {
+    let model = engine.model();
+    let tok = engine.tokenizer();
+    let (ids, len) = tok.encode_prompt("q: 12+34?\na:", model.config.prompt_len).unwrap();
+    let ids_i32: Vec<i32> = ids[..len].iter().map(|&t| t as i32).collect();
+    let (_, cache1) = model.prefill(&ids_i32).unwrap();
+    let idx = vec![0i32; bucket];
+    let cache = model.gather(&cache1, bucket, &idx).unwrap();
+    (ids_i32, len, cache)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+#[test]
+fn superstep_is_bit_identical_to_decode_then_signals_across_buckets() {
+    let Some(engine) = load() else { return };
+    let model = engine.model();
+    for &b in model.buckets() {
+        if !model.has_superstep(b) {
+            eprintln!("SKIP bucket {b}: artifact set has no superstep");
+            continue;
+        }
+        let (_, len, cache) = primed_cache(&engine, b);
+        let tokens: Vec<i32> = (0..b as i32).map(|i| 5 + (i % 7)).collect();
+
+        // Unfused oracle: decode (non-destructive), then score the
+        // downloaded slab with the standalone signal executable.
+        let (logits_u, cache_u) = model.decode(&tokens, len, &cache).unwrap();
+        let (kl_u, conf_u, ent_u) = model.signals_padded(&logits_u, b, b).unwrap();
+
+        // Fused superstep on an identical predecessor cache.
+        let (_, _, mut cache_f) = primed_cache(&engine, b);
+        let (mut lg, mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        model
+            .superstep_into(&tokens, len, &mut cache_f, &mut lg, &mut kl, &mut conf, &mut ent)
+            .unwrap();
+
+        assert_bits_eq(&lg, &logits_u, "logits");
+        assert_bits_eq(&kl, &kl_u, "kl");
+        assert_bits_eq(&conf, &conf_u, "conf");
+        assert_bits_eq(&ent, &ent_u, "ent");
+
+        // Successor caches must step identically (k/v parity): one more
+        // decode from each must give the same logits.
+        let tokens2: Vec<i32> = vec![3; b];
+        let (next_u, _) = model.decode(&tokens2, len + 1, &cache_u).unwrap();
+        let (next_f, _) = model.decode(&tokens2, len + 1, &cache_f).unwrap();
+        assert_bits_eq(&next_f, &next_u, "successor-cache logits");
+    }
+}
+
+#[test]
+fn superstep_padding_rows_do_not_disturb_live_rows() {
+    let Some(engine) = load() else { return };
+    let model = engine.model();
+    let b = 4;
+    if !model.has_superstep(b) {
+        eprintln!("SKIP: no superstep for bucket {b}");
+        return;
+    }
+    let v = model.config.vocab;
+    let rows = 2; // live rows; 2 padding rows carry stale tokens
+
+    let (_, len, mut cache_a) = primed_cache(&engine, b);
+    let (_, _, mut cache_b) = primed_cache(&engine, b);
+    let tok_a = vec![5, 9, 0, 0];
+    let tok_b = vec![5, 9, 7, 11]; // different garbage in padding rows
+
+    let mk = || (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let (mut lg_a, mut kl_a, mut cf_a, mut en_a) = mk();
+    let (mut lg_b, mut kl_b, mut cf_b, mut en_b) = mk();
+    model
+        .superstep_into(&tok_a, len, &mut cache_a, &mut lg_a, &mut kl_a, &mut cf_a, &mut en_a)
+        .unwrap();
+    model
+        .superstep_into(&tok_b, len, &mut cache_b, &mut lg_b, &mut kl_b, &mut cf_b, &mut en_b)
+        .unwrap();
+
+    // Live rows are independent of padding-row contents.
+    assert_bits_eq(&lg_a[..rows * v], &lg_b[..rows * v], "live logits rows");
+    assert_bits_eq(&kl_a[..rows], &kl_b[..rows], "live kl rows");
+    assert_bits_eq(&cf_a[..rows], &cf_b[..rows], "live conf rows");
+    assert_bits_eq(&en_a[..rows], &en_b[..rows], "live ent rows");
+}
+
+#[test]
+fn nan_logits_degrade_deterministically_not_fatally() {
+    let Some(engine) = load() else { return };
+    let model = engine.model();
+    let b = 2;
+    let v = model.config.vocab;
+    // Row 0 poisoned with NaN, row 1 clean.
+    let mut slab: Vec<f32> = (0..b * v).map(|i| ((i * 131) % 97) as f32 / 9.0 - 5.0).collect();
+    slab[3] = f32::NAN;
+
+    let (kl, conf, ent) = model.signals_padded(&slab, b, b).expect("NaN must not fail the call");
+    // Poisoned row: NaN propagates through softmax → all three signals.
+    assert!(kl[0].is_nan() && conf[0].is_nan() && ent[0].is_nan(), "{kl:?} {conf:?} {ent:?}");
+    // Clean row is bit-identical to scoring it without the poisoned
+    // neighbour (row-wise reductions never mix rows).
+    let mut clean = slab.clone();
+    for x in &mut clean[..v] {
+        *x = 0.0;
+    }
+    let (kl2, conf2, ent2) = model.signals_padded(&clean, b, b).unwrap();
+    assert_eq!(kl[1].to_bits(), kl2[1].to_bits());
+    assert_eq!(conf[1].to_bits(), conf2[1].to_bits());
+    assert_eq!(ent[1].to_bits(), ent2[1].to_bits());
+    // And determinism: the same poisoned slab scores identically twice.
+    let (kl3, _, _) = model.signals_padded(&slab, b, b).unwrap();
+    assert_eq!(kl[0].to_bits(), kl3[0].to_bits());
+}
+
+#[test]
+fn engine_fused_signals_survive_pruning_repack() {
+    let Some(engine) = load() else { return };
+    let model = engine.model();
+    if !model.has_superstep(4) || !model.has_superstep(2) {
+        eprintln!("SKIP: artifact set has no superstep");
+        return;
+    }
+    let mut state = engine.start("q: 12+34?\na:", 4).unwrap();
+    // One fused step over all four branches.
+    let sampled: Vec<(u32, f64)> = (0..4).map(|i| (5 + i as u32, -1.0)).collect();
+    state.step_fused(&engine, &sampled).unwrap();
+    let (kl_all, conf_all, ent_all) = {
+        let (a, b, c) = state.fused_signals().expect("fused rows cached");
+        (a.to_vec(), b.to_vec(), c.to_vec())
+    };
+
+    // Prune to branches {2, 0}: the cached signal rows must follow the
+    // same permutation the logits slab does.
+    state.retain_branches(&engine, &[2, 0]).unwrap();
+    let (kl, conf, ent) = state.fused_signals().expect("still valid after repack");
+    assert_eq!(kl.len(), 2);
+    for (dst, src) in [(0usize, 2usize), (1, 0)] {
+        assert_eq!(kl[dst].to_bits(), kl_all[src].to_bits(), "kl row {dst}");
+        assert_eq!(conf[dst].to_bits(), conf_all[src].to_bits(), "conf row {dst}");
+        assert_eq!(ent[dst].to_bits(), ent_all[src].to_bits(), "ent row {dst}");
+    }
+    // The repacked rows must equal re-scoring the repacked slab from
+    // scratch with the standalone executable (the unfused oracle).
+    let (kl_o, conf_o, ent_o) =
+        model.signals_padded(state.logits_slab(), state.n_live(), state.bucket()).unwrap();
+    assert_bits_eq(kl, &kl_o, "kl vs oracle");
+    assert_bits_eq(conf, &conf_o, "conf vs oracle");
+    assert_bits_eq(ent, &ent_o, "ent vs oracle");
+
+    // A plain (non-gated) step invalidates the cache.
+    state.step(&engine, &[(5, -1.0), (6, -1.0)]).unwrap();
+    assert!(state.fused_signals().is_none());
+}
+
+// ---- pure-logic tests (no artifacts needed) ----
+
+#[test]
+fn repack_rows_applies_arbitrary_permutations() {
+    // 3 rows of width 2, keep slots [2, 0] into a 4-row destination.
+    let mut src = vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1];
+    let mut spare = Vec::new();
+    repack_rows(&mut src, &mut spare, &[2, 0], 2, 4);
+    assert_eq!(src, vec![2.0, 2.1, 0.0, 0.1, 0.0, 0.0, 0.0, 0.0]);
+
+    // Descending keep order must not clobber sources (regression for an
+    // in-place shuffle): [1, 0] swaps the two rows.
+    let mut src = vec![10.0, 20.0];
+    repack_rows(&mut src, &mut spare, &[1, 0], 1, 2);
+    assert_eq!(src, vec![20.0, 10.0]);
+}
+
+#[test]
+fn repack_rows_is_allocation_free_at_high_water_mark() {
+    let mut src = vec![1.0f32; 8];
+    let mut spare = Vec::with_capacity(8);
+    let spare_base = spare.as_ptr();
+    repack_rows(&mut src, &mut spare, &[1, 0], 4, 2);
+    // After the swap, `spare` holds the old src allocation and vice
+    // versa; repeating the repack ping-pongs between the same two
+    // buffers without reallocating.
+    let src_base = src.as_ptr();
+    assert_eq!(src_base, spare_base);
+    repack_rows(&mut src, &mut spare, &[0, 1], 4, 2);
+    repack_rows(&mut src, &mut spare, &[1, 0], 4, 2);
+    assert_eq!(src.as_ptr(), src_base);
+}
+
+#[test]
+fn repack_rows_preserves_nan_payloads_bitwise() {
+    // NaN scores must survive the repack bit-for-bit — degradation
+    // stays deterministic end to end.
+    let weird = f32::from_bits(0x7fc0_dead);
+    let mut src = vec![1.0, weird, 3.0];
+    let mut spare = Vec::new();
+    repack_rows(&mut src, &mut spare, &[1, 2], 1, 2);
+    assert_eq!(src[0].to_bits(), 0x7fc0_dead);
+    assert_eq!(src[1], 3.0);
+}

@@ -59,11 +59,11 @@ fn server_handles_oversized_prompt_gracefully() {
     let cfg = RunConfig { method: Method::Greedy, n: 1, ..RunConfig::default() };
     let server = Server::start(&artifacts_dir(), "sm", 1, cfg).expect("boot");
     let huge = "q: ".to_string() + &"1+".repeat(200) + "1?\na:";
-    let rx = server.submit(&huge, 0);
+    let rx = server.submit(&huge, 0).expect("queue open");
     let resp = rx.recv().expect("channel alive");
     assert!(resp.is_err(), "oversized prompt should error, not crash the worker");
     // Worker must survive and serve the next request.
-    let ok = server.submit("q: 1+1?\na:", 0).recv().expect("alive");
+    let ok = server.submit("q: 1+1?\na:", 0).expect("queue open").recv().expect("alive");
     assert!(ok.is_ok());
     server.shutdown();
 }

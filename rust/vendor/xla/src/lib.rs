@@ -10,10 +10,14 @@
 //!   helpers passes unmodified.
 //! - [`HloModuleProto`] / [`XlaComputation`] / [`PjRtLoadedExecutable`] —
 //!   artifact loading and compilation *bookkeeping* work (file I/O
-//!   errors, caching, compile logging), but [`PjRtLoadedExecutable::
-//!   execute_b`] returns an error: the stub does not interpret HLO.
-//!   Integration tests and benches that need real execution already skip
-//!   when `artifacts/` is absent, which is always the case offline.
+//!   errors, caching, compile logging), but the execute entry points
+//!   ([`PjRtLoadedExecutable::execute_b`], [`PjRtLoadedExecutable::
+//!   execute_prefixed`], [`PjRtLoadedExecutable::execute_b_donated`])
+//!   return an error: the stub does not interpret HLO. Integration tests
+//!   and benches that need real execution already skip when `artifacts/`
+//!   is absent, which is always the case offline. The prefixed/donated
+//!   entry points document their PJRT mapping (persistent argument
+//!   array; input/output aliasing) so the hardware swap is mechanical.
 //!
 //! To run on real hardware, replace the `[patch]`-style path dependency
 //! in `rust/Cargo.toml` with the PJRT-backed crate; no `kappa` source
@@ -60,6 +64,8 @@ impl ElemData {
 pub trait NativeType: Copy {
     fn wrap(data: &[Self]) -> ElemData;
     fn unwrap(data: &ElemData) -> Option<Vec<Self>>;
+    /// Borrowing accessor — the zero-allocation download path.
+    fn unwrap_ref(data: &ElemData) -> Option<&[Self]>;
 }
 
 impl NativeType for f32 {
@@ -72,6 +78,12 @@ impl NativeType for f32 {
             _ => None,
         }
     }
+    fn unwrap_ref(data: &ElemData) -> Option<&[f32]> {
+        match data {
+            ElemData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 impl NativeType for i32 {
@@ -81,6 +93,12 @@ impl NativeType for i32 {
     fn unwrap(data: &ElemData) -> Option<Vec<i32>> {
         match data {
             ElemData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn unwrap_ref(data: &ElemData) -> Option<&[i32]> {
+        match data {
+            ElemData::I32(v) => Some(v),
             _ => None,
         }
     }
@@ -101,6 +119,30 @@ impl PjRtBuffer {
     /// Synchronous device→host copy.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(Literal { data: self.data.clone(), dims: self.dims.clone() })
+    }
+
+    /// Synchronous device→host copy into a caller-provided buffer,
+    /// cleared and refilled with the buffer's elements.
+    ///
+    /// Real-hardware mapping: `PJRT_Buffer_ToHostBuffer` writing into a
+    /// persistent (ideally pinned) host staging allocation. Once `out`
+    /// has grown to its high-water mark the call performs **zero host
+    /// allocations** — this is the decode hot path's download primitive,
+    /// replacing the per-call `Literal` + `Vec` pair that
+    /// [`Self::to_literal_sync`] allocates.
+    pub fn copy_into<T: NativeType>(&self, out: &mut Vec<T>) -> Result<()> {
+        let src = match T::unwrap_ref(&self.data) {
+            Some(s) => s,
+            None => {
+                return err(format!(
+                    "buffer holds {}, asked for another type",
+                    self.data.type_name()
+                ))
+            }
+        };
+        out.clear();
+        out.extend_from_slice(src);
+        Ok(())
     }
 }
 
@@ -168,6 +210,64 @@ impl PjRtLoadedExecutable {
         &self,
         _args: &[B],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(
+            "xla stub backend cannot execute HLO — swap rust/vendor/xla for the \
+             PJRT-backed crate to run compiled artifacts",
+        )
+    }
+
+    /// Execute with a **persistent argument prefix** followed by a small
+    /// per-call tail: the full argument list is `prefix ++ tail`.
+    ///
+    /// The prefix is the caller's long-lived buffer table (typically the
+    /// model parameters, collected once at load); only the 2–4 step
+    /// inputs ride in `tail`, which fits in a stack array. Real-hardware
+    /// mapping: a PJRT wrapper keeps one `PJRT_Buffer* argv[]` array
+    /// alive per executable, writes the tail pointers into its last
+    /// slots, and calls `PJRT_LoadedExecutable_Execute` — no per-step
+    /// argument-vector rebuild, no heap traffic at dispatch.
+    pub fn execute_prefixed(
+        &self,
+        prefix: &[PjRtBuffer],
+        tail: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_b_donated(prefix, tail, &[])
+    }
+
+    /// [`Self::execute_prefixed`] with **input buffer donation**: the
+    /// tail arguments named by `donated_tail` (indices into `tail`) hand
+    /// their device memory to the execution, which may alias it into the
+    /// outputs instead of allocating fresh buffers.
+    ///
+    /// Real-hardware mapping: PJRT input/output aliasing — the HLO
+    /// module's `input_output_alias` config (what `jax.jit`'s
+    /// `donate_argnums` lowers to), set up at compile time for the k/v
+    /// cache operands; at execute time the donated `PJRT_Buffer`s are
+    /// consumed and the aliased outputs returned as fresh handles over
+    /// the same device memory. Per decoded token this saves one
+    /// allocate+copy pair per donated operand (the KV caches are by far
+    /// the largest buffers in flight).
+    ///
+    /// Contract (enforced by the caller, not expressible in borrows):
+    /// after a successful call every donated handle is **stale** — it
+    /// must be dropped without further use. `kappa`'s `KvCache` upholds
+    /// this by replacing its k/v handles with the returned aliases in
+    /// the same statement. The stub validates indices, then refuses to
+    /// execute like every other stub execute path.
+    pub fn execute_b_donated(
+        &self,
+        _prefix: &[PjRtBuffer],
+        tail: &[&PjRtBuffer],
+        donated_tail: &[usize],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        for &i in donated_tail {
+            if i >= tail.len() {
+                return err(format!(
+                    "donated tail index {i} out of range for {} tail args",
+                    tail.len()
+                ));
+            }
+        }
         err(
             "xla stub backend cannot execute HLO — swap rust/vendor/xla for the \
              PJRT-backed crate to run compiled artifacts",
@@ -249,5 +349,32 @@ mod tests {
         let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
         let args: Vec<&PjRtBuffer> = vec![];
         assert!(exe.execute_b(&args).is_err());
+    }
+
+    #[test]
+    fn copy_into_reuses_capacity_and_checks_types() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[1.0f32, 2.0, 3.0], &[3], None).unwrap();
+        let mut out: Vec<f32> = Vec::with_capacity(8);
+        let base = out.as_ptr();
+        b.copy_into(&mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        // Within capacity: no reallocation (the staging-buffer contract).
+        assert_eq!(out.as_ptr(), base);
+        let mut wrong: Vec<i32> = Vec::new();
+        assert!(b.copy_into(&mut wrong).is_err());
+    }
+
+    #[test]
+    fn donated_index_out_of_range_is_validated() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule stub".into() };
+        let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let b = c.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        let e = exe.execute_b_donated(&[], &[&b], &[3]).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // In-range donation reaches the (stub) execute refusal instead.
+        let e = exe.execute_b_donated(&[], &[&b], &[0]).unwrap_err();
+        assert!(e.to_string().contains("cannot execute"), "{e}");
     }
 }
