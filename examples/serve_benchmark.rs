@@ -45,17 +45,24 @@ fn main() -> anyhow::Result<()> {
         let mut correct = 0usize;
         let mut tokens = 0usize;
         let mut peak_mb: f64 = 0.0;
+        let mut serve_kv_mb: f64 = 0.0;
+        let mut serve_stats = kappa::metrics::ServeMetrics::default();
         for (resp, prob) in responses.iter().zip(&problems) {
             let r = resp.as_ref().expect("request failed");
             lat.push(r.queue_seconds + r.service_seconds);
+            serve_stats.push(r.queue_seconds, r.service_seconds, r.inflight);
             tokens += r.output.metrics.total_tokens;
+            // Per-request peak (the paper's M_peak column) and the
+            // worker's co-resident KV high-water mark are different
+            // numbers once requests overlap — report both.
             peak_mb = peak_mb.max(r.output.metrics.peak_mem_bytes as f64 / (1024.0 * 1024.0));
+            serve_kv_mb = serve_kv_mb.max(r.worker_kv_peak_bytes as f64 / (1024.0 * 1024.0));
             if eval::is_correct(&r.output.text, prob.answer) {
                 correct += 1;
             }
         }
         println!(
-            "{:6}: {:.2} req/s  {:.0} tok/s  acc {:.3}  latency p50 {:.2}s p95 {:.2}s  peak {:.1} MB  total {:.1}s",
+            "{:6}: {:.2} req/s  {:.0} tok/s  acc {:.3}  latency p50 {:.2}s p95 {:.2}s  peak/req {:.1} MB  serve-kv {:.1} MB  total {:.1}s  inflight {:.2}",
             method.name(),
             n_requests as f64 / wall,
             tokens as f64 / wall,
@@ -63,7 +70,9 @@ fn main() -> anyhow::Result<()> {
             stats::percentile(&lat, 50.0),
             stats::percentile(&lat, 95.0),
             peak_mb,
+            serve_kv_mb,
             wall,
+            serve_stats.mean_inflight(),
         );
         server.shutdown();
     }

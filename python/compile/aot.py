@@ -60,6 +60,44 @@ def superstep(cfg: ModelConfig, params: dict, token, pos, k_cache, v_cache, q_lo
     return logits, kl, conf, ent, k_cache, v_cache
 
 
+def lower_superstep(cfg: ModelConfig, b: int, donate: bool = True):
+    """Lower the fused superstep for bucket ``b`` with **compile-time k/v
+    donation**.
+
+    The runtime layer donates the predecessor k/v buffers on every
+    superstep dispatch (``execute_b_donated``); ``donate_argnums`` here
+    mirrors that contract into the exported HLO as an
+    ``input_output_alias`` config (exactly what ``jax.jit``'s donation
+    lowers to), so XLA plans the aliasing at compile time instead of
+    discovering it per call. The k/v cache operands sit at flat argument
+    positions ``n_params + 2`` / ``n_params + 3`` (params, token, pos,
+    k, v, q) and alias tuple outputs 4 / 5 of
+    ``(logits, kl, conf, ent, k, v)`` — ``test_superstep.py`` pins both
+    the alias table and result parity against the undonated lowering
+    (``donate=False``, the parity tests' oracle).
+    """
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def superstep_fn(*args):
+        p = dict(zip(names, args[:n_p]))
+        token, pos, kc, vc, q = args[n_p : n_p + 5]
+        return superstep(cfg, p, token, pos, kc, vc, q)
+
+    donate_argnums = (n_p + 2, n_p + 3) if donate else ()
+    return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
+        *param_specs,
+        _spec((b,), jnp.int32),
+        _spec((), jnp.int32),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+        _spec((cfg.vocab,)),
+    )
+
+
 def to_hlo_text(lowered) -> str:
     """jax Lowered → XLA HLO text (the only interchange the Rust side accepts)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -135,23 +173,12 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
     # --- fused decode+signals superstep per bucket ---
     # Same argument prefix as decode (params, token, pos, k, v) plus the
     # device-resident q as the final input, so the Rust side reuses one
-    # persistent argument table for both executables.
+    # persistent argument table for both executables. Lowered with k/v
+    # donation so the HLO carries the input_output_alias config matching
+    # the runtime's execute_b_donated dispatch (see lower_superstep).
     for b in buckets:
-        def superstep_fn(*args):
-            p = as_dict(args[:n_p])
-            token, pos, kc, vc, q = args[n_p : n_p + 5]
-            return superstep(cfg, p, token, pos, kc, vc, q)
-
-        lowered = jax.jit(superstep_fn).lower(
-            *param_specs,
-            _spec((b,), jnp.int32),
-            _spec((), jnp.int32),
-            _spec((lyr, b, h, s, dh)),
-            _spec((lyr, b, h, s, dh)),
-            _spec((cfg.vocab,)),
-        )
         arts["superstep"][str(b)] = _write(
-            out_dir, f"superstep_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lowered)
+            out_dir, f"superstep_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_superstep(cfg, b))
         )
 
     # --- KV gather (broadcast / compaction) ---

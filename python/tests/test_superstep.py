@@ -7,12 +7,14 @@ keeps alive). These tests pin that contract at the graph level, where it
 is cheap to sweep buckets and degenerate inputs.
 """
 
+import re
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from compile.aot import superstep
+from compile.aot import lower_superstep, superstep, to_hlo_text
 from compile.kernels.signals import signals
 from compile.model import CONFIGS, ModelConfig, decode_step, init_params, prefill
 
@@ -65,6 +67,41 @@ class TestSuperstepParity:
         out_b = superstep(cfg, params, token_b, pos, kc, vc, q)
         for oa, ob in zip(out_a[:4], out_b[:4]):  # logits, kl, conf, ent
             np.testing.assert_array_equal(np.asarray(oa)[:2], np.asarray(ob)[:2])
+
+    @pytest.mark.parametrize("b", [1, 4])
+    def test_exported_hlo_carries_kv_input_output_alias(self, setup, b):
+        # The runtime donates k/v on every superstep dispatch
+        # (execute_b_donated); the exported HLO must mirror that at
+        # compile time. Outputs are (logits, kl, conf, ent, k, v) and the
+        # flat argument order is (params…, token, pos, k, v, q), so the
+        # alias table must map output {4} ← param n_p+2 and {5} ← n_p+3.
+        cfg, *_ = setup
+        n_p = len(cfg.param_names())
+        hlo = to_hlo_text(lower_superstep(cfg, b))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        assert re.search(rf"\{{4\}}:\s*\({n_p + 2},", header), header
+        assert re.search(rf"\{{5\}}:\s*\({n_p + 3},", header), header
+
+    def test_donated_lowering_is_result_identical_to_undonated(self, setup):
+        # Donation is a memory-planning annotation, not a semantic one:
+        # the donated compiled superstep must produce bitwise-identical
+        # outputs to the same lowering compiled without donation.
+        cfg, params, k1, v1, q = setup
+        b = 2
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+        pos = jnp.int32(4)
+
+        names = cfg.param_names()
+        flat = [params[n] for n in names]
+        # Undonated oracle first: the donated call consumes kc/vc (their
+        # buffers are handed to the execution and must not be reused).
+        plain = lower_superstep(cfg, b, donate=False).compile()(*flat, token, pos, kc, vc, q)
+        donated = lower_superstep(cfg, b).compile()(*flat, token, pos, kc, vc, q)
+        assert len(donated) == len(plain) == 6
+        for got, want in zip(donated, plain):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
     def test_nan_q_degrades_not_crashes(self, setup):
         # A poisoned reference distribution must produce NaN signals, not

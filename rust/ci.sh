@@ -31,13 +31,16 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
     # KAPPA_CI_REQUIRE_PERF=1 (set it when building against the real
     # PJRT-backed crate so perf-harness rot still fails the gate).
     if cargo bench --bench perf_microbench -- --artifacts "$ARTIFACTS" --iters 3; then
-        # The bench asserts the superstep slab-transfer budget itself;
-        # here we only check the machine-readable trajectory landed.
-        if [ ! -f "$ARTIFACTS/reports/BENCH_decode.json" ]; then
-            echo "[ci] perf smoke ran but $ARTIFACTS/reports/BENCH_decode.json is missing"
-            exit 1
-        fi
-        echo "[ci] perf smoke OK — decode trajectory in $ARTIFACTS/reports/BENCH_decode.json"
+        # The bench asserts the superstep slab-transfer budget and the
+        # scheduler-vs-baseline throughput win itself; here we only check
+        # the machine-readable trajectories landed.
+        for report in BENCH_decode BENCH_serve; do
+            if [ ! -f "$ARTIFACTS/reports/$report.json" ]; then
+                echo "[ci] perf smoke ran but $ARTIFACTS/reports/$report.json is missing"
+                exit 1
+            fi
+        done
+        echo "[ci] perf smoke OK — decode + serve trajectories in $ARTIFACTS/reports/"
     else
         if [ "${KAPPA_CI_REQUIRE_PERF:-0}" = "1" ]; then
             echo "[ci] perf smoke FAILED (KAPPA_CI_REQUIRE_PERF=1)"; exit 1

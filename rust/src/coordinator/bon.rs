@@ -9,65 +9,99 @@
 //! BoN never gates, so every token takes the plain (non-superstep)
 //! decode path — which still donates the predecessor KV cache and lands
 //! logits in the engine's reusable slab (`GenState::step`).
+//!
+//! Driver shape: `Decode` (one batched sampled token per poll, finished
+//! branches compacted out) → `Done` (negative-perplexity selection).
 
 use anyhow::Result;
 
-use crate::engine::Engine;
-use crate::metrics::RequestMetrics;
+use crate::engine::{Engine, GenState};
 use crate::util::rng::Pcg64;
 
 use super::config::RunConfig;
 use super::sampler::SamplerScratch;
-use super::GenOutput;
+use super::{finalize, Driver, StepOutcome};
 
-pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
-    let mut state = engine.start_opts(
-        prompt,
-        cfg.n,
-        crate::engine::StartOpts { compact: cfg.compact },
-    )?;
-    // Independent RNG stream per branch, keyed by request seed.
-    let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-    let vocab = engine.model().config.vocab;
-    let mut scratch = SamplerScratch::new();
-    let mut live: Vec<usize> = Vec::with_capacity(cfg.n);
+/// Resumable Full-BoN state machine (see [`super::Driver`]).
+pub struct BonDriver {
+    state: GenState,
+    cfg: RunConfig,
+    rngs: Vec<Pcg64>,
+    scratch: SamplerScratch,
+    /// Snapshot of the live branch list, reused every step (`step`
+    /// mutates the state the list borrows from).
+    live: Vec<usize>,
+    steps: usize,
+    done: bool,
+}
 
-    let mut steps = 0usize;
-    while steps < cfg.max_new_tokens && state.remaining() > 0 {
-        live.clear();
-        live.extend_from_slice(state.live_branches());
-        if live.is_empty() {
-            break;
-        }
-        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
-        state.step(engine, sampled)?;
-        steps += 1;
-        if !state.compact_finished(engine)? {
-            break; // everything reached EOS
-        }
+impl BonDriver {
+    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<BonDriver> {
+        let state =
+            engine.start_opts(prompt, cfg.n, crate::engine::StartOpts { compact: cfg.compact })?;
+        // Independent RNG stream per branch, keyed by request seed.
+        let rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+        Ok(BonDriver {
+            state,
+            cfg: cfg.clone(),
+            rngs,
+            scratch: SamplerScratch::new(),
+            live: Vec::with_capacity(cfg.n),
+            steps: 0,
+            done: false,
+        })
     }
 
-    // Selection: max mean log-probability (negative perplexity).
-    // `stats::total_order` keeps the comparison total on NaN and treats
-    // ±0.0 as equal, exactly as the seed's `partial_cmp` did.
-    let chosen = (0..state.branches.len())
-        .max_by(|&a, &b| {
-            crate::util::stats::total_order(
-                state.branches[a].mean_logprob(),
-                state.branches[b].mean_logprob(),
-            )
-        })
-        .unwrap_or(0);
+    fn select(&self) -> usize {
+        // Selection: max mean log-probability (negative perplexity).
+        // `stats::total_order` keeps the comparison total on NaN and
+        // treats ±0.0 as equal, exactly as the seed's `partial_cmp` did.
+        (0..self.state.branches.len())
+            .max_by(|&a, &b| {
+                crate::util::stats::total_order(
+                    self.state.branches[a].mean_logprob(),
+                    self.state.branches[b].mean_logprob(),
+                )
+            })
+            .unwrap_or(0)
+    }
+}
 
-    let text = state.text_of(engine, chosen);
-    let metrics = RequestMetrics {
-        final_branch_tokens: state.branches[chosen].tokens.len(),
-        total_tokens: state.total_tokens(),
-        peak_mem_bytes: state.mem.peak(),
-        wall_seconds: 0.0,
-        correct: false,
-        decode_calls: state.decode_calls,
-        gather_calls: state.gather_calls,
-    };
-    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+impl Driver for BonDriver {
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        if self.done {
+            return Err(super::poll_after_done());
+        }
+        if self.steps < self.cfg.max_new_tokens && self.state.remaining() > 0 {
+            self.live.clear();
+            self.live.extend_from_slice(self.state.live_branches());
+            if !self.live.is_empty() {
+                let vocab = engine.model().config.vocab;
+                let sampled = self.scratch.sample_slab(
+                    self.state.logits_slab(),
+                    vocab,
+                    &self.live,
+                    &self.cfg.sampler,
+                    &mut self.rngs,
+                );
+                self.state.step(engine, sampled)?;
+                self.steps += 1;
+                if self.state.compact_finished(engine)? {
+                    return Ok(StepOutcome::Pending);
+                }
+                // Everything reached EOS — fall through to selection.
+            }
+        }
+        self.done = true;
+        let chosen = self.select();
+        Ok(StepOutcome::Done(finalize(engine, &self.state, chosen)))
+    }
+
+    fn device_slots(&self) -> usize {
+        self.state.device_slots()
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.state.mem_bytes()
+    }
 }

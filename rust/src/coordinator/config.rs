@@ -201,6 +201,17 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Device branches a request of this config occupies at admission —
+    /// the policy-side fact the scheduler's slot/memory projection
+    /// needs. Greedy decodes a single chain whatever `n` says; every
+    /// multi-branch method starts at `n`.
+    pub fn concurrent_branches(&self) -> usize {
+        match self.method {
+            Method::Greedy => 1,
+            Method::Bon | Method::StBon | Method::Kappa => self.n,
+        }
+    }
+
     /// JSON summary embedded in bench reports for replayability.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![

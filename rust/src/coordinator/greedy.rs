@@ -1,32 +1,55 @@
 //! Greedy decoding — the paper's cost baseline (M_cost is normalized by
 //! greedy's peak memory).
+//!
+//! The driver is a two-state machine: `Decode` (one argmax token per
+//! poll) until EOS / budget exhaustion, then `Done`.
 
 use anyhow::Result;
 
-use crate::engine::Engine;
-use crate::metrics::RequestMetrics;
+use crate::engine::{Engine, GenState};
 
 use super::config::RunConfig;
-use super::{sampler, GenOutput};
+use super::{finalize, sampler, Driver, StepOutcome};
 
-pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig) -> Result<GenOutput> {
-    let mut state = engine.start(prompt, 1)?;
-    let mut steps = 0usize;
-    while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-        // Fused argmax + logprob: one max scan instead of two.
-        let (tok, lp) = sampler::greedy_row(state.logits_for_slot(0));
-        state.step(engine, &[(tok, lp)])?;
-        steps += 1;
+/// Resumable greedy state machine (see [`super::Driver`]).
+pub struct GreedyDriver {
+    state: GenState,
+    cfg: RunConfig,
+    steps: usize,
+    done: bool,
+}
+
+impl GreedyDriver {
+    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig) -> Result<GreedyDriver> {
+        let state = engine.start(prompt, 1)?;
+        Ok(GreedyDriver { state, cfg: cfg.clone(), steps: 0, done: false })
     }
-    let text = state.text_of(engine, 0);
-    let metrics = RequestMetrics {
-        final_branch_tokens: state.branches[0].tokens.len(),
-        total_tokens: state.total_tokens(),
-        peak_mem_bytes: state.mem.peak(),
-        wall_seconds: 0.0,
-        correct: false,
-        decode_calls: state.decode_calls,
-        gather_calls: state.gather_calls,
-    };
-    Ok(GenOutput { text, chosen_branch: 0, metrics })
+}
+
+impl Driver for GreedyDriver {
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        if self.done {
+            return Err(super::poll_after_done());
+        }
+        if !self.state.all_finished()
+            && self.steps < self.cfg.max_new_tokens
+            && self.state.remaining() > 0
+        {
+            // Fused argmax + logprob: one max scan instead of two.
+            let (tok, lp) = sampler::greedy_row(self.state.logits_for_slot(0));
+            self.state.step(engine, &[(tok, lp)])?;
+            self.steps += 1;
+            return Ok(StepOutcome::Pending);
+        }
+        self.done = true;
+        Ok(StepOutcome::Done(finalize(engine, &self.state, 0)))
+    }
+
+    fn device_slots(&self) -> usize {
+        self.state.device_slots()
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.state.mem_bytes()
+    }
 }

@@ -16,6 +16,13 @@
 //! a frozen score (their text is complete and they cost nothing further) —
 //! pruning removes candidates, whether finished or live.
 //!
+//! The policy is a resumable [`super::Driver`]: each paper phase is an
+//! explicit machine state ([`Phase`]), one gating iteration (score →
+//! continue → prune) is one `poll_step`, and the device slots freed by
+//! each pruning step are visible to the continuous-batching scheduler
+//! the moment the poll returns — mid-request, exactly where the paper's
+//! ~60% peak-memory reduction comes from.
+//!
 //! Hot-path discipline (see `crate::engine` module docs): one
 //! [`SamplerScratch`] serves every draw of the request; gating steps run
 //! the fused decode+signals **superstep** (`GenState::step_fused`), so
@@ -28,84 +35,224 @@
 //! mask (no `contains` scans); score ordering uses `f64::total_cmp`, so
 //! a NaN score degrades into a deterministic ranking instead of a panic.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::engine::Engine;
-use crate::metrics::RequestMetrics;
+use crate::engine::{Branch, Engine, GenState};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
 use super::config::RunConfig;
 use super::sampler::SamplerScratch;
 use super::signals::{combine_scores, BranchSignalState, SignalScratch};
-use super::{draft, schedule, GenOutput};
+use super::{draft, finalize, schedule, Driver, StepOutcome};
 
-pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
-    let n = cfg.n;
-    let mut state = engine.start_opts(prompt, n, crate::engine::StartOpts { compact: cfg.compact })?;
-    let mut rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-    let kcfg = &cfg.kappa;
-    let tau = kcfg.effective_tau(n);
-    let vocab = engine.model().config.vocab;
+/// Phase III entry decision: who won, and whether decoding continues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Continuation {
+    /// The winner's text is already complete — return it as is.
+    Finished(usize),
+    /// The winner is still generating — truncate the rest and decode it
+    /// to EOS.
+    Decode(usize),
+}
 
-    let mut scratch = SamplerScratch::new();
-    // Snapshot of the live branch list, reused every step (`step` mutates
-    // the state the list borrows from).
-    let mut live: Vec<usize> = Vec::with_capacity(n);
+/// Pick the Phase III winner (highest trajectory score among unpruned
+/// candidates; ties → last max under the stable iteration order) and
+/// validate the continuation invariant.
+///
+/// Invariant: an unpruned, unfinished branch is always live (on device) —
+/// `retain_branches` prunes what it drops and `compact_finished` only
+/// removes finished branches. A winner that is unfinished yet absent
+/// from `live` has lost its KV cache and *cannot* be continued; the old
+/// guard (`if live.contains(&chosen)`) silently skipped continuation and
+/// returned mid-generation text. That is a correctness bug, not a
+/// recoverable state — surface it as an explicit error so the serving
+/// layer fails the request instead of shipping a truncated answer.
+pub fn plan_continuation(
+    branches: &[Branch],
+    live: &[usize],
+    score_of: impl Fn(usize) -> f64,
+) -> Result<Continuation> {
+    let chosen = (0..branches.len())
+        .filter(|&bi| !branches[bi].pruned)
+        .max_by(|&a, &b| stats::total_order(score_of(a), score_of(b)))
+        .unwrap_or(0);
+    if branches[chosen].finished {
+        return Ok(Continuation::Finished(chosen));
+    }
+    if !live.contains(&chosen) {
+        bail!(
+            "kappa invariant violated: winner branch {chosen} is unfinished but absent \
+             from the device batch (its KV cache was dropped) — refusing to return \
+             mid-generation text"
+        );
+    }
+    Ok(Continuation::Decode(chosen))
+}
 
-    let mut steps = 0usize; // generated tokens per branch so far
+enum Phase {
+    Draft,
+    Gate,
+    Continue,
+    Done,
+    Retired,
+}
 
-    // ---- Phase I: Draft (exploration) ----
-    while steps < cfg.max_new_tokens && state.remaining() > 0 {
-        let seqs: Vec<&[u32]> =
-            state.live_branches().iter().map(|&bi| state.branches[bi].tokens.as_slice()).collect();
-        if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= kcfg.max_draft {
-            break;
-        }
-        live.clear();
-        live.extend_from_slice(state.live_branches());
-        if live.is_empty() {
-            break;
-        }
-        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
-        state.step(engine, sampled)?;
-        steps += 1;
-        if !state.compact_finished(engine)? {
-            break;
-        }
+/// Resumable KAPPA state machine (see [`super::Driver`] and module docs).
+pub struct KappaDriver {
+    state: GenState,
+    cfg: RunConfig,
+    rngs: Vec<Pcg64>,
+    scratch: SamplerScratch,
+    /// Snapshot of the live branch list, reused every step (`step`
+    /// mutates the state the list borrows from).
+    live: Vec<usize>,
+    /// Generated tokens per branch so far.
+    steps: usize,
+    tau: usize,
+    // ---- Phase II state (initialized at the Draft → Gate transition) ----
+    /// Per-branch signal accumulators, parallel to `state.branches`.
+    sig: Vec<BranchSignalState>,
+    /// Host-side scoring scratch — only the native ablation path.
+    sig_scratch: Option<SignalScratch>,
+    /// Gating step index (1-based in the schedule).
+    k: usize,
+    /// Phase II ended early (all survivors finished / no live branch
+    /// left) — the blocking loop's `break`s. The Phase III transition in
+    /// `poll_step` still runs winner selection afterwards.
+    gating_over: bool,
+    // Per-step buffers, allocated once for the request. (The per-token
+    // sampling path is fully allocation-free; `combine_scores` still
+    // builds its small z-norm temporaries each *gating* step, which runs
+    // at most τ times per request.)
+    kl: Vec<f64>,
+    conf: Vec<f64>,
+    ent: Vec<f64>,
+    ema: Vec<f64>,
+    candidates: Vec<usize>,
+    ranked: Vec<usize>,
+    keep_live: Vec<usize>,
+    keep_mask: Vec<bool>,
+    // ---- Phase III state ----
+    chosen: usize,
+    /// Winner's RNG stream, cloned at the continuation transition.
+    cont_rng: Pcg64,
+    phase: Phase,
+}
+
+impl KappaDriver {
+    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<KappaDriver> {
+        let n = cfg.n;
+        let state =
+            engine.start_opts(prompt, n, crate::engine::StartOpts { compact: cfg.compact })?;
+        let rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+        let tau = cfg.kappa.effective_tau(n);
+        Ok(KappaDriver {
+            state,
+            cont_rng: rngs[0].clone(),
+            rngs,
+            scratch: SamplerScratch::new(),
+            live: Vec::with_capacity(n),
+            steps: 0,
+            tau,
+            sig: Vec::new(),
+            sig_scratch: None,
+            k: 0,
+            gating_over: false,
+            kl: Vec::with_capacity(n),
+            conf: Vec::with_capacity(n),
+            ent: Vec::with_capacity(n),
+            ema: Vec::with_capacity(n),
+            candidates: Vec::with_capacity(n),
+            ranked: Vec::with_capacity(n),
+            keep_live: Vec::with_capacity(n),
+            keep_mask: vec![false; n],
+            chosen: 0,
+            phase: Phase::Draft,
+            cfg: cfg.clone(),
+        })
     }
 
-    // ---- Phase II: Scoring & Gating (selection over horizon τ) ----
-    // Candidates: every branch not pruned (finished branches keep their
-    // frozen trajectory score). `sig` runs parallel to `state.branches`.
-    let mut sig: Vec<BranchSignalState> =
-        (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
-    // Only the native ablation path needs the host-side q work.
-    let mut sig_scratch: Option<SignalScratch> =
-        if kcfg.native_signals { Some(SignalScratch::new(engine.model().q_logits())) } else { None };
-
-    // Per-step buffers, allocated once for the request. (The per-token
-    // sampling path below is fully allocation-free; `combine_scores`
-    // still builds its small z-norm temporaries each *gating* step,
-    // which runs at most τ times per request.)
-    let mut kl: Vec<f64> = Vec::with_capacity(n);
-    let mut conf: Vec<f64> = Vec::with_capacity(n);
-    let mut ent: Vec<f64> = Vec::with_capacity(n);
-    let mut ema: Vec<f64> = Vec::with_capacity(n);
-    let mut candidates: Vec<usize> = Vec::with_capacity(n);
-    let mut ranked: Vec<usize> = Vec::with_capacity(n);
-    let mut keep_live: Vec<usize> = Vec::with_capacity(n);
-    let mut keep_mask: Vec<bool> = vec![false; n];
-
-    let mut k = 0usize; // gating step index (1-based in the schedule)
-    while k < tau && steps < cfg.max_new_tokens && state.remaining() > 0 {
-        live.clear();
-        live.extend_from_slice(state.live_branches());
-        if live.is_empty() {
-            break;
+    /// One Phase I iteration; `Some(Pending)` when a dispatch was made,
+    /// `None` when the draft phase is over.
+    fn draft_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
+        if self.steps >= self.cfg.max_new_tokens || self.state.remaining() == 0 {
+            return Ok(None);
         }
-        k += 1;
-        let rows = live.len();
+        let seqs: Vec<&[u32]> = self
+            .state
+            .live_branches()
+            .iter()
+            .map(|&bi| self.state.branches[bi].tokens.as_slice())
+            .collect();
+        if (self.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
+            || self.steps >= self.cfg.kappa.max_draft
+        {
+            return Ok(None);
+        }
+        self.live.clear();
+        self.live.extend_from_slice(self.state.live_branches());
+        if self.live.is_empty() {
+            return Ok(None);
+        }
+        let vocab = engine.model().config.vocab;
+        let sampled = self.scratch.sample_slab(
+            self.state.logits_slab(),
+            vocab,
+            &self.live,
+            &self.cfg.sampler,
+            &mut self.rngs,
+        );
+        self.state.step(engine, sampled)?;
+        self.steps += 1;
+        if !self.state.compact_finished(engine)? {
+            // Every branch finished mid-draft. `compact_finished(false)`
+            // leaves the finished branches in their slots, so — exactly
+            // like the blocking loop it replaced — the gate phase still
+            // runs one scoring/gating pass over them (its dispatch is
+            // wasted work, but it is what seeds the trajectory scores
+            // Phase III selects on) before `gating_over` ends Phase II.
+            self.phase = Phase::Gate;
+            self.init_gate(engine);
+        }
+        Ok(Some(StepOutcome::Pending))
+    }
+
+    /// Draft → Gate transition: allocate the per-branch signal
+    /// accumulators and (for the native ablation) the host scoring
+    /// scratch.
+    fn init_gate(&mut self, engine: &Engine) {
+        let n = self.cfg.n;
+        let kcfg = &self.cfg.kappa;
+        self.sig = (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
+        // Only the native ablation path needs the host-side q work.
+        self.sig_scratch = if kcfg.native_signals {
+            Some(SignalScratch::new(engine.model().q_logits()))
+        } else {
+            None
+        };
+        self.k = 0;
+        self.gating_over = false;
+    }
+
+    /// One Phase II iteration (score → continue → prune); `Some(Pending)`
+    /// when a dispatch was made, `None` when the gating phase is over.
+    fn gate_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
+        if self.gating_over
+            || self.k >= self.tau
+            || self.steps >= self.cfg.max_new_tokens
+            || self.state.remaining() == 0
+        {
+            return Ok(None);
+        }
+        self.live.clear();
+        self.live.extend_from_slice(self.state.live_branches());
+        if self.live.is_empty() {
+            return Ok(None);
+        }
+        self.k += 1;
+        let rows = self.live.len();
+        let kcfg = &self.cfg.kappa;
 
         // -- Signals for the live rows. Steady state: they rode back
         // with the superstep that produced this slab (`fused_signals`) —
@@ -113,127 +260,191 @@ pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<
         // native ablation, or the unfused borrowed-slab call for the
         // first gating step (draft-phase slab) / superstep-less
         // artifacts.
-        kl.clear();
-        conf.clear();
-        ent.clear();
-        if let Some(scr) = sig_scratch.as_mut() {
+        self.kl.clear();
+        self.conf.clear();
+        self.ent.clear();
+        if let Some(scr) = self.sig_scratch.as_mut() {
             for slot in 0..rows {
-                let (a, b, c) = scr.raw(state.logits_for_slot(slot));
-                kl.push(a);
-                conf.push(b);
-                ent.push(c);
+                let (a, b, c) = scr.raw(self.state.logits_for_slot(slot));
+                self.kl.push(a);
+                self.conf.push(b);
+                self.ent.push(c);
             }
-        } else if let Some((a, b, c)) = state.fused_signals() {
-            kl.extend(a.iter().map(|&x| x as f64));
-            conf.extend(b.iter().map(|&x| x as f64));
-            ent.extend(c.iter().map(|&x| x as f64));
+        } else if let Some((a, b, c)) = self.state.fused_signals() {
+            self.kl.extend(a.iter().map(|&x| x as f64));
+            self.conf.extend(b.iter().map(|&x| x as f64));
+            self.ent.extend(c.iter().map(|&x| x as f64));
         } else {
-            let (a, b, c) =
-                engine.model().signals_padded(state.logits_slab(), rows, state.bucket())?;
-            kl.extend(a.into_iter().map(|x| x as f64));
-            conf.extend(b.into_iter().map(|x| x as f64));
-            ent.extend(c.into_iter().map(|x| x as f64));
+            let (a, b, c) = engine.model().signals_padded(
+                self.state.logits_slab(),
+                rows,
+                self.state.bucket(),
+            )?;
+            self.kl.extend(a.into_iter().map(|x| x as f64));
+            self.conf.extend(b.into_iter().map(|x| x as f64));
+            self.ent.extend(c.into_iter().map(|x| x as f64));
         }
 
         // -- Robustified KL information change per live branch.
-        ema.clear();
-        for (slot, &bi) in live.iter().enumerate() {
-            ema.push(sig[bi].update_kl(kl[slot], kcfg));
+        self.ema.clear();
+        for (slot, &bi) in self.live.iter().enumerate() {
+            self.ema.push(self.sig[bi].update_kl(self.kl[slot], kcfg));
         }
 
         // -- Across-branch z-norm + weighted combine + trajectory update.
-        combine_scores(&mut sig, &live, &ema, &conf, &ent, steps + 1, kcfg);
+        combine_scores(
+            &mut self.sig,
+            &self.live,
+            &self.ema,
+            &self.conf,
+            &self.ent,
+            self.steps + 1,
+            kcfg,
+        );
 
         // -- One-step continuation for the next scoring round, through
         // the fused superstep: the new slab's signals come back with the
         // same dispatch and are consumed at the top of the next
         // iteration. The native ablation scores on the host instead, so
         // it keeps the plain decode executable.
-        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
-        if sig_scratch.is_some() {
-            state.step(engine, sampled)?;
+        let vocab = engine.model().config.vocab;
+        let sampled = self.scratch.sample_slab(
+            self.state.logits_slab(),
+            vocab,
+            &self.live,
+            &self.cfg.sampler,
+            &mut self.rngs,
+        );
+        if self.sig_scratch.is_some() {
+            self.state.step(engine, sampled)?;
         } else {
-            state.step_fused(engine, sampled)?;
+            self.state.step_fused(engine, sampled)?;
         }
-        steps += 1;
+        self.steps += 1;
 
         // -- Gating: prune candidates down to the schedule's target.
-        candidates.clear();
-        candidates.extend((0..state.branches.len()).filter(|&bi| !state.branches[bi].pruned));
-        let target = schedule::survivors(kcfg.schedule, n, k, tau).min(candidates.len()).max(1);
-        if target < candidates.len() {
-            ranked.clear();
-            ranked.extend_from_slice(&candidates);
+        self.candidates.clear();
+        self.candidates
+            .extend((0..self.state.branches.len()).filter(|&bi| !self.state.branches[bi].pruned));
+        let target = schedule::survivors(kcfg.schedule, self.cfg.n, self.k, self.tau)
+            .min(self.candidates.len())
+            .max(1);
+        if target < self.candidates.len() {
+            self.ranked.clear();
+            self.ranked.extend_from_slice(&self.candidates);
             // Strict total order (score desc, index asc): same permutation
             // a stable sort under `partial_cmp` gave (see
             // `stats::total_order` for the ±0.0/NaN semantics),
             // allocation-free.
-            ranked.sort_unstable_by(|&a, &b| {
+            let sig = &self.sig;
+            self.ranked.sort_unstable_by(|&a, &b| {
                 stats::total_order(sig[b].score, sig[a].score).then(a.cmp(&b))
             });
-            keep_mask.iter_mut().for_each(|m| *m = false);
-            for &bi in &ranked[..target] {
-                keep_mask[bi] = true;
+            self.keep_mask.iter_mut().for_each(|m| *m = false);
+            for &bi in &self.ranked[..target] {
+                self.keep_mask[bi] = true;
             }
-            // Device batch keeps only the unfinished survivors, in slot order.
-            keep_live.clear();
-            keep_live.extend(state.live_branches().iter().copied().filter(|&bi| keep_mask[bi]));
-            if keep_live.is_empty() {
-                // All survivors already finished: mark the rest pruned and
-                // exit the gating loop.
-                for &bi in &candidates {
-                    if !keep_mask[bi] {
-                        state.branches[bi].pruned = true;
+            // Device batch keeps only the unfinished survivors, in slot
+            // order.
+            self.keep_live.clear();
+            self.keep_live.extend(
+                self.state.live_branches().iter().copied().filter(|&bi| self.keep_mask[bi]),
+            );
+            if self.keep_live.is_empty() {
+                // All survivors already finished: mark the rest pruned
+                // and exit the gating loop.
+                for &bi in &self.candidates {
+                    if !self.keep_mask[bi] {
+                        self.state.branches[bi].pruned = true;
                     }
                 }
-                break;
+                self.gating_over = true;
+                return Ok(Some(StepOutcome::Pending));
             }
-            state.retain_branches(engine, &keep_live)?;
+            // Pruned slots are released here — the scheduler refills
+            // them from its queue within one tick of this poll.
+            self.state.retain_branches(engine, &self.keep_live)?;
             // Mark finished non-kept candidates as pruned (they were not
             // live, so retain_branches couldn't see them).
-            for &bi in &candidates {
-                if !keep_mask[bi] {
-                    state.branches[bi].pruned = true;
+            for &bi in &self.candidates {
+                if !self.keep_mask[bi] {
+                    self.state.branches[bi].pruned = true;
                 }
             }
         }
-        if !state.compact_finished(engine)? {
-            break;
+        if !self.state.compact_finished(engine)? {
+            self.gating_over = true;
         }
+        Ok(Some(StepOutcome::Pending))
     }
+}
 
-    // ---- Phase III: Continuation (exploitation) ----
-    // Winner: highest trajectory score among unpruned candidates (ties →
-    // last max under the stable iteration order, as before; `total_cmp`
-    // only changes behavior when a score is NaN — deterministic ranking
-    // instead of a panic).
-    let chosen = (0..state.branches.len())
-        .filter(|&bi| !state.branches[bi].pruned)
-        .max_by(|&a, &b| stats::total_order(sig[a].score, sig[b].score))
-        .unwrap_or(0);
-
-    if !state.branches[chosen].finished {
-        // Drop any other still-live branches, keep decoding the winner.
-        if state.live_branches().contains(&chosen) {
-            state.retain_branches(engine, &[chosen])?;
-            let mut rng = rngs[chosen].clone();
-            while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-                let (tok, lp) = scratch.sample_row(state.logits_for_slot(0), &cfg.sampler, &mut rng);
-                state.step(engine, &[(tok, lp)])?;
-                steps += 1;
+impl Driver for KappaDriver {
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        loop {
+            match self.phase {
+                Phase::Draft => {
+                    if let Some(outcome) = self.draft_poll(engine)? {
+                        return Ok(outcome);
+                    }
+                    self.phase = Phase::Gate;
+                    self.init_gate(engine);
+                }
+                Phase::Gate => {
+                    if let Some(outcome) = self.gate_poll(engine)? {
+                        return Ok(outcome);
+                    }
+                    // Phase III entry: pick the winner, enforce the
+                    // continuation invariant, truncate the losers.
+                    let sig = &self.sig;
+                    match plan_continuation(&self.state.branches, self.state.live_branches(), |bi| {
+                        sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY)
+                    })? {
+                        Continuation::Finished(chosen) => {
+                            self.chosen = chosen;
+                            self.phase = Phase::Done;
+                        }
+                        Continuation::Decode(chosen) => {
+                            self.chosen = chosen;
+                            // Drop any other still-live branches; the
+                            // freed slots go back to the scheduler.
+                            self.state.retain_branches(engine, &[chosen])?;
+                            self.cont_rng = self.rngs[chosen].clone();
+                            self.phase = Phase::Continue;
+                            return Ok(StepOutcome::Pending);
+                        }
+                    }
+                }
+                Phase::Continue => {
+                    if !self.state.all_finished()
+                        && self.steps < self.cfg.max_new_tokens
+                        && self.state.remaining() > 0
+                    {
+                        let (tok, lp) = self.scratch.sample_row(
+                            self.state.logits_for_slot(0),
+                            &self.cfg.sampler,
+                            &mut self.cont_rng,
+                        );
+                        self.state.step(engine, &[(tok, lp)])?;
+                        self.steps += 1;
+                        return Ok(StepOutcome::Pending);
+                    }
+                    self.phase = Phase::Done;
+                }
+                Phase::Done => {
+                    self.phase = Phase::Retired;
+                    return Ok(StepOutcome::Done(finalize(engine, &self.state, self.chosen)));
+                }
+                Phase::Retired => return Err(super::poll_after_done()),
             }
         }
     }
 
-    let text = state.text_of(engine, chosen);
-    let metrics = RequestMetrics {
-        final_branch_tokens: state.branches[chosen].tokens.len(),
-        total_tokens: state.total_tokens(),
-        peak_mem_bytes: state.mem.peak(),
-        wall_seconds: 0.0,
-        correct: false,
-        decode_calls: state.decode_calls,
-        gather_calls: state.gather_calls,
-    };
-    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+    fn device_slots(&self) -> usize {
+        self.state.device_slots()
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.state.mem_bytes()
+    }
 }

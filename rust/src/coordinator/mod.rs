@@ -5,6 +5,42 @@
 //! and [`kappa`] (the paper's method, "KL" in its tables). Each consumes a
 //! prompt and produces a [`GenOutput`] with the chosen text and the
 //! request metrics the paper reports.
+//!
+//! # Drivers: resumable per-request state machines
+//!
+//! Every policy is implemented as a [`Driver`] — an explicit state
+//! machine whose [`Driver::poll_step`] advances the request by (at most)
+//! one engine dispatch and returns [`StepOutcome::Pending`] until the
+//! request completes with [`StepOutcome::Done`]. The phases of each
+//! policy (draft / gate / continuation / selection) are explicit enum
+//! states held on the driver struct, so a request can be suspended
+//! between any two dispatches and resumed later — that is what lets the
+//! continuous-batching scheduler in [`crate::server`] multiplex many
+//! in-flight requests onto one engine, refilling device slots the moment
+//! `retain_branches`/`compact_finished` free them instead of idling
+//! until the whole request finishes.
+//!
+//! The blocking entry point [`run_method`] is now *defined as* driving a
+//! fresh [`Driver`] to completion, so the scheduler-stepped and blocking
+//! paths execute literally the same per-step code; `tests/scheduler.rs`
+//! additionally pins that a request interleaved with others through the
+//! scheduler produces bit-identical text/metrics to a solo blocking run
+//! (per-request [`crate::engine::GenState`] isolation makes interleaving
+//! invisible to the policy).
+//!
+//! Driver contract:
+//! - `poll_step` advances the request by at most **one token's worth of
+//!   work**: one decode/superstep dispatch plus whatever gather
+//!   dispatches that token's pruning/compaction requires (a KAPPA
+//!   gating poll can issue decode + retain gather + compaction gather;
+//!   cheap phase-transition polls dispatch nothing). It never blocks on
+//!   anything but its own dispatches.
+//! - After `Done` is returned, further polls are a contract violation
+//!   and yield an error — the scheduler retires the request on `Done`.
+//! - [`Driver::device_slots`] / [`Driver::mem_bytes`] report the
+//!   request's current device occupancy (KV rows and accounted KV
+//!   bytes), shrinking as pruning/compaction frees capacity — the
+//!   scheduler's admission-control inputs.
 
 pub mod bon;
 pub mod config;
@@ -16,7 +52,7 @@ pub mod schedule;
 pub mod signals;
 pub mod stbon;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::engine::Engine;
 use crate::metrics::RequestMetrics;
@@ -34,14 +70,85 @@ pub struct GenOutput {
     pub metrics: RequestMetrics,
 }
 
-/// Dispatch a request through the configured method.
+/// Outcome of one [`Driver::poll_step`] call.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// The request made progress and needs further polls.
+    Pending,
+    /// The request is complete; the driver must not be polled again.
+    Done(GenOutput),
+}
+
+/// A resumable per-request decoding state machine (see module docs).
+pub trait Driver {
+    /// Advance the request by at most one token's worth of engine work
+    /// (one decode dispatch plus its attendant gathers — see the module
+    /// docs' contract).
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome>;
+
+    /// Device slots (KV-cache rows) the request currently holds.
+    fn device_slots(&self) -> usize;
+
+    /// Accounted KV bytes the request currently holds (admission input;
+    /// the shared weight floor is excluded — it is not per-request
+    /// capacity).
+    fn mem_bytes(&self) -> usize;
+}
+
+/// Build the configured method's driver for one request. The prompt is
+/// prefilled here (one dispatch), so a driver that fails to construct
+/// never occupied scheduler capacity.
+pub fn make_driver(
+    engine: &Engine,
+    prompt: &str,
+    cfg: &RunConfig,
+    seed: u64,
+) -> Result<Box<dyn Driver>> {
+    Ok(match cfg.method {
+        Method::Greedy => Box::new(greedy::GreedyDriver::new(engine, prompt, cfg)?),
+        Method::Bon => Box::new(bon::BonDriver::new(engine, prompt, cfg, seed)?),
+        Method::StBon => Box::new(stbon::StBonDriver::new(engine, prompt, cfg, seed)?),
+        Method::Kappa => Box::new(kappa::KappaDriver::new(engine, prompt, cfg, seed)?),
+    })
+}
+
+/// Drive a request to completion (the blocking path). This is the same
+/// state machine the scheduler steps — there is no separate blocking
+/// implementation to drift from.
 pub fn run_method(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
-    match cfg.method {
-        Method::Greedy => greedy::run(engine, prompt, cfg),
-        Method::Bon => bon::run(engine, prompt, cfg, seed),
-        Method::StBon => stbon::run(engine, prompt, cfg, seed),
-        Method::Kappa => kappa::run(engine, prompt, cfg, seed),
+    let mut driver = make_driver(engine, prompt, cfg, seed)?;
+    loop {
+        if let StepOutcome::Done(out) = driver.poll_step(engine)? {
+            return Ok(out);
+        }
     }
+}
+
+/// Shared finalization: decode the chosen branch's text and collect the
+/// request metrics every policy reports.
+pub(crate) fn finalize(
+    engine: &Engine,
+    state: &crate::engine::GenState,
+    chosen: usize,
+) -> GenOutput {
+    let text = state.text_of(engine, chosen);
+    let metrics = RequestMetrics {
+        final_branch_tokens: state.branches[chosen].tokens.len(),
+        total_tokens: state.total_tokens(),
+        peak_mem_bytes: state.mem.peak(),
+        wall_seconds: 0.0,
+        correct: false,
+        decode_calls: state.decode_calls,
+        gather_calls: state.gather_calls,
+    };
+    GenOutput { text, chosen_branch: chosen, metrics }
+}
+
+/// Guard shared by every driver: polling past completion is a scheduler
+/// bug, surfaced loudly instead of silently re-running a finished
+/// request.
+pub(crate) fn poll_after_done() -> anyhow::Error {
+    anyhow!("driver polled after completion")
 }
 
 /// Convenience used by benches/tests: run a whole problem set and collect
@@ -54,7 +161,10 @@ pub fn metrics_for(
     let mut run = crate::metrics::RunMetrics::default();
     for (i, p) in problems.iter().enumerate() {
         let t0 = std::time::Instant::now();
-        let mut out = run_method(engine, &p.prompt(), cfg, cfg.seed.wrapping_add(i as u64))?;
+        // Same mixer as the server's submission paths: `seed + i` would
+        // correlate nearby-seed runs (see `util::rng::request_seed`).
+        let seed = crate::util::rng::request_seed(cfg.seed, i as u64);
+        let mut out = run_method(engine, &p.prompt(), cfg, seed)?;
         out.metrics.wall_seconds = t0.elapsed().as_secs_f64();
         out.metrics.correct = crate::data::eval::is_correct(&out.text, p.answer);
         run.push(out.metrics);

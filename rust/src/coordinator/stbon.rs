@@ -13,85 +13,175 @@
 //! ST-BoN scores consistency in token space (no latent signals), so all
 //! phases use the plain donated decode path (`GenState::step`) — the
 //! fused decode+signals superstep is KAPPA's gating-phase tool.
+//!
+//! Driver phases: `Draft` (steps 1+2, one batched token per poll) →
+//! `Continue` (step 4, winner-only decode; the step-3 winner estimate
+//! and the truncating `retain_branches` run at the phase transition,
+//! immediately freeing the losers' device slots for the scheduler) →
+//! `Done`.
 
 use anyhow::Result;
 
-use crate::engine::Engine;
-use crate::metrics::RequestMetrics;
+use crate::engine::{Engine, GenState};
 use crate::util::rng::Pcg64;
 
 use super::config::RunConfig;
 use super::sampler::SamplerScratch;
-use super::{draft, GenOutput};
+use super::{draft, finalize, Driver, StepOutcome};
 
-pub fn run(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<GenOutput> {
-    let mut state = engine.start_opts(
-        prompt,
-        cfg.n,
-        crate::engine::StartOpts { compact: cfg.compact },
-    )?;
-    let mut rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-    let vocab = engine.model().config.vocab;
-    let mut scratch = SamplerScratch::new();
-    let mut live: Vec<usize> = Vec::with_capacity(cfg.n);
+enum Phase {
+    Draft,
+    Continue,
+    Done,
+    Retired,
+}
 
-    let mut steps = 0usize;
-    let mut cutoff: Option<usize> = None;
+/// Resumable ST-BoN state machine (see [`super::Driver`]).
+pub struct StBonDriver {
+    state: GenState,
+    cfg: RunConfig,
+    rngs: Vec<Pcg64>,
+    scratch: SamplerScratch,
+    live: Vec<usize>,
+    steps: usize,
+    cutoff: Option<usize>,
+    /// Every branch reached EOS mid-draft (the blocking loop's
+    /// `!compact_finished` break).
+    draft_over: bool,
+    chosen: usize,
+    /// Winner's RNG stream, cloned at the phase-3 transition (same draw
+    /// sequence the blocking loop used).
+    cont_rng: Pcg64,
+    phase: Phase,
+}
 
-    // Phase 1+2: draft until pairwise inconsistency, then buffer window.
-    while steps < cfg.max_new_tokens && state.remaining() > 0 {
-        if cutoff.is_none() {
-            let seqs: Vec<&[u32]> =
-                state.live_branches().iter().map(|&bi| state.branches[bi].tokens.as_slice()).collect();
-            if (steps > 0 && draft::all_pairwise_inconsistent(&seqs)) || steps >= cfg.stbon.max_draft
+impl StBonDriver {
+    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<StBonDriver> {
+        let state =
+            engine.start_opts(prompt, cfg.n, crate::engine::StartOpts { compact: cfg.compact })?;
+        let rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+        Ok(StBonDriver {
+            state,
+            cfg: cfg.clone(),
+            cont_rng: rngs[0].clone(),
+            rngs,
+            scratch: SamplerScratch::new(),
+            live: Vec::with_capacity(cfg.n),
+            steps: 0,
+            cutoff: None,
+            draft_over: false,
+            chosen: 0,
+            phase: Phase::Draft,
+        })
+    }
+
+    /// One draft-phase iteration; `Some(outcome)` when a dispatch was
+    /// made this poll, `None` when the phase is over.
+    fn draft_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
+        if self.draft_over || self.steps >= self.cfg.max_new_tokens || self.state.remaining() == 0 {
+            return Ok(None);
+        }
+        if self.cutoff.is_none() {
+            let seqs: Vec<&[u32]> = self
+                .state
+                .live_branches()
+                .iter()
+                .map(|&bi| self.state.branches[bi].tokens.as_slice())
+                .collect();
+            if (self.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
+                || self.steps >= self.cfg.stbon.max_draft
             {
-                cutoff = Some(steps);
+                self.cutoff = Some(self.steps);
             }
         }
-        if let Some(c) = cutoff {
-            if steps >= c + cfg.stbon.buffer {
-                break;
+        if let Some(c) = self.cutoff {
+            if self.steps >= c + self.cfg.stbon.buffer {
+                return Ok(None);
             }
         }
-        live.clear();
-        live.extend_from_slice(state.live_branches());
-        if live.is_empty() {
-            break;
+        self.live.clear();
+        self.live.extend_from_slice(self.state.live_branches());
+        if self.live.is_empty() {
+            return Ok(None);
         }
-        let sampled = scratch.sample_slab(state.logits_slab(), vocab, &live, &cfg.sampler, &mut rngs);
-        state.step(engine, sampled)?;
-        steps += 1;
-        if !state.compact_finished(engine)? {
-            break;
+        let vocab = engine.model().config.vocab;
+        let sampled = self.scratch.sample_slab(
+            self.state.logits_slab(),
+            vocab,
+            &self.live,
+            &self.cfg.sampler,
+            &mut self.rngs,
+        );
+        self.state.step(engine, sampled)?;
+        self.steps += 1;
+        if !self.state.compact_finished(engine)? {
+            // Every branch reached EOS mid-draft: the phase ends, but the
+            // dispatch already happened — report Pending and transition
+            // on the next poll.
+            self.draft_over = true;
+        }
+        Ok(Some(StepOutcome::Pending))
+    }
+}
+
+impl Driver for StBonDriver {
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        loop {
+            match self.phase {
+                Phase::Draft => {
+                    if let Some(outcome) = self.draft_poll(engine)? {
+                        return Ok(outcome);
+                    }
+                    // Phase 3: self-estimate the winner by early
+                    // consistency across ALL branches (finished ones
+                    // included — their prefixes still vote).
+                    let upto =
+                        self.cutoff.map(|c| c + self.cfg.stbon.buffer).unwrap_or(self.steps).max(1);
+                    let seqs: Vec<&[u32]> =
+                        self.state.branches.iter().map(|b| b.tokens.as_slice()).collect();
+                    self.chosen = draft::most_consistent(&seqs, upto);
+                    if self.state.branches[self.chosen].finished {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    // Phase 4 entry: truncate everything else. The freed
+                    // device slots are visible to the scheduler as soon
+                    // as this poll returns.
+                    self.state.retain_branches(engine, &[self.chosen])?;
+                    self.cont_rng = self.rngs[self.chosen].clone();
+                    self.phase = Phase::Continue;
+                    return Ok(StepOutcome::Pending);
+                }
+                Phase::Continue => {
+                    if !self.state.all_finished()
+                        && self.steps < self.cfg.max_new_tokens
+                        && self.state.remaining() > 0
+                    {
+                        let (tok, lp) = self.scratch.sample_row(
+                            self.state.logits_for_slot(0),
+                            &self.cfg.sampler,
+                            &mut self.cont_rng,
+                        );
+                        self.state.step(engine, &[(tok, lp)])?;
+                        self.steps += 1;
+                        return Ok(StepOutcome::Pending);
+                    }
+                    self.phase = Phase::Done;
+                }
+                Phase::Done => {
+                    self.phase = Phase::Retired;
+                    return Ok(StepOutcome::Done(finalize(engine, &self.state, self.chosen)));
+                }
+                Phase::Retired => return Err(super::poll_after_done()),
+            }
         }
     }
 
-    // Phase 3: self-estimate the winner by early consistency across ALL
-    // branches (finished ones included — their prefixes still vote).
-    let upto = cutoff.map(|c| c + cfg.stbon.buffer).unwrap_or(steps).max(1);
-    let seqs: Vec<&[u32]> = state.branches.iter().map(|b| b.tokens.as_slice()).collect();
-    let chosen = draft::most_consistent(&seqs, upto);
-
-    // Phase 4: truncate everything else; decode the winner to completion.
-    if !state.branches[chosen].finished {
-        state.retain_branches(engine, &[chosen])?;
-        let mut rng = rngs[chosen].clone();
-        while !state.all_finished() && steps < cfg.max_new_tokens && state.remaining() > 0 {
-            let (tok, lp) = scratch.sample_row(state.logits_for_slot(0), &cfg.sampler, &mut rng);
-            state.step(engine, &[(tok, lp)])?;
-            steps += 1;
-        }
+    fn device_slots(&self) -> usize {
+        self.state.device_slots()
     }
 
-    let text = state.text_of(engine, chosen);
-    let metrics = RequestMetrics {
-        final_branch_tokens: state.branches[chosen].tokens.len(),
-        total_tokens: state.total_tokens(),
-        peak_mem_bytes: state.mem.peak(),
-        wall_seconds: 0.0,
-        correct: false,
-        decode_calls: state.decode_calls,
-        gather_calls: state.gather_calls,
-    };
-    Ok(GenOutput { text, chosen_branch: chosen, metrics })
+    fn mem_bytes(&self) -> usize {
+        self.state.mem_bytes()
+    }
 }

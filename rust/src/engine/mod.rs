@@ -14,6 +14,13 @@
 //! stable: policies address branches by index into [`GenState::branches`];
 //! the mapping to device slots is internal.
 //!
+//! The continuous-batching scheduler (`crate::server`) reads each
+//! request's live occupancy through [`GenState::device_slots`] /
+//! [`GenState::mem_bytes`] and projects an incoming request's cost with
+//! [`Engine::admission_cost`] — both shrink/are checked the moment
+//! pruning or compaction re-buckets the cache, so freed capacity is
+//! immediately re-admittable.
+//!
 //! # Hot-path performance notes
 //!
 //! The steady-state decode step is allocation-free on the host side,
@@ -110,6 +117,19 @@ impl Engine {
     /// initial state. The prefill logits seed every branch's first sample.
     pub fn start(&self, prompt: &str, n: usize) -> Result<GenState> {
         self.start_opts(prompt, n, StartOpts::default())
+    }
+
+    /// Projected admission cost of a fresh `n`-branch request:
+    /// `(device_slots, kv_bytes)`. Slots are the post-prefill bucket;
+    /// KV bytes are the request's **worst case** (`bucket × max_seq`) —
+    /// a request's cache grows every decoded token, so admission must
+    /// budget for where it can end up, not where it starts. The
+    /// scheduler checks this against its budgets *before* paying for
+    /// the prefill dispatch.
+    pub fn admission_cost(&self, n: usize) -> Result<(usize, usize)> {
+        let bucket = self.model.bucket_for(n)?;
+        let cfg = &self.model.config;
+        Ok((bucket, bucket * cfg.max_seq * cfg.kv_bytes_per_token()))
     }
 
     /// [`Engine::start`] with options (see [`StartOpts`]).
@@ -283,6 +303,22 @@ impl GenState {
 
     pub fn bucket(&self) -> usize {
         self.cache.bucket
+    }
+
+    /// Device slots (KV-cache rows) this request currently occupies —
+    /// the continuous-batching scheduler's occupancy unit. Shrinks the
+    /// moment [`Self::retain_branches`] / [`Self::compact_finished`]
+    /// compacts to a smaller bucket, which is exactly when the scheduler
+    /// can admit more work.
+    pub fn device_slots(&self) -> usize {
+        self.cache.bucket
+    }
+
+    /// Accounted KV bytes currently held (the scheduler's memory
+    /// admission input). Excludes the shared weight floor — weights are
+    /// loaded once per worker, not per request.
+    pub fn mem_bytes(&self) -> usize {
+        self.mem.component("kv")
     }
 
     pub fn pos(&self) -> usize {

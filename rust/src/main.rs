@@ -21,7 +21,8 @@ use kappa::coordinator::{metrics_for, run_method};
 use kappa::data::{eval, Dataset};
 use kappa::engine::Engine;
 use kappa::runtime::{LoadedModel, Manifest, Runtime};
-use kappa::server::Server;
+use kappa::metrics::ServeMetrics;
+use kappa::server::{SchedConfig, Server};
 use kappa::util::cli::Args;
 use kappa::util::stats;
 
@@ -51,6 +52,7 @@ USAGE:
                  [--problems 50] [--seed 17] [--json]
   kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
                  [--requests 20] [--dataset gsm]
+                 [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0]
 
 KAPPA hyperparameters (defaults = paper §4.1):
   --ema-alpha 0.5  --window 16  --mom-buckets 4
@@ -199,8 +201,18 @@ fn serve(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "sm");
 
-    eprintln!("[serve] booting {workers} worker(s) for model {model} …");
-    let server = Server::start(&dir, &model, workers, cfg.clone())?;
+    let d = SchedConfig::default();
+    let sched = SchedConfig {
+        max_inflight: args.usize_or("max-inflight", d.max_inflight),
+        slot_budget: args.usize_or("slot-budget", d.slot_budget),
+        mem_budget_bytes: args.usize_or("mem-budget-mb", 0) << 20,
+    };
+    eprintln!(
+        "[serve] booting {workers} worker(s) for model {model} \
+         (≤{} in flight, {} slots) …",
+        sched.max_inflight, sched.slot_budget
+    );
+    let server = Server::start_with(&dir, &model, workers, cfg.clone(), sched)?;
 
     let problems = dataset.generate(n_requests, args.u64_or("data-seed", 99));
     let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
@@ -210,6 +222,7 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut lat = Vec::new();
     let mut queue = Vec::new();
+    let mut serve_stats = ServeMetrics::default();
     let mut correct = 0usize;
     let mut total_tokens = 0usize;
     let mut errors = 0usize;
@@ -218,6 +231,7 @@ fn serve(args: &Args) -> Result<()> {
             Ok(r) => {
                 lat.push(r.queue_seconds + r.service_seconds);
                 queue.push(r.queue_seconds);
+                serve_stats.push(r.queue_seconds, r.service_seconds, r.inflight);
                 total_tokens += r.output.metrics.total_tokens;
                 if eval::is_correct(&r.output.text, prob.answer) {
                     correct += 1;
@@ -244,6 +258,17 @@ fn serve(args: &Args) -> Result<()> {
         stats::percentile(&lat, 100.0),
         stats::percentile(&queue, 50.0),
         correct as f64 / n_requests.max(1) as f64,
+    );
+    let serve_kv_peak = responses
+        .iter()
+        .filter_map(|r| r.as_ref().ok().map(|r| r.worker_kv_peak_bytes))
+        .max()
+        .unwrap_or(0);
+    println!(
+        "scheduler: mean queue {:.3}s, mean in-flight {:.2} (occupancy vs 1.0 baseline), co-resident KV peak {:.1} MB",
+        serve_stats.mean_queue_seconds(),
+        serve_stats.mean_inflight(),
+        serve_kv_peak as f64 / (1024.0 * 1024.0),
     );
     server.shutdown();
     Ok(())

@@ -83,6 +83,61 @@ impl RunMetrics {
     }
 }
 
+/// Serving-level telemetry aggregated over a trace of server responses:
+/// the numbers the continuous-batching scheduler is judged on
+/// (requests/s, queue time, occupancy) rather than the paper's
+/// per-request columns. Feed it each response's
+/// `(queue_seconds, service_seconds, inflight)` triple and the trace's
+/// wall-clock span.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    queue_seconds: Vec<f64>,
+    service_seconds: Vec<f64>,
+    inflight: Vec<usize>,
+}
+
+impl ServeMetrics {
+    pub fn push(&mut self, queue_seconds: f64, service_seconds: f64, inflight: usize) {
+        self.queue_seconds.push(queue_seconds);
+        self.service_seconds.push(service_seconds);
+        self.inflight.push(inflight);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.queue_seconds.len()
+    }
+
+    pub fn requests_per_sec(&self, wall_seconds: f64) -> f64 {
+        if wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.requests() as f64 / wall_seconds
+    }
+
+    pub fn mean_queue_seconds(&self) -> f64 {
+        stats::mean(&self.queue_seconds)
+    }
+
+    pub fn p95_queue_seconds(&self) -> f64 {
+        stats::percentile(&self.queue_seconds, 95.0)
+    }
+
+    pub fn mean_service_seconds(&self) -> f64 {
+        stats::mean(&self.service_seconds)
+    }
+
+    /// Mean in-flight requests observed at completion — the
+    /// slot-occupancy signal. The one-request-per-worker baseline pins
+    /// this at 1.0; a continuous-batching worker holds it above 1 while
+    /// the queue is non-empty.
+    pub fn mean_inflight(&self) -> f64 {
+        if self.inflight.is_empty() {
+            return 0.0;
+        }
+        self.inflight.iter().sum::<usize>() as f64 / self.inflight.len() as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +172,26 @@ mod tests {
         assert_eq!(m.accuracy(), 0.0);
         assert_eq!(m.peak_mem_mb(), 0.0);
         assert_eq!(m.throughput_tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn serve_metrics_aggregates() {
+        let mut s = ServeMetrics::default();
+        s.push(0.1, 1.0, 1);
+        s.push(0.3, 2.0, 3);
+        assert_eq!(s.requests(), 2);
+        assert!((s.mean_queue_seconds() - 0.2).abs() < 1e-12);
+        assert!((s.mean_service_seconds() - 1.5).abs() < 1e-12);
+        assert!((s.mean_inflight() - 2.0).abs() < 1e-12);
+        assert!((s.requests_per_sec(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.requests_per_sec(0.0), 0.0);
+    }
+
+    #[test]
+    fn serve_metrics_empty_is_zero() {
+        let s = ServeMetrics::default();
+        assert_eq!(s.requests(), 0);
+        assert_eq!(s.mean_inflight(), 0.0);
+        assert_eq!(s.requests_per_sec(1.0), 0.0);
     }
 }

@@ -1,26 +1,220 @@
-//! Batched request server (leader/worker, channel-based).
+//! Continuous-batching request server (leader/worker, channel-based).
 //!
 //! PJRT client handles are not `Send` (`Rc` internally), so each worker
 //! thread owns a full engine stack — its own PJRT client, weight buffers
 //! and compiled executables — and drains a shared request queue. Branch
 //! parallelism *within* a request is the engine's bucketed batching; the
-//! server adds request-level concurrency on top (one in-flight request
-//! per worker).
+//! server adds request-level concurrency on top.
+//!
+//! # Scheduler architecture
+//!
+//! Each worker runs a [`Scheduler`]: a continuous-batching loop that
+//! multiplexes many in-flight requests onto the one engine. Requests are
+//! *resumable state machines* ([`crate::coordinator::Driver`]), so the
+//! worker never blocks inside a request — it round-robins
+//! `poll_step` across every active request (one token's worth of
+//! dispatches per request per tick; see the `Driver` contract) and
+//! admits new work from the queue whenever the slot/memory budget
+//! allows:
+//!
+//! - **Admission control** is [`MemTracker`]-driven: every driver
+//!   reports its live device occupancy (`device_slots` = KV rows,
+//!   `mem_bytes` = accounted KV bytes), and a request is admitted only
+//!   while the worker-wide totals stay inside [`SchedConfig`]'s budgets
+//!   (projected via [`crate::engine::Engine::admission_cost`] *before*
+//!   paying for the prefill).
+//! - **Pruned slots are refilled within one scheduler tick**: when
+//!   KAPPA's gating (or ST-BoN's truncation, or EOS compaction) shrinks
+//!   a request's bucket, the freed capacity is visible to `can_admit`
+//!   at the top of the very next loop iteration — reclaimed budget goes
+//!   straight back into queued work instead of idling until the request
+//!   finishes. This is what makes inference-time pruning pay at serving
+//!   scale.
+//! - **Out-of-order completion**: each request answers on its own
+//!   response channel the moment its driver returns `Done`, killing the
+//!   old one-blocking-`run_method`-per-worker head-of-line blocking.
 //!
 //! This mirrors the deployment shape of the paper's setting ("number of
-//! GPUs varying based on N"): one worker ≈ one accelerator.
+//! GPUs varying based on N"): one worker ≈ one accelerator, and the
+//! scheduler plays the role of the accelerator's batcher.
+//!
+//! [`MemTracker`]: crate::engine::MemTracker
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::{run_method, GenOutput};
+use crate::coordinator::{make_driver, Driver, GenOutput, StepOutcome};
 use crate::engine::Engine;
 use crate::runtime::{LoadedModel, Manifest, Runtime};
+
+/// Per-request seed mixing — the one derivation every submission path
+/// must use ([`Server::submit_all`] and any caller deriving seeds for
+/// [`Server::submit`]); see [`crate::util::rng::request_seed`] for why
+/// `seed0 + i` was a correctness bug.
+pub use crate::util::rng::request_seed;
+
+/// Per-worker scheduler budgets (admission control).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Maximum in-flight requests per worker. `1` reproduces the old
+    /// one-blocking-request-per-worker behavior (the bench baseline).
+    pub max_inflight: usize,
+    /// Device-slot budget: total KV rows across all in-flight requests.
+    pub slot_budget: usize,
+    /// Accounted-KV-bytes admission watermark across in-flight
+    /// requests (`0` = unlimited), driven by each request's
+    /// [`crate::engine::MemTracker`] KV component. Incoming requests
+    /// are charged their **worst-case** KV
+    /// ([`crate::engine::Engine::admission_cost`] projects
+    /// `bucket × max_seq`), so a single admission can never push the
+    /// projected total past the ceiling; already-admitted requests are
+    /// accounted at their *live* (pruning-shrunk) size, which is what
+    /// lets reclaimed memory admit new work. This bounds admission, not
+    /// the instantaneous total — in-flight growth between their live
+    /// size and their own worst case is the operator's headroom
+    /// (preemption/eviction of running requests is future work).
+    pub mem_budget_bytes: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        // Four concurrent requests, one largest-bucket's worth of slots;
+        // memory bounded by the slot budget unless told otherwise.
+        Self { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0 }
+    }
+}
+
+impl SchedConfig {
+    /// The pre-scheduler serving shape: one blocking request per worker.
+    pub fn one_request_per_worker() -> Self {
+        Self { max_inflight: 1, slot_budget: usize::MAX, mem_budget_bytes: 0 }
+    }
+}
+
+/// What the scheduler needs from an in-flight request: poll it one step,
+/// and report its current device occupancy. Implemented by the worker's
+/// engine-bound adapter and by the offline test fakes.
+pub trait Pollable {
+    fn poll(&mut self) -> Result<StepOutcome>;
+    fn device_slots(&self) -> usize;
+    fn mem_bytes(&self) -> usize;
+}
+
+/// Continuous-batching core: active-request set + admission arithmetic +
+/// the round-robin tick. Generic over the pollable request type `P` and
+/// a caller-owned metadata payload `M` (response channel, timestamps),
+/// so the policy is unit-testable without artifacts or engines.
+pub struct Scheduler<P, M> {
+    cfg: SchedConfig,
+    active: Vec<(P, M)>,
+    /// High-water mark of co-resident accounted KV bytes across the
+    /// worker's in-flight requests. Per-request `MemTracker` peaks
+    /// cannot see *each other* — this is the serving-level residency
+    /// number a multi-request worker must be judged on.
+    mem_peak: usize,
+}
+
+impl<P: Pollable, M> Scheduler<P, M> {
+    pub fn new(cfg: SchedConfig) -> Self {
+        // `max_inflight: 0` would make `can_admit` permanently false and
+        // hang every submission (the always-admit-when-idle escape sits
+        // behind the in-flight cap) — a scheduler that can hold nothing
+        // is a config error, floored to the old blocking shape instead.
+        let cfg = SchedConfig { max_inflight: cfg.max_inflight.max(1), ..cfg };
+        Scheduler { cfg, active: Vec::new(), mem_peak: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Total device slots held by in-flight requests. Shrinks the moment
+    /// a driver's pruning/compaction poll returns — the "pruned slots
+    /// are refilled within one scheduler tick" invariant reads this.
+    pub fn slots_used(&self) -> usize {
+        self.active.iter().map(|(p, _)| p.device_slots()).sum()
+    }
+
+    /// Total accounted KV bytes held by in-flight requests.
+    pub fn mem_used(&self) -> usize {
+        self.active.iter().map(|(p, _)| p.mem_bytes()).sum()
+    }
+
+    /// May a request with the given projected occupancy be admitted? An
+    /// idle scheduler always admits (a request larger than the budget
+    /// must run solo rather than starve forever).
+    pub fn can_admit(&self, slots: usize, mem_bytes: usize) -> bool {
+        if self.active.len() >= self.cfg.max_inflight {
+            return false;
+        }
+        if self.active.is_empty() {
+            return true;
+        }
+        if self.slots_used().saturating_add(slots) > self.cfg.slot_budget {
+            return false;
+        }
+        if self.cfg.mem_budget_bytes > 0
+            && self.mem_used().saturating_add(mem_bytes) > self.cfg.mem_budget_bytes
+        {
+            return false;
+        }
+        true
+    }
+
+    pub fn admit(&mut self, request: P, meta: M) {
+        self.active.push((request, meta));
+        self.mem_peak = self.mem_peak.max(self.mem_used());
+    }
+
+    /// Co-resident KV high-water mark since this scheduler booted
+    /// (admissions and every tick's growth are sampled).
+    pub fn mem_peak(&self) -> usize {
+        self.mem_peak
+    }
+
+    /// One scheduler tick: poll every active request once, in admission
+    /// order. Completed (or failed) requests are removed and handed to
+    /// `on_done` — out of order by construction: whoever finishes first
+    /// leaves first, regardless of arrival.
+    pub fn tick(&mut self, mut on_done: impl FnMut(M, Result<GenOutput>)) {
+        let mut i = 0;
+        while i < self.active.len() {
+            match self.active[i].0.poll() {
+                Ok(StepOutcome::Pending) => i += 1,
+                Ok(StepOutcome::Done(out)) => {
+                    let (_, meta) = self.active.remove(i);
+                    on_done(meta, Ok(out));
+                }
+                Err(e) => {
+                    let (_, meta) = self.active.remove(i);
+                    on_done(meta, Err(e));
+                }
+            }
+            // Each poll can grow a request's KV by one token across its
+            // whole bucket — sample the co-resident high-water mark per
+            // poll, not per tick.
+            self.mem_peak = self.mem_peak.max(self.mem_used());
+        }
+    }
+
+    /// Abort every in-flight request (shutdown path): the drivers are
+    /// dropped, the metadata handed back so callers can send errors.
+    pub fn abort_all(&mut self, mut on_abort: impl FnMut(M)) {
+        for (_, meta) in self.active.drain(..) {
+            on_abort(meta);
+        }
+    }
+}
 
 /// One queued request.
 struct Request {
@@ -30,13 +224,30 @@ struct Request {
     resp: Sender<Result<Response>>,
 }
 
-/// Server reply: the generation plus queueing/service telemetry.
+/// Server reply: the generation plus queueing/service/occupancy
+/// telemetry.
 #[derive(Debug)]
 pub struct Response {
     pub output: GenOutput,
+    /// Enqueue → admission (time spent waiting for scheduler capacity).
     pub queue_seconds: f64,
+    /// Admission → completion (time in the scheduler, sharing the
+    /// engine with up to `max_inflight − 1` other requests).
     pub service_seconds: f64,
     pub worker: usize,
+    /// In-flight requests on the worker (this one included) at the
+    /// start of the tick in which this response completed — the
+    /// per-request occupancy signal. Tick-granular: several requests
+    /// draining in one tick all report the tick-start count (they were
+    /// genuinely co-resident then). The one-request-per-worker baseline
+    /// pins this at exactly 1.
+    pub inflight: usize,
+    /// The worker's co-resident KV high-water mark (bytes) up to this
+    /// response's completion tick. Per-request `peak_mem_bytes` cannot
+    /// see concurrent requests; this is the serving-level residency —
+    /// take the max over a trace's responses for the worker's true KV
+    /// peak.
+    pub worker_kv_peak_bytes: usize,
 }
 
 /// Handle to the running server.
@@ -44,26 +255,42 @@ pub struct Server {
     tx: Option<Sender<Request>>,
     workers: Vec<JoinHandle<()>>,
     run_cfg: RunConfig,
+    stop: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Boot `n_workers` worker threads, each loading `model_name` from
-    /// `artifacts_dir`. Blocks until every worker reports ready (so
-    /// startup failures surface immediately rather than on first submit).
+    /// Boot `n_workers` worker threads with the default scheduler
+    /// budgets. Blocks until every worker reports ready (so startup
+    /// failures surface immediately rather than on first submit).
     pub fn start(
         artifacts_dir: &str,
         model_name: &str,
         n_workers: usize,
         run_cfg: RunConfig,
     ) -> Result<Server> {
+        Self::start_with(artifacts_dir, model_name, n_workers, run_cfg, SchedConfig::default())
+    }
+
+    /// [`Server::start`] with explicit scheduler budgets (benches pit
+    /// the continuous-batching default against
+    /// [`SchedConfig::one_request_per_worker`]).
+    pub fn start_with(
+        artifacts_dir: &str,
+        model_name: &str,
+        n_workers: usize,
+        run_cfg: RunConfig,
+        sched_cfg: SchedConfig,
+    ) -> Result<Server> {
         let n_workers = n_workers.max(1);
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
 
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
             let ready = ready_tx.clone();
             let dir = artifacts_dir.to_string();
             let model = model_name.to_string();
@@ -71,7 +298,7 @@ impl Server {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("kappa-serve-{w}"))
-                    .spawn(move || worker_loop(w, &dir, &model, cfg, rx, ready))
+                    .spawn(move || worker_loop(w, &dir, &model, cfg, sched_cfg, rx, stop, ready))
                     .context("spawning worker")?,
             );
         }
@@ -79,7 +306,7 @@ impl Server {
         for _ in 0..n_workers {
             ready_rx.recv().map_err(|_| anyhow!("worker died during startup"))??;
         }
-        Ok(Server { tx: Some(tx), workers, run_cfg })
+        Ok(Server { tx: Some(tx), workers, run_cfg, stop })
     }
 
     pub fn run_config(&self) -> &RunConfig {
@@ -106,11 +333,18 @@ impl Server {
     }
 
     /// Submit many prompts and wait for all responses (submission
-    /// order). Prompts that could not be enqueued (closed queue) come
-    /// back as `Err` entries in the same positions.
+    /// order). Per-request seeds are derived via [`request_seed`] — two
+    /// batches with nearby base seeds draw from unrelated RNG streams.
+    /// Prompts that could not be enqueued (closed queue) come back as
+    /// `Err` entries in the same positions. Workers complete requests
+    /// out of order; only this collection step re-imposes submission
+    /// order.
     pub fn submit_all(&self, prompts: &[String], seed0: u64) -> Vec<Result<Response>> {
-        let rxs: Vec<_> =
-            prompts.iter().enumerate().map(|(i, p)| self.submit(p, seed0 + i as u64)).collect();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| self.submit(p, request_seed(seed0, i as u64)))
+            .collect();
         rxs.into_iter()
             .map(|rx| match rx {
                 Ok(rx) => rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped response"))),
@@ -119,8 +353,21 @@ impl Server {
             .collect()
     }
 
-    /// Graceful shutdown: close the queue and join workers.
+    /// Graceful shutdown: close the queue, let workers finish everything
+    /// already queued or in flight, then join them.
     pub fn shutdown(mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Immediate shutdown: in-flight requests are aborted and queued
+    /// requests refused — every pending response channel yields an
+    /// `Err` (directly, or by channel drop once the workers exit).
+    /// Joins the workers; never deadlocks on a non-empty queue.
+    pub fn shutdown_now(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
         self.tx.take();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -137,55 +384,252 @@ impl Drop for Server {
     }
 }
 
+/// Engine-bound in-flight request: the driver plus the worker's engine.
+struct Flight<'e> {
+    driver: Box<dyn Driver>,
+    engine: &'e Engine,
+}
+
+impl Pollable for Flight<'_> {
+    fn poll(&mut self) -> Result<StepOutcome> {
+        self.driver.poll_step(self.engine)
+    }
+    fn device_slots(&self) -> usize {
+        self.driver.device_slots()
+    }
+    fn mem_bytes(&self) -> usize {
+        self.driver.mem_bytes()
+    }
+}
+
+/// Response-channel metadata carried through the scheduler.
+struct Meta {
+    resp: Sender<Result<Response>>,
+    enqueued: Instant,
+    admitted: Instant,
+}
+
+/// How long an **idle** worker may hold the queue lock waiting for work
+/// before releasing it to re-check shutdown (and give busy workers a
+/// window for their non-blocking drain).
+const IDLE_QUEUE_SLICE: Duration = Duration::from_millis(10);
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     artifacts_dir: &str,
     model_name: &str,
     cfg: RunConfig,
+    sched_cfg: SchedConfig,
     rx: Arc<Mutex<Receiver<Request>>>,
+    stop: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
 ) {
-    // Each worker owns its entire engine stack (PJRT is not Send).
-    let engine = (|| -> Result<Engine> {
+    // Each worker owns its entire engine stack (PJRT is not Send). The
+    // per-request admission cost (bucket + worst-case KV bytes, for the
+    // branches this config's policy actually occupies —
+    // `RunConfig::concurrent_branches`) is part of startup: a config no
+    // exported bucket can hold must fail `Server::start` once, loudly,
+    // not disable admission control and drip per-request errors.
+    let setup = (|| -> Result<(Engine, (usize, usize))> {
         let manifest = Manifest::load(artifacts_dir)?;
         let rt = Arc::new(Runtime::new()?);
         let model = Arc::new(LoadedModel::load(rt, &manifest, model_name)?);
-        Ok(Engine::new(model))
+        let engine = Engine::new(model);
+        let admission = engine
+            .admission_cost(cfg.concurrent_branches())
+            .context("projecting request admission cost")?;
+        Ok((engine, admission))
     })();
-    let engine = match engine {
-        Ok(e) => {
+    let (engine, admission) = match setup {
+        Ok(x) => {
             let _ = ready.send(Ok(()));
-            e
+            x
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
+    scheduler_loop(worker_id, sched_cfg, &rx, &stop, admission, |prompt, seed| {
+        Ok(Flight { driver: make_driver(&engine, prompt, &cfg, seed)?, engine: &engine })
+    });
+}
 
+/// The continuous-batching worker loop, generic over the request type so
+/// its semantics (admission, refill-after-prune, out-of-order
+/// completion, shutdown draining) are testable without artifacts — the
+/// in-module tests drive it with synthetic [`Pollable`]s.
+fn scheduler_loop<P: Pollable>(
+    worker_id: usize,
+    sched_cfg: SchedConfig,
+    rx: &Mutex<Receiver<Request>>,
+    stop: &AtomicBool,
+    admission: (usize, usize),
+    mut spawn: impl FnMut(&str, u64) -> Result<P>,
+) {
+    let mut sched: Scheduler<P, Meta> = Scheduler::new(sched_cfg);
+    let mut closed = false;
     loop {
-        let req = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        let req = match req {
-            Ok(r) => r,
-            Err(_) => break, // queue closed
-        };
-        let queue_seconds = req.enqueued.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        let result = run_method(&engine, &req.prompt, &cfg, req.seed).map(|mut output| {
-            let service_seconds = t0.elapsed().as_secs_f64();
-            output.metrics.wall_seconds = service_seconds;
-            Response { output, queue_seconds, service_seconds, worker: worker_id }
+        if stop.load(Ordering::SeqCst) {
+            // Immediate shutdown: abort in-flight work, refuse whatever
+            // is still queued, exit. (`try_recv` keeps returning
+            // buffered requests after the sender drops, so nothing
+            // queued is left to dangle while this worker lives; requests
+            // another worker holds fail via channel drop when it exits.)
+            sched.abort_all(|meta| {
+                let _ = meta.resp.send(Err(anyhow!("request aborted: server shut down")));
+            });
+            while let Ok(req) = rx.lock().unwrap().try_recv() {
+                let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
+            }
+            return;
+        }
+
+        // Admission: refill capacity freed since the last tick. An idle
+        // worker waits on the queue in short slices (releasing the lock
+        // between them, so it never starves busy workers' non-blocking
+        // drains and notices shutdown promptly); a worker with requests
+        // in flight takes the queue lock opportunistically — if another
+        // worker is camping on it, skip admission this tick rather than
+        // stall the dispatch loop.
+        while !closed && sched.can_admit(admission.0, admission.1) {
+            let polled = if sched.is_empty() {
+                match rx.lock().unwrap().recv_timeout(IDLE_QUEUE_SLICE) {
+                    Ok(r) => Some(r),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        closed = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_lock() {
+                    Ok(queue) => match queue.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => {
+                            closed = true;
+                            None
+                        }
+                    },
+                    Err(_) => None,
+                }
+            };
+            let Some(req) = polled else { break };
+            if stop.load(Ordering::SeqCst) {
+                let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
+                continue;
+            }
+            let admitted = Instant::now();
+            match spawn(&req.prompt, req.seed) {
+                Ok(flight) => {
+                    sched.admit(flight, Meta { resp: req.resp, enqueued: req.enqueued, admitted });
+                }
+                // Driver construction failed (bad prompt, unsupported
+                // config): fail this request, keep serving.
+                Err(e) => {
+                    let _ = req.resp.send(Err(e));
+                }
+            }
+        }
+
+        if sched.is_empty() {
+            if closed {
+                return;
+            }
+            continue;
+        }
+
+        let inflight = sched.len();
+        // One tick stale at worst (the current tick's growth lands in
+        // the next response) — fine for a monotone high-water mark.
+        let kv_peak = sched.mem_peak();
+        sched.tick(|meta, result| {
+            let result = result.map(|mut output| {
+                let service_seconds = meta.admitted.elapsed().as_secs_f64();
+                let queue_seconds = meta.admitted.duration_since(meta.enqueued).as_secs_f64();
+                output.metrics.wall_seconds = service_seconds;
+                Response {
+                    output,
+                    queue_seconds,
+                    service_seconds,
+                    worker: worker_id,
+                    inflight,
+                    worker_kv_peak_bytes: kv_peak,
+                }
+            });
+            let _ = meta.resp.send(result);
         });
-        let _ = req.resp.send(result);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::RequestMetrics;
+
+    fn fake_output(tag: &str) -> GenOutput {
+        GenOutput {
+            text: tag.to_string(),
+            chosen_branch: 0,
+            metrics: RequestMetrics::default(),
+        }
+    }
+
+    /// Synthetic in-flight request: completes after `polls_left` polls,
+    /// shrinking its slot footprint along `slot_plan` (simulating
+    /// pruning/compaction).
+    struct FakeFlight {
+        tag: String,
+        polls_left: usize,
+        slots: usize,
+        /// Slots after each remaining poll (front = next poll).
+        slot_plan: Vec<usize>,
+        fail: bool,
+        /// Shared completion log — records cross-request finish order.
+        done_log: Option<Arc<Mutex<Vec<String>>>>,
+    }
+
+    impl FakeFlight {
+        fn new(tag: &str, polls: usize, slots: usize) -> FakeFlight {
+            FakeFlight {
+                tag: tag.to_string(),
+                polls_left: polls,
+                slots,
+                slot_plan: Vec::new(),
+                fail: false,
+                done_log: None,
+            }
+        }
+    }
+
+    impl Pollable for FakeFlight {
+        fn poll(&mut self) -> Result<StepOutcome> {
+            if self.fail {
+                return Err(anyhow!("injected failure"));
+            }
+            if let Some(next) = self.slot_plan.first().copied() {
+                self.slots = next;
+                self.slot_plan.remove(0);
+            }
+            if self.polls_left <= 1 {
+                self.slots = 0;
+                if let Some(log) = &self.done_log {
+                    log.lock().unwrap().push(self.tag.clone());
+                }
+                return Ok(StepOutcome::Done(fake_output(&self.tag)));
+            }
+            self.polls_left -= 1;
+            Ok(StepOutcome::Pending)
+        }
+        fn device_slots(&self) -> usize {
+            self.slots
+        }
+        fn mem_bytes(&self) -> usize {
+            self.slots * 1024
+        }
+    }
 
     #[test]
     fn submit_errs_instead_of_panicking_when_queue_closed() {
@@ -193,10 +637,224 @@ mod tests {
         // gone, so the request channel is closed.
         let (tx, rx) = channel::<Request>();
         drop(rx);
-        let server = Server { tx: Some(tx), workers: Vec::new(), run_cfg: RunConfig::default() };
+        let server = Server {
+            tx: Some(tx),
+            workers: Vec::new(),
+            run_cfg: RunConfig::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+        };
         assert!(server.submit("q: 1+1?\na:", 0).is_err());
         let out = server.submit_all(&["a".to_string(), "b".to_string()], 0);
         assert_eq!(out.len(), 2);
         assert!(out.iter().all(|r| r.is_err()), "closed queue must yield Errs");
+    }
+
+    #[test]
+    fn request_seed_decorrelates_nearby_batches() {
+        // The exact collision the old `seed0 + i` derivation produced:
+        // batch seeds 40 and 42 shared streams at offsets (3, 1).
+        assert_eq!(40 + 3u64, 42 + 1u64);
+        assert_ne!(request_seed(40, 3), request_seed(42, 1));
+        // Deterministic, and injective across a small scan.
+        assert_eq!(request_seed(7, 9), request_seed(7, 9));
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..64u64 {
+            for i in 0..64u64 {
+                seen.insert(request_seed(s, i));
+            }
+        }
+        assert_eq!(seen.len(), 64 * 64, "request_seed collided on a tiny grid");
+    }
+
+    #[test]
+    fn scheduler_completes_out_of_order() {
+        let mut sched: Scheduler<FakeFlight, &str> = Scheduler::new(SchedConfig::default());
+        sched.admit(FakeFlight::new("slow", 5, 4), "slow");
+        sched.admit(FakeFlight::new("fast", 2, 4), "fast");
+        let mut done: Vec<String> = Vec::new();
+        for _ in 0..5 {
+            sched.tick(|m, r| done.push(format!("{m}:{}", r.unwrap().text)));
+        }
+        assert_eq!(done, vec!["fast:fast", "slow:slow"], "later-queued short request first");
+        assert!(sched.is_empty());
+    }
+
+    #[test]
+    fn scheduler_admission_respects_and_refills_slot_budget() {
+        let cfg = SchedConfig { max_inflight: 8, slot_budget: 8, mem_budget_bytes: 0 };
+        let mut sched: Scheduler<FakeFlight, usize> = Scheduler::new(cfg);
+        // Request A holds 8 slots, pruning to 2 on its first poll.
+        let mut a = FakeFlight::new("a", 4, 8);
+        a.slot_plan = vec![2];
+        sched.admit(a, 0);
+        assert!(!sched.can_admit(4, 0), "budget is full before the prune");
+
+        // One tick: A prunes 8 → 2 slots. The freed capacity must be
+        // admissible immediately — "pruned slots are refilled within one
+        // scheduler tick".
+        sched.tick(|_, _| {});
+        assert_eq!(sched.slots_used(), 2);
+        assert!(sched.can_admit(4, 0), "freed slots not admissible after the tick");
+        sched.admit(FakeFlight::new("b", 2, 4), 1);
+        assert_eq!(sched.slots_used(), 6);
+        assert!(!sched.can_admit(4, 0));
+        // The co-resident high-water mark remembers A's pre-prune 8
+        // slots (8 KiB of fake KV), not the post-prune live total.
+        assert_eq!(sched.mem_peak(), 8 * 1024);
+
+        // Occupancy never decreases while the queue has admissible work:
+        // completing B frees 4 slots, C takes them in the same loop.
+        while sched.len() == 2 {
+            sched.tick(|_, _| {});
+        }
+        assert!(sched.can_admit(4, 0));
+    }
+
+    #[test]
+    fn scheduler_mem_budget_gates_admission() {
+        let cfg = SchedConfig { max_inflight: 8, slot_budget: usize::MAX, mem_budget_bytes: 8192 };
+        let mut sched: Scheduler<FakeFlight, ()> = Scheduler::new(cfg);
+        sched.admit(FakeFlight::new("a", 3, 6), ()); // 6 KiB accounted
+        assert!(sched.can_admit(1, 1024));
+        assert!(!sched.can_admit(1, 4096), "8 KiB ceiling must hold");
+        // An idle scheduler admits even over-budget work (no starvation).
+        let empty: Scheduler<FakeFlight, ()> = Scheduler::new(cfg);
+        assert!(empty.can_admit(64, 1 << 30));
+    }
+
+    #[test]
+    fn scheduler_hands_back_poll_errors() {
+        let mut sched: Scheduler<FakeFlight, &str> = Scheduler::new(SchedConfig::default());
+        let mut bad = FakeFlight::new("bad", 3, 1);
+        bad.fail = true;
+        sched.admit(bad, "bad");
+        sched.admit(FakeFlight::new("ok", 1, 1), "ok");
+        let mut results = Vec::new();
+        sched.tick(|m, r| results.push((m, r.is_ok())));
+        assert_eq!(results, vec![("bad", false), ("ok", true)]);
+        assert!(sched.is_empty());
+    }
+
+    // ---- scheduler_loop (the worker body) against fake drivers ----
+
+    fn submit_to(tx: &Sender<Request>, prompt: &str, seed: u64) -> Receiver<Result<Response>> {
+        let (resp_tx, resp_rx) = channel();
+        tx.send(Request {
+            prompt: prompt.to_string(),
+            seed,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        })
+        .expect("queue open");
+        resp_rx
+    }
+
+    #[test]
+    fn scheduler_loop_serves_many_requests_out_of_order_on_one_worker() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig { max_inflight: 3, slot_budget: 16, mem_budget_bytes: 0 };
+
+        // Request "len:k" runs k polls; slower requests must not block
+        // faster ones admitted behind them.
+        let rxs: Vec<_> =
+            ["len:9", "len:2", "len:4"].iter().map(|p| submit_to(&tx, p, 0)).collect();
+        drop(tx); // close the queue: the loop exits once everything drains
+
+        let done_log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let done_log = Arc::clone(&done_log);
+            std::thread::spawn(move || {
+                scheduler_loop(0, cfg, &rx, &stop, (4, 0), |prompt, _seed| {
+                    let polls: usize = prompt.trim_start_matches("len:").parse().unwrap();
+                    let mut f = FakeFlight::new(prompt, polls, 4);
+                    f.done_log = Some(Arc::clone(&done_log));
+                    Ok(f)
+                });
+            })
+        };
+
+        let responses: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().expect("alive").expect("ok")).collect();
+        worker.join().expect("worker exits cleanly");
+
+        // All three served by the one worker, completed **out of
+        // submission order**: the 9-poll request (submitted first)
+        // finishes last; the 2-poll request overtakes both.
+        assert_eq!(responses.len(), 3);
+        assert_eq!(
+            *done_log.lock().unwrap(),
+            vec!["len:2".to_string(), "len:4".to_string(), "len:9".to_string()],
+            "completion order must follow work length, not submission order"
+        );
+        assert!(responses.iter().all(|r| r.inflight >= 1 && r.inflight <= 3));
+    }
+
+    #[test]
+    fn scheduler_loop_shutdown_with_queued_requests_errs_without_deadlock() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Capacity 1: the second and third requests stay queued behind a
+        // long-running first request.
+        let cfg = SchedConfig { max_inflight: 1, slot_budget: 4, mem_budget_bytes: 0 };
+
+        let in_flight = submit_to(&tx, "len:1000000", 0);
+        let queued_a = submit_to(&tx, "len:1", 1);
+        let queued_b = submit_to(&tx, "len:1", 2);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(0, cfg, &rx, &stop, (4, 0), |prompt, _seed| {
+                    let polls: usize = prompt.trim_start_matches("len:").parse().unwrap();
+                    Ok(FakeFlight::new(prompt, polls, 4))
+                });
+            })
+        };
+
+        // Shut down mid-service: stop, then close the queue.
+        stop.store(true, Ordering::SeqCst);
+        drop(tx);
+        worker.join().expect("no deadlock on shutdown with a non-empty queue");
+
+        // The in-flight request was aborted, the queued ones refused —
+        // all three observe an error, none hang.
+        assert!(in_flight.recv().expect("channel alive").is_err());
+        assert!(queued_a.recv().expect("channel alive").is_err());
+        assert!(queued_b.recv().expect("channel alive").is_err());
+    }
+
+    #[test]
+    fn scheduler_loop_spawn_failure_fails_request_not_worker() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let bad = submit_to(&tx, "bad", 0);
+        let good = submit_to(&tx, "len:2", 1);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(0, SchedConfig::default(), &rx, &stop, (1, 0), |prompt, _| {
+                    if prompt == "bad" {
+                        Err(anyhow!("oversized prompt"))
+                    } else {
+                        Ok(FakeFlight::new(prompt, 2, 1))
+                    }
+                });
+            })
+        };
+
+        assert!(bad.recv().expect("alive").is_err(), "bad request fails cleanly");
+        assert!(good.recv().expect("alive").is_ok(), "worker survives and serves the next");
+        worker.join().expect("clean exit");
     }
 }

@@ -39,6 +39,24 @@ impl SplitMix64 {
     }
 }
 
+/// Mix a base seed with a request/problem index into an independent
+/// per-request seed (splitmix64 finalizer over the golden-ratio
+/// stream).
+///
+/// Additive derivations (`seed0 + i`) make nearby base seeds share RNG
+/// streams across runs (run A's request 3 == run B's request 1 when
+/// the bases differ by 2), silently duplicating generations. The
+/// bijective avalanche here decorrelates every `(seed0, i)` pair;
+/// **all** per-request seed derivation — server submission
+/// (`crate::server::request_seed` re-exports this) and bench/eval
+/// loops (`coordinator::metrics_for`) — must go through it.
+pub fn request_seed(seed0: u64, i: u64) -> u64 {
+    let mut z = seed0 ^ i.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// PCG-XSH-RR with 64-bit state — serving-path sampling RNG.
 #[derive(Debug, Clone)]
 pub struct Pcg64 {

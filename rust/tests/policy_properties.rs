@@ -3,9 +3,11 @@
 
 use kappa::coordinator::config::{KappaConfig, Schedule};
 use kappa::coordinator::draft::{all_pairwise_inconsistent, most_consistent, token_consistency};
+use kappa::coordinator::kappa::{plan_continuation, Continuation};
 use kappa::coordinator::sampler::{self, token_logprob};
 use kappa::coordinator::schedule::survivors;
 use kappa::coordinator::signals::{combine_scores, raw_signals, BranchSignalState};
+use kappa::engine::Branch;
 use kappa::testing::check;
 use kappa::util::rng::Pcg64;
 use kappa::util::stats;
@@ -175,6 +177,55 @@ fn prop_consistency_in_unit_interval_and_medoid_valid() {
         let pick = most_consistent(&refs, upto);
         assert!(pick < n);
     });
+}
+
+fn branch(finished: bool, pruned: bool) -> Branch {
+    Branch { tokens: vec![1, 2, 3], logprob_sum: -3.0, finished, pruned }
+}
+
+#[test]
+fn kappa_continuation_picks_highest_scoring_unpruned_winner() {
+    // Winner: highest trajectory score among unpruned candidates (ties →
+    // last max, matching the blocking loop's stable iteration order).
+    let branches = vec![branch(false, false), branch(false, true), branch(false, false)];
+    let scores = [0.5, 9.0, 2.0]; // branch 1 is pruned — its score must not win
+    let live = vec![0, 2];
+    let plan = plan_continuation(&branches, &live, |bi| scores[bi]).unwrap();
+    assert_eq!(plan, Continuation::Decode(2));
+
+    // A finished winner needs no continuation.
+    let branches = vec![branch(true, false), branch(false, false)];
+    let plan = plan_continuation(&branches, &[1], |bi| [3.0, 1.0][bi]).unwrap();
+    assert_eq!(plan, Continuation::Finished(0));
+
+    // Equal scores: last max wins (index 1), like the seed implementation.
+    let branches = vec![branch(false, false), branch(false, false)];
+    let plan = plan_continuation(&branches, &[0, 1], |_| 1.0).unwrap();
+    assert_eq!(plan, Continuation::Decode(1));
+}
+
+#[test]
+fn kappa_unfinished_winner_missing_from_device_batch_is_an_error() {
+    // Regression (PR 3): an unfinished winner absent from the live set
+    // has lost its KV cache. The old Phase III guard
+    // (`if live.contains(&chosen)`) silently skipped continuation and
+    // returned mid-generation text; it must now surface an invariant
+    // error instead.
+    let branches = vec![branch(false, false), branch(true, false)];
+    let live: Vec<usize> = vec![]; // winner 0 is unpruned+unfinished but not on device
+    let err = plan_continuation(&branches, &live, |bi| [5.0, 1.0][bi]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("invariant"), "error must name the invariant: {msg}");
+    assert!(msg.contains("winner branch 0"), "error must name the branch: {msg}");
+
+    // NaN scores degrade deterministically (total_cmp), never panic, and
+    // still enforce the invariant.
+    let branches = vec![branch(false, false)];
+    assert!(plan_continuation(&branches, &[], |_| f64::NAN).is_err());
+    assert_eq!(
+        plan_continuation(&branches, &[0], |_| f64::NAN).unwrap(),
+        Continuation::Decode(0)
+    );
 }
 
 #[test]

@@ -1,0 +1,188 @@
+//! Continuous-batching scheduler suite.
+//!
+//! The load-bearing claim: a request stepped through the scheduler —
+//! interleaved poll-by-poll with other in-flight requests on the same
+//! engine — produces **bit-identical** text and metrics to the
+//! pre-refactor blocking loop (`run_method` drives the same `Driver`
+//! state machine to completion solo). Per-request `GenState` isolation
+//! is what makes interleaving invisible; these tests pin it for all
+//! four methods.
+//!
+//! Artifact-gated tests skip (loudly) when `artifacts/` is absent —
+//! always the case under the offline xla stub. The scheduler policy
+//! itself (admission, refill-after-prune, out-of-order completion,
+//! shutdown draining) is covered without artifacts by the in-module
+//! tests in `src/server/mod.rs`, which drive the same `scheduler_loop`
+//! with synthetic drivers.
+
+use std::sync::Arc;
+
+use kappa::coordinator::config::{Method, RunConfig};
+use kappa::coordinator::{make_driver, run_method, Driver, GenOutput, StepOutcome};
+use kappa::data::Dataset;
+use kappa::engine::Engine;
+use kappa::runtime::{LoadedModel, Manifest, Runtime};
+use kappa::server::{request_seed, SchedConfig, Server};
+
+fn artifacts_dir() -> String {
+    std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn load() -> Option<Arc<Engine>> {
+    let manifest = match Manifest::load(artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts — run `make artifacts`): {e:#}");
+            return None;
+        }
+    };
+    let rt = Arc::new(Runtime::new().expect("pjrt client"));
+    let model = LoadedModel::load(rt, &manifest, "sm").expect("load sm");
+    Some(Arc::new(Engine::new(Arc::new(model))))
+}
+
+fn assert_outputs_identical(a: &GenOutput, b: &GenOutput, what: &str) {
+    assert_eq!(a.text, b.text, "{what}: text");
+    assert_eq!(a.chosen_branch, b.chosen_branch, "{what}: chosen branch");
+    assert_eq!(a.metrics.final_branch_tokens, b.metrics.final_branch_tokens, "{what}: tokens");
+    assert_eq!(a.metrics.total_tokens, b.metrics.total_tokens, "{what}: total tokens");
+    assert_eq!(a.metrics.peak_mem_bytes, b.metrics.peak_mem_bytes, "{what}: peak mem");
+    assert_eq!(a.metrics.decode_calls, b.metrics.decode_calls, "{what}: decode calls");
+    assert_eq!(a.metrics.gather_calls, b.metrics.gather_calls, "{what}: gather calls");
+}
+
+/// Scheduler-stepped requests are bit-identical to blocking runs, for
+/// every method: three requests are interleaved poll-by-poll on one
+/// engine (exactly what the worker's round-robin tick does) and each
+/// result compared against its solo `run_method` twin.
+#[test]
+fn interleaved_driver_stepping_is_bit_identical_to_blocking_runs() {
+    let Some(engine) = load() else { return };
+    let problems = Dataset::GsmSynth.generate(3, 77);
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+
+        // Blocking oracle: each request solo, in order.
+        let blocking: Vec<GenOutput> = problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                run_method(&engine, &p.prompt(), &cfg, request_seed(5, i as u64)).expect("blocking")
+            })
+            .collect();
+
+        // Scheduler shape: all three in flight at once, round-robin
+        // polled until each completes (out of order is fine — results
+        // are keyed by request index).
+        let mut drivers: Vec<_> = problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                Some(make_driver(&engine, &p.prompt(), &cfg, request_seed(5, i as u64)).unwrap())
+            })
+            .collect();
+        let mut stepped: Vec<Option<GenOutput>> = vec![None, None, None];
+        while stepped.iter().any(|o| o.is_none()) {
+            for (i, slot) in drivers.iter_mut().enumerate() {
+                let Some(driver) = slot else { continue };
+                match driver.poll_step(&engine).expect("poll") {
+                    StepOutcome::Pending => {}
+                    StepOutcome::Done(out) => {
+                        stepped[i] = Some(out);
+                        *slot = None;
+                    }
+                }
+            }
+        }
+
+        for (i, (b, s)) in blocking.iter().zip(&stepped).enumerate() {
+            let s = s.as_ref().unwrap();
+            assert_outputs_identical(b, s, &format!("{method:?} request {i}"));
+        }
+    }
+}
+
+/// Occupancy reporting: a KAPPA request's device slots shrink as gating
+/// prunes branches — the signal the scheduler's admission control reads.
+#[test]
+fn driver_occupancy_shrinks_as_pruning_frees_slots() {
+    let Some(engine) = load() else { return };
+    let problems = Dataset::GsmSynth.generate(1, 13);
+    let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+    let mut driver = make_driver(&engine, &problems[0].prompt(), &cfg, 3).unwrap();
+
+    let initial = driver.device_slots();
+    assert!(initial >= 4, "4-branch request must start in a ≥4 bucket");
+    let mut min_slots = initial;
+    loop {
+        match driver.poll_step(&engine).expect("poll") {
+            StepOutcome::Pending => min_slots = min_slots.min(driver.device_slots()),
+            StepOutcome::Done(_) => break,
+        }
+    }
+    assert!(
+        min_slots < initial,
+        "gating never freed a slot (started at {initial}, never dropped)"
+    );
+}
+
+/// Many requests / few workers through the real server: every response
+/// arrives, and the continuous-batching worker reports >1 in-flight
+/// occupancy while the queue is backed up.
+#[test]
+fn server_schedules_many_requests_onto_few_workers() {
+    if !std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0 };
+    let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
+
+    let problems = Dataset::GsmSynth.generate(8, 41);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let responses = server.submit_all(&prompts, 9);
+
+    assert_eq!(responses.len(), 8);
+    let mut max_inflight = 0usize;
+    for resp in &responses {
+        let r = resp.as_ref().expect("response ok");
+        assert!(r.output.metrics.total_tokens > 0);
+        max_inflight = max_inflight.max(r.inflight);
+    }
+    assert!(
+        max_inflight > 1,
+        "8 queued requests on one worker never overlapped (max inflight {max_inflight})"
+    );
+    server.shutdown();
+}
+
+/// `shutdown_now` with requests still queued: every pending submission
+/// observes an error (directly or by channel drop) and nothing
+/// deadlocks or panics.
+#[test]
+fn server_shutdown_now_fails_queued_requests_without_deadlock() {
+    if !std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = RunConfig { method: Method::Kappa, n: 4, ..RunConfig::default() };
+    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, mem_budget_bytes: 0 };
+    let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
+
+    let problems = Dataset::GsmSynth.generate(6, 51);
+    let rxs: Vec<_> = problems
+        .iter()
+        .enumerate()
+        .map(|(i, p)| server.submit(&p.prompt(), request_seed(1, i as u64)).expect("queue open"))
+        .collect();
+    server.shutdown_now();
+
+    // Each pending request resolves — Ok (finished before the stop flag
+    // landed), an explicit Err, or a dropped channel (also a clean
+    // failure). None may hang: `recv` returning at all is the assertion.
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+}
