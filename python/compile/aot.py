@@ -13,6 +13,15 @@ Exports, per model size m ∈ {sm, lg}:
                                           never re-upload the logits slab
   artifacts/gather_{m}_b{S}to{D}.hlo.txt  KV-cache gather: branch broadcast
                                           (S=1) and post-prune compaction
+  artifacts/decode_packed_{m}_b{B}.hlo.txt    cross-request packed decode:
+                                          per-row ``pos`` vector so branches
+                                          of different requests share one
+                                          bucketed dispatch
+  artifacts/superstep_packed_{m}_b{B}.hlo.txt packed decode+signals superstep
+                                          (the fused scheduler's hot path)
+  artifacts/fuse_{m}_b{B}.hlo.txt         pod admission: merge a prefilled
+                                          bucket-1 cache into a shared pod
+                                          cache's leased rows
   artifacts/weights_{m}.bin               flat little-endian f32 params
 plus model-independent:
   artifacts/signals_b{B}.hlo.txt          fused Pallas KL/conf/entropy kernel
@@ -37,7 +46,15 @@ from jax._src.lib import xla_client as xc
 
 from . import tokenizer, train
 from .kernels.signals import signals
-from .model import BATCH_BUCKETS, CONFIGS, ModelConfig, decode_step, prefill
+from .model import (
+    BATCH_BUCKETS,
+    CONFIGS,
+    ModelConfig,
+    decode_step,
+    decode_step_packed,
+    fuse_rows,
+    prefill,
+)
 
 FORMAT_VERSION = 1
 
@@ -98,6 +115,91 @@ def lower_superstep(cfg: ModelConfig, b: int, donate: bool = True):
     )
 
 
+def superstep_packed(cfg: ModelConfig, params: dict, token, pos, k_cache, v_cache, q_logits):
+    """Cross-request packed superstep: ``decode_step_packed`` chained into
+    the fused signal kernel — one dispatch serves every co-resident
+    request whose branches share the bucket, each row at its own
+    sequence position. Row-wise identical to the solo ``superstep``
+    (``test_packed.py`` pins the parity)."""
+    logits, k_cache, v_cache = decode_step_packed(cfg, params, token, pos, k_cache, v_cache)
+    kl, conf, ent = signals(logits, q_logits)
+    return logits, kl, conf, ent, k_cache, v_cache
+
+
+def lower_decode_packed(cfg: ModelConfig, b: int, donate: bool = True):
+    """Lower the packed (per-row ``pos``) decode step for bucket ``b``
+    with compile-time k/v donation, mirroring ``lower_superstep``'s
+    contract: flat args are (params…, token[b], pos[b], k, v); the k/v
+    operands at positions ``n_params + 2`` / ``n_params + 3`` alias tuple
+    outputs 1 / 2 of ``(logits, k, v)``."""
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def decode_fn(*args):
+        p = dict(zip(names, args[:n_p]))
+        token, pos, kc, vc = args[n_p : n_p + 4]
+        return decode_step_packed(cfg, p, token, pos, kc, vc)
+
+    donate_argnums = (n_p + 2, n_p + 3) if donate else ()
+    return jax.jit(decode_fn, donate_argnums=donate_argnums).lower(
+        *param_specs,
+        _spec((b,), jnp.int32),
+        _spec((b,), jnp.int32),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+    )
+
+
+def lower_superstep_packed(cfg: ModelConfig, b: int, donate: bool = True):
+    """Lower the packed superstep for bucket ``b`` with compile-time k/v
+    donation. Flat args are (params…, token[b], pos[b], k, v, q); the k/v
+    operands at ``n_params + 2`` / ``n_params + 3`` alias tuple outputs
+    4 / 5 of ``(logits, kl, conf, ent, k, v)`` — exactly the solo
+    superstep's table (``test_packed.py`` pins it)."""
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def superstep_fn(*args):
+        p = dict(zip(names, args[:n_p]))
+        token, pos, kc, vc, q = args[n_p : n_p + 5]
+        return superstep_packed(cfg, p, token, pos, kc, vc, q)
+
+    donate_argnums = (n_p + 2, n_p + 3) if donate else ()
+    return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
+        *param_specs,
+        _spec((b,), jnp.int32),
+        _spec((b,), jnp.int32),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+        _spec((cfg.vocab,)),
+    )
+
+
+def lower_fuse(cfg: ModelConfig, b: int):
+    """Lower the pod-admission row merge for bucket ``b``: args are
+    (k_dst, v_dst, k_src[L,1,…], v_src, idx[b]) — see
+    ``model.fuse_rows``. No parameter prefix (pure data movement, like
+    the gathers)."""
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def fuse_fn(kd, vd, ks, vs, idx):
+        return fuse_rows(kd, vd, ks, vs, idx)
+
+    return jax.jit(fuse_fn).lower(
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, 1, h, s, dh)),
+        _spec((lyr, 1, h, s, dh)),
+        _spec((b,), jnp.int32),
+    )
+
+
 def to_hlo_text(lowered) -> str:
     """jax Lowered → XLA HLO text (the only interchange the Rust side accepts)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -136,7 +238,14 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
     n_p = len(names)
     param_specs = [_spec(shapes[n]) for n in names]
     lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
-    arts: dict = {"decode": {}, "superstep": {}, "gather": {}}
+    arts: dict = {
+        "decode": {},
+        "superstep": {},
+        "gather": {},
+        "decode_packed": {},
+        "superstep_packed": {},
+        "fuse": {},
+    }
 
     def as_dict(flat):
         return dict(zip(names, flat))
@@ -179,6 +288,24 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
     for b in buckets:
         arts["superstep"][str(b)] = _write(
             out_dir, f"superstep_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_superstep(cfg, b))
+        )
+
+    # --- cross-request batch fusion (PR 4): packed decode/superstep with
+    # per-row positions, plus the pod-admission row merge. Same donation
+    # contract as the solo superstep (k/v alias into the outputs).
+    for b in buckets:
+        arts["decode_packed"][str(b)] = _write(
+            out_dir,
+            f"decode_packed_{cfg.name}_b{b}.hlo.txt",
+            to_hlo_text(lower_decode_packed(cfg, b)),
+        )
+        arts["superstep_packed"][str(b)] = _write(
+            out_dir,
+            f"superstep_packed_{cfg.name}_b{b}.hlo.txt",
+            to_hlo_text(lower_superstep_packed(cfg, b)),
+        )
+        arts["fuse"][str(b)] = _write(
+            out_dir, f"fuse_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_fuse(cfg, b))
         )
 
     # --- KV gather (broadcast / compaction) ---

@@ -48,6 +48,28 @@ def _decode_attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
     o_ref[...] = jnp.einsum("bs,bsd->bd", w, v) / denom  # [B, Dh]
 
 
+def _decode_attn_kernel_packed(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    """One head, per-row mask: q [B, Dh], K/V [B, S, Dh], bias [B, S].
+
+    Identical arithmetic to ``_decode_attn_kernel`` except the additive
+    mask row differs per branch — the cross-request packed batch puts
+    branches of different requests (different sequence positions) in one
+    bucket, so each row carries its own visibility horizon. Row-wise the
+    op sequence is the same, which is what keeps a packed row bitwise
+    equal to the same row decoded in a solo-request dispatch.
+    """
+    q = q_ref[...].astype(jnp.float32)  # [B, Dh]
+    k = k_ref[...].astype(jnp.float32)  # [B, S, Dh]
+    v = v_ref[...].astype(jnp.float32)  # [B, S, Dh]
+    bias = bias_ref[...].astype(jnp.float32)  # [B, S]
+
+    scores = jnp.einsum("bsd,bd->bs", k, q) * scale + bias  # [B, S]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores - m)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum("bs,bsd->bd", w, v) / denom  # [B, Dh]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def decode_attention(q, k, v, bias, *, interpret: bool = True):
     """Fused masked single-query attention over the KV cache.
@@ -78,6 +100,43 @@ def decode_attention(q, k, v, bias, *, interpret: bool = True):
             pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
             pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
             pl.BlockSpec((s,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, None, dh), lambda j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, bias)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_packed(q, k, v, bias, *, interpret: bool = True):
+    """[`decode_attention`] with a **per-row** additive mask.
+
+    Args:
+      q:    [B, H, Dh] current-step queries.
+      k:    [B, H, S, Dh] key cache.
+      v:    [B, H, S, Dh] value cache.
+      bias: [B, S] additive mask, one row per branch (0 where slot ≤ that
+        row's pos, -1e30 beyond). This is the cross-request batch-fusion
+        variant: rows of one bucket may belong to different requests at
+        different sequence positions, so the visibility horizon is
+        per-row instead of shared.
+      interpret: Pallas interpret mode (mandatory on CPU PJRT).
+
+    Returns:
+      [B, H, Dh] attention outputs (float32).
+    """
+    b, h, s, dh = k.shape
+    scale = 1.0 / float(dh) ** 0.5
+    kernel = functools.partial(_decode_attn_kernel_packed, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, None, dh), lambda j: (0, j, 0)),
+            pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((b, None, s, dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((b, s), lambda j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((b, None, dh), lambda j: (0, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),

@@ -19,8 +19,12 @@ and in which the Rust runtime feeds buffers to the executables.
 
 KV-cache layout: ``[layers, B, heads, max_seq, head_dim]`` float32. All
 branches of a request share the same position (they start from one prompt
-and step in lockstep), so ``pos`` is a scalar — this is what makes the Rust
-engine's fixed-shape bucket batching sound.
+and step in lockstep), so ``pos`` is a scalar in ``decode_step``. The
+cross-request batch-fusion variant ``decode_step_packed`` generalizes
+``pos`` to a per-row vector so branches of *different* requests (different
+prompts, different positions) can share one bucketed dispatch;
+``fuse_rows`` is the companion op that admits a freshly prefilled request
+into a shared pod cache.
 """
 
 from __future__ import annotations
@@ -33,7 +37,7 @@ import jax.numpy as jnp
 
 from . import tokenizer
 from .kernels import ref as kref
-from .kernels.attention import decode_attention
+from .kernels.attention import decode_attention, decode_attention_packed
 
 
 @dataclass(frozen=True)
@@ -223,6 +227,87 @@ def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_p
 
     x = _ln(x, params["lnf_g"], params["lnf_b"])
     return x @ params["head"], k_cache, v_cache
+
+
+def decode_step_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
+    """One autoregressive step for a **cross-request packed** bucket.
+
+    The batch-fusion variant of ``decode_step``: rows of the bucket may
+    belong to different requests, each at its own sequence position, so
+    ``pos`` is an ``[B]`` int32 vector instead of a scalar. Every
+    computation is row-local (the per-row position embedding, the per-row
+    K/V write, the per-row masked attention, and the row-wise MLP), which
+    is what makes a packed row bitwise equal to the same row decoded in a
+    solo-request dispatch — ``python/tests/test_packed.py`` pins that
+    parity and the Rust engine's fused scheduler relies on it.
+
+    Rows that carry no live branch this step (free pod rows, or leased
+    rows whose request did not stage a token this tick) are driven with
+    ``token = PAD`` and that row's **current** (not-yet-written) position:
+    the k/v garbage they write lands in a slot that is either overwritten
+    by the row's next real decode before it is ever attended over, or
+    belongs to a row whose outputs are never read again.
+
+    Args:
+      token: [B] int32 — tokens sampled at the previous step (PAD for
+        rows without a live branch).
+      pos:   [B] int32 — per-row slot this step writes.
+      k_cache, v_cache: [L, B, H, S, Dh].
+
+    Returns:
+      logits [B, V], updated caches.
+    """
+    b = token.shape[0]
+    h, dh, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, d]
+
+    # Per-row additive mask: slots <= pos[r] visible for row r.
+    bias = jnp.where(jnp.arange(s)[None, :] <= pos[:, None], 0.0, -1e30).astype(jnp.float32)
+
+    def write_row(row_cache, kr, p):  # [H, S, Dh], [H, Dh], scalar pos
+        return jax.lax.dynamic_update_slice(row_cache, kr[:, None, :], (0, p, 0))
+
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        hdd = _ln(x, params[pref + "ln1_g"], params[pref + "ln1_b"])
+        q = _split_heads(hdd @ params[pref + "wq"], h)  # [B,H,Dh]
+        k = _split_heads(hdd @ params[pref + "wk"], h)
+        v = _split_heads(hdd @ params[pref + "wv"], h)
+        # Row-wise K/V write at each row's own position (vmapped
+        # dynamic_update_slice == the scalar-pos write, per row).
+        k_cache = k_cache.at[i].set(jax.vmap(write_row)(k_cache[i], k, pos))
+        v_cache = v_cache.at[i].set(jax.vmap(write_row)(v_cache[i], v, pos))
+        att = decode_attention_packed(q, k_cache[i], v_cache[i], bias)
+        x = x + att.reshape(b, cfg.d_model) @ params[pref + "wo"]
+        hdd = _ln(x, params[pref + "ln2_g"], params[pref + "ln2_b"])
+        x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
+
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"], k_cache, v_cache
+
+
+def fuse_rows(k_dst, v_dst, k_src, v_src, idx):
+    """Merge a freshly prefilled bucket-1 cache into a shared pod cache.
+
+    ``idx`` is an ``[B]`` int32 vector: row ``r`` of the result is the
+    pod's own row ``idx[r]`` when ``idx[r] >= 0``, or row 0 of the source
+    (the new request's prompt cache) when ``idx[r] < 0`` — one dispatch
+    both broadcasts the prompt across the request's leased rows and
+    leaves every other resident row untouched.
+
+    Args:
+      k_dst, v_dst: [L, B, H, S, Dh] — the pod cache.
+      k_src, v_src: [L, 1, H, S, Dh] — the prefill cache being admitted.
+      idx: [B] int32 row selector (see above).
+
+    Returns:
+      merged (k, v), both [L, B, H, S, Dh].
+    """
+    take_src = (idx < 0)[None, :, None, None, None]
+    keep = jnp.clip(idx, 0, k_dst.shape[1] - 1)
+    k = jnp.where(take_src, k_src, jnp.take(k_dst, keep, axis=1))
+    v = jnp.where(take_src, v_src, jnp.take(v_dst, keep, axis=1))
+    return k, v
 
 
 def forward_train(cfg: ModelConfig, params, tokens):

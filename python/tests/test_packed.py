@@ -1,0 +1,227 @@
+"""Cross-request batch fusion: packed decode/superstep vs solo dispatches.
+
+The Rust scheduler's batch fusion (PR 4) packs live branches of several
+co-resident requests into one shared bucket and runs a single packed
+dispatch per occupied bucket per tick. Its correctness claim is that a
+packed row is **bitwise identical** to the same row decoded through that
+request's solo dispatch (its own bucket, its own scalar-pos executable) —
+which is what keeps the fused-scheduler path bit-identical to the
+blocking driver path. These tests pin that contract at the graph level:
+
+- row parity: rows of two requests at different prompts/positions packed
+  into one bucket equal their solo decode rows (logits AND caches), with
+  garbage in the free rows;
+- free-row writes are harmless: a packed dispatch only touches leased
+  rows' caches at their own ``pos`` slot;
+- the packed superstep equals packed decode + signals bitwise;
+- pod admission (``fuse_rows``) broadcasts the prefill row into exactly
+  the leased rows and leaves every other row untouched;
+- the exported packed HLO carries the same k/v ``input_output_alias``
+  table as the solo superstep, and the donated lowering is
+  result-identical to the undonated one.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import (
+    lower_decode_packed,
+    lower_fuse,
+    lower_superstep_packed,
+    superstep_packed,
+    to_hlo_text,
+)
+from compile.kernels.signals import signals
+from compile.model import (
+    CONFIGS,
+    decode_step,
+    decode_step_packed,
+    fuse_rows,
+    init_params,
+    prefill,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["sm"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # Two requests with different prompts and different prompt lengths —
+    # the exact shape mismatch cross-request fusion must absorb.
+    tok_a = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1)
+    tok_b = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1).at[0, 1].set(5)
+    _, ka1, va1 = prefill(cfg, params, tok_a, jnp.int32(4))
+    _, kb1, vb1 = prefill(cfg, params, tok_b, jnp.int32(6))
+    q = jax.random.normal(jax.random.PRNGKey(9), (cfg.vocab,), jnp.float32)
+    return cfg, params, (ka1, va1), (kb1, vb1), q
+
+
+def bc(c, b):
+    return jnp.repeat(c, b, axis=1)
+
+
+def packed_pod(cfg, a, bcache, rows_a=4, rows_b=2, bucket=8, garb_seed=7):
+    """Pod cache: rows [0, rows_a) = request A, [rows_a, rows_a+rows_b) =
+    request B, remaining rows = garbage (freed/never-leased rows)."""
+    ka, va = bc(a[0], rows_a), bc(a[1], rows_a)
+    kb, vb = bc(bcache[0], rows_b), bc(bcache[1], rows_b)
+    free = bucket - rows_a - rows_b
+    shape = (cfg.n_layers, free, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    garb = jax.random.normal(jax.random.PRNGKey(garb_seed), shape, jnp.float32)
+    kp = jnp.concatenate([ka, kb, garb], axis=1)
+    vp = jnp.concatenate([va, vb, 2.0 * garb], axis=1)
+    return (ka, va), (kb, vb), (kp, vp)
+
+
+class TestPackedParity:
+    def test_packed_rows_bitwise_equal_solo_dispatches(self, setup):
+        cfg, params, a1, b1, _ = setup
+        (ka, va), (kb, vb), (kp, vp) = packed_pod(cfg, a1, b1)
+        ta = jnp.array([3, 5, 7, 9], jnp.int32)
+        tb = jnp.array([11, 13], jnp.int32)
+
+        # Solo oracles: request A in its own bucket-4 dispatch at pos 4,
+        # request B in its own bucket-2 dispatch at pos 6.
+        lg_a, ka2, va2 = decode_step(cfg, params, ta, jnp.int32(4), ka, va)
+        lg_b, kb2, vb2 = decode_step(cfg, params, tb, jnp.int32(6), kb, vb)
+
+        tok = jnp.concatenate([ta, tb, jnp.zeros((2,), jnp.int32)])
+        pos = jnp.array([4, 4, 4, 4, 6, 6, 0, 0], jnp.int32)
+        lg_p, kp2, vp2 = decode_step_packed(cfg, params, tok, pos, kp, vp)
+
+        np.testing.assert_array_equal(np.asarray(lg_p)[:4], np.asarray(lg_a))
+        np.testing.assert_array_equal(np.asarray(lg_p)[4:6], np.asarray(lg_b))
+        np.testing.assert_array_equal(np.asarray(kp2)[:, :4], np.asarray(ka2))
+        np.testing.assert_array_equal(np.asarray(kp2)[:, 4:6], np.asarray(kb2))
+        np.testing.assert_array_equal(np.asarray(vp2)[:, :4], np.asarray(va2))
+        np.testing.assert_array_equal(np.asarray(vp2)[:, 4:6], np.asarray(vb2))
+
+    def test_nonparticipating_rows_only_touched_at_their_pos_slot(self, setup):
+        # A leased row whose request stages no token this tick is driven
+        # with PAD at its own (not-yet-written) pos: every other slot of
+        # its cache row must come through the dispatch untouched.
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        tok = jnp.array([3, 5, 7, 9, 0, 0, 0, 0], jnp.int32)
+        pos = jnp.array([4, 4, 4, 4, 6, 6, 0, 0], jnp.int32)
+        _, kp2, vp2 = decode_step_packed(cfg, params, tok, pos, kp, vp)
+
+        kp0, kp2 = np.asarray(kp), np.asarray(kp2)
+        vp0, vp2 = np.asarray(vp), np.asarray(vp2)
+        # Request B's rows (4, 5): slot 6 is clobbered, all others intact.
+        mask = np.ones(cfg.max_seq, bool)
+        mask[6] = False
+        np.testing.assert_array_equal(kp2[:, 4:6, :, mask], kp0[:, 4:6, :, mask])
+        np.testing.assert_array_equal(vp2[:, 4:6, :, mask], vp0[:, 4:6, :, mask])
+        # Free rows (6, 7): only slot 0 clobbered.
+        mask = np.ones(cfg.max_seq, bool)
+        mask[0] = False
+        np.testing.assert_array_equal(kp2[:, 6:, :, mask], kp0[:, 6:, :, mask])
+
+    def test_uniform_pos_matches_scalar_pos_decode(self, setup):
+        # Degenerate packing (one request owns the whole bucket) must
+        # reproduce the solo executable exactly.
+        cfg, params, a1, _, _ = setup
+        ka, va = bc(a1[0], 4), bc(a1[1], 4)
+        tok = jnp.array([3, 5, 7, 9], jnp.int32)
+        lg_s, ks, vs = decode_step(cfg, params, tok, jnp.int32(4), ka, va)
+        lg_p, kpp, vpp = decode_step_packed(
+            cfg, params, tok, jnp.full((4,), 4, jnp.int32), ka, va
+        )
+        np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_s))
+        np.testing.assert_array_equal(np.asarray(kpp), np.asarray(ks))
+        np.testing.assert_array_equal(np.asarray(vpp), np.asarray(vs))
+
+    def test_packed_superstep_equals_packed_decode_plus_signals(self, setup):
+        cfg, params, a1, b1, q = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        tok = jnp.array([3, 5, 7, 9, 11, 13, 0, 0], jnp.int32)
+        pos = jnp.array([4, 4, 4, 4, 6, 6, 0, 0], jnp.int32)
+
+        lg_f, kl_f, conf_f, ent_f, k_f, v_f = superstep_packed(
+            cfg, params, tok, pos, kp, vp, q
+        )
+        lg_u, k_u, v_u = decode_step_packed(cfg, params, tok, pos, kp, vp)
+        kl_u, conf_u, ent_u = signals(lg_u, q)
+        for got, want in [
+            (lg_f, lg_u), (kl_f, kl_u), (conf_f, conf_u), (ent_f, ent_u),
+            (k_f, k_u), (v_f, v_u),
+        ]:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFuseRows:
+    def test_admission_broadcasts_prefill_into_leased_rows_only(self, setup):
+        cfg, params, a1, b1, _ = setup
+        (ka, va), _, (kp, vp) = packed_pod(cfg, a1, b1)
+        # Admit a new request into rows 4 and 5 (idx < 0 ⇒ source row 0).
+        idx = jnp.array([0, 1, 2, 3, -1, -1, 6, 7], jnp.int32)
+        kf, vf = fuse_rows(kp, vp, b1[0], b1[1], idx)
+        np.testing.assert_array_equal(np.asarray(kf)[:, :4], np.asarray(ka))
+        np.testing.assert_array_equal(np.asarray(vf)[:, :4], np.asarray(va))
+        for r in (4, 5):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(b1[0])[:, 0])
+            np.testing.assert_array_equal(np.asarray(vf)[:, r], np.asarray(b1[1])[:, 0])
+        np.testing.assert_array_equal(np.asarray(kf)[:, 6:], np.asarray(kp)[:, 6:])
+
+    def test_scattered_free_rows_are_supported(self, setup):
+        # Leases are row *lists*, not intervals — freed rows fragment, so
+        # admission must handle non-contiguous targets.
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        idx = jnp.array([0, -1, 2, -1, 4, 5, -1, 7], jnp.int32)
+        kf, _ = fuse_rows(kp, vp, b1[0], b1[1], idx)
+        for r in (1, 3, 6):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(b1[0])[:, 0])
+        for r in (0, 2, 4, 5, 7):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(kp)[:, r])
+
+
+class TestPackedExport:
+    @pytest.mark.parametrize("b", [1, 4])
+    def test_packed_superstep_hlo_carries_kv_alias(self, setup, b):
+        cfg, *_ = setup
+        n_p = len(cfg.param_names())
+        hlo = to_hlo_text(lower_superstep_packed(cfg, b))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        assert re.search(rf"\{{4\}}:\s*\({n_p + 2},", header), header
+        assert re.search(rf"\{{5\}}:\s*\({n_p + 3},", header), header
+
+    @pytest.mark.parametrize("b", [1, 4])
+    def test_packed_decode_hlo_carries_kv_alias(self, setup, b):
+        cfg, *_ = setup
+        n_p = len(cfg.param_names())
+        hlo = to_hlo_text(lower_decode_packed(cfg, b))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        # Outputs are (logits, k, v): k/v at tuple slots 1/2.
+        assert re.search(rf"\{{1\}}:\s*\({n_p + 2},", header), header
+        assert re.search(rf"\{{2\}}:\s*\({n_p + 3},", header), header
+
+    def test_donated_packed_lowering_result_identical_to_undonated(self, setup):
+        cfg, params, a1, b1, q = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        tok = jnp.array([3, 5, 7, 9, 11, 13, 0, 0], jnp.int32)
+        pos = jnp.array([4, 4, 4, 4, 6, 6, 0, 0], jnp.int32)
+        flat = [params[n] for n in cfg.param_names()]
+        plain = lower_superstep_packed(cfg, 8, donate=False).compile()(
+            *flat, tok, pos, kp, vp, q
+        )
+        donated = lower_superstep_packed(cfg, 8).compile()(*flat, tok, pos, kp, vp, q)
+        assert len(donated) == len(plain) == 6
+        for got, want in zip(donated, plain):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fuse_lowering_compiles_and_runs(self, setup):
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        idx = jnp.array([0, 1, 2, 3, -1, -1, 6, 7], jnp.int32)
+        kf, vf = lower_fuse(cfg, 8).compile()(kp, vp, b1[0], b1[1], idx)
+        want_k, want_v = fuse_rows(kp, vp, b1[0], b1[1], idx)
+        np.testing.assert_array_equal(np.asarray(kf), np.asarray(want_k))
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(want_v))

@@ -7,60 +7,47 @@
 //! what the paper's HF `generate` achieves by early-exiting sequences.
 //!
 //! BoN never gates, so every token takes the plain (non-superstep)
-//! decode path — which still donates the predecessor KV cache and lands
-//! logits in the engine's reusable slab (`GenState::step`).
+//! decode path — donated KV, logits landing in the request's reusable
+//! slab.
 //!
-//! Driver shape: `Decode` (one batched sampled token per poll, finished
-//! branches compacted out) → `Done` (negative-perplexity selection).
+//! Driver shape: plan stages one batched sampled token per poll
+//! (finished branches compacted out in absorb) → `Done`
+//! (negative-perplexity selection).
 
 use anyhow::Result;
 
-use crate::engine::{Engine, GenState};
-use crate::util::rng::Pcg64;
+use crate::engine::Engine;
 
-use super::config::RunConfig;
-use super::sampler::SamplerScratch;
-use super::{finalize, Driver, StepOutcome};
+use super::{finalize, Driver, DriverCore, StepOutcome, StepPlan};
 
 /// Resumable Full-BoN state machine (see [`super::Driver`]).
 pub struct BonDriver {
-    state: GenState,
-    cfg: RunConfig,
-    rngs: Vec<Pcg64>,
-    scratch: SamplerScratch,
-    /// Snapshot of the live branch list, reused every step (`step`
-    /// mutates the state the list borrows from).
-    live: Vec<usize>,
-    steps: usize,
+    core: DriverCore,
+    /// A decode was staged by the last `plan_step` (absorb must finish
+    /// it before deciding anything).
+    planned_decode: bool,
     done: bool,
 }
 
 impl BonDriver {
-    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<BonDriver> {
-        let state =
-            engine.start_opts(prompt, cfg.n, crate::engine::StartOpts { compact: cfg.compact })?;
-        // Independent RNG stream per branch, keyed by request seed.
-        let rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-        Ok(BonDriver {
-            state,
-            cfg: cfg.clone(),
-            rngs,
-            scratch: SamplerScratch::new(),
-            live: Vec::with_capacity(cfg.n),
-            steps: 0,
-            done: false,
-        })
+    pub fn new(engine: &Engine, prompt: &str, cfg: &super::config::RunConfig, seed: u64) -> Result<BonDriver> {
+        Ok(Self::from_core(DriverCore::new(engine, prompt, cfg, seed, cfg.n, cfg.compact)?))
+    }
+
+    pub(super) fn from_core(core: DriverCore) -> BonDriver {
+        BonDriver { core, planned_decode: false, done: false }
     }
 
     fn select(&self) -> usize {
         // Selection: max mean log-probability (negative perplexity).
         // `stats::total_order` keeps the comparison total on NaN and
         // treats ±0.0 as equal, exactly as the seed's `partial_cmp` did.
-        (0..self.state.branches.len())
+        let state = &self.core.state;
+        (0..state.branches.len())
             .max_by(|&a, &b| {
                 crate::util::stats::total_order(
-                    self.state.branches[a].mean_logprob(),
-                    self.state.branches[b].mean_logprob(),
+                    state.branches[a].mean_logprob(),
+                    state.branches[b].mean_logprob(),
                 )
             })
             .unwrap_or(0)
@@ -68,40 +55,46 @@ impl BonDriver {
 }
 
 impl Driver for BonDriver {
-    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+    fn core(&self) -> &DriverCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut DriverCore {
+        &mut self.core
+    }
+
+    fn plan_step(&mut self, engine: &Engine) -> Result<StepPlan> {
         if self.done {
             return Err(super::poll_after_done());
         }
-        if self.steps < self.cfg.max_new_tokens && self.state.remaining() > 0 {
-            self.live.clear();
-            self.live.extend_from_slice(self.state.live_branches());
-            if !self.live.is_empty() {
-                let vocab = engine.model().config.vocab;
-                let sampled = self.scratch.sample_slab(
-                    self.state.logits_slab(),
-                    vocab,
-                    &self.live,
-                    &self.cfg.sampler,
-                    &mut self.rngs,
-                );
-                self.state.step(engine, sampled)?;
-                self.steps += 1;
-                if self.state.compact_finished(engine)? {
-                    return Ok(StepOutcome::Pending);
-                }
-                // Everything reached EOS — fall through to selection.
+        let core = &mut self.core;
+        if core.steps < core.cfg.max_new_tokens
+            && core.state.remaining() > 0
+            && core.snapshot_live()
+        {
+            core.stage_sampled(engine, false)?;
+            self.planned_decode = true;
+            return Ok(StepPlan::Decode { signals: false });
+        }
+        Ok(StepPlan::NoDecode)
+    }
+
+    fn absorb_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        if self.done {
+            return Err(super::poll_after_done());
+        }
+        if self.planned_decode {
+            self.planned_decode = false;
+            let core = &mut self.core;
+            core.state.finish_dispatched(engine)?;
+            core.steps += 1;
+            if core.state.compact_finished(engine)? {
+                return Ok(StepOutcome::Pending);
             }
+            // Everything reached EOS — fall through to selection.
         }
         self.done = true;
         let chosen = self.select();
-        Ok(StepOutcome::Done(finalize(engine, &self.state, chosen)))
-    }
-
-    fn device_slots(&self) -> usize {
-        self.state.device_slots()
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.state.mem_bytes()
+        Ok(StepOutcome::Done(finalize(engine, &self.core.state, chosen)))
     }
 }

@@ -1,55 +1,74 @@
 //! Greedy decoding — the paper's cost baseline (M_cost is normalized by
 //! greedy's peak memory).
 //!
-//! The driver is a two-state machine: `Decode` (one argmax token per
-//! poll) until EOS / budget exhaustion, then `Done`.
+//! The driver is a two-state machine: `Decode` (one argmax token staged
+//! per plan) until EOS / budget exhaustion, then `Done`. Single-branch,
+//! no RNG draws — but it rides the same [`super::DriverCore`] plumbing
+//! (and, under the fused scheduler, the same packed bucket dispatch) as
+//! every other policy.
 
 use anyhow::Result;
 
-use crate::engine::{Engine, GenState};
+use crate::engine::Engine;
 
-use super::config::RunConfig;
-use super::{finalize, sampler, Driver, StepOutcome};
+use super::{finalize, sampler, Driver, DriverCore, StepOutcome, StepPlan};
 
 /// Resumable greedy state machine (see [`super::Driver`]).
 pub struct GreedyDriver {
-    state: GenState,
-    cfg: RunConfig,
-    steps: usize,
+    core: DriverCore,
+    planned_decode: bool,
     done: bool,
 }
 
 impl GreedyDriver {
-    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig) -> Result<GreedyDriver> {
-        let state = engine.start(prompt, 1)?;
-        Ok(GreedyDriver { state, cfg: cfg.clone(), steps: 0, done: false })
+    pub fn new(engine: &Engine, prompt: &str, cfg: &super::config::RunConfig) -> Result<GreedyDriver> {
+        Ok(Self::from_core(DriverCore::new(engine, prompt, cfg, 0, 1, true)?))
+    }
+
+    pub(super) fn from_core(core: DriverCore) -> GreedyDriver {
+        GreedyDriver { core, planned_decode: false, done: false }
     }
 }
 
 impl Driver for GreedyDriver {
-    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+    fn core(&self) -> &DriverCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut DriverCore {
+        &mut self.core
+    }
+
+    fn plan_step(&mut self, _engine: &Engine) -> Result<StepPlan> {
         if self.done {
             return Err(super::poll_after_done());
         }
-        if !self.state.all_finished()
-            && self.steps < self.cfg.max_new_tokens
-            && self.state.remaining() > 0
+        let core = &mut self.core;
+        if !core.state.all_finished()
+            && core.steps < core.cfg.max_new_tokens
+            && core.state.remaining() > 0
         {
             // Fused argmax + logprob: one max scan instead of two.
-            let (tok, lp) = sampler::greedy_row(self.state.logits_for_slot(0));
-            self.state.step(engine, &[(tok, lp)])?;
-            self.steps += 1;
+            let (tok, lp) = sampler::greedy_row(core.state.logits_for_slot(0));
+            core.stage_single(tok, lp)?;
+            self.planned_decode = true;
+            return Ok(StepPlan::Decode { signals: false });
+        }
+        Ok(StepPlan::NoDecode)
+    }
+
+    fn absorb_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        if self.done {
+            return Err(super::poll_after_done());
+        }
+        if self.planned_decode {
+            self.planned_decode = false;
+            let core = &mut self.core;
+            core.state.finish_dispatched(engine)?;
+            core.steps += 1;
             return Ok(StepOutcome::Pending);
         }
         self.done = true;
-        Ok(StepOutcome::Done(finalize(engine, &self.state, 0)))
-    }
-
-    fn device_slots(&self) -> usize {
-        self.state.device_slots()
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.state.mem_bytes()
+        Ok(StepOutcome::Done(finalize(engine, &self.core.state, 0)))
     }
 }

@@ -16,35 +16,37 @@
 //! a frozen score (their text is complete and they cost nothing further) —
 //! pruning removes candidates, whether finished or live.
 //!
-//! The policy is a resumable [`super::Driver`]: each paper phase is an
-//! explicit machine state ([`Phase`]), one gating iteration (score →
-//! continue → prune) is one `poll_step`, and the device slots freed by
-//! each pruning step are visible to the continuous-batching scheduler
-//! the moment the poll returns — mid-request, exactly where the paper's
-//! ~60% peak-memory reduction comes from.
+//! The policy is a resumable [`super::Driver`] split at the dispatch
+//! point (module docs): `plan_step` runs the pre-dispatch half of each
+//! paper phase (signal consumption, scoring, sampling, phase
+//! transitions), `absorb_step` the post-dispatch half (pruning,
+//! compaction), and the device slots freed by each pruning step are
+//! visible to the continuous-batching scheduler the moment the poll
+//! returns — mid-request, exactly where the paper's ~60% peak-memory
+//! reduction comes from.
 //!
 //! Hot-path discipline (see `crate::engine` module docs): one
-//! [`SamplerScratch`] serves every draw of the request; gating steps run
-//! the fused decode+signals **superstep** (`GenState::step_fused`), so
-//! the (KL, confidence, entropy) rows ride back with the forward pass —
-//! the logits slab crosses the host boundary once per gated token and is
-//! never re-uploaded. Only the phase boundary (the first gating step,
-//! whose slab came from a draft-phase decode) and superstep-less
-//! artifact sets fall back to the unfused borrowed-slab
-//! `signals_padded` call. Gating membership runs over a reusable boolean
-//! mask (no `contains` scans); score ordering uses `f64::total_cmp`, so
-//! a NaN score degrades into a deterministic ranking instead of a panic.
+//! `SamplerScratch` serves every draw of the request; gating steps stage
+//! **gated** tokens (`StepPlan::Decode { signals: true }`), so the (KL,
+//! confidence, entropy) rows ride back with the forward pass — through
+//! the solo superstep on the blocking path, or the *packed* superstep
+//! shared with co-resident requests on the fused path — and the logits
+//! slab crosses the host boundary once per gated bucket-tick, never
+//! re-uploaded. Only the phase boundary (the first gating step, whose
+//! slab came from a draft-phase decode) and superstep-less artifact
+//! sets fall back to the unfused borrowed-slab `signals_padded` call.
+//! Gating membership runs over a reusable boolean mask (no `contains`
+//! scans); score ordering uses `f64::total_cmp`, so a NaN score
+//! degrades into a deterministic ranking instead of a panic.
 
 use anyhow::{bail, Result};
 
-use crate::engine::{Branch, Engine, GenState};
+use crate::engine::{Branch, Engine};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
-use super::config::RunConfig;
-use super::sampler::SamplerScratch;
 use super::signals::{combine_scores, BranchSignalState, SignalScratch};
-use super::{draft, finalize, schedule, Driver, StepOutcome};
+use super::{draft, finalize, schedule, Driver, DriverCore, StepOutcome, StepPlan};
 
 /// Phase III entry decision: who won, and whether decoding continues.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,17 +100,20 @@ enum Phase {
     Retired,
 }
 
+/// What the last `plan_step` left for `absorb_step` to do.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Planned {
+    Terminal,
+    DraftDecode,
+    GateDecode,
+    ContinueDecode,
+    /// Dispatch-free transition (Phase III truncation).
+    Transition,
+}
+
 /// Resumable KAPPA state machine (see [`super::Driver`] and module docs).
 pub struct KappaDriver {
-    state: GenState,
-    cfg: RunConfig,
-    rngs: Vec<Pcg64>,
-    scratch: SamplerScratch,
-    /// Snapshot of the live branch list, reused every step (`step`
-    /// mutates the state the list borrows from).
-    live: Vec<usize>,
-    /// Generated tokens per branch so far.
-    steps: usize,
+    core: DriverCore,
     tau: usize,
     // ---- Phase II state (initialized at the Draft → Gate transition) ----
     /// Per-branch signal accumulators, parallel to `state.branches`.
@@ -119,7 +124,7 @@ pub struct KappaDriver {
     k: usize,
     /// Phase II ended early (all survivors finished / no live branch
     /// left) — the blocking loop's `break`s. The Phase III transition in
-    /// `poll_step` still runs winner selection afterwards.
+    /// `plan_step` still runs winner selection afterwards.
     gating_over: bool,
     // Per-step buffers, allocated once for the request. (The per-token
     // sampling path is fully allocation-free; `combine_scores` still
@@ -138,22 +143,20 @@ pub struct KappaDriver {
     /// Winner's RNG stream, cloned at the continuation transition.
     cont_rng: Pcg64,
     phase: Phase,
+    planned: Planned,
 }
 
 impl KappaDriver {
-    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<KappaDriver> {
-        let n = cfg.n;
-        let state =
-            engine.start_opts(prompt, n, crate::engine::StartOpts { compact: cfg.compact })?;
-        let rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-        let tau = cfg.kappa.effective_tau(n);
-        Ok(KappaDriver {
-            state,
-            cont_rng: rngs[0].clone(),
-            rngs,
-            scratch: SamplerScratch::new(),
-            live: Vec::with_capacity(n),
-            steps: 0,
+    pub fn new(engine: &Engine, prompt: &str, cfg: &super::config::RunConfig, seed: u64) -> Result<KappaDriver> {
+        Ok(Self::from_core(DriverCore::new(engine, prompt, cfg, seed, cfg.n, cfg.compact)?))
+    }
+
+    pub(super) fn from_core(core: DriverCore) -> KappaDriver {
+        let n = core.cfg.n;
+        let tau = core.cfg.kappa.effective_tau(n);
+        let cont_rng = core.rngs[0].clone();
+        KappaDriver {
+            core,
             tau,
             sig: Vec::new(),
             sig_scratch: None,
@@ -168,62 +171,44 @@ impl KappaDriver {
             keep_live: Vec::with_capacity(n),
             keep_mask: vec![false; n],
             chosen: 0,
+            cont_rng,
             phase: Phase::Draft,
-            cfg: cfg.clone(),
-        })
+            planned: Planned::Terminal,
+        }
     }
 
-    /// One Phase I iteration; `Some(Pending)` when a dispatch was made,
-    /// `None` when the draft phase is over.
-    fn draft_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
-        if self.steps >= self.cfg.max_new_tokens || self.state.remaining() == 0 {
+    /// Phase I planning: stage one batched draft token, or `None` when
+    /// the draft phase is over (cutoff reached / budget exhausted).
+    fn draft_plan(&mut self, engine: &Engine) -> Result<Option<StepPlan>> {
+        let core = &mut self.core;
+        if core.steps >= core.cfg.max_new_tokens || core.state.remaining() == 0 {
             return Ok(None);
         }
-        let seqs: Vec<&[u32]> = self
+        let seqs: Vec<&[u32]> = core
             .state
             .live_branches()
             .iter()
-            .map(|&bi| self.state.branches[bi].tokens.as_slice())
+            .map(|&bi| core.state.branches[bi].tokens.as_slice())
             .collect();
-        if (self.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
-            || self.steps >= self.cfg.kappa.max_draft
+        if (core.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
+            || core.steps >= core.cfg.kappa.max_draft
         {
             return Ok(None);
         }
-        self.live.clear();
-        self.live.extend_from_slice(self.state.live_branches());
-        if self.live.is_empty() {
+        if !core.snapshot_live() {
             return Ok(None);
         }
-        let vocab = engine.model().config.vocab;
-        let sampled = self.scratch.sample_slab(
-            self.state.logits_slab(),
-            vocab,
-            &self.live,
-            &self.cfg.sampler,
-            &mut self.rngs,
-        );
-        self.state.step(engine, sampled)?;
-        self.steps += 1;
-        if !self.state.compact_finished(engine)? {
-            // Every branch finished mid-draft. `compact_finished(false)`
-            // leaves the finished branches in their slots, so — exactly
-            // like the blocking loop it replaced — the gate phase still
-            // runs one scoring/gating pass over them (its dispatch is
-            // wasted work, but it is what seeds the trajectory scores
-            // Phase III selects on) before `gating_over` ends Phase II.
-            self.phase = Phase::Gate;
-            self.init_gate(engine);
-        }
-        Ok(Some(StepOutcome::Pending))
+        core.stage_sampled(engine, false)?;
+        self.planned = Planned::DraftDecode;
+        Ok(Some(StepPlan::Decode { signals: false }))
     }
 
     /// Draft → Gate transition: allocate the per-branch signal
     /// accumulators and (for the native ablation) the host scoring
     /// scratch.
     fn init_gate(&mut self, engine: &Engine) {
-        let n = self.cfg.n;
-        let kcfg = &self.cfg.kappa;
+        let n = self.core.cfg.n;
+        let kcfg = &self.core.cfg.kappa;
         self.sig = (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
         // Only the native ablation path needs the host-side q work.
         self.sig_scratch = if kcfg.native_signals {
@@ -235,50 +220,50 @@ impl KappaDriver {
         self.gating_over = false;
     }
 
-    /// One Phase II iteration (score → continue → prune); `Some(Pending)`
-    /// when a dispatch was made, `None` when the gating phase is over.
-    fn gate_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
+    /// Phase II planning (score → stage continuation): `None` when the
+    /// gating phase is over. The pruning half runs in `gate_absorb`.
+    fn gate_plan(&mut self, engine: &Engine) -> Result<Option<StepPlan>> {
         if self.gating_over
             || self.k >= self.tau
-            || self.steps >= self.cfg.max_new_tokens
-            || self.state.remaining() == 0
+            || self.core.steps >= self.core.cfg.max_new_tokens
+            || self.core.state.remaining() == 0
         {
             return Ok(None);
         }
-        self.live.clear();
-        self.live.extend_from_slice(self.state.live_branches());
-        if self.live.is_empty() {
+        if !self.core.snapshot_live() {
             return Ok(None);
         }
         self.k += 1;
-        let rows = self.live.len();
-        let kcfg = &self.cfg.kappa;
+        let core = &mut self.core;
+        let rows = core.live.len();
+        let kcfg = &core.cfg.kappa;
 
         // -- Signals for the live rows. Steady state: they rode back
         // with the superstep that produced this slab (`fused_signals`) —
-        // zero extra dispatches, zero slab re-upload. Fallbacks: the
-        // native ablation, or the unfused borrowed-slab call for the
-        // first gating step (draft-phase slab) / superstep-less
-        // artifacts.
+        // zero extra dispatches, zero slab re-upload; on the fused
+        // scheduler path the packed superstep served every co-resident
+        // request with the same dispatch. Fallbacks: the native
+        // ablation, or the unfused borrowed-slab call for the first
+        // gating step (draft-phase slab) / superstep-less artifacts.
         self.kl.clear();
         self.conf.clear();
         self.ent.clear();
         if let Some(scr) = self.sig_scratch.as_mut() {
             for slot in 0..rows {
-                let (a, b, c) = scr.raw(self.state.logits_for_slot(slot));
+                let (a, b, c) = scr.raw(core.state.logits_for_slot(slot));
                 self.kl.push(a);
                 self.conf.push(b);
                 self.ent.push(c);
             }
-        } else if let Some((a, b, c)) = self.state.fused_signals() {
+        } else if let Some((a, b, c)) = core.state.fused_signals() {
             self.kl.extend(a.iter().map(|&x| x as f64));
             self.conf.extend(b.iter().map(|&x| x as f64));
             self.ent.extend(c.iter().map(|&x| x as f64));
         } else {
             let (a, b, c) = engine.model().signals_padded(
-                self.state.logits_slab(),
+                core.state.logits_slab(),
                 rows,
-                self.state.bucket(),
+                core.state.bucket(),
             )?;
             self.kl.extend(a.into_iter().map(|x| x as f64));
             self.conf.extend(b.into_iter().map(|x| x as f64));
@@ -287,46 +272,44 @@ impl KappaDriver {
 
         // -- Robustified KL information change per live branch.
         self.ema.clear();
-        for (slot, &bi) in self.live.iter().enumerate() {
+        for (slot, &bi) in core.live.iter().enumerate() {
             self.ema.push(self.sig[bi].update_kl(self.kl[slot], kcfg));
         }
 
         // -- Across-branch z-norm + weighted combine + trajectory update.
         combine_scores(
             &mut self.sig,
-            &self.live,
+            &core.live,
             &self.ema,
             &self.conf,
             &self.ent,
-            self.steps + 1,
+            core.steps + 1,
             kcfg,
         );
 
-        // -- One-step continuation for the next scoring round, through
-        // the fused superstep: the new slab's signals come back with the
-        // same dispatch and are consumed at the top of the next
-        // iteration. The native ablation scores on the host instead, so
-        // it keeps the plain decode executable.
-        let vocab = engine.model().config.vocab;
-        let sampled = self.scratch.sample_slab(
-            self.state.logits_slab(),
-            vocab,
-            &self.live,
-            &self.cfg.sampler,
-            &mut self.rngs,
-        );
-        if self.sig_scratch.is_some() {
-            self.state.step(engine, sampled)?;
-        } else {
-            self.state.step_fused(engine, sampled)?;
-        }
-        self.steps += 1;
+        // -- Stage the one-step continuation for the next scoring round
+        // as a gated token: the new slab's signals come back with the
+        // same (solo or packed) dispatch and are consumed at the top of
+        // the next iteration. The native ablation scores on the host
+        // instead, so it stages a plain decode.
+        let signals = self.sig_scratch.is_none();
+        core.stage_sampled(engine, signals)?;
+        self.planned = Planned::GateDecode;
+        Ok(Some(StepPlan::Decode { signals }))
+    }
 
-        // -- Gating: prune candidates down to the schedule's target.
+    /// Phase II post-dispatch half: gating — prune candidates down to
+    /// the schedule's target, compact EOS branches.
+    fn gate_absorb(&mut self, engine: &Engine) -> Result<()> {
+        let core = &mut self.core;
+        core.state.finish_dispatched(engine)?;
+        core.steps += 1;
+
+        let kcfg = &core.cfg.kappa;
         self.candidates.clear();
         self.candidates
-            .extend((0..self.state.branches.len()).filter(|&bi| !self.state.branches[bi].pruned));
-        let target = schedule::survivors(kcfg.schedule, self.cfg.n, self.k, self.tau)
+            .extend((0..core.state.branches.len()).filter(|&bi| !core.state.branches[bi].pruned));
+        let target = schedule::survivors(kcfg.schedule, core.cfg.n, self.k, self.tau)
             .min(self.candidates.len())
             .max(1);
         if target < self.candidates.len() {
@@ -348,58 +331,69 @@ impl KappaDriver {
             // order.
             self.keep_live.clear();
             self.keep_live.extend(
-                self.state.live_branches().iter().copied().filter(|&bi| self.keep_mask[bi]),
+                core.state.live_branches().iter().copied().filter(|&bi| self.keep_mask[bi]),
             );
             if self.keep_live.is_empty() {
                 // All survivors already finished: mark the rest pruned
                 // and exit the gating loop.
                 for &bi in &self.candidates {
                     if !self.keep_mask[bi] {
-                        self.state.branches[bi].pruned = true;
+                        core.state.branches[bi].pruned = true;
                     }
                 }
                 self.gating_over = true;
-                return Ok(Some(StepOutcome::Pending));
+                return Ok(());
             }
             // Pruned slots are released here — the scheduler refills
             // them from its queue within one tick of this poll.
-            self.state.retain_branches(engine, &self.keep_live)?;
+            core.state.retain_branches(engine, &self.keep_live)?;
             // Mark finished non-kept candidates as pruned (they were not
             // live, so retain_branches couldn't see them).
             for &bi in &self.candidates {
                 if !self.keep_mask[bi] {
-                    self.state.branches[bi].pruned = true;
+                    core.state.branches[bi].pruned = true;
                 }
             }
         }
-        if !self.state.compact_finished(engine)? {
+        if !core.state.compact_finished(engine)? {
             self.gating_over = true;
         }
-        Ok(Some(StepOutcome::Pending))
+        Ok(())
     }
 }
 
 impl Driver for KappaDriver {
-    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+    fn core(&self) -> &DriverCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut DriverCore {
+        &mut self.core
+    }
+
+    fn plan_step(&mut self, engine: &Engine) -> Result<StepPlan> {
         loop {
             match self.phase {
                 Phase::Draft => {
-                    if let Some(outcome) = self.draft_poll(engine)? {
-                        return Ok(outcome);
+                    if let Some(plan) = self.draft_plan(engine)? {
+                        return Ok(plan);
                     }
                     self.phase = Phase::Gate;
                     self.init_gate(engine);
                 }
                 Phase::Gate => {
-                    if let Some(outcome) = self.gate_poll(engine)? {
-                        return Ok(outcome);
+                    if let Some(plan) = self.gate_plan(engine)? {
+                        return Ok(plan);
                     }
                     // Phase III entry: pick the winner, enforce the
                     // continuation invariant, truncate the losers.
+                    let core = &mut self.core;
                     let sig = &self.sig;
-                    match plan_continuation(&self.state.branches, self.state.live_branches(), |bi| {
-                        sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY)
-                    })? {
+                    match plan_continuation(
+                        &core.state.branches,
+                        core.state.live_branches(),
+                        |bi| sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY),
+                    )? {
                         Continuation::Finished(chosen) => {
                             self.chosen = chosen;
                             self.phase = Phase::Done;
@@ -408,43 +402,78 @@ impl Driver for KappaDriver {
                             self.chosen = chosen;
                             // Drop any other still-live branches; the
                             // freed slots go back to the scheduler.
-                            self.state.retain_branches(engine, &[chosen])?;
-                            self.cont_rng = self.rngs[chosen].clone();
+                            core.state.retain_branches(engine, &[chosen])?;
+                            self.cont_rng = core.rngs[chosen].clone();
                             self.phase = Phase::Continue;
-                            return Ok(StepOutcome::Pending);
+                            self.planned = Planned::Transition;
+                            return Ok(StepPlan::NoDecode);
                         }
                     }
                 }
                 Phase::Continue => {
-                    if !self.state.all_finished()
-                        && self.steps < self.cfg.max_new_tokens
-                        && self.state.remaining() > 0
+                    let core = &mut self.core;
+                    if !core.state.all_finished()
+                        && core.steps < core.cfg.max_new_tokens
+                        && core.state.remaining() > 0
                     {
-                        let (tok, lp) = self.scratch.sample_row(
-                            self.state.logits_for_slot(0),
-                            &self.cfg.sampler,
+                        let (tok, lp) = core.scratch.sample_row(
+                            core.state.logits_for_slot(0),
+                            &core.cfg.sampler,
                             &mut self.cont_rng,
                         );
-                        self.state.step(engine, &[(tok, lp)])?;
-                        self.steps += 1;
-                        return Ok(StepOutcome::Pending);
+                        core.stage_single(tok, lp)?;
+                        self.planned = Planned::ContinueDecode;
+                        return Ok(StepPlan::Decode { signals: false });
                     }
                     self.phase = Phase::Done;
                 }
                 Phase::Done => {
-                    self.phase = Phase::Retired;
-                    return Ok(StepOutcome::Done(finalize(engine, &self.state, self.chosen)));
+                    self.planned = Planned::Terminal;
+                    return Ok(StepPlan::NoDecode);
                 }
                 Phase::Retired => return Err(super::poll_after_done()),
             }
         }
     }
 
-    fn device_slots(&self) -> usize {
-        self.state.device_slots()
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.state.mem_bytes()
+    fn absorb_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        match std::mem::replace(&mut self.planned, Planned::Terminal) {
+            Planned::DraftDecode => {
+                let core = &mut self.core;
+                core.state.finish_dispatched(engine)?;
+                core.steps += 1;
+                if !core.state.compact_finished(engine)? {
+                    // Every branch finished mid-draft. `compact_finished
+                    // == false` leaves the finished branches in their
+                    // slots, so — exactly like the blocking loop it
+                    // replaced — the gate phase still runs one
+                    // scoring/gating pass over them (its dispatch is
+                    // wasted work, but it is what seeds the trajectory
+                    // scores Phase III selects on) before `gating_over`
+                    // ends Phase II.
+                    self.phase = Phase::Gate;
+                    self.init_gate(engine);
+                }
+                Ok(StepOutcome::Pending)
+            }
+            Planned::GateDecode => {
+                self.gate_absorb(engine)?;
+                Ok(StepOutcome::Pending)
+            }
+            Planned::ContinueDecode => {
+                let core = &mut self.core;
+                core.state.finish_dispatched(engine)?;
+                core.steps += 1;
+                Ok(StepOutcome::Pending)
+            }
+            Planned::Transition => Ok(StepOutcome::Pending),
+            Planned::Terminal => match self.phase {
+                Phase::Done => {
+                    self.phase = Phase::Retired;
+                    Ok(StepOutcome::Done(finalize(engine, &self.core.state, self.chosen)))
+                }
+                _ => Err(super::poll_after_done()),
+            },
+        }
     }
 }

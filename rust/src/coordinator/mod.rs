@@ -41,6 +41,33 @@
 //!   request's current device occupancy (KV rows and accounted KV
 //!   bytes), shrinking as pruning/compaction frees capacity — the
 //!   scheduler's admission-control inputs.
+//!
+//! # Plan/absorb: drivers no longer own the decode dispatch (PR 4)
+//!
+//! Each poll is split at the dispatch point into a plan/commit pair so
+//! the scheduler can fuse co-resident requests' decodes into one packed
+//! dispatch per bucket (see `crate::engine::fusion`):
+//!
+//! - [`Driver::plan_step`] advances the policy to its next dispatch
+//!   point: phase transitions, pruning decisions, and sampling all run
+//!   here, ending either with tokens **staged** on the request's
+//!   [`crate::engine::GenState`] ([`StepPlan::Decode`]) or with nothing
+//!   to decode this poll ([`StepPlan::NoDecode`]).
+//! - the caller then runs the dispatch — `GenState::commit_solo` on the
+//!   blocking path, or the fusion hub's one-flush-per-occupied-pod on
+//!   the scheduler path — and
+//! - [`Driver::absorb_step`] consumes the decoded rows (position/memory
+//!   bookkeeping, EOS compaction, post-decode pruning) and reports
+//!   [`StepOutcome`].
+//!
+//! [`Driver::poll_step`] is **provided** as exactly
+//! plan → solo-commit → absorb, so the blocking path still IS the driver
+//! path — there is no second per-step implementation to drift, and a
+//! fused tick runs the same plan/absorb code with only the dispatch
+//! flavor swapped. The shared per-request plumbing (state, config,
+//! per-branch RNG streams, sampler scratch, live snapshot, step
+//! counter) lives in [`DriverCore`], the one batched draft-step
+//! implementation every policy builds on.
 
 pub mod bon;
 pub mod config;
@@ -52,12 +79,14 @@ pub mod schedule;
 pub mod signals;
 pub mod stbon;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::engine::Engine;
+use crate::engine::{Engine, FusionHub, GenState, StartOpts};
 use crate::metrics::RequestMetrics;
+use crate::util::rng::Pcg64;
 
 use config::{Method, RunConfig};
+use sampler::SamplerScratch;
 
 /// Result of one decoded request.
 #[derive(Debug, Clone)]
@@ -79,36 +108,200 @@ pub enum StepOutcome {
     Done(GenOutput),
 }
 
+/// What a driver wants from this poll's dispatch phase (see module
+/// docs). Returned by [`Driver::plan_step`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPlan {
+    /// Tokens are staged on the request's `GenState`: a decode dispatch
+    /// must run before [`Driver::absorb_step`] — `commit_solo` on the
+    /// blocking path, the pod's packed flush on the fused path.
+    /// `signals` marks a gated token (on-device signal scoring rides
+    /// along with the forward pass).
+    Decode { signals: bool },
+    /// Nothing to decode this poll (phase bookkeeping or completion);
+    /// absorb directly.
+    NoDecode,
+}
+
+/// The shared per-request plumbing every policy driver builds on — the
+/// one batched draft-step implementation (live-snapshot → `sample_slab`
+/// → stage) plus the state/config/RNG/scratch fields that used to be
+/// hand-duplicated across `BonDriver`/`StBonDriver`/`KappaDriver`.
+pub struct DriverCore {
+    pub state: GenState,
+    pub cfg: RunConfig,
+    /// Independent RNG stream per branch, keyed by request seed —
+    /// co-resident packing order can never perturb a request's draws.
+    pub rngs: Vec<Pcg64>,
+    pub scratch: SamplerScratch,
+    /// Snapshot of the live branch list, reused every step (`stage`
+    /// mutates the state the list borrows from).
+    pub live: Vec<usize>,
+    /// Generated tokens per branch so far.
+    pub steps: usize,
+}
+
+impl DriverCore {
+    /// Solo residence: the request owns its bucketed KV cache.
+    pub fn new(
+        engine: &Engine,
+        prompt: &str,
+        cfg: &RunConfig,
+        seed: u64,
+        n: usize,
+        compact: bool,
+    ) -> Result<DriverCore> {
+        let state = engine.start_opts(prompt, n, StartOpts { compact })?;
+        Ok(Self::with_state(state, cfg, seed, n))
+    }
+
+    /// Fused residence: lease rows in the hub's shared pods (requires
+    /// bucket compaction — the ablation that pins buckets open is a
+    /// solo-only shape).
+    pub fn new_fused(
+        engine: &Engine,
+        hub: &FusionHub,
+        prompt: &str,
+        cfg: &RunConfig,
+        seed: u64,
+        n: usize,
+        compact: bool,
+    ) -> Result<DriverCore> {
+        if !compact {
+            bail!("batch fusion requires bucket compaction (compact=false is solo-only)");
+        }
+        let state = engine.start_fused(hub, prompt, n)?;
+        Ok(Self::with_state(state, cfg, seed, n))
+    }
+
+    fn with_state(state: GenState, cfg: &RunConfig, seed: u64, n: usize) -> DriverCore {
+        let rngs: Vec<Pcg64> = (0..n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
+        DriverCore {
+            state,
+            cfg: cfg.clone(),
+            rngs,
+            scratch: SamplerScratch::new(),
+            live: Vec::with_capacity(n),
+            steps: 0,
+        }
+    }
+
+    /// Refresh the live-branch snapshot; `true` when any branch is
+    /// still on device.
+    pub fn snapshot_live(&mut self) -> bool {
+        self.live.clear();
+        self.live.extend_from_slice(self.state.live_branches());
+        !self.live.is_empty()
+    }
+
+    /// The shared draft-step body: sample every snapshotted live row
+    /// from the current logits slab (each branch from its own RNG
+    /// stream) and stage the tokens for this poll's dispatch.
+    pub fn stage_sampled(&mut self, engine: &Engine, signals: bool) -> Result<()> {
+        let vocab = engine.model().config.vocab;
+        let sampled = self.scratch.sample_slab(
+            self.state.logits_slab(),
+            vocab,
+            &self.live,
+            &self.cfg.sampler,
+            &mut self.rngs,
+        );
+        self.state.stage_step(sampled, signals)
+    }
+
+    /// Stage a single already-sampled row (the winner-continuation
+    /// phases decode one branch with a cloned RNG stream).
+    pub fn stage_single(&mut self, tok: u32, logprob: f64) -> Result<()> {
+        self.state.stage_step(&[(tok, logprob)], false)
+    }
+}
+
 /// A resumable per-request decoding state machine (see module docs).
 pub trait Driver {
-    /// Advance the request by at most one token's worth of engine work
-    /// (one decode dispatch plus its attendant gathers — see the module
-    /// docs' contract).
-    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome>;
+    /// The shared core (state, config, RNG streams, sampler scratch).
+    fn core(&self) -> &DriverCore;
+    fn core_mut(&mut self) -> &mut DriverCore;
+
+    /// Phase 1: advance the policy to its next dispatch point — phase
+    /// transitions, pruning decisions, sampling — staging tokens on the
+    /// state when a decode is wanted (see module docs).
+    fn plan_step(&mut self, engine: &Engine) -> Result<StepPlan>;
+
+    /// Phase 3: absorb the dispatched rows (or complete a no-decode
+    /// poll) and report the request's progress.
+    fn absorb_step(&mut self, engine: &Engine) -> Result<StepOutcome>;
+
+    /// Advance the request by at most one token's worth of engine work.
+    /// Provided as exactly plan → solo-commit → absorb: the blocking
+    /// path IS the driver path, with the dispatch flavor the only thing
+    /// the fused scheduler swaps out.
+    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        if let StepPlan::Decode { .. } = self.plan_step(engine)? {
+            self.core_mut().state.commit_solo(engine)?;
+        }
+        self.absorb_step(engine)
+    }
 
     /// Device slots (KV-cache rows) the request currently holds.
-    fn device_slots(&self) -> usize;
+    fn device_slots(&self) -> usize {
+        self.core().state.device_slots()
+    }
 
     /// Accounted KV bytes the request currently holds (admission input;
     /// the shared weight floor is excluded — it is not per-request
     /// capacity).
-    fn mem_bytes(&self) -> usize;
+    fn mem_bytes(&self) -> usize {
+        self.core().state.mem_bytes()
+    }
 }
 
-/// Build the configured method's driver for one request. The prompt is
-/// prefilled here (one dispatch), so a driver that fails to construct
-/// never occupied scheduler capacity.
+/// Build the configured method's driver for one request (solo
+/// residence). The prompt is prefilled here (one dispatch), so a driver
+/// that fails to construct never occupied scheduler capacity.
 pub fn make_driver(
     engine: &Engine,
     prompt: &str,
     cfg: &RunConfig,
     seed: u64,
 ) -> Result<Box<dyn Driver>> {
+    make_driver_with(engine, None, prompt, cfg, seed)
+}
+
+/// [`make_driver`] with the request's branches leased in the fusion
+/// hub's shared pods — the continuous-batching scheduler's shape when
+/// packed artifacts are available.
+pub fn make_driver_fused(
+    engine: &Engine,
+    hub: &FusionHub,
+    prompt: &str,
+    cfg: &RunConfig,
+    seed: u64,
+) -> Result<Box<dyn Driver>> {
+    make_driver_with(engine, Some(hub), prompt, cfg, seed)
+}
+
+fn make_driver_with(
+    engine: &Engine,
+    hub: Option<&FusionHub>,
+    prompt: &str,
+    cfg: &RunConfig,
+    seed: u64,
+) -> Result<Box<dyn Driver>> {
+    // Greedy decodes a single chain whatever `n` says, and always
+    // compacts (there is nothing to compact).
+    let (n, compact) = match cfg.method {
+        Method::Greedy => (1, true),
+        _ => (cfg.n, cfg.compact),
+    };
+    let core = match hub {
+        None => DriverCore::new(engine, prompt, cfg, seed, n, compact)?,
+        Some(h) => DriverCore::new_fused(engine, h, prompt, cfg, seed, n, compact)?,
+    };
     Ok(match cfg.method {
-        Method::Greedy => Box::new(greedy::GreedyDriver::new(engine, prompt, cfg)?),
-        Method::Bon => Box::new(bon::BonDriver::new(engine, prompt, cfg, seed)?),
-        Method::StBon => Box::new(stbon::StBonDriver::new(engine, prompt, cfg, seed)?),
-        Method::Kappa => Box::new(kappa::KappaDriver::new(engine, prompt, cfg, seed)?),
+        Method::Greedy => Box::new(greedy::GreedyDriver::from_core(core)),
+        Method::Bon => Box::new(bon::BonDriver::from_core(core)),
+        Method::StBon => Box::new(stbon::StBonDriver::from_core(core)),
+        Method::Kappa => Box::new(kappa::KappaDriver::from_core(core)),
     })
 }
 

@@ -11,23 +11,21 @@
 //! 4. truncate all others and decode the winner to completion.
 //!
 //! ST-BoN scores consistency in token space (no latent signals), so all
-//! phases use the plain donated decode path (`GenState::step`) — the
-//! fused decode+signals superstep is KAPPA's gating-phase tool.
+//! phases stage plain (non-gated) decodes — the fused decode+signals
+//! superstep is KAPPA's gating-phase tool.
 //!
-//! Driver phases: `Draft` (steps 1+2, one batched token per poll) →
-//! `Continue` (step 4, winner-only decode; the step-3 winner estimate
-//! and the truncating `retain_branches` run at the phase transition,
-//! immediately freeing the losers' device slots for the scheduler) →
-//! `Done`.
+//! Driver phases: `Draft` (steps 1+2, one batched token staged per
+//! plan) → `Continue` (step 4, winner-only decode; the step-3 winner
+//! estimate and the truncating `retain_branches` run at the phase
+//! transition inside `plan_step`, immediately freeing the losers'
+//! device slots for the scheduler) → `Done`.
 
 use anyhow::Result;
 
-use crate::engine::{Engine, GenState};
+use crate::engine::Engine;
 use crate::util::rng::Pcg64;
 
-use super::config::RunConfig;
-use super::sampler::SamplerScratch;
-use super::{draft, finalize, Driver, StepOutcome};
+use super::{draft, finalize, Driver, DriverCore, StepOutcome, StepPlan};
 
 enum Phase {
     Draft,
@@ -36,14 +34,23 @@ enum Phase {
     Retired,
 }
 
+/// What the last `plan_step` left for `absorb_step` to do.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Planned {
+    /// Nothing staged — absorb handles the terminal `Done` phase.
+    Terminal,
+    /// A batched draft token is staged.
+    DraftDecode,
+    /// A winner-continuation token is staged.
+    ContinueDecode,
+    /// A dispatch-free transition happened (winner truncation); absorb
+    /// just reports progress.
+    Transition,
+}
+
 /// Resumable ST-BoN state machine (see [`super::Driver`]).
 pub struct StBonDriver {
-    state: GenState,
-    cfg: RunConfig,
-    rngs: Vec<Pcg64>,
-    scratch: SamplerScratch,
-    live: Vec<usize>,
-    steps: usize,
+    core: DriverCore,
     cutoff: Option<usize>,
     /// Every branch reached EOS mid-draft (the blocking loop's
     /// `!compact_finished` break).
@@ -53,135 +60,160 @@ pub struct StBonDriver {
     /// sequence the blocking loop used).
     cont_rng: Pcg64,
     phase: Phase,
+    planned: Planned,
 }
 
 impl StBonDriver {
-    pub fn new(engine: &Engine, prompt: &str, cfg: &RunConfig, seed: u64) -> Result<StBonDriver> {
-        let state =
-            engine.start_opts(prompt, cfg.n, crate::engine::StartOpts { compact: cfg.compact })?;
-        let rngs: Vec<Pcg64> = (0..cfg.n).map(|i| Pcg64::new(seed, i as u64 + 1)).collect();
-        Ok(StBonDriver {
-            state,
-            cfg: cfg.clone(),
-            cont_rng: rngs[0].clone(),
-            rngs,
-            scratch: SamplerScratch::new(),
-            live: Vec::with_capacity(cfg.n),
-            steps: 0,
+    pub fn new(engine: &Engine, prompt: &str, cfg: &super::config::RunConfig, seed: u64) -> Result<StBonDriver> {
+        Ok(Self::from_core(DriverCore::new(engine, prompt, cfg, seed, cfg.n, cfg.compact)?))
+    }
+
+    pub(super) fn from_core(core: DriverCore) -> StBonDriver {
+        let cont_rng = core.rngs[0].clone();
+        StBonDriver {
+            core,
             cutoff: None,
             draft_over: false,
             chosen: 0,
+            cont_rng,
             phase: Phase::Draft,
-        })
+            planned: Planned::Terminal,
+        }
     }
 
-    /// One draft-phase iteration; `Some(outcome)` when a dispatch was
-    /// made this poll, `None` when the phase is over.
-    fn draft_poll(&mut self, engine: &Engine) -> Result<Option<StepOutcome>> {
-        if self.draft_over || self.steps >= self.cfg.max_new_tokens || self.state.remaining() == 0 {
+    /// Draft-phase planning: stage one batched token, or `None` when
+    /// the phase is over (cutoff+buffer reached, budget exhausted, or
+    /// every branch finished mid-draft).
+    fn draft_plan(&mut self, engine: &Engine) -> Result<Option<StepPlan>> {
+        let core = &mut self.core;
+        if self.draft_over
+            || core.steps >= core.cfg.max_new_tokens
+            || core.state.remaining() == 0
+        {
             return Ok(None);
         }
         if self.cutoff.is_none() {
-            let seqs: Vec<&[u32]> = self
+            let seqs: Vec<&[u32]> = core
                 .state
                 .live_branches()
                 .iter()
-                .map(|&bi| self.state.branches[bi].tokens.as_slice())
+                .map(|&bi| core.state.branches[bi].tokens.as_slice())
                 .collect();
-            if (self.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
-                || self.steps >= self.cfg.stbon.max_draft
+            if (core.steps > 0 && draft::all_pairwise_inconsistent(&seqs))
+                || core.steps >= core.cfg.stbon.max_draft
             {
-                self.cutoff = Some(self.steps);
+                self.cutoff = Some(core.steps);
             }
         }
         if let Some(c) = self.cutoff {
-            if self.steps >= c + self.cfg.stbon.buffer {
+            if core.steps >= c + core.cfg.stbon.buffer {
                 return Ok(None);
             }
         }
-        self.live.clear();
-        self.live.extend_from_slice(self.state.live_branches());
-        if self.live.is_empty() {
+        if !core.snapshot_live() {
             return Ok(None);
         }
-        let vocab = engine.model().config.vocab;
-        let sampled = self.scratch.sample_slab(
-            self.state.logits_slab(),
-            vocab,
-            &self.live,
-            &self.cfg.sampler,
-            &mut self.rngs,
-        );
-        self.state.step(engine, sampled)?;
-        self.steps += 1;
-        if !self.state.compact_finished(engine)? {
-            // Every branch reached EOS mid-draft: the phase ends, but the
-            // dispatch already happened — report Pending and transition
-            // on the next poll.
-            self.draft_over = true;
-        }
-        Ok(Some(StepOutcome::Pending))
+        core.stage_sampled(engine, false)?;
+        self.planned = Planned::DraftDecode;
+        Ok(Some(StepPlan::Decode { signals: false }))
     }
 }
 
 impl Driver for StBonDriver {
-    fn poll_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+    fn core(&self) -> &DriverCore {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut DriverCore {
+        &mut self.core
+    }
+
+    fn plan_step(&mut self, engine: &Engine) -> Result<StepPlan> {
         loop {
             match self.phase {
                 Phase::Draft => {
-                    if let Some(outcome) = self.draft_poll(engine)? {
-                        return Ok(outcome);
+                    if let Some(plan) = self.draft_plan(engine)? {
+                        return Ok(plan);
                     }
                     // Phase 3: self-estimate the winner by early
                     // consistency across ALL branches (finished ones
                     // included — their prefixes still vote).
-                    let upto =
-                        self.cutoff.map(|c| c + self.cfg.stbon.buffer).unwrap_or(self.steps).max(1);
+                    let core = &mut self.core;
+                    let upto = self
+                        .cutoff
+                        .map(|c| c + core.cfg.stbon.buffer)
+                        .unwrap_or(core.steps)
+                        .max(1);
                     let seqs: Vec<&[u32]> =
-                        self.state.branches.iter().map(|b| b.tokens.as_slice()).collect();
+                        core.state.branches.iter().map(|b| b.tokens.as_slice()).collect();
                     self.chosen = draft::most_consistent(&seqs, upto);
-                    if self.state.branches[self.chosen].finished {
+                    if core.state.branches[self.chosen].finished {
                         self.phase = Phase::Done;
                         continue;
                     }
                     // Phase 4 entry: truncate everything else. The freed
                     // device slots are visible to the scheduler as soon
                     // as this poll returns.
-                    self.state.retain_branches(engine, &[self.chosen])?;
-                    self.cont_rng = self.rngs[self.chosen].clone();
+                    core.state.retain_branches(engine, &[self.chosen])?;
+                    self.cont_rng = core.rngs[self.chosen].clone();
                     self.phase = Phase::Continue;
-                    return Ok(StepOutcome::Pending);
+                    self.planned = Planned::Transition;
+                    return Ok(StepPlan::NoDecode);
                 }
                 Phase::Continue => {
-                    if !self.state.all_finished()
-                        && self.steps < self.cfg.max_new_tokens
-                        && self.state.remaining() > 0
+                    let core = &mut self.core;
+                    if !core.state.all_finished()
+                        && core.steps < core.cfg.max_new_tokens
+                        && core.state.remaining() > 0
                     {
-                        let (tok, lp) = self.scratch.sample_row(
-                            self.state.logits_for_slot(0),
-                            &self.cfg.sampler,
+                        let (tok, lp) = core.scratch.sample_row(
+                            core.state.logits_for_slot(0),
+                            &core.cfg.sampler,
                             &mut self.cont_rng,
                         );
-                        self.state.step(engine, &[(tok, lp)])?;
-                        self.steps += 1;
-                        return Ok(StepOutcome::Pending);
+                        core.stage_single(tok, lp)?;
+                        self.planned = Planned::ContinueDecode;
+                        return Ok(StepPlan::Decode { signals: false });
                     }
                     self.phase = Phase::Done;
                 }
                 Phase::Done => {
-                    self.phase = Phase::Retired;
-                    return Ok(StepOutcome::Done(finalize(engine, &self.state, self.chosen)));
+                    self.planned = Planned::Terminal;
+                    return Ok(StepPlan::NoDecode);
                 }
                 Phase::Retired => return Err(super::poll_after_done()),
             }
         }
     }
 
-    fn device_slots(&self) -> usize {
-        self.state.device_slots()
-    }
-
-    fn mem_bytes(&self) -> usize {
-        self.state.mem_bytes()
+    fn absorb_step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+        match std::mem::replace(&mut self.planned, Planned::Terminal) {
+            Planned::DraftDecode => {
+                let core = &mut self.core;
+                core.state.finish_dispatched(engine)?;
+                core.steps += 1;
+                if !core.state.compact_finished(engine)? {
+                    // Every branch reached EOS mid-draft: the phase
+                    // ends, but the dispatch already happened — report
+                    // Pending and transition on the next poll.
+                    self.draft_over = true;
+                }
+                Ok(StepOutcome::Pending)
+            }
+            Planned::ContinueDecode => {
+                let core = &mut self.core;
+                core.state.finish_dispatched(engine)?;
+                core.steps += 1;
+                Ok(StepOutcome::Pending)
+            }
+            Planned::Transition => Ok(StepOutcome::Pending),
+            Planned::Terminal => match self.phase {
+                Phase::Done => {
+                    self.phase = Phase::Retired;
+                    Ok(StepOutcome::Done(finalize(engine, &self.core.state, self.chosen)))
+                }
+                _ => Err(super::poll_after_done()),
+            },
+        }
     }
 }

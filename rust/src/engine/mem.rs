@@ -18,6 +18,14 @@
 //!
 //! Pruning branches therefore genuinely lowers the accounted peak — the
 //! same causal chain that produces the paper's Fig. 2.
+//!
+//! Besides the per-request paged model, the batch-fusion hub
+//! ([`crate::engine::FusionHub`]) keeps its own tracker with one
+//! component per shared pod (`pod{N}` → the pod's full
+//! `bucket × kv_bytes_per_branch` device allocation, dropped to zero
+//! when the pod retires). Per-request trackers stay bit-identical to a
+//! solo run by design; the hub tracker is the *physical* shared-bucket
+//! occupancy a multi-tenant worker is judged on.
 
 use std::collections::BTreeMap;
 
@@ -131,6 +139,20 @@ mod tests {
         m.set_component("kv", 1600);
         assert_eq!(m.peak(), 4800);
         assert_eq!(m.current(), 1600);
+    }
+
+    #[test]
+    fn per_pod_components_track_shared_occupancy() {
+        // The fusion hub's usage shape: one component per pod, retired
+        // pods dropped to zero, peak remembering the busiest tick.
+        let mut m = MemTracker::new();
+        m.set_component("pod0", 4096);
+        m.set_component("pod1", 2048);
+        assert_eq!(m.current(), 6144);
+        m.set_component("pod0", 0); // pod retired
+        assert_eq!(m.current(), 2048);
+        assert_eq!(m.peak(), 6144);
+        assert_eq!(m.component("pod0"), 0);
     }
 
     #[test]

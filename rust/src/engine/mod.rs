@@ -56,17 +56,49 @@
 //! - **Sampling is scratch-based.** Coordinators draw every live row
 //!   through one [`crate::coordinator::sampler::SamplerScratch`] per
 //!   request; see its docs for the zero-allocation contract.
+//!
+//! # Residence: solo vs fused (PR 4)
+//!
+//! A request's *logical* state (branches, tokens, counters, the paged
+//! [`MemTracker`] model) always lives on its own [`GenState`] — that is
+//! what keeps a request bit-identical however it is scheduled. Its
+//! *device residence* is one of two shapes:
+//!
+//! - **Solo** — the request owns a bucketed [`KvCache`], exactly the
+//!   pre-fusion behavior. The blocking path and artifact-gated tests run
+//!   this shape.
+//! - **Fused** — the request leases rows in a shared per-bucket
+//!   [`fusion::FusedBatch`] ("pod"); one packed dispatch per occupied
+//!   pod per scheduler tick serves every co-resident request (see
+//!   [`fusion`]'s module docs). The per-request logits/signal staging
+//!   buffers stay on `GenState` (pulled from the pod slab after each
+//!   dispatch), so every coordinator reads the same views either way.
+//!
+//! To let the scheduler batch dispatches across requests, the per-token
+//! step is split into three phases: [`GenState::stage_step`] (record the
+//! sampled tokens, host bookkeeping), the dispatch (either
+//! [`GenState::commit_solo`] or the pod's packed flush), and
+//! [`GenState::finish_dispatched`] (pull fused rows, advance
+//! position/memory accounting). [`GenState::step`] / [`GenState::
+//! step_fused`] remain as the solo three-phase composition — same
+//! sequence, same bytes as before the split.
 
+pub mod fusion;
 pub mod mem;
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+pub use fusion::{FuseConfig, FuseStats, FusionHub};
 pub use mem::MemTracker;
 
 use crate::runtime::{KvCache, LoadedModel};
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
+
+use fusion::FusedBatch;
 
 /// One candidate chain-of-thought branch.
 #[derive(Debug, Clone, Default)]
@@ -120,20 +152,74 @@ impl Engine {
     }
 
     /// Projected admission cost of a fresh `n`-branch request:
-    /// `(device_slots, kv_bytes)`. Slots are the post-prefill bucket;
-    /// KV bytes are the request's **worst case** (`bucket × max_seq`) —
-    /// a request's cache grows every decoded token, so admission must
-    /// budget for where it can end up, not where it starts. The
-    /// scheduler checks this against its budgets *before* paying for
-    /// the prefill dispatch.
+    /// `(device_slots, kv_bytes)`. The branch count is **rounded up to
+    /// the bucket size first** and KV bytes projected from the rounded
+    /// count (`bucket × max_seq × bytes/token`) — a request's cache
+    /// grows every decoded token, so admission must budget for where it
+    /// can end up, not where it starts, and under shared-bucket packing
+    /// a mid-bucket request (say 5 branches in an 8-bucket) can still
+    /// force a whole new pod bucket open, so projecting the raw `n`
+    /// would over-admit straight into a bucket boundary. The scheduler
+    /// checks this against its budgets *before* paying for the prefill
+    /// dispatch. (Physical shared-pod allocation is a hub policy on top
+    /// — bounded by `FuseConfig::pod_bucket` per pod and tracked by the
+    /// hub's own [`MemTracker`]; see [`fusion::FusionHub`].)
     pub fn admission_cost(&self, n: usize) -> Result<(usize, usize)> {
-        let bucket = self.model.bucket_for(n)?;
-        let cfg = &self.model.config;
-        Ok((bucket, bucket * cfg.max_seq * cfg.kv_bytes_per_token()))
+        admission_projection(self.model.buckets(), n, &self.model.config)
     }
 
-    /// [`Engine::start`] with options (see [`StartOpts`]).
+    /// [`Engine::start`] with options (see [`StartOpts`]) — the **solo**
+    /// residence: the request owns its bucketed KV cache.
     pub fn start_opts(&self, prompt: &str, n: usize, opts: StartOpts) -> Result<GenState> {
+        let (logits_row, cache1, mut mem, prompt_len) = self.prefill_request(prompt, n)?;
+        let cfg = &self.model.config;
+
+        // Broadcast the single primed cache across the branch bucket.
+        let bucket = self.model.bucket_for(n)?;
+        let cache = if bucket == 1 {
+            cache1
+        } else {
+            let idx = vec![0i32; bucket];
+            let c = self.model.gather(&cache1, bucket, &idx)?;
+            mem.set_component("kv", bucket * prompt_len * cfg.kv_bytes_per_token());
+            c
+        };
+        Ok(self.init_state(Residence::Solo(cache), bucket, n, prompt_len, &logits_row, mem, opts))
+    }
+
+    /// Begin a request in the **fused** residence: lease `n` rows in one
+    /// of the hub's shared pods instead of owning a cache. The request's
+    /// own paged accounting stays identical to the solo path (same
+    /// virtual bucket, same component updates — that is what keeps
+    /// per-request `peak_mem_bytes` bit-identical across scheduling
+    /// shapes); the hub separately accounts the physical shared-bucket
+    /// occupancy.
+    pub fn start_fused(&self, hub: &FusionHub, prompt: &str, n: usize) -> Result<GenState> {
+        let (logits_row, cache1, mut mem, prompt_len) = self.prefill_request(prompt, n)?;
+        let cfg = &self.model.config;
+        let bucket = self.model.bucket_for(n)?;
+        if bucket > 1 {
+            mem.set_component("kv", bucket * prompt_len * cfg.kv_bytes_per_token());
+        }
+        let (pool, lease) = hub.place(self, cache1, n, prompt_len)?;
+        Ok(self.init_state(
+            Residence::Fused { pool, lease },
+            bucket,
+            n,
+            prompt_len,
+            &logits_row,
+            mem,
+            StartOpts::default(),
+        ))
+    }
+
+    /// Shared start prologue: tokenize, account the weight floor, run
+    /// the prompt pass once (bucket 1).
+    fn prefill_request(
+        &self,
+        prompt: &str,
+        n: usize,
+    ) -> Result<(Vec<f32>, KvCache, MemTracker, usize)> {
         if n == 0 {
             bail!("need at least one branch");
         }
@@ -149,34 +235,40 @@ impl Engine {
 
         // Paged-allocator model (see engine::mem docs): KV bytes follow
         // `bucket × stored_tokens × bytes_per_token`.
-        let bpt = cfg.kv_bytes_per_token();
         let (logits_row, cache1) = self.model.prefill(&ids_i32[..prompt_len.max(1)])?;
-        mem.set_component("kv", prompt_len * bpt);
+        mem.set_component("kv", prompt_len * cfg.kv_bytes_per_token());
+        Ok((logits_row, cache1, mem, prompt_len))
+    }
 
-        // Broadcast the single primed cache across the branch bucket.
-        let bucket = self.model.bucket_for(n)?;
-        let cache = if bucket == 1 {
-            cache1
-        } else {
-            let idx = vec![0i32; bucket];
-            let c = self.model.gather(&cache1, bucket, &idx)?;
-            mem.set_component("kv", bucket * prompt_len * bpt);
-            c
-        };
-
+    /// Shared start epilogue: replicate the prefill logits across the
+    /// branch rows and assemble the state (identical for both
+    /// residences — the logits/accounting live per request either way).
+    #[allow(clippy::too_many_arguments)]
+    fn init_state(
+        &self,
+        residence: Residence,
+        bucket: usize,
+        n: usize,
+        prompt_len: usize,
+        logits_row: &[f32],
+        mut mem: MemTracker,
+        opts: StartOpts,
+    ) -> GenState {
+        let cfg = &self.model.config;
+        let v = cfg.vocab;
         // Replicate prefill logits to every branch row (identical until
         // the first sampled token diverges them).
-        let v = cfg.vocab;
         let mut logits = vec![0f32; bucket * v];
         for s in 0..n {
-            logits[s * v..(s + 1) * v].copy_from_slice(&logits_row);
+            logits[s * v..(s + 1) * v].copy_from_slice(logits_row);
         }
         mem.set_component("logits", bucket * v * 4);
 
-        Ok(GenState {
+        GenState {
             branches: vec![Branch::default(); n],
             slots: (0..n).collect(),
-            cache,
+            residence,
+            bucket,
             logits,
             pos: prompt_len,
             prompt_len,
@@ -186,6 +278,8 @@ impl Engine {
             decode_calls: 0,
             gather_calls: 0,
             min_bucket: if opts.compact { 1 } else { bucket },
+            staged: None,
+            committed: false,
             tokens_scratch: Vec::with_capacity(bucket),
             slot_of: vec![-1; n],
             keep_mask: vec![false; n],
@@ -198,7 +292,7 @@ impl Engine {
             sig_ent: Vec::new(),
             sig_spare: Vec::new(),
             fused_valid: false,
-        })
+        }
     }
 }
 
@@ -217,13 +311,33 @@ impl Default for StartOpts {
     }
 }
 
+/// Where a request's branches physically live on device (module docs).
+enum Residence {
+    /// The request owns its bucketed KV cache (pre-fusion shape).
+    Solo(KvCache),
+    /// The request leases rows in a shared per-bucket pod.
+    Fused { pool: Rc<RefCell<FusedBatch>>, lease: u64 },
+}
+
 /// Per-request generation state (see module docs).
 pub struct GenState {
     /// All branches ever created for this request (stable identity).
     pub branches: Vec<Branch>,
-    /// `slots[i]` = branch index occupying device row `i`.
+    /// `slots[i]` = branch index occupying device row `i` (solo) or
+    /// leased-row slot `i` (fused).
     slots: Vec<usize>,
-    cache: KvCache,
+    residence: Residence,
+    /// The request's **virtual bucket**: the bucket a solo run would
+    /// hold right now. Drives the paged memory model and the logits-slab
+    /// sizing in *both* residences, so per-request accounting is
+    /// bit-identical however the request is scheduled. Equals the owned
+    /// cache's bucket in solo mode.
+    bucket: usize,
+    /// Step staged but not yet finished: `Some(signals_wanted)` between
+    /// [`GenState::stage_step`] and [`GenState::finish_dispatched`].
+    staged: Option<bool>,
+    /// Solo residence: the staged step's dispatch already ran.
+    committed: bool,
     /// Current logits slab `[bucket * vocab]`; rows beyond `slots.len()`
     /// are stale padding.
     logits: Vec<f32>,
@@ -291,6 +405,24 @@ pub fn repack_rows(
     std::mem::swap(src, spare);
 }
 
+/// Worst-case admission projection for an `n`-branch request over the
+/// exported `buckets`: `(slots, kv_bytes)` with the branch count rounded
+/// **up to the bucket** before the byte projection (see
+/// [`Engine::admission_cost`]). Factored out of the engine so the
+/// rounding rule is unit-testable without compiled artifacts.
+pub fn admission_projection(
+    buckets: &[usize],
+    n: usize,
+    cfg: &crate::runtime::ModelConfig,
+) -> Result<(usize, usize)> {
+    let bucket = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| anyhow::anyhow!("no bucket holds {n} branches"))?;
+    Ok((bucket, bucket * cfg.max_seq * cfg.kv_bytes_per_token()))
+}
+
 impl GenState {
     /// Branch indices currently on device (sampling order).
     pub fn live_branches(&self) -> &[usize] {
@@ -301,17 +433,24 @@ impl GenState {
         self.slots.len()
     }
 
+    /// The request's virtual bucket (== the owned cache's bucket in solo
+    /// mode; the solo-equivalent accounting bucket in fused mode).
     pub fn bucket(&self) -> usize {
-        self.cache.bucket
+        self.bucket
     }
 
     /// Device slots (KV-cache rows) this request currently occupies —
     /// the continuous-batching scheduler's occupancy unit. Shrinks the
     /// moment [`Self::retain_branches`] / [`Self::compact_finished`]
-    /// compacts to a smaller bucket, which is exactly when the scheduler
-    /// can admit more work.
+    /// compacts to a smaller bucket (solo) or drops leased rows (fused),
+    /// which is exactly when the scheduler can admit more work.
     pub fn device_slots(&self) -> usize {
-        self.cache.bucket
+        match &self.residence {
+            Residence::Solo(_) => self.bucket,
+            // Fused requests hold exactly their leased rows; free pod
+            // rows are the hub's to hand out.
+            Residence::Fused { .. } => self.slots.len(),
+        }
     }
 
     /// Accounted KV bytes currently held (the scheduler's memory
@@ -346,19 +485,29 @@ impl GenState {
         &self.logits
     }
 
-    /// Token bookkeeping shared by [`Self::step`] and
-    /// [`Self::step_fused`]: record the sampled tokens/log-probs and
-    /// fill the bucket-sized decode token scratch.
-    fn begin_step(&mut self, sampled: &[(u32, f64)]) -> Result<()> {
+    /// Phase 1 of the per-token step: record the sampled tokens/log-probs
+    /// (`sampled[i]` belongs to slot `i`), fill the decode token scratch,
+    /// and — in fused residence — stage the rows with the pod so the
+    /// scheduler's next flush decodes them. `signals` asks for on-device
+    /// signal scoring to ride along (the gated-token path).
+    pub fn stage_step(&mut self, sampled: &[(u32, f64)], signals: bool) -> Result<()> {
         if sampled.len() != self.slots.len() {
             bail!("step: {} samples for {} slots", sampled.len(), self.slots.len());
         }
         if self.pos >= self.max_seq {
             bail!("step: sequence budget exhausted");
         }
-        let bucket = self.cache.bucket;
+        if self.staged.is_some() {
+            bail!("step: staged twice without an absorb");
+        }
+        let rows = match &self.residence {
+            // Solo dispatch wants a bucket-padded token vector; the pod
+            // wants exactly the leased rows.
+            Residence::Solo(_) => self.bucket,
+            Residence::Fused { .. } => self.slots.len(),
+        };
         self.tokens_scratch.clear();
-        self.tokens_scratch.resize(bucket, PAD_ID as i32);
+        self.tokens_scratch.resize(rows, PAD_ID as i32);
         for (slot, &(tok, logprob)) in sampled.iter().enumerate() {
             let bi = self.slots[slot];
             let b = &mut self.branches[bi];
@@ -371,18 +520,108 @@ impl GenState {
             }
             self.tokens_scratch[slot] = tok as i32;
         }
+        if let Residence::Fused { pool, lease } = &self.residence {
+            pool.borrow_mut().stage(*lease, &self.tokens_scratch, self.pos, signals)?;
+        }
+        self.staged = Some(signals);
         Ok(())
     }
 
-    /// Position/memory bookkeeping shared by both step flavours.
+    /// Phase 2 (solo residence only): dispatch the staged step through
+    /// this request's own cache — plain donated decode, or the fused
+    /// decode+signals superstep when the stage asked for signals
+    /// (falling back to decode + `signals_padded` when the artifact set
+    /// has no superstep for the bucket). Fused-residence requests are
+    /// dispatched by their pod's flush instead; calling this on one is
+    /// an error.
+    pub fn commit_solo(&mut self, engine: &Engine) -> Result<()> {
+        let Some(signals) = self.staged else {
+            bail!("commit_solo without a staged step");
+        };
+        let Residence::Solo(cache) = &mut self.residence else {
+            bail!("commit_solo on a fused-residence request");
+        };
+        if signals {
+            let bucket = cache.bucket;
+            if engine.model.has_superstep(bucket) {
+                engine.model.superstep_into(
+                    &self.tokens_scratch,
+                    self.pos,
+                    cache,
+                    &mut self.logits,
+                    &mut self.sig_kl,
+                    &mut self.sig_conf,
+                    &mut self.sig_ent,
+                )?;
+            } else {
+                engine.model.decode_into(
+                    &self.tokens_scratch,
+                    self.pos,
+                    cache,
+                    &mut self.logits,
+                )?;
+                // Unfused fallback scores all bucket rows (padding
+                // included) to mirror the superstep's output shape.
+                engine.model.signals_padded_into(
+                    &self.logits,
+                    bucket,
+                    bucket,
+                    &mut self.sig_kl,
+                    &mut self.sig_conf,
+                    &mut self.sig_ent,
+                )?;
+            }
+            self.fused_valid = true;
+        } else {
+            engine.model.decode_into(&self.tokens_scratch, self.pos, cache, &mut self.logits)?;
+            self.fused_valid = false;
+        }
+        self.committed = true;
+        Ok(())
+    }
+
+    /// Phase 3: absorb the dispatched step. In fused residence this
+    /// pulls the request's rows (and signal rows, when staged with
+    /// `signals`) from the pod's shared slab into the per-request
+    /// staging buffers; both residences then advance the position and
+    /// the paged memory model. Must follow a dispatch ([`Self::
+    /// commit_solo`] or the pod flush) — absorbing an undispatched step
+    /// is a scheduler bug and fails loudly.
+    pub fn finish_dispatched(&mut self, engine: &Engine) -> Result<()> {
+        let Some(signals) = self.staged.take() else {
+            bail!("finish_dispatched without a staged step");
+        };
+        match &self.residence {
+            Residence::Solo(_) => {
+                if !self.committed {
+                    bail!("finish_dispatched before the solo dispatch ran");
+                }
+                self.committed = false;
+            }
+            Residence::Fused { pool, lease } => {
+                let n = self.slots.len() * self.vocab;
+                let ran_signals = pool.borrow_mut().absorb_rows(
+                    *lease,
+                    &mut self.logits[..n],
+                    &mut self.sig_kl,
+                    &mut self.sig_conf,
+                    &mut self.sig_ent,
+                )?;
+                self.fused_valid = signals && ran_signals;
+            }
+        }
+        self.finish_step(engine);
+        Ok(())
+    }
+
+    /// Position/memory bookkeeping shared by both residences.
     fn finish_step(&mut self, engine: &Engine) {
         self.decode_calls += 1;
         self.pos += 1;
-        // Paged-allocator model: the bucket's caches grew by one token.
-        self.mem.set_component(
-            "kv",
-            self.cache.bucket * self.pos * engine.model.config.kv_bytes_per_token(),
-        );
+        // Paged-allocator model: the (virtual) bucket's caches grew by
+        // one token.
+        self.mem
+            .set_component("kv", self.bucket * self.pos * engine.model.config.kv_bytes_per_token());
         // Length cap: if the budget is now exhausted, everything finishes.
         if self.pos >= self.max_seq {
             for &bi in &self.slots {
@@ -397,15 +636,13 @@ impl GenState {
     ///
     /// Non-gated path: plain decode executable, logits downloaded into
     /// the engine's slab in place, predecessor KV donated into the
-    /// successor. Invalidates any cached fused signals.
+    /// successor. Invalidates any cached fused signals. (The solo
+    /// three-phase composition — same sequence, same bytes as before the
+    /// stage/commit/finish split.)
     pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
-        self.begin_step(sampled)?;
-        engine
-            .model
-            .decode_into(&self.tokens_scratch, self.pos, &mut self.cache, &mut self.logits)?;
-        self.fused_valid = false;
-        self.finish_step(engine);
-        Ok(())
+        self.stage_step(sampled, false)?;
+        self.commit_solo(engine)?;
+        self.finish_dispatched(engine)
     }
 
     /// [`Self::step`] through the fused decode+signals superstep — the
@@ -416,39 +653,9 @@ impl GenState {
     /// results, one extra slab round-trip) when the loaded artifact set
     /// has no superstep for the current bucket.
     pub fn step_fused(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
-        self.begin_step(sampled)?;
-        let bucket = self.cache.bucket;
-        if engine.model.has_superstep(bucket) {
-            engine.model.superstep_into(
-                &self.tokens_scratch,
-                self.pos,
-                &mut self.cache,
-                &mut self.logits,
-                &mut self.sig_kl,
-                &mut self.sig_conf,
-                &mut self.sig_ent,
-            )?;
-        } else {
-            engine.model.decode_into(
-                &self.tokens_scratch,
-                self.pos,
-                &mut self.cache,
-                &mut self.logits,
-            )?;
-            // Unfused fallback scores all bucket rows (padding included)
-            // to mirror the superstep's output shape exactly.
-            engine.model.signals_padded_into(
-                &self.logits,
-                bucket,
-                bucket,
-                &mut self.sig_kl,
-                &mut self.sig_conf,
-                &mut self.sig_ent,
-            )?;
-        }
-        self.fused_valid = true;
-        self.finish_step(engine);
-        Ok(())
+        self.stage_step(sampled, true)?;
+        self.commit_solo(engine)?;
+        self.finish_dispatched(engine)
     }
 
     /// Per-slot `(kl, conf, ent)` rows for the **current** logits slab,
@@ -501,18 +708,42 @@ impl GenState {
         }
 
         let new_bucket = engine.model.bucket_for(keep.len())?.max(self.min_bucket);
-        let old_bucket = self.cache.bucket;
+        let old_bucket = self.bucket;
+        // The solo gather condition — also the trigger for the shared
+        // virtual-bucket bookkeeping (gather_calls, memory model, host
+        // slab repack), so fused requests report bit-identical metrics.
+        let would_gather =
+            new_bucket != old_bucket || self.keep_slots.iter().enumerate().any(|(i, &s)| i != s);
 
-        // Device gather indices: destination row i ← source slot
-        // keep_slots[i]; pad rows repeat row 0 (their outputs are ignored).
-        self.gather_idx.clear();
-        self.gather_idx.resize(new_bucket, self.keep_slots[0] as i32);
-        for (i, &s) in self.keep_slots.iter().enumerate() {
-            self.gather_idx[i] = s as i32;
+        match &mut self.residence {
+            Residence::Solo(cache) => {
+                if would_gather {
+                    // Device gather indices: destination row i ← source
+                    // slot keep_slots[i]; pad rows repeat row 0 (their
+                    // outputs are ignored).
+                    self.gather_idx.clear();
+                    self.gather_idx.resize(new_bucket, self.keep_slots[0] as i32);
+                    for (i, &s) in self.keep_slots.iter().enumerate() {
+                        self.gather_idx[i] = s as i32;
+                    }
+                    *cache = engine.model.gather(cache, new_bucket, &self.gather_idx)?;
+                }
+            }
+            Residence::Fused { pool, lease } => {
+                // Kept rows stay physically put — dropping/permuting
+                // leased rows is a host-side reindex of the row list
+                // (see `fusion` module docs), so pruning costs no device
+                // work in fused mode. Run it whenever the slot set
+                // changes at all, to keep the lease parallel to `slots`.
+                if self.keep_slots.len() != self.slots.len()
+                    || self.keep_slots.iter().enumerate().any(|(i, &s)| i != s)
+                {
+                    pool.borrow_mut().shrink(*lease, &self.keep_slots)?;
+                }
+            }
         }
 
-        if new_bucket != old_bucket || self.keep_slots.iter().enumerate().any(|(i, &s)| i != s) {
-            let new_cache = engine.model.gather(&self.cache, new_bucket, &self.gather_idx)?;
+        if would_gather {
             self.gather_calls += 1;
             // Paged-allocator model: pruning frees the dropped branches'
             // pages; no copy transient is accounted (the device-side
@@ -520,7 +751,6 @@ impl GenState {
             // allocator metric — see engine::mem docs).
             let bpt = engine.model.config.kv_bytes_per_token();
             self.mem.set_component("kv", new_bucket * self.pos * bpt);
-            self.cache = new_cache;
 
             // Re-pack the logits slab to match the new slot order, into
             // the spare buffer (swapped, not reallocated) — and the
@@ -535,6 +765,7 @@ impl GenState {
                 repack_rows(&mut self.sig_ent, &mut self.sig_spare, ks, 1, nb);
             }
             self.mem.set_component("logits", new_bucket * v * 4);
+            self.bucket = new_bucket;
         }
 
         self.slots.clear();
@@ -576,5 +807,60 @@ impl GenState {
     /// Decode a branch's generated text.
     pub fn text_of(&self, engine: &Engine, branch: usize) -> String {
         engine.tokenizer.decode(&self.branches[branch].tokens)
+    }
+}
+
+impl Drop for GenState {
+    /// A fused request returns its leased rows the moment its state is
+    /// dropped (completion, failure, or scheduler abort) — host
+    /// bookkeeping only, so it is safe without an engine; the freed rows
+    /// become admissible immediately and are wholly overwritten by the
+    /// next admission's `fuse` dispatch.
+    fn drop(&mut self) {
+        if let Residence::Fused { pool, lease } = &self.residence {
+            pool.borrow_mut().release(*lease);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> crate::runtime::ModelConfig {
+        crate::runtime::ModelConfig {
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            max_seq: 16,
+            prompt_len: 8,
+            vocab: 8,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn admission_projection_rounds_branches_up_to_the_bucket() {
+        let buckets = [1usize, 2, 4, 8];
+        let c = cfg();
+        let bpt = c.kv_bytes_per_token();
+        // Mid-bucket branch counts are charged at the full bucket —
+        // shared-bucket packing can never over-admit into a boundary.
+        assert_eq!(admission_projection(&buckets, 5, &c).unwrap(), (8, 8 * 16 * bpt));
+        assert_eq!(admission_projection(&buckets, 3, &c).unwrap(), (4, 4 * 16 * bpt));
+        // Exact fits stay exact.
+        assert_eq!(admission_projection(&buckets, 4, &c).unwrap(), (4, 4 * 16 * bpt));
+        assert_eq!(admission_projection(&buckets, 1, &c).unwrap(), (1, 16 * bpt));
+        // Beyond the largest bucket is an error, not a silent clamp.
+        assert!(admission_projection(&buckets, 9, &c).is_err());
+    }
+
+    #[test]
+    fn repack_rows_permutes_and_pads() {
+        let mut src = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let mut spare = Vec::new();
+        repack_rows(&mut src, &mut spare, &[2, 0], 2, 4);
+        assert_eq!(src, vec![2.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
     }
 }

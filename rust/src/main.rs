@@ -52,7 +52,7 @@ USAGE:
                  [--problems 50] [--seed 17] [--json]
   kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
                  [--requests 20] [--dataset gsm]
-                 [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0]
+                 [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0] [--no-fuse]
 
 KAPPA hyperparameters (defaults = paper §4.1):
   --ema-alpha 0.5  --window 16  --mom-buckets 4
@@ -206,11 +206,14 @@ fn serve(args: &Args) -> Result<()> {
         max_inflight: args.usize_or("max-inflight", d.max_inflight),
         slot_budget: args.usize_or("slot-budget", d.slot_budget),
         mem_budget_bytes: args.usize_or("mem-budget-mb", 0) << 20,
+        fuse: !args.bool_or("no-fuse", false),
     };
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots) …",
-        sched.max_inflight, sched.slot_budget
+         (≤{} in flight, {} slots, fusion {}) …",
+        sched.max_inflight,
+        sched.slot_budget,
+        if sched.fuse { "on" } else { "off" }
     );
     let server = Server::start_with(&dir, &model, workers, cfg.clone(), sched)?;
 

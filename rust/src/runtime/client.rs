@@ -32,6 +32,13 @@ pub struct Runtime {
     /// slab per gated token (the download; the re-upload is gone).
     slab_uploads: AtomicUsize,
     slab_downloads: AtomicUsize,
+    /// Decode-family dispatches (decode / superstep, solo or packed)
+    /// issued so far. The batch-fusion invariant is stated in this
+    /// counter: with fusion on, one scheduler tick issues at most one
+    /// decode dispatch per occupied bucket, however many co-resident
+    /// requests share it — `perf_microbench`'s `batch_fusion` section
+    /// asserts it against the per-request baseline.
+    decode_dispatches: AtomicUsize,
 }
 
 impl Runtime {
@@ -45,6 +52,7 @@ impl Runtime {
             downloads: AtomicUsize::new(0),
             slab_uploads: AtomicUsize::new(0),
             slab_downloads: AtomicUsize::new(0),
+            decode_dispatches: AtomicUsize::new(0),
         })
     }
 
@@ -104,6 +112,17 @@ impl Runtime {
     /// budget the superstep invariant is stated in.
     pub fn slab_transfers(&self) -> (usize, usize) {
         (self.slab_uploads.load(Ordering::Relaxed), self.slab_downloads.load(Ordering::Relaxed))
+    }
+
+    /// Note one decode-family dispatch (decode / superstep, solo or
+    /// packed) — the unit batch fusion amortizes across requests.
+    pub fn note_decode_dispatch(&self) {
+        self.decode_dispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decode-family dispatches issued so far.
+    pub fn decode_dispatch_count(&self) -> usize {
+        self.decode_dispatches.load(Ordering::Relaxed)
     }
 
     // ---- host → device helpers ----
@@ -196,6 +215,15 @@ mod tests {
         rt.note_slab_download();
         rt.note_slab_download();
         assert_eq!(rt.slab_transfers(), (1, 2));
+    }
+
+    #[test]
+    fn decode_dispatch_counter() {
+        let rt = Runtime::new().unwrap();
+        assert_eq!(rt.decode_dispatch_count(), 0);
+        rt.note_decode_dispatch();
+        rt.note_decode_dispatch();
+        assert_eq!(rt.decode_dispatch_count(), 2);
     }
 
     #[test]

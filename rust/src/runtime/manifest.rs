@@ -73,6 +73,15 @@ pub struct ModelManifest {
     pub superstep: BTreeMap<usize, PathBuf>,
     /// (src_bucket, dst_bucket) → gather HLO path.
     pub gather: BTreeMap<(usize, usize), PathBuf>,
+    /// bucket → cross-request packed decode HLO path (per-row `pos`
+    /// vector). Optional like `superstep`: older artifact sets predate
+    /// batch fusion, and the scheduler falls back to per-request solo
+    /// dispatch when a bucket is absent.
+    pub decode_packed: BTreeMap<usize, PathBuf>,
+    /// bucket → packed decode+signals superstep HLO path (optional).
+    pub superstep_packed: BTreeMap<usize, PathBuf>,
+    /// bucket → pod-admission row-merge HLO path (optional).
+    pub fuse: BTreeMap<usize, PathBuf>,
     /// Greedy accuracy measured at export time (training-quality gate).
     pub greedy_acc: BTreeMap<String, f64>,
 }
@@ -183,6 +192,16 @@ impl Manifest {
         for (k, v) in arts.get("superstep").and_then(Json::as_obj).into_iter().flatten() {
             superstep.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
         }
+        let bucket_map = |key: &str| -> Result<BTreeMap<usize, PathBuf>> {
+            let mut m = BTreeMap::new();
+            for (k, v) in arts.get(key).and_then(Json::as_obj).into_iter().flatten() {
+                m.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
+            }
+            Ok(m)
+        };
+        let decode_packed = bucket_map("decode_packed")?;
+        let superstep_packed = bucket_map("superstep_packed")?;
+        let fuse = bucket_map("fuse")?;
         let mut gather = BTreeMap::new();
         for (k, v) in arts.get("gather").and_then(Json::as_obj).into_iter().flatten() {
             let (s, d) = k
@@ -214,6 +233,9 @@ impl Manifest {
             decode,
             superstep,
             gather,
+            decode_packed,
+            superstep_packed,
+            fuse,
             greedy_acc,
         })
     }
@@ -254,7 +276,10 @@ mod tests {
                 "prefill": "prefill_sm_b1.hlo.txt",
                 "decode": {"1": "decode_sm_b1.hlo.txt", "2": "decode_sm_b2.hlo.txt"},
                 "superstep": {"1": "superstep_sm_b1.hlo.txt"},
-                "gather": {"1to2": "gather_sm_b1to2.hlo.txt"}
+                "gather": {"1to2": "gather_sm_b1to2.hlo.txt"},
+                "decode_packed": {"2": "decode_packed_sm_b2.hlo.txt"},
+                "superstep_packed": {"2": "superstep_packed_sm_b2.hlo.txt"},
+                "fuse": {"2": "fuse_sm_b2.hlo.txt"}
               },
               "training": {"greedy_acc": {"gsm_synth": 0.5}}
             }
@@ -276,6 +301,15 @@ mod tests {
             &PathBuf::from("/tmp/a/superstep_sm_b1.hlo.txt")
         );
         assert_eq!(sm.gather.get(&(1, 2)).unwrap(), &PathBuf::from("/tmp/a/gather_sm_b1to2.hlo.txt"));
+        assert_eq!(
+            sm.decode_packed.get(&2).unwrap(),
+            &PathBuf::from("/tmp/a/decode_packed_sm_b2.hlo.txt")
+        );
+        assert_eq!(
+            sm.superstep_packed.get(&2).unwrap(),
+            &PathBuf::from("/tmp/a/superstep_packed_sm_b2.hlo.txt")
+        );
+        assert_eq!(sm.fuse.get(&2).unwrap(), &PathBuf::from("/tmp/a/fuse_sm_b2.hlo.txt"));
         assert_eq!(sm.greedy_acc["gsm_synth"], 0.5);
         assert!(m.model("nope").is_err());
     }
@@ -284,10 +318,26 @@ mod tests {
     fn superstep_is_optional_for_older_artifact_sets() {
         let text =
             tiny_manifest_json().replace(r#""superstep": {"1": "superstep_sm_b1.hlo.txt"},"#, "");
-        assert!(!text.contains("superstep"), "replace must strip the key");
+        assert!(!text.contains(r#""superstep":"#), "replace must strip the key");
         let j = json::parse(&text).unwrap();
         let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
         assert!(m.model("sm").unwrap().superstep.is_empty());
+    }
+
+    #[test]
+    fn packed_artifacts_are_optional_for_older_artifact_sets() {
+        // Pre-fusion manifests carry no packed/fuse keys; parsing must
+        // yield empty maps (the scheduler then keeps solo dispatch).
+        let text = tiny_manifest_json()
+            .replace(r#""decode_packed": {"2": "decode_packed_sm_b2.hlo.txt"},"#, "")
+            .replace(r#""superstep_packed": {"2": "superstep_packed_sm_b2.hlo.txt"},"#, "")
+            .replace(r#""fuse": {"2": "fuse_sm_b2.hlo.txt"}"#, r#""fuse2": {}"#);
+        let j = json::parse(&text).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        let sm = m.model("sm").unwrap();
+        assert!(sm.decode_packed.is_empty());
+        assert!(sm.superstep_packed.is_empty());
+        assert!(sm.fuse.is_empty());
     }
 
     #[test]

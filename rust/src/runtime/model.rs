@@ -111,6 +111,12 @@ pub struct LoadedModel {
     gather_exes: BTreeMap<(usize, usize), ExeCell>,
     /// bucket → fused signal-kernel executable.
     signal_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → cross-request packed decode executable (per-row `pos`).
+    decode_packed_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → packed decode+signals superstep executable.
+    superstep_packed_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → pod-admission row-merge executable.
+    fuse_exes: BTreeMap<usize, ExeCell>,
 }
 
 impl LoadedModel {
@@ -134,6 +140,11 @@ impl LoadedModel {
             mm.gather.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let signal_exes =
             manifest.signals.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let decode_packed_exes =
+            mm.decode_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let superstep_packed_exes =
+            mm.superstep_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let fuse_exes = mm.fuse.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let mut model = LoadedModel {
             rt,
             name: name.to_string(),
@@ -144,6 +155,9 @@ impl LoadedModel {
             superstep_exes,
             gather_exes,
             signal_exes,
+            decode_packed_exes,
+            superstep_packed_exes,
+            fuse_exes,
             param_table,
             q_logits: Vec::new(),
             q_buf: OnceLock::new(),
@@ -252,6 +266,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_prefixed(&self.param_table, &[&tok, &posb, &cache.k, &cache.v])?
             .swap_remove(0);
@@ -287,6 +302,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
             .swap_remove(0);
@@ -343,6 +359,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(
                 &self.param_table,
@@ -361,6 +378,157 @@ impl LoadedModel {
         self.rt.to_host_f32_into(&out[2], conf_out)?;
         self.rt.to_host_f32_into(&out[3], ent_out)?;
         Ok(())
+    }
+
+    /// Whether the cross-request batch-fusion executables (packed
+    /// decode, packed superstep, fuse) exist for `bucket`. Older
+    /// artifact sets predate them — the scheduler then keeps solo
+    /// per-request dispatch.
+    pub fn has_packed(&self, bucket: usize) -> bool {
+        self.decode_packed_exes.contains_key(&bucket)
+            && self.superstep_packed_exes.contains_key(&bucket)
+            && self.fuse_exes.contains_key(&bucket)
+    }
+
+    /// Shared shape contract for the packed dispatches: one token and
+    /// one position per bucket row, every position inside the sequence.
+    fn check_step_packed(&self, tokens: &[i32], pos: &[i32], bucket: usize) -> Result<()> {
+        if tokens.len() != bucket {
+            bail!("decode_packed: {} tokens for bucket {bucket}", tokens.len());
+        }
+        if pos.len() != bucket {
+            bail!("decode_packed: {} positions for bucket {bucket}", pos.len());
+        }
+        for &p in pos {
+            if p < 0 || p as usize >= self.config.max_seq {
+                bail!("decode_packed: pos {p} outside 0..{}", self.config.max_seq);
+            }
+        }
+        Ok(())
+    }
+
+    /// Cross-request **packed decode** — one dispatch advances every
+    /// co-resident request's live rows by one token, each row at its own
+    /// sequence position (`pos[i]` is the slot row `i` writes). Rows
+    /// without a live branch ride along with PAD tokens at a harmless
+    /// position (see `engine::fusion`). Donation and staging follow
+    /// [`Self::decode_into`] exactly; row-wise the results are bitwise
+    /// identical to each request's solo dispatch
+    /// (`python/tests/test_packed.py` pins the parity at the graph
+    /// level).
+    pub fn decode_packed_into(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step_packed(tokens, pos, b)?;
+        let cell = self
+            .decode_packed_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no packed decode artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.note_decode_dispatch();
+        let mut out = exe
+            .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
+            .swap_remove(0);
+        if out.len() != 3 {
+            bail!("decode_packed returned {} outputs, expected 3", out.len());
+        }
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        Ok(())
+    }
+
+    /// Packed **decode+signals superstep** — the fused scheduler's hot
+    /// path: one dispatch per occupied bucket per tick serves every
+    /// co-resident request, returning the shared logits slab (downloaded
+    /// once) plus the three bucket-length signal vectors. Same donation
+    /// contract as [`Self::superstep_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn superstep_packed_into(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+        kl_out: &mut Vec<f32>,
+        conf_out: &mut Vec<f32>,
+        ent_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step_packed(tokens, pos, b)?;
+        let cell = self
+            .superstep_packed_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no packed superstep artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.note_decode_dispatch();
+        let mut out = exe
+            .execute_b_donated(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[2, 3],
+            )?
+            .swap_remove(0);
+        if out.len() != 6 {
+            bail!("superstep_packed returned {} outputs, expected 6", out.len());
+        }
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        self.rt.to_host_f32_into(&out[1], kl_out)?;
+        self.rt.to_host_f32_into(&out[2], conf_out)?;
+        self.rt.to_host_f32_into(&out[3], ent_out)?;
+        Ok(())
+    }
+
+    /// Pod admission: merge a freshly prefilled bucket-1 cache into a
+    /// shared pod cache. Result row `i` is the pod's own row `idx[i]`
+    /// when `idx[i] >= 0`, or the source's row 0 when `idx[i] < 0` — one
+    /// dispatch both broadcasts the prompt across the new request's
+    /// leased rows and leaves every resident row untouched. Neither
+    /// input is donated (admission is off the per-token path; the
+    /// returned cache replaces the pod's).
+    pub fn fuse(&self, dst: &KvCache, src: &KvCache, idx: &[i32]) -> Result<KvCache> {
+        let b = dst.bucket;
+        if src.bucket != 1 {
+            bail!("fuse: source must be a bucket-1 prefill cache, got {}", src.bucket);
+        }
+        if idx.len() != b {
+            bail!("fuse: {} indices for bucket {b}", idx.len());
+        }
+        for &i in idx {
+            if i >= b as i32 {
+                bail!("fuse: index {i} out of pod bucket {b}");
+            }
+        }
+        let cell = self
+            .fuse_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no fuse artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+        let idxb = self.rt.i32_buffer(idx, &[b])?;
+        let mut out = exe
+            .execute_prefixed(&[], &[&dst.k, &dst.v, &src.k, &src.v, &idxb])?
+            .swap_remove(0);
+        if out.len() != 2 {
+            bail!("fuse returned {} outputs, expected 2", out.len());
+        }
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        Ok(KvCache { k, v, bucket: b })
     }
 
     /// Re-index branches: `indices[i]` selects which source branch fills

@@ -15,14 +15,19 @@
 //! tests in `src/server/mod.rs`, which drive the same `scheduler_loop`
 //! with synthetic drivers.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
+use anyhow::Result;
 use kappa::coordinator::config::{Method, RunConfig};
-use kappa::coordinator::{make_driver, run_method, Driver, GenOutput, StepOutcome};
+use kappa::coordinator::{
+    make_driver, make_driver_fused, run_method, Driver, GenOutput, StepOutcome, StepPlan,
+};
 use kappa::data::Dataset;
-use kappa::engine::Engine;
+use kappa::engine::{Engine, FuseConfig, FusionHub};
 use kappa::runtime::{LoadedModel, Manifest, Runtime};
-use kappa::server::{request_seed, SchedConfig, Server};
+use kappa::server::{request_seed, Pollable, SchedConfig, Scheduler, Server};
+use kappa::util::rng::Pcg64;
 
 fn artifacts_dir() -> String {
     std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
@@ -137,7 +142,7 @@ fn server_schedules_many_requests_onto_few_workers() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0 };
+    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(8, 41);
@@ -158,6 +163,154 @@ fn server_schedules_many_requests_onto_few_workers() {
     server.shutdown();
 }
 
+// ---- cross-request batch fusion (PR 4) ----
+
+fn packed_ready(engine: &Engine) -> bool {
+    engine.model().buckets().iter().all(|&b| engine.model().has_packed(b))
+}
+
+/// Fused in-flight request for driving the scheduler core directly:
+/// plan/absorb through the driver, the pod flush supplying the dispatch
+/// (the same phasing the server worker runs).
+struct FusedFlight<'e> {
+    driver: Box<dyn Driver>,
+    engine: &'e Engine,
+}
+
+impl Pollable for FusedFlight<'_> {
+    fn plan(&mut self) -> Result<StepPlan> {
+        self.driver.plan_step(self.engine)
+    }
+    fn absorb(&mut self) -> Result<StepOutcome> {
+        self.driver.absorb_step(self.engine)
+    }
+    fn device_slots(&self) -> usize {
+        self.driver.device_slots()
+    }
+    fn mem_bytes(&self) -> usize {
+        self.driver.mem_bytes()
+    }
+}
+
+/// Run `prompts` through the fused scheduler core. Admission follows
+/// `order` (indices into `prompts`) with a seeded coin flip per tick, so
+/// requests join pods at arbitrary phases of their pod-mates' lives;
+/// per-request seeds stay keyed to the *original* index, so the same
+/// request draws the same RNG streams whatever the packing. Returns
+/// outputs indexed by original position.
+fn run_fused_trace(
+    engine: &Engine,
+    prompts: &[String],
+    cfg: &RunConfig,
+    seed0: u64,
+    order: &[usize],
+    admit_seed: u64,
+    max_inflight: usize,
+) -> Vec<GenOutput> {
+    let hub = FusionHub::new(FuseConfig::default());
+    let sched_cfg =
+        SchedConfig { max_inflight, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
+    let mut sched: Scheduler<FusedFlight, usize> = Scheduler::new(sched_cfg);
+    let admission = engine.admission_cost(cfg.concurrent_branches()).expect("admission cost");
+    let mut admit_rng = Pcg64::new(admit_seed, 1);
+    let mut queue: VecDeque<usize> = order.iter().copied().collect();
+    let mut out: Vec<Option<GenOutput>> = (0..prompts.len()).map(|_| None).collect();
+    let dispatches_before = engine.model().runtime().decode_dispatch_count();
+    let mut ticks = 0usize;
+    while !(queue.is_empty() && sched.is_empty()) {
+        ticks += 1;
+        assert!(ticks < 100_000, "fused trace runaway");
+        while !queue.is_empty()
+            && sched.can_admit(admission.0, admission.1)
+            && admit_rng.below(4) != 0
+        {
+            let i = queue.pop_front().unwrap();
+            let driver =
+                make_driver_fused(engine, &hub, &prompts[i], cfg, request_seed(seed0, i as u64))
+                    .expect("fused driver");
+            sched.admit(FusedFlight { driver, engine }, i);
+        }
+        sched.tick(
+            || hub.flush(engine),
+            |i, r| out[i] = Some(r.expect("fused request failed")),
+        );
+    }
+    // The fused invariant while we are here, across two independent
+    // counters: every decode-family dispatch of the trace came from a
+    // pod flush, exactly one per occupied pod per tick (the Runtime
+    // counts dispatches at the execute sites; the hub counts pods with
+    // staged work before each flush).
+    let dispatched = engine.model().runtime().decode_dispatch_count() - dispatches_before;
+    assert_eq!(
+        dispatched,
+        hub.stats().occupied_pod_ticks,
+        "fused trace issued {dispatched} decode dispatches across {} occupied pod-ticks",
+        hub.stats().occupied_pod_ticks
+    );
+    out.into_iter().map(|o| o.expect("request never completed")).collect()
+}
+
+/// The PR 4 load-bearing claim: a request served through **fused
+/// ticks** — its branches packed into shared pod dispatches with other
+/// requests, admitted at randomized offsets — produces bit-identical
+/// text *and metrics* to its solo blocking run, for all four methods.
+#[test]
+fn fused_ticks_are_bit_identical_to_blocking_runs_for_all_methods() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = Dataset::GsmSynth.generate(4, 77);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let order: Vec<usize> = (0..prompts.len()).collect();
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        let blocking: Vec<GenOutput> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| run_method(&engine, p, &cfg, request_seed(5, i as u64)).expect("blocking"))
+            .collect();
+        // Several randomized admission interleavings: each packs the
+        // same requests into pods at different co-residency phases.
+        for admit_seed in [1u64, 9, 23] {
+            let fused = run_fused_trace(&engine, &prompts, &cfg, 5, &order, admit_seed, 3);
+            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                assert_outputs_identical(
+                    b,
+                    f,
+                    &format!("{method:?} request {i} (admit seed {admit_seed})"),
+                );
+            }
+        }
+    }
+}
+
+/// Satellite property: per-request RNG streams are independent of
+/// co-resident packing order — permuting the admission order of *other*
+/// requests leaves every request's sampled token trace (and with it the
+/// full output) bit-identical.
+#[test]
+fn request_rng_streams_independent_of_coresident_packing_order() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = Dataset::GsmSynth.generate(4, 31);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+
+    let natural = run_fused_trace(&engine, &prompts, &cfg, 13, &[0, 1, 2, 3], 7, 4);
+    for order in [[2usize, 0, 3, 1], [3, 2, 1, 0], [1, 3, 0, 2]] {
+        let permuted = run_fused_trace(&engine, &prompts, &cfg, 13, &order, 7, 4);
+        for (i, (a, b)) in natural.iter().zip(&permuted).enumerate() {
+            assert_outputs_identical(a, b, &format!("request {i} under admission order {order:?}"));
+        }
+    }
+}
+
 /// `shutdown_now` with requests still queued: every pending submission
 /// observes an error (directly or by channel drop) and nothing
 /// deadlocks or panics.
@@ -168,7 +321,7 @@ fn server_shutdown_now_fails_queued_requests_without_deadlock() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, mem_budget_bytes: 0 };
+    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(6, 51);
