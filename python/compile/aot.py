@@ -22,6 +22,12 @@ Exports, per model size m ∈ {sm, lg}:
   artifacts/fuse_{m}_b{B}.hlo.txt         pod admission: merge a prefilled
                                           bucket-1 cache into a shared pod
                                           cache's leased rows
+  artifacts/compact_{m}_b{S}to{D}.hlo.txt pod compaction: gather a pod's
+                                          live rows into a smaller-bucket
+                                          pod cache in one device call,
+                                          with the destination k/v donated
+                                          (same alias-table contract as
+                                          the decode/superstep families)
   artifacts/weights_{m}.bin               flat little-endian f32 params
 plus model-independent:
   artifacts/signals_b{B}.hlo.txt          fused Pallas KL/conf/entropy kernel
@@ -50,6 +56,7 @@ from .model import (
     BATCH_BUCKETS,
     CONFIGS,
     ModelConfig,
+    compact_rows,
     decode_step,
     decode_step_packed,
     fuse_rows,
@@ -200,6 +207,31 @@ def lower_fuse(cfg: ModelConfig, b: int):
     )
 
 
+def lower_compact(cfg: ModelConfig, src_b: int, dst_b: int, donate: bool = True):
+    """Lower the pod-compaction row gather ``src_b`` → ``dst_b``: args are
+    (k_dst[L,D,…], v_dst, k_src[L,S,…], v_src, idx[D]) — see
+    ``model.compact_rows``. The **destination** k/v (flat args 0 / 1) are
+    donated and alias tuple outputs 0 / 1 — the same k/v
+    ``input_output_alias`` contract the decode/superstep families carry
+    for their cache operands, so XLA plans the in-place write into the
+    smaller pod at compile time. No parameter prefix (pure data
+    movement, like the gathers). ``test_packed.py`` pins the alias table
+    and the donated-vs-undonated result parity."""
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def compact_fn(kd, vd, ks, vs, idx):
+        return compact_rows(kd, vd, ks, vs, idx)
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(compact_fn, donate_argnums=donate_argnums).lower(
+        _spec((lyr, dst_b, h, s, dh)),
+        _spec((lyr, dst_b, h, s, dh)),
+        _spec((lyr, src_b, h, s, dh)),
+        _spec((lyr, src_b, h, s, dh)),
+        _spec((dst_b,), jnp.int32),
+    )
+
+
 def to_hlo_text(lowered) -> str:
     """jax Lowered → XLA HLO text (the only interchange the Rust side accepts)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -231,6 +263,13 @@ def gather_pairs(buckets=BATCH_BUCKETS):
     return sorted(set(pairs))
 
 
+def compact_pairs(buckets=BATCH_BUCKETS):
+    """(src, dst) bucket pairs pod compaction needs: every strict shrink.
+    (A same-bucket "compaction" reclaims nothing, so it is not exported —
+    the engine's trigger only fires when a smaller bucket fits.)"""
+    return sorted((s, d) for s in buckets for d in buckets if d < s)
+
+
 def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUCKETS):
     """Lower all graphs for one model size; returns manifest fragment."""
     names = cfg.param_names()
@@ -245,6 +284,7 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
         "decode_packed": {},
         "superstep_packed": {},
         "fuse": {},
+        "compact": {},
     }
 
     def as_dict(flat):
@@ -306,6 +346,15 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
         )
         arts["fuse"][str(b)] = _write(
             out_dir, f"fuse_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_fuse(cfg, b))
+        )
+
+    # --- pod compaction (PR 5): gather a pod's live rows into a
+    # smaller-bucket pod, destination k/v donated (in-place on device).
+    for src, dst in compact_pairs(buckets):
+        arts["compact"][f"{src}to{dst}"] = _write(
+            out_dir,
+            f"compact_{cfg.name}_b{src}to{dst}.hlo.txt",
+            to_hlo_text(lower_compact(cfg, src, dst)),
         )
 
     # --- KV gather (broadcast / compaction) ---

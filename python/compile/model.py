@@ -286,6 +286,39 @@ def decode_step_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
     return x @ params["head"], k_cache, v_cache
 
 
+def compact_rows(k_dst, v_dst, k_src, v_src, idx):
+    """Gather a pod's live rows into a smaller-bucket pod cache.
+
+    The pod-compaction companion of ``fuse_rows``: after sustained
+    pruning a pod's live rows occupy a fraction of its bucket, and this
+    op pulls exactly those rows into a smaller destination cache in one
+    device call so the big pod's allocation can be dropped. ``idx`` is a
+    ``[D]`` int32 vector over the *destination* rows: row ``r`` of the
+    result is the **source** pod's row ``idx[r]`` when ``idx[r] >= 0``,
+    or the destination's own row ``r`` (a free row whose stale contents
+    are harmless — admission overwrites free rows wholly) when
+    ``idx[r] < 0``.
+
+    The destination k/v are the donated operands in the AOT export
+    (``aot.lower_compact``): the outputs alias them exactly the way the
+    decode/superstep successors alias their k/v inputs, so on real
+    hardware compaction writes straight into the smaller pod's buffers.
+
+    Args:
+      k_dst, v_dst: [L, D, H, S, Dh] — the smaller destination cache.
+      k_src, v_src: [L, B, H, S, Dh] — the pod being compacted (B >= D).
+      idx: [D] int32 source-row selector (see above).
+
+    Returns:
+      compacted (k, v), both [L, D, H, S, Dh].
+    """
+    take_src = (idx >= 0)[None, :, None, None, None]
+    sel = jnp.clip(idx, 0, k_src.shape[1] - 1)
+    k = jnp.where(take_src, jnp.take(k_src, sel, axis=1), k_dst)
+    v = jnp.where(take_src, jnp.take(v_src, sel, axis=1), v_dst)
+    return k, v
+
+
 def fuse_rows(k_dst, v_dst, k_src, v_src, idx):
     """Merge a freshly prefilled bucket-1 cache into a shared pod cache.
 

@@ -29,6 +29,8 @@ import numpy as np
 import pytest
 
 from compile.aot import (
+    compact_pairs,
+    lower_compact,
     lower_decode_packed,
     lower_fuse,
     lower_superstep_packed,
@@ -37,7 +39,9 @@ from compile.aot import (
 )
 from compile.kernels.signals import signals
 from compile.model import (
+    BATCH_BUCKETS,
     CONFIGS,
+    compact_rows,
     decode_step,
     decode_step_packed,
     fuse_rows,
@@ -179,6 +183,94 @@ class TestFuseRows:
             np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(b1[0])[:, 0])
         for r in (0, 2, 4, 5, 7):
             np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(kp)[:, r])
+
+
+class TestCompactRows:
+    """Pod compaction (PR 5): live rows gathered into a smaller-bucket
+    pod must be bitwise copies, and decoding them there must be bitwise
+    identical to decoding them in the original pod — that is what lets
+    the Rust engine reclaim pod memory mid-request without perturbing
+    any request's output."""
+
+    def small_dst(self, cfg, d, seed=3):
+        shape = (cfg.n_layers, d, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        g = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+        return g, 3.0 * g
+
+    def test_live_rows_are_bitwise_copies_and_free_rows_keep_dst(self, setup):
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        kd, vd = self.small_dst(cfg, 4)
+        # Live rows after pruning: pod rows 0, 2 (request A) and 4, 5
+        # (request B); dst row 3 stays free (idx < 0 ⇒ keep dst row).
+        idx = jnp.array([0, 2, 4, -1], jnp.int32)
+        kc, vc = compact_rows(kd, vd, kp, vp, idx)
+        for new_r, old_r in [(0, 0), (1, 2), (2, 4)]:
+            np.testing.assert_array_equal(np.asarray(kc)[:, new_r], np.asarray(kp)[:, old_r])
+            np.testing.assert_array_equal(np.asarray(vc)[:, new_r], np.asarray(vp)[:, old_r])
+        np.testing.assert_array_equal(np.asarray(kc)[:, 3], np.asarray(kd)[:, 3])
+        np.testing.assert_array_equal(np.asarray(vc)[:, 3], np.asarray(vd)[:, 3])
+
+    def test_decode_after_compaction_bitwise_equals_big_pod_decode(self, setup):
+        # The load-bearing claim: a request that lived through a pod
+        # compaction keeps producing bitwise-identical rows. Prune the
+        # bucket-8 pod down to 4 live rows, compact into a bucket-4 pod,
+        # and decode the same tokens both ways.
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        live = [0, 2, 4, 5]  # A pruned to rows 0/2, B keeps rows 4/5
+        toks = [3, 7, 11, 13]
+        pos_of = {0: 4, 2: 4, 4: 6, 5: 6}
+
+        # Big pod: live rows staged, freed/garbage rows silent.
+        tok8 = jnp.array([toks[live.index(r)] if r in live else 0 for r in range(8)], jnp.int32)
+        pos8 = jnp.array([pos_of.get(r, 0) for r in range(8)], jnp.int32)
+        lg8, k8, v8 = decode_step_packed(cfg, params, tok8, pos8, kp, vp)
+
+        # Compacted pod: the same live rows at dst rows 0..3.
+        kd, vd = self.small_dst(cfg, 4)
+        idx = jnp.array(live, jnp.int32)
+        kc, vc = compact_rows(kd, vd, kp, vp, idx)
+        tok4 = jnp.array(toks, jnp.int32)
+        pos4 = jnp.array([pos_of[r] for r in live], jnp.int32)
+        lg4, k4, v4 = decode_step_packed(cfg, params, tok4, pos4, kc, vc)
+
+        for new_r, old_r in enumerate(live):
+            np.testing.assert_array_equal(np.asarray(lg4)[new_r], np.asarray(lg8)[old_r])
+            np.testing.assert_array_equal(np.asarray(k4)[:, new_r], np.asarray(k8)[:, old_r])
+            np.testing.assert_array_equal(np.asarray(v4)[:, new_r], np.asarray(v8)[:, old_r])
+
+    def test_compact_pairs_are_every_strict_shrink(self):
+        pairs = compact_pairs()
+        assert all(d < s for s, d in pairs)
+        assert (max(BATCH_BUCKETS), min(BATCH_BUCKETS)) in pairs
+        assert (2, 1) in pairs
+        assert len(pairs) == sum(1 for s in BATCH_BUCKETS for d in BATCH_BUCKETS if d < s)
+
+    def test_compact_hlo_carries_dst_kv_alias(self, setup):
+        cfg, *_ = setup
+        hlo = to_hlo_text(lower_compact(cfg, 8, 4))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        # Outputs (k, v) alias the donated destination k/v at flat args
+        # 0 / 1 — the same cache-operand alias contract the
+        # decode/superstep families carry.
+        assert re.search(r"\{0\}:\s*\(0,", header), header
+        assert re.search(r"\{1\}:\s*\(1,", header), header
+
+    def test_donated_compact_lowering_result_identical_to_undonated(self, setup):
+        cfg, params, a1, b1, _ = setup
+        _, _, (kp, vp) = packed_pod(cfg, a1, b1)
+        kd, vd = self.small_dst(cfg, 4)
+        idx = jnp.array([0, 2, 4, 5], jnp.int32)
+        want = compact_rows(kd, vd, kp, vp, idx)
+        plain = lower_compact(cfg, 8, 4, donate=False).compile()(kd, vd, kp, vp, idx)
+        # Last: donation deletes the kd/vd buffers.
+        donated = lower_compact(cfg, 8, 4).compile()(kd, vd, kp, vp, idx)
+        assert len(donated) == len(plain) == 2
+        for got_d, got_p, ref in zip(donated, plain, want):
+            np.testing.assert_array_equal(np.asarray(got_d), np.asarray(got_p))
+            np.testing.assert_array_equal(np.asarray(got_d), np.asarray(ref))
 
 
 class TestPackedExport:

@@ -28,6 +28,14 @@
 //! unfused medians + counters) so the decode-path perf trajectory is
 //! machine-readable across PRs.
 //!
+//! Serving-side sections (emitted into `BENCH_serve.json`):
+//! `scheduler_throughput` (continuous batching vs one-request-per-worker),
+//! `batch_fusion` (one packed dispatch per occupied pod per tick), and
+//! `pod_compaction` (PR 5: physical `FusionHub::pod_bytes` strictly
+//! drops after sustained pruning at low occupancy, one device dispatch
+//! per compaction, fused-vs-solo bit-identity through the pod rewrites;
+//! evicted/compacted counters ride along in the JSON).
+//!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -69,7 +77,7 @@ use kappa::bench::{BenchEnv, Table};
 use kappa::coordinator::config::{Method, RunConfig, SamplerConfig};
 use kappa::coordinator::sampler::{self, SamplerScratch};
 use kappa::coordinator::signals::{raw_signals, SignalScratch};
-use kappa::coordinator::{make_driver_fused, Driver, GenOutput, StepOutcome, StepPlan};
+use kappa::coordinator::{make_driver_fused, run_method, Driver, GenOutput, StepOutcome, StepPlan};
 use kappa::data::Dataset;
 use kappa::engine::{Engine, FuseConfig, FusionHub};
 use kappa::metrics::ServeMetrics;
@@ -388,24 +396,28 @@ fn main() -> Result<()> {
     let run_cfg =
         RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
 
-    let serve_trace = |label: &str, sched: SchedConfig| -> Result<(f64, ServeMetrics)> {
+    let serve_trace = |label: &str, sched: SchedConfig| -> Result<(f64, ServeMetrics, usize)> {
         let server = Server::start_with(&dir, &model_name, 1, run_cfg.clone(), sched)?;
         let t0 = Instant::now();
         let responses = server.submit_all(&prompts, 4242);
         let wall = t0.elapsed().as_secs_f64();
         let mut sm = ServeMetrics::default();
+        let mut evictions = 0usize;
         for r in &responses {
             let r = r
                 .as_ref()
                 .map_err(|e| anyhow::anyhow!("scheduler_throughput/{label} request: {e:#}"))?;
             sm.push(r.queue_seconds, r.service_seconds, r.inflight);
+            evictions += r.evictions;
         }
         server.shutdown();
-        Ok((wall, sm))
+        Ok((wall, sm, evictions))
     };
 
-    let (wall_sched, sm_sched) = serve_trace("scheduled", SchedConfig::default())?;
-    let (wall_base, sm_base) = serve_trace("baseline", SchedConfig::one_request_per_worker())?;
+    let (wall_sched, sm_sched, evictions_sched) = serve_trace("scheduled", SchedConfig::default())?;
+    let (wall_base, sm_base, evictions_base) =
+        serve_trace("baseline", SchedConfig::one_request_per_worker())?;
+    assert_eq!(evictions_base, 0, "the preemption-free baseline must never evict");
     let rps_sched = sm_sched.requests_per_sec(wall_sched);
     let rps_base = sm_base.requests_per_sec(wall_base);
     let occupancy_ratio = if sm_base.mean_inflight() > 0.0 {
@@ -547,6 +559,145 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- pod_compaction: the PR 5 acceptance section. Under sustained
+    // pruning at low occupancy the physical shared-pod residency
+    // (`FusionHub::pod_bytes`) must *strictly decrease* while the pod is
+    // still occupied — pre-lifecycle, pods never shrank until they
+    // emptied, so a long-running server converged back toward BoN-shaped
+    // residency. Asserted alongside fused-vs-solo bit-identity for the
+    // requests that lived through the compactions.
+    let compact_ready = {
+        let buckets = model.buckets();
+        buckets
+            .iter()
+            .all(|&s| buckets.iter().filter(|&&d| d < s).all(|&d| model.has_compact(s, d)))
+    };
+    let mut compaction_json = Json::Null;
+    if packed_ready && compact_ready {
+        // Aggressive trigger so the short bench trace compacts early;
+        // two co-resident KAPPA requests in a 32-row pod sit at 8/32
+        // occupancy from the first tick and prune from there.
+        let hub = FusionHub::new(FuseConfig { compact_streak: 2, ..FuseConfig::default() });
+        let kappa_cfg =
+            RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        let admission = engine.admission_cost(kappa_cfg.concurrent_branches())?;
+        let mut sched: Scheduler<FusedBench, usize> =
+            Scheduler::new(SchedConfig { max_inflight: 2, ..SchedConfig::default() });
+        let n_req = n_requests.min(4);
+        let mut queue: VecDeque<(usize, String)> =
+            prompts.iter().take(n_req).cloned().enumerate().collect();
+        let mut outputs: Vec<Option<GenOutput>> = (0..n_req).map(|_| None).collect();
+        let mut failure: Option<anyhow::Error> = None;
+        let mut strict_drops = 0usize;
+        let mut pod_bytes_floor_after_drop = usize::MAX;
+        let compact_d0 = model.runtime().compact_dispatch_count();
+        let mut compaction_ticks = 0usize;
+        while !(queue.is_empty() && sched.is_empty()) && failure.is_none() {
+            compaction_ticks += 1;
+            assert!(compaction_ticks < 100_000, "pod_compaction trace runaway");
+            // The worker loop's between-ticks compaction point.
+            let before = hub.pod_bytes();
+            let reclaimed = hub.maybe_compact(&engine, false)?;
+            if reclaimed > 0 {
+                // The acceptance assertion: a committed compaction is a
+                // strict physical drop on an occupied worker.
+                assert!(hub.pod_count() > 0, "compaction only runs on occupied pods");
+                assert!(
+                    hub.pod_bytes() < before,
+                    "pod compaction must strictly drop physical pod bytes \
+                     ({} -> {})",
+                    before,
+                    hub.pod_bytes()
+                );
+                strict_drops += 1;
+                pod_bytes_floor_after_drop = pod_bytes_floor_after_drop.min(hub.pod_bytes());
+            }
+            while !queue.is_empty() && sched.can_admit(admission.0, admission.1) {
+                let (i, p) = queue.pop_front().unwrap();
+                let driver = make_driver_fused(
+                    &engine,
+                    &hub,
+                    &p,
+                    &kappa_cfg,
+                    request_seed(20260728, i as u64),
+                )?;
+                sched.admit(FusedBench { driver, engine: &engine }, i);
+            }
+            sched.tick(
+                || hub.flush(&engine),
+                |i, r| match r {
+                    Ok(out) => outputs[i] = Some(out),
+                    Err(e) => failure = Some(e),
+                },
+            );
+        }
+        if let Some(e) = failure {
+            return Err(e.context("pod_compaction fused trace"));
+        }
+        let stats = hub.stats();
+        let compact_dispatches = model.runtime().compact_dispatch_count() - compact_d0;
+        assert!(
+            stats.compactions > 0,
+            "sustained pruning at low occupancy never triggered a pod compaction"
+        );
+        assert_eq!(
+            compact_dispatches, stats.compactions,
+            "every committed compaction is exactly one device dispatch \
+             ({compact_dispatches} Runtime compact dispatches vs {} hub compactions)",
+            stats.compactions
+        );
+        assert!(
+            pod_bytes_floor_after_drop < hub.pod_bytes_peak(),
+            "compaction never brought occupied pod bytes under the co-resident peak"
+        );
+        // Fused-vs-solo bit-identity holds for requests that lived
+        // through the compactions (text + the full metrics row).
+        for (i, out) in outputs.iter().enumerate() {
+            let out = out.as_ref().expect("request completed");
+            let solo = run_method(&engine, &prompts[i], &kappa_cfg, request_seed(20260728, i as u64))?;
+            assert_eq!(out.text, solo.text, "pod_compaction request {i}: text");
+            assert_eq!(out.chosen_branch, solo.chosen_branch, "pod_compaction request {i}: branch");
+            assert_eq!(
+                out.metrics.total_tokens, solo.metrics.total_tokens,
+                "pod_compaction request {i}: total tokens"
+            );
+            assert_eq!(
+                out.metrics.peak_mem_bytes, solo.metrics.peak_mem_bytes,
+                "pod_compaction request {i}: accounted peak"
+            );
+            assert_eq!(
+                out.metrics.decode_calls, solo.metrics.decode_calls,
+                "pod_compaction request {i}: decode calls"
+            );
+        }
+        println!(
+            "\npod_compaction ({n_req} kappa requests):\n\
+               {} compaction(s) reclaimed {:.1} KiB of physical pod KV \
+               ({strict_drops} strict occupied-pod drops; peak {:.1} KiB, floor after drop {:.1} KiB);\n\
+               fused outputs bit-identical to solo blocking runs",
+            stats.compactions,
+            stats.reclaimed_bytes as f64 / 1024.0,
+            hub.pod_bytes_peak() as f64 / 1024.0,
+            pod_bytes_floor_after_drop as f64 / 1024.0,
+        );
+        compaction_json = Json::obj(vec![
+            ("compactions", Json::num(stats.compactions as f64)),
+            ("compact_dispatches", Json::num(compact_dispatches as f64)),
+            ("reclaimed_bytes", Json::num(stats.reclaimed_bytes as f64)),
+            ("strict_occupied_drops", Json::num(strict_drops as f64)),
+            ("pod_bytes_peak", Json::num(hub.pod_bytes_peak() as f64)),
+            (
+                "pod_bytes_floor_after_drop",
+                Json::num(pod_bytes_floor_after_drop as f64),
+            ),
+        ]);
+    } else {
+        println!(
+            "\npod_compaction: SKIP (artifact set has no packed/compact executables — \
+             re-export with `make artifacts`)"
+        );
+    }
+
     env.write_report(
         "BENCH_serve",
         Json::obj(vec![
@@ -561,6 +712,7 @@ fn main() -> Result<()> {
                     ("p95_queue_seconds", Json::num(sm_sched.p95_queue_seconds())),
                     ("mean_service_seconds", Json::num(sm_sched.mean_service_seconds())),
                     ("mean_inflight", Json::num(sm_sched.mean_inflight())),
+                    ("evictions", Json::num(evictions_sched as f64)),
                 ]),
             ),
             (
@@ -575,6 +727,7 @@ fn main() -> Result<()> {
             ),
             ("occupancy_ratio", Json::num(occupancy_ratio)),
             ("batch_fusion", fusion_json),
+            ("pod_compaction", compaction_json),
         ]),
     )?;
     Ok(())

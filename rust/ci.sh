@@ -32,11 +32,15 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
     # PJRT-backed crate so perf-harness rot still fails the gate).
     if cargo bench --bench perf_microbench -- --artifacts "$ARTIFACTS" --iters 3; then
         # The bench asserts the superstep slab-transfer budget, the
-        # scheduler-vs-baseline throughput win, and (with packed
-        # artifacts) the batch-fusion counters — one packed dispatch per
-        # occupied bucket per tick, tokens-per-dispatch amortization > 1,
-        # strict req/s win over one-request-per-worker — itself; here we
-        # only check the machine-readable trajectories landed.
+        # scheduler-vs-baseline throughput win, (with packed artifacts)
+        # the batch-fusion counters — one packed dispatch per occupied
+        # bucket per tick, tokens-per-dispatch amortization > 1, strict
+        # req/s win over one-request-per-worker — and (with compact
+        # artifacts) the pod_compaction section: physical pod bytes
+        # strictly drop after sustained pruning at low occupancy while
+        # fused-vs-solo bit-identity holds, with evicted/compacted
+        # counters emitted into BENCH_serve.json. Here we only check the
+        # machine-readable trajectories landed.
         for report in BENCH_decode BENCH_serve; do
             if [ ! -f "$ARTIFACTS/reports/$report.json" ]; then
                 echo "[ci] perf smoke ran but $ARTIFACTS/reports/$report.json is missing"

@@ -2,6 +2,8 @@
 //! hyperparameters (sampling: T=0.7, top-p=0.95, top-k=20; KAPPA: α=0.5,
 //! w=16, m=4, weights (0.7, 0.2, 0.1)).
 
+use anyhow::{anyhow, Context, Result};
+
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -98,9 +100,23 @@ impl KappaConfig {
         self.tau.unwrap_or(8).max(1)
     }
 
-    pub fn from_args(args: &Args) -> Self {
+    /// Build from CLI flags. User input must come back as an `Err`
+    /// naming the offending flag and value — never a panic that aborts
+    /// the process (a malformed `--tau abc` used to `expect()` its way
+    /// through `unwrap`-style aborts).
+    pub fn from_args(args: &Args) -> Result<Self> {
         let d = Self::default();
-        Self {
+        let tau = args
+            .get("tau")
+            .map(|v| {
+                v.parse::<usize>()
+                    .with_context(|| format!("--tau: expected a step count, got {v:?}"))
+            })
+            .transpose()?;
+        let schedule_str = args.str_or("schedule", "linear");
+        let schedule = Schedule::parse(&schedule_str)
+            .ok_or_else(|| anyhow!("--schedule: expected linear|cosine, got {schedule_str:?}"))?;
+        Ok(Self {
             window: args.usize_or("window", d.window),
             mom_buckets: args.usize_or("mom-buckets", d.mom_buckets),
             ema_alpha: args.f64_or("ema-alpha", d.ema_alpha),
@@ -108,11 +124,11 @@ impl KappaConfig {
             w_conf: args.f64_or("w-conf", d.w_conf),
             w_ent: args.f64_or("w-ent", d.w_ent),
             z_clamp: args.f64_or("z-clamp", d.z_clamp),
-            tau: args.get("tau").map(|v| v.parse().expect("--tau")),
+            tau,
             max_draft: args.usize_or("max-draft", d.max_draft),
-            schedule: Schedule::parse(&args.str_or("schedule", "linear")).expect("--schedule"),
+            schedule,
             native_signals: args.bool_or("native-signals", false),
-        }
+        })
     }
 }
 
@@ -275,10 +291,28 @@ mod tests {
         let args = crate::util::cli::Args::parse(
             "--ema-alpha 0.3 --schedule cosine --tau 12".split_whitespace().map(String::from),
         );
-        let k = KappaConfig::from_args(&args);
+        let k = KappaConfig::from_args(&args).expect("valid flags");
         assert_eq!(k.ema_alpha, 0.3);
         assert_eq!(k.schedule, Schedule::Cosine);
         assert_eq!(k.tau, Some(12));
         assert_eq!(k.window, 16); // untouched default
+    }
+
+    #[test]
+    fn kappa_from_args_bad_input_errs_with_the_flag_named() {
+        // Regression (PR 5 satellite): `--tau abc` / `--schedule warp`
+        // used to `expect()`-abort the whole process; they must come
+        // back as Errs naming the flag and the offending value.
+        let bad_tau =
+            crate::util::cli::Args::parse("--tau abc".split_whitespace().map(String::from));
+        let err = KappaConfig::from_args(&bad_tau).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--tau") && msg.contains("abc"), "{msg}");
+
+        let bad_sched =
+            crate::util::cli::Args::parse("--schedule warp".split_whitespace().map(String::from));
+        let err = KappaConfig::from_args(&bad_sched).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--schedule") && msg.contains("warp"), "{msg}");
     }
 }

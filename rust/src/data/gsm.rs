@@ -115,11 +115,16 @@ mod tests {
 
     #[test]
     fn vocabulary_is_encodable() {
+        // `check_encodable` propagates a Result whose context names the
+        // offending sample line (PR 5 satellite: no bare encode unwrap
+        // that hides *which* generated line broke the vocabulary).
         let tok = crate::tokenizer::Tokenizer::new();
         let mut rng = SplitMix64::new(8);
         for _ in 0..500 {
             let s = gen(&mut rng);
-            tok.encode(&format!("{}{}\n", s.prompt(), s.response())).unwrap();
+            if let Err(e) = s.check_encodable(&tok) {
+                panic!("{e:#}");
+            }
         }
     }
 }

@@ -10,6 +10,8 @@ pub mod eval;
 pub mod gsm;
 pub mod math;
 
+use anyhow::Context;
+
 use crate::util::rng::SplitMix64;
 
 /// One reasoning problem: natural-language question, reference
@@ -30,6 +32,18 @@ impl Sample {
     /// The reference response (CoT + answer marker), used in tests.
     pub fn response(&self) -> String {
         format!("{} #### {}", self.cot, self.answer)
+    }
+
+    /// Verify the full training line (prompt + response) fits the
+    /// tokenizer vocabulary, naming the offending line on failure — the
+    /// generator/tokenizer contract check. An unencodable sample is a
+    /// template bug; callers get an `Err` that says *which* line broke
+    /// instead of a bare out-of-vocabulary abort.
+    pub fn check_encodable(&self, tok: &crate::tokenizer::Tokenizer) -> anyhow::Result<()> {
+        let line = format!("{}{}\n", self.prompt(), self.response());
+        tok.encode(&line)
+            .map(|_| ())
+            .with_context(|| format!("unencodable sample line {line:?}"))
     }
 }
 
@@ -105,6 +119,19 @@ mod tests {
                 assert_eq!(got, Some(s.answer), "bad sample {s:?}");
             }
         }
+    }
+
+    #[test]
+    fn unencodable_sample_error_names_the_offending_line() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        // Uppercase is out of vocabulary; the error must carry the line.
+        let bad = Sample { question: "WHAT?".into(), cot: " 1+1=2.".into(), answer: 2 };
+        let err = bad.check_encodable(&tok).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("WHAT?"), "error must name the line: {msg}");
+        assert!(msg.contains("'W'"), "error must still name the character: {msg}");
+        let good = Sample { question: "1+1?".into(), cot: " 1+1=2.".into(), answer: 2 };
+        assert!(good.check_encodable(&tok).is_ok());
     }
 
     #[test]

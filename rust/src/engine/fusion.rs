@@ -69,13 +69,25 @@ pub struct FuseConfig {
     /// requests share one dispatch; a pod the size of one request
     /// degenerates into solo dispatch with extra steps.
     pub pod_bucket: usize,
+    /// Pod-compaction trigger (PR 5): a pod whose live/physical row
+    /// ratio stays at or under this threshold for
+    /// [`FuseConfig::compact_streak`] consecutive flush ticks is
+    /// compacted into the smallest bucket holding its live rows —
+    /// physically reclaiming the freed device KV instead of carrying
+    /// pruned rows as padding for the pod's lifetime.
+    pub compact_ratio: f64,
+    /// Consecutive low-occupancy flush ticks before the scheduled
+    /// compaction fires (hysteresis: a transient dip between a prune and
+    /// the next admission must not pay a compaction dispatch).
+    pub compact_streak: usize,
 }
 
 impl Default for FuseConfig {
     fn default() -> Self {
-        // Matches the default scheduler slot budget (and the largest
-        // exported bucket of the stock artifact set).
-        Self { pod_bucket: 32 }
+        // pod_bucket matches the default scheduler slot budget (and the
+        // largest exported bucket of the stock artifact set); compaction
+        // fires after 4 consecutive ticks at ≤ half occupancy.
+        Self { pod_bucket: 32, compact_ratio: 0.5, compact_streak: 4 }
     }
 }
 
@@ -120,8 +132,15 @@ pub struct FusedBatch {
     /// admission sequence).
     free: Vec<usize>,
     next_lease: u64,
-    /// Bumped once per packed dispatch; `ready`/`absorb_rows` handshake.
+    /// Bumped once per packed dispatch **and once per compaction**; the
+    /// `ready`/`absorb_rows` handshake. Compaction bumping it is the
+    /// epoch discipline that makes any stale pull — a lease absorbing
+    /// rows dispatched before the pod was rewritten — fail loudly
+    /// instead of reading relocated rows.
     epoch: u64,
+    /// Consecutive flush ticks this pod spent at or under the
+    /// compaction occupancy threshold (see [`FuseConfig`]).
+    low_ticks: usize,
     // ---- dispatch assembly scratch (high-water mark, then reused) ----
     tokens_scratch: Vec<i32>,
     pos_scratch: Vec<i32>,
@@ -213,15 +232,27 @@ impl FusedBatch {
     /// Drop a lease's unkept rows after a policy prune/compaction:
     /// `keep_slots[i]` is the *old slot index* backing new slot `i`.
     /// Pure bookkeeping — kept rows stay physically put (module docs),
-    /// dropped rows go back to the free list.
+    /// dropped rows go back to the free list. `keep_slots` must be
+    /// duplicate-free: a duplicate would alias two live slots onto one
+    /// pod row, and the free-list rebuild below would then under-free —
+    /// silent cross-branch KV corruption — so it is a fusion invariant
+    /// error, not a tolerated input.
     pub fn shrink(&mut self, id: u64, keep_slots: &[usize]) -> Result<()> {
         let li = self.lease_index(id)?;
         // Reindex in place via a temporary move of the row list (small,
         // no steady-state allocation past its high-water mark).
         let lease = &mut self.leases[li];
-        for &s in keep_slots {
+        for (i, &s) in keep_slots.iter().enumerate() {
             if s >= lease.rows.len() {
                 bail!("fusion: shrink slot {s} out of {} rows", lease.rows.len());
+            }
+            // Keep lists are ≤ bucket-sized, so the quadratic membership
+            // scan is cheaper than any allocating set.
+            if keep_slots[..i].contains(&s) {
+                bail!(
+                    "fusion invariant: duplicate slot {s} in shrink keep list \
+                     (would alias two live slots onto one pod row)"
+                );
             }
         }
         let old = std::mem::take(&mut lease.rows);
@@ -250,6 +281,78 @@ impl FusedBatch {
             self.free.extend(lease.rows);
             self.free.sort_unstable();
         }
+    }
+
+    /// Rows currently backing a live slot of any lease (the pod's
+    /// physical occupancy numerator; `bucket` is the denominator).
+    pub fn live_rows(&self) -> usize {
+        self.leases.iter().map(|l| l.rows.len()).sum()
+    }
+
+    /// No lease is mid-flight: nothing staged for a coming dispatch and
+    /// nothing dispatched but not yet absorbed. Compaction only runs on
+    /// quiescent pods — between ticks every pod is quiescent, so a
+    /// non-quiescent pod at a compaction site is a scheduler bug the
+    /// epoch bump would surface anyway; checking first keeps the rewrite
+    /// from ever racing a pending pull.
+    fn quiescent(&self) -> bool {
+        self.leases.iter().all(|l| !l.staged && l.ready.is_none())
+    }
+
+    /// Fill `idx` with the compaction gather plan for a `dst_bucket`-row
+    /// destination: destination row `i` pulls source row `idx[i]` —
+    /// every lease's rows in lease order, slot order — and `-1` marks
+    /// the destination rows left free. Pure, so the plan (and its
+    /// correspondence with [`Self::install_compacted`]'s lease rewrite)
+    /// is unit-testable without device artifacts. Live rows overflowing
+    /// the destination is a fusion invariant violation checked in
+    /// **all build profiles** (a silent `resize` truncation here would
+    /// drop live KV rows and hand leases out-of-bucket indices — no
+    /// `debug_assert`-only guard on a row-accounting path).
+    fn compaction_idx(&self, dst_bucket: usize, idx: &mut Vec<i32>) -> Result<()> {
+        idx.clear();
+        for lease in &self.leases {
+            for &r in &lease.rows {
+                idx.push(r as i32);
+            }
+        }
+        if idx.len() > dst_bucket {
+            bail!(
+                "fusion invariant: {} live rows cannot compact into a {dst_bucket}-row bucket",
+                idx.len()
+            );
+        }
+        idx.resize(dst_bucket, -1);
+        Ok(())
+    }
+
+    /// Commit a compaction: install the (donated-output) compacted cache
+    /// and atomically rewrite every lease's row list to the sequential
+    /// layout [`Self::compaction_idx`] planned, rebuild the free list,
+    /// shrink the shared staging slabs, and **bump the pod epoch** so
+    /// any stale `absorb_rows` pull still fails loudly. This is the one
+    /// statement block in which rows "move": compaction is itself a
+    /// dispatch, so the PR 4 row-stability invariant (rows never move
+    /// *between* dispatches) is refined, not violated.
+    fn install_compacted(&mut self, cache: KvCache, dst_bucket: usize) {
+        debug_assert_eq!(cache.bucket, dst_bucket);
+        self.cache = cache;
+        self.bucket = dst_bucket;
+        let mut next = 0usize;
+        for lease in self.leases.iter_mut() {
+            for r in lease.rows.iter_mut() {
+                *r = next;
+                next += 1;
+            }
+        }
+        self.free.clear();
+        self.free.extend(next..dst_bucket);
+        self.epoch += 1;
+        self.low_ticks = 0;
+        self.logits.truncate(dst_bucket * self.vocab);
+        self.sig_kl.truncate(dst_bucket);
+        self.sig_conf.truncate(dst_bucket);
+        self.sig_ent.truncate(dst_bucket);
     }
 
     /// One packed dispatch for everything staged in this pod: packed
@@ -365,6 +468,12 @@ pub struct FuseStats {
     /// `perf_microbench`'s `batch_fusion` section and
     /// `tests/scheduler.rs`.
     pub occupied_pod_ticks: usize,
+    /// Pod compactions committed ([`FusionHub::maybe_compact`]).
+    pub compactions: usize,
+    /// Physical device KV bytes those compactions reclaimed (the
+    /// `perf_microbench` `pod_compaction` section and `BENCH_serve.json`
+    /// read this).
+    pub reclaimed_bytes: usize,
 }
 
 /// The worker-level fusion pool: owns the pods, places admissions, and
@@ -499,6 +608,7 @@ impl FusionHub {
             free: (n..bucket).collect(),
             next_lease: 1,
             epoch: 0,
+            low_ticks: 0,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
@@ -529,7 +639,98 @@ impl FusionHub {
             inner.stats.flushes += 1;
             inner.stats.occupied_pod_ticks += occupied;
         }
+        // Compaction-trigger bookkeeping: one occupancy sample per pod
+        // per flush tick. The streak (not the instantaneous ratio) is
+        // what arms [`Self::maybe_compact`] — hysteresis against paying
+        // a compaction dispatch for a transient dip.
+        let ratio = inner.cfg.compact_ratio;
+        for pod in inner.pods.iter() {
+            let mut p = pod.borrow_mut();
+            let live = p.live_rows();
+            if live > 0 && (live as f64) <= p.bucket as f64 * ratio {
+                p.low_ticks += 1;
+            } else {
+                p.low_ticks = 0;
+            }
+        }
         Ok(())
+    }
+
+    /// The pod-compaction pass (PR 5): for every quiescent pod whose
+    /// live rows fit a strictly smaller exported bucket, gather the live
+    /// rows into a fresh smaller pod cache in **one device call**
+    /// (`LoadedModel::compact_into`, destination k/v donated), then
+    /// atomically install the cache, rewrite every affected lease's row
+    /// list, and bump the pod epoch (stale pulls fail loudly). Scheduled
+    /// triggering (`force == false`) requires the pod's low-occupancy
+    /// streak to have reached `FuseConfig::compact_streak`; the
+    /// scheduler passes `force == true` when admission is blocked on
+    /// memory with queued work — reclaim *now* beats head-of-line
+    /// blocking. Returns the physical bytes reclaimed.
+    ///
+    /// Call sites sit **between ticks** (top of the scheduler loop /
+    /// admission stall), where every pod is quiescent; pods that are
+    /// somehow mid-flight are skipped, never rewritten under a pending
+    /// pull. A dispatch failure leaves the pod on its old cache — the
+    /// error propagates like any dispatch poisoning, with no state
+    /// half-rewritten.
+    pub fn maybe_compact(&self, engine: &Engine, force: bool) -> Result<usize> {
+        let mut inner = self.inner.borrow_mut();
+        inner.retire_empty_pods();
+        // Disjoint field borrows: the pod list is iterated while the
+        // tracker/stats are updated — no per-call clone of the pod
+        // handles (this runs at the top of every scheduler tick, which
+        // the PR 1 invariants keep allocation-free).
+        let HubInner { cfg, pods, mem, stats, .. } = &mut *inner;
+        let model = engine.model();
+        let streak = cfg.compact_streak;
+        let per_branch = model.config.kv_bytes_per_branch();
+        let mut reclaimed_total = 0usize;
+        for pod_rc in pods.iter() {
+            let mut pod = pod_rc.borrow_mut();
+            if pod.leases.is_empty() || !pod.quiescent() {
+                continue;
+            }
+            if !force && pod.low_ticks < streak {
+                continue;
+            }
+            let live = pod.live_rows();
+            let Ok(dst_bucket) = model.bucket_for(live) else { continue };
+            if dst_bucket >= pod.bucket || !model.has_compact(pod.bucket, dst_bucket) {
+                continue;
+            }
+            // The destination allocation is a true transient on the
+            // physical tracker: old + new coexist until the commit
+            // below drops the old cache.
+            let dst_bytes = dst_bucket * per_branch;
+            mem.alloc("compact_transient", dst_bytes);
+            let mut idx = std::mem::take(&mut pod.fuse_idx);
+            let run = pod.compaction_idx(dst_bucket, &mut idx).and_then(|()| {
+                let mut dst = model.kv_zeros(dst_bucket)?;
+                model.compact_into(&pod.cache, &mut dst, &idx)?;
+                Ok(dst)
+            });
+            pod.fuse_idx = idx;
+            let dst = match run {
+                Ok(dst) => dst,
+                Err(e) => {
+                    mem.free("compact_transient", dst_bytes);
+                    return Err(e);
+                }
+            };
+            let old_bucket = pod.bucket;
+            // Commit: cache install + lease rewrite + epoch bump in one
+            // statement block (`install_compacted`); the old pod cache
+            // drops here, which is the physical reclaim.
+            pod.install_compacted(dst, dst_bucket);
+            mem.set_component(&format!("pod{}", pod.id), dst_bytes);
+            mem.free("compact_transient", dst_bytes);
+            let reclaimed = (old_bucket - dst_bucket) * per_branch;
+            stats.compactions += 1;
+            stats.reclaimed_bytes += reclaimed;
+            reclaimed_total += reclaimed;
+        }
+        Ok(reclaimed_total)
     }
 
     pub fn stats(&self) -> FuseStats {
@@ -578,7 +779,12 @@ impl HubInner {
         self.pods.retain(|pod| {
             let p = pod.borrow();
             if p.leases.is_empty() {
-                mem.set_component(&format!("pod{}", p.id), 0);
+                // Remove the component outright: pod ids are monotonic,
+                // so a zeroed-but-retained entry per retired pod (the
+                // pre-PR 5 behavior) grew the component map — and its
+                // journal lines — without bound on a long-running
+                // worker.
+                mem.remove_component(&format!("pod{}", p.id));
                 false
             } else {
                 true
@@ -664,10 +870,18 @@ mod tests {
             free: (0..bucket).collect(),
             next_lease: 0,
             epoch: 0,
+            low_ticks: 0,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
         }
+    }
+
+    fn offline_cache(bucket: usize) -> KvCache {
+        let rt = crate::runtime::Runtime::new().unwrap();
+        let k = rt.f32_buffer(&vec![0.0; bucket], &[bucket]).unwrap();
+        let v = rt.f32_buffer(&vec![0.0; bucket], &[bucket]).unwrap();
+        KvCache { k, v, bucket }
     }
 
     #[test]
@@ -685,6 +899,97 @@ mod tests {
         assert_eq!(pod.free, vec![1, 2, 3]);
         // Out-of-range slots fail loudly.
         assert!(pod.shrink(0, &[5]).is_err());
+    }
+
+    #[test]
+    fn shrink_rejects_duplicate_keep_slots() {
+        // Regression (PR 5 satellite): a duplicate keep slot aliased two
+        // live slots onto one pod row and the free-list rebuild then
+        // under-freed — silent cross-branch KV corruption. It must be a
+        // fusion invariant error that leaves the lease untouched.
+        let mut pod = offline_pod(8);
+        pod.free.clear();
+        pod.leases.push(lease(0, vec![0, 1, 2, 3], 10));
+        let err = pod.shrink(0, &[1, 3, 1]).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate slot 1"), "{err:#}");
+        assert_eq!(pod.lease_rows(0).unwrap(), &[0, 1, 2, 3], "failed shrink must not mutate");
+        assert!(pod.free.is_empty());
+        // Duplicate-free permutations keep working.
+        pod.shrink(0, &[3, 1]).unwrap();
+        assert_eq!(pod.lease_rows(0).unwrap(), &[3, 1]);
+        assert_eq!(pod.free, vec![0, 2]);
+    }
+
+    #[test]
+    fn compaction_plan_packs_lease_rows_in_order_and_marks_free_rows() {
+        let mut pod = offline_pod(8);
+        pod.free = vec![3, 7];
+        pod.leases.push(lease(0, vec![6, 1, 4], 5));
+        pod.leases.push(lease(1, vec![0, 2], 9));
+        let mut idx = Vec::new();
+        pod.compaction_idx(8, &mut idx).unwrap();
+        // Destination rows pull each lease's rows in lease order, slot
+        // order; the tail rows stay free (-1 ⇒ keep dst garbage).
+        assert_eq!(idx, vec![6, 1, 4, 0, 2, -1, -1, -1]);
+        // A destination too small for the live rows is a loud fusion
+        // invariant error in every profile, never a silent truncation.
+        let err = pod.compaction_idx(4, &mut idx).unwrap_err();
+        assert!(format!("{err:#}").contains("5 live rows"), "{err:#}");
+    }
+
+    #[test]
+    fn install_compacted_rewrites_leases_bumps_epoch_and_fails_stale_pulls() {
+        let mut pod = offline_pod(8);
+        pod.free = vec![3, 7];
+        pod.leases.push(lease(0, vec![6, 1, 4], 5));
+        pod.leases.push(lease(1, vec![0, 2], 9));
+        pod.epoch = 11;
+        // A lease that (buggily) still holds an unabsorbed dispatch:
+        // the epoch bump must make its pull fail loudly after the
+        // rewrite.
+        pod.leases[1].ready = Some((11, false));
+
+        pod.install_compacted(offline_cache(6), 6);
+        // Sequential rewrite matching `compaction_idx`'s plan: lease 0
+        // rows → 0..3, lease 1 rows → 3..5; row 5 free.
+        assert_eq!(pod.lease_rows(0).unwrap(), &[0, 1, 2]);
+        assert_eq!(pod.lease_rows(1).unwrap(), &[3, 4]);
+        assert_eq!(pod.free, vec![5]);
+        assert_eq!(pod.bucket(), 6);
+        assert_eq!(pod.epoch, 12);
+
+        let mut lg = vec![0.0; 2 * 4];
+        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
+        let err = pod.absorb_rows(1, &mut lg, &mut kl, &mut conf, &mut ent).unwrap_err();
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+    }
+
+    #[test]
+    fn retire_empty_pods_removes_the_component_entry() {
+        // Regression (PR 5 satellite): retiring used set_component(.., 0)
+        // — the zeroed entry (and its journal lines) lived forever while
+        // pod ids grew monotonically.
+        let mut inner = HubInner {
+            cfg: FuseConfig::default(),
+            pods: Vec::new(),
+            mem: MemTracker::new(),
+            next_pod: 2,
+            stats: FuseStats::default(),
+        };
+        let mut live_pod = offline_pod(4);
+        live_pod.id = 0;
+        live_pod.leases.push(lease(0, vec![0], 5));
+        let mut dead_pod = offline_pod(4);
+        dead_pod.id = 1;
+        inner.mem.set_component("pod0", 4096);
+        inner.mem.set_component("pod1", 4096);
+        inner.pods.push(Rc::new(RefCell::new(live_pod)));
+        inner.pods.push(Rc::new(RefCell::new(dead_pod)));
+
+        inner.retire_empty_pods();
+        assert_eq!(inner.pods.len(), 1);
+        assert_eq!(inner.mem.current(), 4096);
+        assert_eq!(inner.mem.component_count(), 1, "retired pod entry must be removed");
     }
 
     #[test]

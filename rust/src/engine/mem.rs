@@ -22,12 +22,13 @@
 //! Besides the per-request paged model, the batch-fusion hub
 //! ([`crate::engine::FusionHub`]) keeps its own tracker with one
 //! component per shared pod (`pod{N}` → the pod's full
-//! `bucket × kv_bytes_per_branch` device allocation, dropped to zero
+//! `bucket × kv_bytes_per_branch` device allocation, shrunk when the
+//! pod compacts and **removed** — entry and all, pod ids are monotonic —
 //! when the pod retires). Per-request trackers stay bit-identical to a
 //! solo run by design; the hub tracker is the *physical* shared-bucket
 //! occupancy a multi-tenant worker is judged on.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Tracks current and peak accounted bytes, with named components for
 /// quantities that are *set* (recomputed) rather than alloc'd/freed.
@@ -36,14 +37,23 @@ pub struct MemTracker {
     current: usize,
     peak: usize,
     components: BTreeMap<String, usize>,
-    /// Journal of (label, delta-bytes, current-after), bounded.
-    journal: Vec<(String, i64, usize)>,
+    /// Rolling journal of (label, delta-bytes, current-after): a ring
+    /// bounded at `journal_cap` — the oldest entries fall off, so a
+    /// long-running tracker keeps the *recent* history (the useful part
+    /// for debugging an accounting bug) at constant memory.
+    journal: VecDeque<(String, i64, usize)>,
     journal_cap: usize,
 }
 
 impl MemTracker {
     pub fn new() -> Self {
-        Self { journal_cap: 4096, ..Default::default() }
+        Self::with_journal_cap(4096)
+    }
+
+    /// [`MemTracker::new`] with an explicit journal ring size (tests and
+    /// long-lived worker-level trackers that want a tighter bound).
+    pub fn with_journal_cap(journal_cap: usize) -> Self {
+        Self { journal_cap, ..Default::default() }
     }
 
     /// One-shot allocation (weights, transient gather windows).
@@ -53,10 +63,23 @@ impl MemTracker {
         self.log(label, bytes as i64);
     }
 
-    /// One-shot free.
+    /// One-shot free. Freeing more than is currently tracked is a
+    /// double-free (or a mismatched label) in the accounting layer:
+    /// every admission decision downstream reads `current`, so the
+    /// guard is active in **all build profiles** — the old
+    /// `debug_assert!` compiled out of release builds and let `current`
+    /// wrap toward `usize::MAX`, silently poisoning `peak` and every
+    /// admission decision after it. The counter is saturated *before*
+    /// panicking so even a caught panic cannot leave a wrapped tracker
+    /// behind.
     pub fn free(&mut self, label: &str, bytes: usize) {
-        debug_assert!(self.current >= bytes, "free {bytes} > current {}", self.current);
-        self.current = self.current.saturating_sub(bytes);
+        let Some(next) = self.current.checked_sub(bytes) else {
+            let had = self.current;
+            self.current = 0;
+            self.log(label, -(bytes as i64));
+            panic!("MemTracker::free underflow: freeing {bytes} bytes of {label:?} with only {had} tracked");
+        };
+        self.current = next;
         self.log(label, -(bytes as i64));
     }
 
@@ -69,8 +92,26 @@ impl MemTracker {
         self.log(label, bytes as i64 - old as i64);
     }
 
+    /// Drop a component entirely: its bytes leave `current` and the map
+    /// entry is removed. `set_component(label, 0)` only zeroes the
+    /// value — for monotonic component families (the fusion hub's
+    /// per-pod `pod{N}` keys) the zeroed entries would otherwise
+    /// accumulate without bound over a long-running worker's lifetime.
+    pub fn remove_component(&mut self, label: &str) {
+        if let Some(old) = self.components.remove(label) {
+            self.current = self.current.saturating_sub(old);
+            self.log(label, -(old as i64));
+        }
+    }
+
     pub fn component(&self, label: &str) -> usize {
         self.components.get(label).copied().unwrap_or(0)
+    }
+
+    /// Number of tracked component entries (bounded-growth regression
+    /// hook: retiring a pod must shrink this, not leave a zeroed key).
+    pub fn component_count(&self) -> usize {
+        self.components.len()
     }
 
     fn bump_peak(&mut self) {
@@ -80,9 +121,13 @@ impl MemTracker {
     }
 
     fn log(&mut self, label: &str, delta: i64) {
-        if self.journal.len() < self.journal_cap {
-            self.journal.push((label.to_string(), delta, self.current));
+        if self.journal_cap == 0 {
+            return;
         }
+        while self.journal.len() >= self.journal_cap {
+            self.journal.pop_front();
+        }
+        self.journal.push_back((label.to_string(), delta, self.current));
     }
 
     pub fn current(&self) -> usize {
@@ -97,7 +142,7 @@ impl MemTracker {
         self.peak as f64 / (1024.0 * 1024.0)
     }
 
-    pub fn journal(&self) -> &[(String, i64, usize)] {
+    pub fn journal(&self) -> &VecDeque<(String, i64, usize)> {
         &self.journal
     }
 }
@@ -165,6 +210,71 @@ mod tests {
         assert_eq!(m.journal()[0].1, 10);
         assert_eq!(m.journal()[1].1, -10);
         assert_eq!(m.journal()[2].1, 5);
+    }
+
+    #[test]
+    fn journal_is_a_bounded_ring_keeping_recent_entries() {
+        // Regression (PR 5 satellite): the journal used to stop
+        // recording at the cap but kept the early entries alive forever;
+        // now it is a ring — constant memory, newest history retained.
+        let mut m = MemTracker::with_journal_cap(4);
+        for i in 0..10usize {
+            m.set_component("kv", i * 100);
+        }
+        assert_eq!(m.journal().len(), 4);
+        let last: Vec<usize> = m.journal().iter().map(|e| e.2).collect();
+        assert_eq!(last, vec![600, 700, 800, 900], "ring must keep the newest entries");
+        // A zero cap disables journaling entirely.
+        let mut quiet = MemTracker::with_journal_cap(0);
+        quiet.alloc("x", 1);
+        assert!(quiet.journal().is_empty());
+    }
+
+    #[test]
+    fn remove_component_drops_bytes_and_the_map_entry() {
+        // Regression (PR 5 satellite): retiring a pod with
+        // `set_component(.., 0)` left a zeroed entry forever — pod ids
+        // are monotonic, so a long-running worker's component map grew
+        // without bound. `remove_component` must drop bytes AND entry.
+        let mut m = MemTracker::new();
+        m.set_component("pod0", 4096);
+        m.set_component("pod1", 2048);
+        assert_eq!(m.component_count(), 2);
+        m.remove_component("pod0");
+        assert_eq!(m.current(), 2048);
+        assert_eq!(m.component_count(), 1);
+        assert_eq!(m.component("pod0"), 0);
+        assert_eq!(m.peak(), 6144, "peak must survive the removal");
+        // Removing an absent component is a no-op, not a panic.
+        m.remove_component("pod0");
+        assert_eq!(m.current(), 2048);
+    }
+
+    #[test]
+    #[should_panic(expected = "MemTracker::free underflow")]
+    fn free_underflow_fails_loudly_in_all_profiles() {
+        // Regression (PR 5 satellite): the old `debug_assert!` compiled
+        // out of release builds, so a double-free wrapped `current` to
+        // ~usize::MAX and silently poisoned `peak` and every admission
+        // decision derived from it. The guard must be profile-independent.
+        let mut m = MemTracker::new();
+        m.alloc("kv", 100);
+        m.free("kv", 100);
+        m.free("kv", 100); // double free
+    }
+
+    #[test]
+    fn free_underflow_saturates_before_panicking() {
+        // Even when the panic is caught (worker thread boundaries), the
+        // tracker must be left saturated at zero, never wrapped.
+        let mut m = MemTracker::new();
+        m.alloc("kv", 10);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.free("kv", 999);
+        }));
+        assert!(r.is_err());
+        assert_eq!(m.current(), 0, "underflow must saturate, not wrap");
+        assert_eq!(m.peak(), 10);
     }
 
     #[test]

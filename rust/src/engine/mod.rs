@@ -224,8 +224,10 @@ impl Engine {
             bail!("need at least one branch");
         }
         let cfg = &self.model.config;
-        let (ids, prompt_len) =
-            self.tokenizer.encode_prompt(prompt, cfg.prompt_len).context("encoding prompt")?;
+        let (ids, prompt_len) = self
+            .tokenizer
+            .encode_prompt(prompt, cfg.prompt_len)
+            .with_context(|| format!("encoding prompt {prompt:?}"))?;
         let ids_i32: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
 
         let mut mem = MemTracker::new();
@@ -696,6 +698,12 @@ impl GenState {
         for &bi in keep {
             if bi >= nb || self.slot_of[bi] < 0 {
                 bail!("retain_branches: branch {bi} is not live");
+            }
+            // A duplicate keep entry would alias one device row into two
+            // slots (and corrupt the fused lease's free-list rebuild) —
+            // fail here, before any device or lease mutation.
+            if self.keep_mask[bi] {
+                bail!("retain_branches: branch {bi} kept twice");
             }
             self.keep_mask[bi] = true;
             self.keep_slots.push(self.slot_of[bi] as usize);

@@ -22,7 +22,7 @@ use kappa::data::{eval, Dataset};
 use kappa::engine::Engine;
 use kappa::runtime::{LoadedModel, Manifest, Runtime};
 use kappa::metrics::ServeMetrics;
-use kappa::server::{SchedConfig, Server};
+use kappa::server::{PreemptPolicy, SchedConfig, Server};
 use kappa::util::cli::Args;
 use kappa::util::stats;
 
@@ -53,6 +53,10 @@ USAGE:
   kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
                  [--requests 20] [--dataset gsm]
                  [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0] [--no-fuse]
+                 [--preempt]   (evict the youngest-progress request instead of
+                                head-of-line blocking when admission is
+                                memory-bound; evicted requests re-prefill and
+                                stay bit-identical)
 
 KAPPA hyperparameters (defaults = paper §4.1):
   --ema-alpha 0.5  --window 16  --mom-buckets 4
@@ -73,7 +77,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
             top_k: args.usize_or("top-k", 20),
             top_p: args.f64_or("top-p", 0.95) as f32,
         },
-        kappa: KappaConfig::from_args(args),
+        kappa: KappaConfig::from_args(args)?,
         stbon: StBonConfig {
             buffer: args.usize_or("buffer", StBonConfig::default().buffer),
             max_draft: args.usize_or("max-draft", StBonConfig::default().max_draft),
@@ -207,13 +211,19 @@ fn serve(args: &Args) -> Result<()> {
         slot_budget: args.usize_or("slot-budget", d.slot_budget),
         mem_budget_bytes: args.usize_or("mem-budget-mb", 0) << 20,
         fuse: !args.bool_or("no-fuse", false),
+        preempt: if args.bool_or("preempt", false) {
+            PreemptPolicy::EvictYoungest
+        } else {
+            PreemptPolicy::Never
+        },
     };
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots, fusion {}) …",
+         (≤{} in flight, {} slots, fusion {}, preemption {}) …",
         sched.max_inflight,
         sched.slot_budget,
-        if sched.fuse { "on" } else { "off" }
+        if sched.fuse { "on" } else { "off" },
+        if sched.preempt == PreemptPolicy::EvictYoungest { "evict-youngest" } else { "off" },
     );
     let server = Server::start_with(&dir, &model, workers, cfg.clone(), sched)?;
 
@@ -267,11 +277,14 @@ fn serve(args: &Args) -> Result<()> {
         .filter_map(|r| r.as_ref().ok().map(|r| r.worker_kv_peak_bytes))
         .max()
         .unwrap_or(0);
+    let evictions: usize =
+        responses.iter().filter_map(|r| r.as_ref().ok().map(|r| r.evictions)).sum();
     println!(
-        "scheduler: mean queue {:.3}s, mean in-flight {:.2} (occupancy vs 1.0 baseline), co-resident KV peak {:.1} MB",
+        "scheduler: mean queue {:.3}s, mean in-flight {:.2} (occupancy vs 1.0 baseline), co-resident KV peak {:.1} MB, {} eviction(s)",
         serve_stats.mean_queue_seconds(),
         serve_stats.mean_inflight(),
         serve_kv_peak as f64 / (1024.0 * 1024.0),
+        evictions,
     );
     server.shutdown();
     Ok(())

@@ -39,6 +39,12 @@ pub struct Runtime {
     /// requests share it — `perf_microbench`'s `batch_fusion` section
     /// asserts it against the per-request baseline.
     decode_dispatches: AtomicUsize,
+    /// Pod-compaction dispatches issued so far (`compact_into`). Kept
+    /// separate from `decode_dispatches` on purpose: the batch-fusion
+    /// one-dispatch-per-occupied-pod invariant is stated over the
+    /// decode family only, and compaction is a between-ticks lifecycle
+    /// event, not a token dispatch.
+    compact_dispatches: AtomicUsize,
 }
 
 impl Runtime {
@@ -53,6 +59,7 @@ impl Runtime {
             slab_uploads: AtomicUsize::new(0),
             slab_downloads: AtomicUsize::new(0),
             decode_dispatches: AtomicUsize::new(0),
+            compact_dispatches: AtomicUsize::new(0),
         })
     }
 
@@ -123,6 +130,16 @@ impl Runtime {
     /// Decode-family dispatches issued so far.
     pub fn decode_dispatch_count(&self) -> usize {
         self.decode_dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Note one pod-compaction dispatch (`LoadedModel::compact_into`).
+    pub fn note_compact_dispatch(&self) {
+        self.compact_dispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pod-compaction dispatches issued so far.
+    pub fn compact_dispatch_count(&self) -> usize {
+        self.compact_dispatches.load(Ordering::Relaxed)
     }
 
     // ---- host → device helpers ----
@@ -223,6 +240,12 @@ mod tests {
         assert_eq!(rt.decode_dispatch_count(), 0);
         rt.note_decode_dispatch();
         rt.note_decode_dispatch();
+        assert_eq!(rt.decode_dispatch_count(), 2);
+        // Compaction dispatches count separately — they must never leak
+        // into the decode-family invariant counter.
+        assert_eq!(rt.compact_dispatch_count(), 0);
+        rt.note_compact_dispatch();
+        assert_eq!(rt.compact_dispatch_count(), 1);
         assert_eq!(rt.decode_dispatch_count(), 2);
     }
 

@@ -82,8 +82,23 @@ pub struct ModelManifest {
     pub superstep_packed: BTreeMap<usize, PathBuf>,
     /// bucket → pod-admission row-merge HLO path (optional).
     pub fuse: BTreeMap<usize, PathBuf>,
+    /// (src_bucket, dst_bucket) → pod-compaction HLO path (optional —
+    /// artifact sets predating the pod lifecycle manager carry none, and
+    /// the fusion hub then simply never shrinks occupied pods).
+    pub compact: BTreeMap<(usize, usize), PathBuf>,
     /// Greedy accuracy measured at export time (training-quality gate).
     pub greedy_acc: BTreeMap<String, f64>,
+}
+
+/// Parse a packed `"{src}to{dst}"` bucket-pair key (the gather/compact
+/// artifact map keys written by `aot.py`). Factored out so the format is
+/// unit-testable and errors name the offending key.
+pub fn parse_pair_key(key: &str) -> Result<(usize, usize)> {
+    let (s, d) = key.split_once("to").ok_or_else(|| anyhow!("bad bucket-pair key {key:?}"))?;
+    Ok((
+        s.parse::<usize>().with_context(|| format!("bad src bucket in key {key:?}"))?,
+        d.parse::<usize>().with_context(|| format!("bad dst bucket in key {key:?}"))?,
+    ))
 }
 
 #[derive(Debug, Clone)]
@@ -202,14 +217,16 @@ impl Manifest {
         let decode_packed = bucket_map("decode_packed")?;
         let superstep_packed = bucket_map("superstep_packed")?;
         let fuse = bucket_map("fuse")?;
-        let mut gather = BTreeMap::new();
-        for (k, v) in arts.get("gather").and_then(Json::as_obj).into_iter().flatten() {
-            let (s, d) = k
-                .split_once("to")
-                .ok_or_else(|| anyhow!("model {name}: bad gather key {k}"))?;
-            gather
-                .insert((s.parse::<usize>()?, d.parse::<usize>()?), dir.join(v.as_str().unwrap_or_default()));
-        }
+        let pair_map = |key: &str| -> Result<BTreeMap<(usize, usize), PathBuf>> {
+            let mut m = BTreeMap::new();
+            for (k, v) in arts.get(key).and_then(Json::as_obj).into_iter().flatten() {
+                let pair = parse_pair_key(k).with_context(|| format!("model {name}: {key}"))?;
+                m.insert(pair, dir.join(v.as_str().unwrap_or_default()));
+            }
+            Ok(m)
+        };
+        let gather = pair_map("gather")?;
+        let compact = pair_map("compact")?;
 
         let mut greedy_acc = BTreeMap::new();
         if let Some(accs) = mj.at(&["training", "greedy_acc"]).and_then(Json::as_obj) {
@@ -236,6 +253,7 @@ impl Manifest {
             decode_packed,
             superstep_packed,
             fuse,
+            compact,
             greedy_acc,
         })
     }
@@ -279,7 +297,8 @@ mod tests {
                 "gather": {"1to2": "gather_sm_b1to2.hlo.txt"},
                 "decode_packed": {"2": "decode_packed_sm_b2.hlo.txt"},
                 "superstep_packed": {"2": "superstep_packed_sm_b2.hlo.txt"},
-                "fuse": {"2": "fuse_sm_b2.hlo.txt"}
+                "fuse": {"2": "fuse_sm_b2.hlo.txt"},
+                "compact": {"2to1": "compact_sm_b2to1.hlo.txt", "4to2": "compact_sm_b4to2.hlo.txt"}
               },
               "training": {"greedy_acc": {"gsm_synth": 0.5}}
             }
@@ -310,8 +329,39 @@ mod tests {
             &PathBuf::from("/tmp/a/superstep_packed_sm_b2.hlo.txt")
         );
         assert_eq!(sm.fuse.get(&2).unwrap(), &PathBuf::from("/tmp/a/fuse_sm_b2.hlo.txt"));
+        assert_eq!(
+            sm.compact.get(&(2, 1)).unwrap(),
+            &PathBuf::from("/tmp/a/compact_sm_b2to1.hlo.txt")
+        );
+        assert_eq!(
+            sm.compact.get(&(4, 2)).unwrap(),
+            &PathBuf::from("/tmp/a/compact_sm_b4to2.hlo.txt")
+        );
         assert_eq!(sm.greedy_acc["gsm_synth"], 0.5);
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn pair_key_parsing_names_the_offending_key() {
+        assert_eq!(parse_pair_key("32to4").unwrap(), (32, 4));
+        assert_eq!(parse_pair_key("1to1").unwrap(), (1, 1));
+        for bad in ["4", "ato2", "4tob", "to2", ""] {
+            let err = parse_pair_key(bad).unwrap_err();
+            assert!(format!("{err:#}").contains(&format!("{bad:?}")), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn compact_is_optional_for_older_artifact_sets() {
+        // Pre-lifecycle manifests carry no compact key; parsing must
+        // yield an empty map (the hub then never shrinks occupied pods).
+        let text = tiny_manifest_json().replace(
+            r#""compact": {"2to1": "compact_sm_b2to1.hlo.txt", "4to2": "compact_sm_b4to2.hlo.txt"}"#,
+            r#""compact2": {}"#,
+        );
+        let j = json::parse(&text).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("sm").unwrap().compact.is_empty());
     }
 
     #[test]

@@ -117,6 +117,8 @@ pub struct LoadedModel {
     superstep_packed_exes: BTreeMap<usize, ExeCell>,
     /// bucket → pod-admission row-merge executable.
     fuse_exes: BTreeMap<usize, ExeCell>,
+    /// (src bucket, dst bucket) → pod-compaction executable.
+    compact_exes: BTreeMap<(usize, usize), ExeCell>,
 }
 
 impl LoadedModel {
@@ -145,6 +147,8 @@ impl LoadedModel {
         let superstep_packed_exes =
             mm.superstep_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let fuse_exes = mm.fuse.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let compact_exes =
+            mm.compact.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let mut model = LoadedModel {
             rt,
             name: name.to_string(),
@@ -158,6 +162,7 @@ impl LoadedModel {
             decode_packed_exes,
             superstep_packed_exes,
             fuse_exes,
+            compact_exes,
             param_table,
             q_logits: Vec::new(),
             q_buf: OnceLock::new(),
@@ -529,6 +534,75 @@ impl LoadedModel {
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
         Ok(KvCache { k, v, bucket: b })
+    }
+
+    /// Whether the pod-compaction executable for the `src → dst` bucket
+    /// shrink exists (artifact sets predating the pod lifecycle manager
+    /// carry none — the fusion hub then never shrinks occupied pods).
+    pub fn has_compact(&self, src_bucket: usize, dst_bucket: usize) -> bool {
+        self.compact_exes.contains_key(&(src_bucket, dst_bucket))
+    }
+
+    /// A fresh zero-filled device KV cache for `bucket` rows — the
+    /// destination allocation a pod compaction writes (and donates)
+    /// into. On real hardware this maps to an uninitialized device
+    /// allocation (`PJRT_Client_CreateUninitializedBuffer`); the
+    /// contents never matter because `compact_into` overwrites every
+    /// row the engine will read (free rows are wholly overwritten by
+    /// the next admission's `fuse` dispatch). Cold path: compaction is
+    /// a between-ticks event, never per-token.
+    pub fn kv_zeros(&self, bucket: usize) -> Result<KvCache> {
+        let cfg = &self.config;
+        let dims = [cfg.n_layers, bucket, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        let zeros = vec![0f32; dims.iter().product()];
+        let k = self.rt.f32_buffer(&zeros, &dims)?;
+        let v = self.rt.f32_buffer(&zeros, &dims)?;
+        Ok(KvCache { k, v, bucket })
+    }
+
+    /// Pod compaction: gather a pod's live rows out of `src` into the
+    /// smaller `dst` cache in **one device call**. `idx.len()` must
+    /// equal `dst.bucket`; row `i` of the result is `src`'s row
+    /// `idx[i]` when `idx[i] >= 0`, or `dst`'s own row `i` (a free row)
+    /// when `idx[i] < 0`. The destination k/v are **donated**
+    /// (`execute_b_donated`, mirrored by the exported HLO's
+    /// `input_output_alias` — see `aot.lower_compact`): the stale `dst`
+    /// handles are dropped in the same statement that installs the
+    /// aliased outputs, exactly the decode/superstep donation
+    /// discipline. `src` is *not* donated — the caller frees the big
+    /// pod's cache by dropping it after the lease rewrite commits.
+    pub fn compact_into(&self, src: &KvCache, dst: &mut KvCache, idx: &[i32]) -> Result<()> {
+        if dst.bucket >= src.bucket {
+            bail!("compact: dst bucket {} must shrink src bucket {}", dst.bucket, src.bucket);
+        }
+        if idx.len() != dst.bucket {
+            bail!("compact: {} indices for dst bucket {}", idx.len(), dst.bucket);
+        }
+        for &i in idx {
+            if i >= src.bucket as i32 {
+                bail!("compact: index {i} out of source bucket {}", src.bucket);
+            }
+        }
+        let cell = self
+            .compact_exes
+            .get(&(src.bucket, dst.bucket))
+            .ok_or_else(|| {
+                anyhow!("no compact artifact for buckets {}to{}", src.bucket, dst.bucket)
+            })?;
+        let exe = cell.get(&self.rt)?;
+        let idxb = self.rt.i32_buffer(idx, &[dst.bucket])?;
+        self.rt.note_compact_dispatch();
+        let mut out = exe
+            .execute_b_donated(&[], &[&dst.k, &dst.v, &src.k, &src.v, &idxb], &[0, 1])?
+            .swap_remove(0);
+        if out.len() != 2 {
+            bail!("compact returned {} outputs, expected 2", out.len());
+        }
+        // Donation contract: install the aliased outputs over the stale
+        // dst handles in one statement.
+        dst.v = out.pop().unwrap();
+        dst.k = out.pop().unwrap();
+        Ok(())
     }
 
     /// Re-index branches: `indices[i]` selects which source branch fills

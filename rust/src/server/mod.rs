@@ -40,6 +40,7 @@
 //!
 //! [`MemTracker`]: crate::engine::MemTracker
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -59,6 +60,24 @@ use crate::runtime::{LoadedModel, Manifest, Runtime};
 /// `seed0 + i` was a correctness bug.
 pub use crate::util::rng::request_seed;
 
+/// What the scheduler may do when admission is blocked on memory while
+/// queued work exists (after compaction has been tried — see
+/// [`crate::engine::FusionHub::maybe_compact`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptPolicy {
+    /// Blocked work waits for in-flight requests to finish or prune —
+    /// the pre-PR 5 behavior, and the default.
+    Never,
+    /// Evict the youngest-progress in-flight request back to the queue
+    /// (never the last one, at most once per tick and per request — see
+    /// `scheduler_loop`'s eviction rules for the liveness argument).
+    /// Drivers are resumable state machines and deterministic in
+    /// `(prompt, seed)`, so the evicted request simply re-prefills on
+    /// re-admission and produces bit-identical output — it pays
+    /// latency, not correctness.
+    EvictYoungest,
+}
+
 /// Per-worker scheduler budgets (admission control).
 #[derive(Debug, Clone, Copy)]
 pub struct SchedConfig {
@@ -77,8 +96,9 @@ pub struct SchedConfig {
     /// accounted at their *live* (pruning-shrunk) size, which is what
     /// lets reclaimed memory admit new work. This bounds admission, not
     /// the instantaneous total — in-flight growth between their live
-    /// size and their own worst case is the operator's headroom
-    /// (preemption/eviction of running requests is future work).
+    /// size and their own worst case is the operator's headroom (and,
+    /// since PR 5, [`PreemptPolicy::EvictYoungest`] lets the scheduler
+    /// reclaim it actively instead of head-of-line blocking).
     ///
     /// Fused workers additionally bound **physical** shared-pod KV with
     /// this ceiling: pod sizing is clamped to the rows the budget can
@@ -94,21 +114,37 @@ pub struct SchedConfig {
     /// per-request dispatch when the loaded artifact set has no packed
     /// executables or the run disables bucket compaction.
     pub fuse: bool,
+    /// Eviction policy for memory-blocked admission (see
+    /// [`PreemptPolicy`]).
+    pub preempt: PreemptPolicy,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
         // Four concurrent requests, one largest-bucket's worth of slots;
         // memory bounded by the slot budget unless told otherwise;
-        // co-resident requests fused into shared bucket dispatches.
-        Self { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0, fuse: true }
+        // co-resident requests fused into shared bucket dispatches; no
+        // preemption unless the operator opts in.
+        Self {
+            max_inflight: 4,
+            slot_budget: 32,
+            mem_budget_bytes: 0,
+            fuse: true,
+            preempt: PreemptPolicy::Never,
+        }
     }
 }
 
 impl SchedConfig {
     /// The pre-scheduler serving shape: one blocking request per worker.
     pub fn one_request_per_worker() -> Self {
-        Self { max_inflight: 1, slot_budget: usize::MAX, mem_budget_bytes: 0, fuse: false }
+        Self {
+            max_inflight: 1,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 0,
+            fuse: false,
+            preempt: PreemptPolicy::Never,
+        }
     }
 }
 
@@ -126,6 +162,26 @@ pub trait Pollable {
     fn absorb(&mut self) -> Result<StepOutcome>;
     fn device_slots(&self) -> usize;
     fn mem_bytes(&self) -> usize;
+    /// Monotone progress measure (decoded steps) — the eviction policy
+    /// preempts the *youngest*-progress request, whose restart throws
+    /// away the least work.
+    fn progress(&self) -> usize {
+        0
+    }
+}
+
+/// Why (or that) an admission is possible right now — `can_admit`'s
+/// classified form. The eviction policy only reacts to memory-shaped
+/// blocks; in-flight/slot saturation resolves by requests finishing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitVerdict {
+    Admit,
+    /// Blocked on `max_inflight`.
+    Inflight,
+    /// Blocked on the device-slot budget.
+    Slots,
+    /// Blocked on the accounted-KV-bytes watermark.
+    Memory,
 }
 
 /// Continuous-batching core: active-request set + admission arithmetic +
@@ -176,21 +232,57 @@ impl<P: Pollable, M> Scheduler<P, M> {
     /// idle scheduler always admits (a request larger than the budget
     /// must run solo rather than starve forever).
     pub fn can_admit(&self, slots: usize, mem_bytes: usize) -> bool {
+        self.admit_verdict(slots, mem_bytes) == AdmitVerdict::Admit
+    }
+
+    /// [`Self::can_admit`], classified — the eviction policy needs to
+    /// know a block is memory-shaped before preempting anyone.
+    pub fn admit_verdict(&self, slots: usize, mem_bytes: usize) -> AdmitVerdict {
         if self.active.len() >= self.cfg.max_inflight {
-            return false;
+            return AdmitVerdict::Inflight;
         }
         if self.active.is_empty() {
-            return true;
+            return AdmitVerdict::Admit;
         }
         if self.slots_used().saturating_add(slots) > self.cfg.slot_budget {
-            return false;
+            return AdmitVerdict::Slots;
         }
         if self.cfg.mem_budget_bytes > 0
             && self.mem_used().saturating_add(mem_bytes) > self.cfg.mem_budget_bytes
         {
-            return false;
+            return AdmitVerdict::Memory;
         }
-        true
+        AdmitVerdict::Admit
+    }
+
+    /// Remove and return the youngest-progress in-flight request (ties
+    /// broken toward the most recently admitted) among those `eligible`
+    /// deems evictable. Refuses to evict the last request, and the
+    /// caller's eligibility filter excludes already-evicted requests —
+    /// re-prefilling resets progress to zero, so without the filter a
+    /// re-admitted evictee would immediately be the youngest again and
+    /// the same victim could starve forever under sustained pressure.
+    /// Together: every request is evicted at most once, so every victim
+    /// completes on its second tenancy — the liveness guarantee that
+    /// bounds eviction thrash.
+    pub fn evict_youngest(&mut self, eligible: impl Fn(&M) -> bool) -> Option<(P, M)> {
+        if self.active.len() <= 1 {
+            return None;
+        }
+        let mut youngest: Option<usize> = None;
+        for (i, (p, m)) in self.active.iter().enumerate() {
+            if !eligible(m) {
+                continue;
+            }
+            let better = match youngest {
+                None => true,
+                Some(y) => p.progress() <= self.active[y].0.progress(),
+            };
+            if better {
+                youngest = Some(i);
+            }
+        }
+        youngest.map(|y| self.active.remove(y))
     }
 
     pub fn admit(&mut self, request: P, meta: M) {
@@ -274,6 +366,8 @@ struct Request {
     prompt: String,
     seed: u64,
     enqueued: Instant,
+    /// Times this request has been evicted and requeued (0 at submit).
+    evictions: usize,
     resp: Sender<Result<Response>>,
 }
 
@@ -301,6 +395,11 @@ pub struct Response {
     /// take the max over a trace's responses for the worker's true KV
     /// peak.
     pub worker_kv_peak_bytes: usize,
+    /// Times this request was evicted back to the queue and re-admitted
+    /// (re-prefilled) before completing — 0 unless the worker runs
+    /// [`PreemptPolicy::EvictYoungest`]. The generation is bit-identical
+    /// either way; evictions cost queue latency, not output.
+    pub evictions: usize,
 }
 
 /// Handle to the running server.
@@ -377,6 +476,7 @@ impl Server {
             prompt: prompt.to_string(),
             seed,
             enqueued: Instant::now(),
+            evictions: 0,
             resp: resp_tx,
         };
         let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
@@ -466,13 +566,22 @@ impl Pollable for Flight<'_> {
     fn mem_bytes(&self) -> usize {
         self.driver.mem_bytes()
     }
+    fn progress(&self) -> usize {
+        self.driver.core().steps
+    }
 }
 
-/// Response-channel metadata carried through the scheduler.
+/// Response-channel metadata carried through the scheduler. Carries the
+/// request's identity (`prompt`, `seed`) so an evicted in-flight request
+/// can be requeued and respawned — drivers are deterministic in
+/// `(prompt, seed)`, so the restart reproduces the same generation.
 struct Meta {
+    prompt: String,
+    seed: u64,
     resp: Sender<Result<Response>>,
     enqueued: Instant,
     admitted: Instant,
+    evictions: usize,
 }
 
 /// How long an **idle** worker may hold the queue lock waiting for work
@@ -535,7 +644,7 @@ fn worker_loop(
             let row_bytes = engine.model().config.kv_bytes_per_branch().max(1);
             pod_bucket = pod_bucket.min((sched_cfg.mem_budget_bytes / row_bytes).max(1));
         }
-        let hub = FusionHub::new(FuseConfig { pod_bucket });
+        let hub = FusionHub::new(FuseConfig { pod_bucket, ..FuseConfig::default() });
         let pod_rows = cfg.concurrent_branches();
         scheduler_loop(
             worker_id,
@@ -559,6 +668,10 @@ fn worker_loop(
                     || hub.pod_bytes() + hub.placement_overhead(&engine, pod_rows)
                         <= sched_cfg.mem_budget_bytes
             },
+            // Physical reclaim: the pod-compaction pass. Scheduled
+            // (streak-armed) between ticks, forced when admission is
+            // memory-blocked with queued work.
+            |force| hub.maybe_compact(&engine, force),
         );
     } else {
         scheduler_loop(
@@ -576,22 +689,50 @@ fn worker_loop(
             },
             || Ok(()),
             |_| true,
+            |_| Ok(0),
         );
     }
 }
 
 /// The continuous-batching worker loop, generic over the request type
 /// and the shared dispatch so its semantics (admission,
-/// refill-after-prune, out-of-order completion, shutdown draining,
-/// plan/dispatch/absorb phasing) are testable without artifacts — the
-/// in-module tests drive it with synthetic [`Pollable`]s. `dispatch`
-/// runs once per tick between the plan and absorb phases: the fusion
-/// hub's one-packed-dispatch-per-occupied-pod flush on fused workers, a
-/// no-op on solo workers. `admit_extra(idle)` is an additional
-/// admission gate evaluated alongside `Scheduler::can_admit` — fused
-/// workers bound *physical* pod memory with it (per-request virtual
-/// accounting cannot see pod granularity); it must admit when `idle`
-/// so an oversized request still runs solo rather than starving.
+/// refill-after-prune, out-of-order completion, eviction/requeue,
+/// shutdown draining, plan/dispatch/absorb phasing) are testable
+/// without artifacts — the in-module tests drive it with synthetic
+/// [`Pollable`]s. `dispatch` runs once per tick between the plan and
+/// absorb phases: the fusion hub's one-packed-dispatch-per-occupied-pod
+/// flush on fused workers, a no-op on solo workers. `admit_extra(idle)`
+/// is an additional admission gate evaluated alongside
+/// `Scheduler::can_admit` — fused workers bound *physical* pod memory
+/// with it (per-request virtual accounting cannot see pod granularity);
+/// it must admit when `idle` so an oversized request still runs solo
+/// rather than starving. `reclaim(force)` is the pod-compaction hook:
+/// called with `force == false` between ticks (streak-armed trigger)
+/// and `force == true` when admission is memory-blocked with queued
+/// work; it returns the physical bytes reclaimed, and an `Err` is
+/// dispatch poisoning — the in-flight set fails loudly, exactly like a
+/// failed flush.
+///
+/// # Eviction (PR 5)
+///
+/// When admission is blocked on memory (the virtual watermark or the
+/// physical pod gate) while queued work exists, the loop first forces a
+/// compaction pass; if the gates still refuse and the config runs
+/// [`PreemptPolicy::EvictYoungest`], the youngest-progress in-flight
+/// request is evicted **back to the queue** (the worker-local backlog,
+/// behind the waiting request) and its driver dropped — leased pod rows
+/// free instantly via `GenState`'s drop. On re-admission the request
+/// re-prefills from scratch; determinism in `(prompt, seed)` makes the
+/// eventual output bit-identical to an uninterrupted run. Liveness is
+/// guaranteed by four rules: at most one eviction per scheduler tick;
+/// never the last in-flight request; never while a previously evicted
+/// request still waits re-admission; and each request is evicted at
+/// most once (the `evictions == 0` eligibility filter — re-prefill
+/// resets progress, so a re-admitted evictee would otherwise be the
+/// "youngest" forever and could starve under a newcomer stream).
+/// The whole escalation, including the witness pull, runs only under
+/// the opt-in policy — `PreemptPolicy::Never` workers leave queued
+/// work on the shared queue for workers with capacity.
 #[allow(clippy::too_many_arguments)]
 fn scheduler_loop<P: Pollable>(
     worker_id: usize,
@@ -602,9 +743,14 @@ fn scheduler_loop<P: Pollable>(
     mut spawn: impl FnMut(&str, u64) -> Result<P>,
     mut dispatch: impl FnMut() -> Result<()>,
     mut admit_extra: impl FnMut(bool) -> bool,
+    mut reclaim: impl FnMut(bool) -> Result<usize>,
 ) {
     let mut sched: Scheduler<P, Meta> = Scheduler::new(sched_cfg);
     let mut closed = false;
+    // Worker-local requeue: holds at most one queue-pulled witness while
+    // admission is blocked, plus any evicted requests awaiting
+    // re-admission. Drained before the shared queue.
+    let mut backlog: VecDeque<Request> = VecDeque::new();
     loop {
         if stop.load(Ordering::SeqCst) {
             // Immediate shutdown: abort in-flight work, refuse whatever
@@ -615,10 +761,24 @@ fn scheduler_loop<P: Pollable>(
             sched.abort_all(|meta| {
                 let _ = meta.resp.send(Err(anyhow!("request aborted: server shut down")));
             });
+            for req in backlog.drain(..) {
+                let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
+            }
             while let Ok(req) = rx.lock().unwrap().try_recv() {
                 let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
             }
             return;
+        }
+
+        // Between ticks every pod is quiescent: run the scheduled
+        // (streak-armed) compaction pass. Compaction is a dispatch; a
+        // failure poisons the in-flight set loudly, like a failed flush.
+        if let Err(e) = reclaim(false) {
+            let msg = format!("{e:#}");
+            sched.abort_all(|meta| {
+                let _ = meta.resp.send(Err(anyhow!("pod compaction failed: {msg}")));
+            });
+            continue;
         }
 
         // Admission: refill capacity freed since the last tick. An idle
@@ -627,22 +787,93 @@ fn scheduler_loop<P: Pollable>(
         // drains and notices shutdown promptly); a worker with requests
         // in flight takes the queue lock opportunistically — if another
         // worker is camping on it, skip admission this tick rather than
-        // stall the dispatch loop.
-        while !closed
-            && sched.can_admit(admission.0, admission.1)
-            && admit_extra(sched.is_empty())
-        {
-            let polled = if sched.is_empty() {
-                match rx.lock().unwrap().recv_timeout(IDLE_QUEUE_SLICE) {
-                    Ok(r) => Some(r),
-                    Err(RecvTimeoutError::Timeout) => None,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        closed = true;
+        // stall the dispatch loop. Memory-blocked admission with queued
+        // work escalates: forced compaction, then (policy) eviction.
+        let mut forced_compaction = false;
+        let mut evicted_this_tick = false;
+        loop {
+            let idle = sched.is_empty();
+            let verdict = sched.admit_verdict(admission.0, admission.1);
+            let phys_ok = admit_extra(idle);
+            if verdict == AdmitVerdict::Admit && phys_ok {
+                let polled = backlog.pop_front().or_else(|| {
+                    if closed {
                         None
+                    } else if idle {
+                        match rx.lock().unwrap().recv_timeout(IDLE_QUEUE_SLICE) {
+                            Ok(r) => Some(r),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                closed = true;
+                                None
+                            }
+                        }
+                    } else {
+                        match rx.try_lock() {
+                            Ok(queue) => match queue.try_recv() {
+                                Ok(r) => Some(r),
+                                Err(TryRecvError::Empty) => None,
+                                Err(TryRecvError::Disconnected) => {
+                                    closed = true;
+                                    None
+                                }
+                            },
+                            Err(_) => None,
+                        }
+                    }
+                });
+                let Some(req) = polled else { break };
+                if stop.load(Ordering::SeqCst) {
+                    let _ =
+                        req.resp.send(Err(anyhow!("server shut down with request still queued")));
+                    continue;
+                }
+                let admitted = Instant::now();
+                match spawn(&req.prompt, req.seed) {
+                    Ok(flight) => {
+                        sched.admit(
+                            flight,
+                            Meta {
+                                prompt: req.prompt,
+                                seed: req.seed,
+                                resp: req.resp,
+                                enqueued: req.enqueued,
+                                admitted,
+                                evictions: req.evictions,
+                            },
+                        );
+                    }
+                    // Driver construction failed (bad prompt, unsupported
+                    // config): fail this request, keep serving.
+                    Err(e) => {
+                        let _ = req.resp.send(Err(e));
                     }
                 }
-            } else {
-                match rx.try_lock() {
+                continue;
+            }
+
+            // Blocked. Only memory-shaped blocks are actionable (slots
+            // and the in-flight cap free themselves as requests finish),
+            // and only under the opt-in preemption policy: the
+            // escalation below pulls a queued request into this worker's
+            // private backlog as its queued-work witness, which pins the
+            // request here — correct when this worker can evict to make
+            // room, but a pure latency regression under
+            // `PreemptPolicy::Never` on a multi-worker pool (another
+            // worker with capacity could have served it from the shared
+            // queue). Never-policy workers keep the pre-PR 5 behavior:
+            // leave queued work shared and rely on the streak-armed
+            // between-ticks compaction to reclaim pod memory.
+            let mem_blocked =
+                verdict == AdmitVerdict::Memory || (verdict == AdmitVerdict::Admit && !phys_ok);
+            if !mem_blocked || sched_cfg.preempt != PreemptPolicy::EvictYoungest {
+                break;
+            }
+            // Queued work is the precondition for paying reclaim work —
+            // the backlog is the witness (pull at most one request,
+            // non-blocking; it is served first once capacity frees).
+            if backlog.is_empty() {
+                let pulled = match rx.try_lock() {
                     Ok(queue) => match queue.try_recv() {
                         Ok(r) => Some(r),
                         Err(TryRecvError::Empty) => None,
@@ -652,28 +883,64 @@ fn scheduler_loop<P: Pollable>(
                         }
                     },
                     Err(_) => None,
-                }
-            };
-            let Some(req) = polled else { break };
-            if stop.load(Ordering::SeqCst) {
-                let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
-                continue;
-            }
-            let admitted = Instant::now();
-            match spawn(&req.prompt, req.seed) {
-                Ok(flight) => {
-                    sched.admit(flight, Meta { resp: req.resp, enqueued: req.enqueued, admitted });
-                }
-                // Driver construction failed (bad prompt, unsupported
-                // config): fail this request, keep serving.
-                Err(e) => {
-                    let _ = req.resp.send(Err(e));
+                };
+                match pulled {
+                    Some(r) => backlog.push_back(r),
+                    None => break,
                 }
             }
+            // Escalation 1: compact — reclaim physically freed pod KV.
+            if !forced_compaction {
+                forced_compaction = true;
+                match reclaim(true) {
+                    Ok(n) if n > 0 => continue,
+                    Ok(_) => {}
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        sched.abort_all(|meta| {
+                            let _ =
+                                meta.resp.send(Err(anyhow!("pod compaction failed: {msg}")));
+                        });
+                        break;
+                    }
+                }
+            }
+            // Escalation 2: evict the youngest-progress request back to
+            // the queue. Policy-gated, at most one per tick, never the
+            // last request — and never while a previously evicted
+            // request is still waiting re-admission: without that guard
+            // two same-size requests can swap in and out every tick,
+            // each restart throwing away the other's work (A admits B →
+            // B evicts for C → C evicts for B → …). One outstanding
+            // evictee at a time bounds the thrash: the in-flight set
+            // keeps progressing, and the evictee re-admits the moment
+            // anyone finishes or prunes.
+            let evictee_pending = backlog.iter().any(|r| r.evictions > 0);
+            if !evicted_this_tick && !evictee_pending {
+                // Only never-evicted requests are candidates: re-prefill
+                // resets progress, so a re-admitted evictee would
+                // otherwise be "youngest" forever (see `evict_youngest`).
+                if let Some((_flight, meta)) = sched.evict_youngest(|m| m.evictions == 0) {
+                    evicted_this_tick = true;
+                    // The dropped flight releases its device residence
+                    // (pod lease / cache) on the spot; the request goes
+                    // to the back of the queue and re-prefills on
+                    // re-admission.
+                    backlog.push_back(Request {
+                        prompt: meta.prompt,
+                        seed: meta.seed,
+                        enqueued: meta.enqueued,
+                        evictions: meta.evictions + 1,
+                        resp: meta.resp,
+                    });
+                    continue;
+                }
+            }
+            break;
         }
 
         if sched.is_empty() {
-            if closed {
+            if closed && backlog.is_empty() {
                 return;
             }
             continue;
@@ -685,6 +952,9 @@ fn scheduler_loop<P: Pollable>(
         let kv_peak = sched.mem_peak();
         sched.tick(&mut dispatch, |meta, result| {
             let result = result.map(|mut output| {
+                // Service time spans the *final* admission; an evicted
+                // request's earlier tenancy shows up as queue time (it
+                // was returned to the queue, after all).
                 let service_seconds = meta.admitted.elapsed().as_secs_f64();
                 let queue_seconds = meta.admitted.duration_since(meta.enqueued).as_secs_f64();
                 output.metrics.wall_seconds = service_seconds;
@@ -695,6 +965,7 @@ fn scheduler_loop<P: Pollable>(
                     worker: worker_id,
                     inflight,
                     worker_kv_peak_bytes: kv_peak,
+                    evictions: meta.evictions,
                 }
             });
             let _ = meta.resp.send(result);
@@ -721,6 +992,7 @@ mod tests {
     struct FakeFlight {
         tag: String,
         polls_left: usize,
+        polls_done: usize,
         slots: usize,
         /// Slots after each remaining poll (front = next poll).
         slot_plan: Vec<usize>,
@@ -734,6 +1006,7 @@ mod tests {
             FakeFlight {
                 tag: tag.to_string(),
                 polls_left: polls,
+                polls_done: 0,
                 slots,
                 slot_plan: Vec::new(),
                 fail: false,
@@ -757,6 +1030,7 @@ mod tests {
                 self.slots = next;
                 self.slot_plan.remove(0);
             }
+            self.polls_done += 1;
             if self.polls_left <= 1 {
                 self.slots = 0;
                 if let Some(log) = &self.done_log {
@@ -772,6 +1046,9 @@ mod tests {
         }
         fn mem_bytes(&self) -> usize {
             self.slots * 1024
+        }
+        fn progress(&self) -> usize {
+            self.polls_done
         }
     }
 
@@ -830,7 +1107,7 @@ mod tests {
 
     #[test]
     fn scheduler_admission_respects_and_refills_slot_budget() {
-        let cfg = SchedConfig { max_inflight: 8, slot_budget: 8, mem_budget_bytes: 0, fuse: false };
+        let cfg = SchedConfig { max_inflight: 8, slot_budget: 8, fuse: false, ..SchedConfig::default() };
         let mut sched: Scheduler<FakeFlight, usize> = Scheduler::new(cfg);
         // Request A holds 8 slots, pruning to 2 on its first poll.
         let mut a = FakeFlight::new("a", 4, 8);
@@ -861,7 +1138,13 @@ mod tests {
 
     #[test]
     fn scheduler_mem_budget_gates_admission() {
-        let cfg = SchedConfig { max_inflight: 8, slot_budget: usize::MAX, mem_budget_bytes: 8192, fuse: false };
+        let cfg = SchedConfig {
+            max_inflight: 8,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            ..SchedConfig::default()
+        };
         let mut sched: Scheduler<FakeFlight, ()> = Scheduler::new(cfg);
         sched.admit(FakeFlight::new("a", 3, 6), ()); // 6 KiB accounted
         assert!(sched.can_admit(1, 1024));
@@ -869,6 +1152,59 @@ mod tests {
         // An idle scheduler admits even over-budget work (no starvation).
         let empty: Scheduler<FakeFlight, ()> = Scheduler::new(cfg);
         assert!(empty.can_admit(64, 1 << 30));
+    }
+
+    #[test]
+    fn admit_verdict_classifies_the_blocking_budget() {
+        let cfg = SchedConfig {
+            max_inflight: 2,
+            slot_budget: 8,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            ..SchedConfig::default()
+        };
+        let mut sched: Scheduler<FakeFlight, ()> = Scheduler::new(cfg);
+        assert_eq!(sched.admit_verdict(64, 1 << 30), AdmitVerdict::Admit, "idle always admits");
+        sched.admit(FakeFlight::new("a", 9, 4), ()); // 4 slots, 4 KiB
+        assert_eq!(sched.admit_verdict(2, 1024), AdmitVerdict::Admit);
+        assert_eq!(sched.admit_verdict(8, 1024), AdmitVerdict::Slots);
+        assert_eq!(sched.admit_verdict(2, 8192), AdmitVerdict::Memory);
+        sched.admit(FakeFlight::new("b", 9, 1), ());
+        assert_eq!(sched.admit_verdict(1, 1), AdmitVerdict::Inflight);
+    }
+
+    #[test]
+    fn evict_youngest_prefers_least_progress_and_never_the_last_request() {
+        let mut sched: Scheduler<FakeFlight, &str> = Scheduler::new(SchedConfig {
+            max_inflight: 8,
+            ..SchedConfig::default()
+        });
+        sched.admit(FakeFlight::new("old", 9, 1), "old");
+        sched.admit(FakeFlight::new("mid", 9, 1), "mid");
+        // Three ticks: everyone progresses in lockstep...
+        for _ in 0..3 {
+            sched.tick(no_dispatch, |_, _| {});
+        }
+        // ...then a newcomer with zero progress joins.
+        sched.admit(FakeFlight::new("new", 9, 1), "new");
+        let (flight, meta) = sched.evict_youngest(|_| true).expect("evictable");
+        assert_eq!(meta, "new", "youngest progress goes first");
+        assert_eq!(flight.progress(), 0);
+        // Equal progress ties break toward the most recently admitted.
+        let (_, meta) = sched.evict_youngest(|_| true).expect("evictable");
+        assert_eq!(meta, "mid");
+        // The last in-flight request is never evicted.
+        assert_eq!(sched.len(), 1);
+        assert!(sched.evict_youngest(|_| true).is_none(), "the last request must keep running");
+        // The eligibility filter (the caller passes evictions == 0)
+        // protects re-admitted evictees even when they are the youngest:
+        // the youngest *eligible* request is picked instead.
+        sched.admit(FakeFlight::new("immune", 9, 1), "immune");
+        let (_, meta) = sched.evict_youngest(|m| *m != "immune").expect("evictable");
+        assert_eq!(meta, "old", "immunity redirects eviction to the next eligible request");
+        // With no eligible candidate at all, nothing is evicted.
+        sched.admit(FakeFlight::new("other", 9, 1), "other");
+        assert!(sched.evict_youngest(|_| false).is_none());
     }
 
     #[test]
@@ -1002,6 +1338,7 @@ mod tests {
             prompt: prompt.to_string(),
             seed,
             enqueued: Instant::now(),
+            evictions: 0,
             resp: resp_tx,
         })
         .expect("queue open");
@@ -1013,7 +1350,7 @@ mod tests {
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         let stop = Arc::new(AtomicBool::new(false));
-        let cfg = SchedConfig { max_inflight: 3, slot_budget: 16, mem_budget_bytes: 0, fuse: false };
+        let cfg = SchedConfig { max_inflight: 3, slot_budget: 16, fuse: false, ..SchedConfig::default() };
 
         // Request "len:k" runs k polls; slower requests must not block
         // faster ones admitted behind them.
@@ -1041,6 +1378,7 @@ mod tests {
                     },
                     no_dispatch,
                     |_| true,
+                    |_| Ok(0),
                 );
             })
         };
@@ -1068,7 +1406,7 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         // Capacity 1: the second and third requests stay queued behind a
         // long-running first request.
-        let cfg = SchedConfig { max_inflight: 1, slot_budget: 4, mem_budget_bytes: 0, fuse: false };
+        let cfg = SchedConfig { max_inflight: 1, slot_budget: 4, fuse: false, ..SchedConfig::default() };
 
         let in_flight = submit_to(&tx, "len:1000000", 0);
         let queued_a = submit_to(&tx, "len:1", 1);
@@ -1090,6 +1428,7 @@ mod tests {
                     },
                     no_dispatch,
                     |_| true,
+                    |_| Ok(0),
                 );
             })
         };
@@ -1135,6 +1474,7 @@ mod tests {
                     },
                     no_dispatch,
                     |_| true,
+                    |_| Ok(0),
                 );
             })
         };
@@ -1142,5 +1482,198 @@ mod tests {
         assert!(bad.recv().expect("alive").is_err(), "bad request fails cleanly");
         assert!(good.recv().expect("alive").is_ok(), "worker survives and serves the next");
         worker.join().expect("clean exit");
+    }
+
+    // ---- eviction-aware admission (PR 5) ----
+
+    /// Memory-blocked admission with queued work and the eviction policy
+    /// on: the youngest-progress in-flight request is requeued (its
+    /// driver restarted from scratch on re-admission), the waiting
+    /// request is admitted, and everyone still completes — with the
+    /// eviction surfaced in the evictee's response telemetry.
+    #[test]
+    fn scheduler_loop_evicts_youngest_to_admit_memory_blocked_work() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Budget fits two 3-slot requests (6 KiB of fake KV) but not
+        // three: the third submission memory-blocks behind A + B.
+        let cfg = SchedConfig {
+            max_inflight: 8,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            preempt: PreemptPolicy::EvictYoungest,
+        };
+
+        // Spawn log proves the evictee really was restarted (two spawns).
+        let spawns: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let rx_a = submit_to(&tx, "a:len:6", 0);
+        let rx_b = submit_to(&tx, "b:len:6", 1);
+        let rx_c = submit_to(&tx, "c:len:2", 2);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let spawns = Arc::clone(&spawns);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (3, 3 * 1024),
+                    |prompt, _seed| {
+                        spawns.lock().unwrap().push(prompt.to_string());
+                        let polls: usize =
+                            prompt.rsplit("len:").next().unwrap().parse().unwrap();
+                        Ok(FakeFlight::new(prompt, polls, 3))
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let ra = rx_a.recv().expect("alive").expect("a ok");
+        let rb = rx_b.recv().expect("alive").expect("b ok");
+        let rc = rx_c.recv().expect("alive").expect("c ok");
+        worker.join().expect("clean exit");
+
+        // B was the youngest when C blocked on memory: it was evicted
+        // once and still completed after its restart.
+        assert_eq!(ra.evictions, 0);
+        assert_eq!(rb.evictions, 1, "the youngest-progress request must have been evicted");
+        assert_eq!(rc.evictions, 0);
+        let log = spawns.lock().unwrap().clone();
+        assert_eq!(
+            log.iter().filter(|p| p.starts_with("b:")).count(),
+            2,
+            "the evictee must be respawned (re-prefilled) on re-admission: {log:?}"
+        );
+        assert_eq!(log.iter().filter(|p| p.starts_with("a:")).count(), 1);
+    }
+
+    /// Without the policy, the same pressure head-of-line blocks instead
+    /// of evicting — the pre-PR 5 behavior stays the default.
+    #[test]
+    fn scheduler_loop_preempt_never_keeps_head_of_line_blocking() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            max_inflight: 8,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            preempt: PreemptPolicy::Never,
+        };
+
+        let rxs: Vec<_> = [("a:len:4", 0), ("b:len:4", 1), ("c:len:2", 2)]
+            .iter()
+            .map(|&(p, s)| submit_to(&tx, p, s))
+            .collect();
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (3, 3 * 1024),
+                    |prompt, _seed| {
+                        let polls: usize =
+                            prompt.rsplit("len:").next().unwrap().parse().unwrap();
+                        Ok(FakeFlight::new(prompt, polls, 3))
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        for rx in rxs {
+            let r = rx.recv().expect("alive").expect("ok");
+            assert_eq!(r.evictions, 0, "PreemptPolicy::Never must never evict");
+        }
+        worker.join().expect("clean exit");
+    }
+
+    /// The reclaim hook escalation order: memory-blocked admission with
+    /// queued work forces a compaction pass (`reclaim(true)`) before any
+    /// eviction, and a successful reclaim is retried against the gates.
+    #[test]
+    fn scheduler_loop_forces_compaction_before_evicting() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            max_inflight: 8,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            preempt: PreemptPolicy::EvictYoungest,
+        };
+
+        let rx_a = submit_to(&tx, "a:len:6", 0);
+        let rx_b = submit_to(&tx, "b:len:6", 1);
+        let rx_c = submit_to(&tx, "c:len:2", 2);
+        drop(tx);
+
+        // The fake "hub": the physical gate blocks admission while
+        // `blocked` holds; the forced reclaim clears it (a compaction
+        // that actually freed memory), so no eviction is ever needed.
+        let blocked = Arc::new(Mutex::new(false));
+        let forced = Arc::new(Mutex::new(0usize));
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let blocked = Arc::clone(&blocked);
+            let forced = Arc::clone(&forced);
+            std::thread::spawn(move || {
+                let b2 = Arc::clone(&blocked);
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 1024),
+                    |prompt, _seed| {
+                        let polls: usize =
+                            prompt.rsplit("len:").next().unwrap().parse().unwrap();
+                        // Admitting the second request "fills" the pods.
+                        if prompt.starts_with("b:") {
+                            *b2.lock().unwrap() = true;
+                        }
+                        Ok(FakeFlight::new(prompt, polls, 1))
+                    },
+                    no_dispatch,
+                    |idle| idle || !*blocked.lock().unwrap(),
+                    |force| {
+                        if force {
+                            *forced.lock().unwrap() += 1;
+                            *blocked.lock().unwrap() = false; // reclaimed
+                            Ok(4096)
+                        } else {
+                            Ok(0)
+                        }
+                    },
+                );
+            })
+        };
+
+        for rx in [rx_a, rx_b, rx_c] {
+            let r = rx.recv().expect("alive").expect("ok");
+            assert_eq!(r.evictions, 0, "a successful compaction must preempt the eviction");
+        }
+        worker.join().expect("clean exit");
+        assert!(*forced.lock().unwrap() >= 1, "memory-blocked admission must force a reclaim");
     }
 }

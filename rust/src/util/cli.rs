@@ -27,8 +27,10 @@ impl Args {
                 args.present.push(key.clone());
                 if let Some(v) = inline_val {
                     args.flags.insert(key, v);
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    args.flags.insert(key, it.next().unwrap());
+                } else if let Some(value) = it.next_if(|n| !n.starts_with("--")) {
+                    // The peek-then-next is one fused step: no unwrap to
+                    // mis-pair if the lookahead logic ever drifts.
+                    args.flags.insert(key, value);
                 } else {
                     args.flags.insert(key, "true".to_string());
                 }

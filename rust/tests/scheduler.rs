@@ -142,7 +142,7 @@ fn server_schedules_many_requests_onto_few_workers() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
+    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, fuse: true, ..SchedConfig::default() };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(8, 41);
@@ -196,20 +196,27 @@ impl Pollable for FusedFlight<'_> {
 /// `order` (indices into `prompts`) with a seeded coin flip per tick, so
 /// requests join pods at arbitrary phases of their pod-mates' lives;
 /// per-request seeds stay keyed to the *original* index, so the same
-/// request draws the same RNG streams whatever the packing. Returns
-/// outputs indexed by original position.
-fn run_fused_trace(
+/// request draws the same RNG streams whatever the packing. When
+/// `compact` is set the trace runs the pod-compaction pass between
+/// ticks (the worker loop's shape) and asserts every committed
+/// compaction physically shrinks `FusionHub::pod_bytes` while the pod
+/// stays occupied. Returns outputs indexed by original position plus
+/// the hub's stats.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_trace_with(
     engine: &Engine,
+    fuse_cfg: FuseConfig,
+    compact: bool,
     prompts: &[String],
     cfg: &RunConfig,
     seed0: u64,
     order: &[usize],
     admit_seed: u64,
     max_inflight: usize,
-) -> Vec<GenOutput> {
-    let hub = FusionHub::new(FuseConfig::default());
+) -> (Vec<GenOutput>, kappa::engine::FuseStats) {
+    let hub = FusionHub::new(fuse_cfg);
     let sched_cfg =
-        SchedConfig { max_inflight, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
+        SchedConfig { max_inflight, slot_budget: 32, fuse: true, ..SchedConfig::default() };
     let mut sched: Scheduler<FusedFlight, usize> = Scheduler::new(sched_cfg);
     let admission = engine.admission_cost(cfg.concurrent_branches()).expect("admission cost");
     let mut admit_rng = Pcg64::new(admit_seed, 1);
@@ -220,6 +227,26 @@ fn run_fused_trace(
     while !(queue.is_empty() && sched.is_empty()) {
         ticks += 1;
         assert!(ticks < 100_000, "fused trace runaway");
+        if compact {
+            // Between ticks every pod is quiescent — the worker loop's
+            // compaction point. A committed compaction must be a real
+            // physical reclaim, visible in the hub's tracker while the
+            // pod is still occupied.
+            let before = hub.pod_bytes();
+            let reclaimed = hub.maybe_compact(engine, false).expect("pod compaction");
+            if reclaimed > 0 {
+                assert!(hub.pod_count() > 0, "compaction only runs on occupied pods");
+                // The pass may also retire pods that emptied since the
+                // last tick, so the drop is *at least* the reported
+                // reclaim — and strictly below the pre-pass residency.
+                assert!(
+                    hub.pod_bytes() + reclaimed <= before,
+                    "compaction must shrink physical pod bytes by at least what it reports \
+                     ({before} -> {}, reported {reclaimed})",
+                    hub.pod_bytes()
+                );
+            }
+        }
         while !queue.is_empty()
             && sched.can_admit(admission.0, admission.1)
             && admit_rng.below(4) != 0
@@ -239,7 +266,8 @@ fn run_fused_trace(
     // counters: every decode-family dispatch of the trace came from a
     // pod flush, exactly one per occupied pod per tick (the Runtime
     // counts dispatches at the execute sites; the hub counts pods with
-    // staged work before each flush).
+    // staged work before each flush). Compaction dispatches count on
+    // their own Runtime counter and must not perturb this equality.
     let dispatched = engine.model().runtime().decode_dispatch_count() - dispatches_before;
     assert_eq!(
         dispatched,
@@ -247,7 +275,32 @@ fn run_fused_trace(
         "fused trace issued {dispatched} decode dispatches across {} occupied pod-ticks",
         hub.stats().occupied_pod_ticks
     );
-    out.into_iter().map(|o| o.expect("request never completed")).collect()
+    let stats = hub.stats();
+    (out.into_iter().map(|o| o.expect("request never completed")).collect(), stats)
+}
+
+/// [`run_fused_trace_with`] at the default pod config, no compaction.
+fn run_fused_trace(
+    engine: &Engine,
+    prompts: &[String],
+    cfg: &RunConfig,
+    seed0: u64,
+    order: &[usize],
+    admit_seed: u64,
+    max_inflight: usize,
+) -> Vec<GenOutput> {
+    run_fused_trace_with(
+        engine,
+        FuseConfig::default(),
+        false,
+        prompts,
+        cfg,
+        seed0,
+        order,
+        admit_seed,
+        max_inflight,
+    )
+    .0
 }
 
 /// The PR 4 load-bearing claim: a request served through **fused
@@ -321,7 +374,7 @@ fn server_shutdown_now_fails_queued_requests_without_deadlock() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, mem_budget_bytes: 0, fuse: true };
+    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, fuse: true, ..SchedConfig::default() };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(6, 51);
@@ -337,5 +390,103 @@ fn server_shutdown_now_fails_queued_requests_without_deadlock() {
     // failure). None may hang: `recv` returning at all is the assertion.
     for rx in rxs {
         let _ = rx.recv();
+    }
+}
+
+// ---- pod lifecycle: compaction + eviction (PR 5) ----
+
+fn compact_ready(engine: &Engine) -> bool {
+    let m = engine.model();
+    let buckets = m.buckets();
+    buckets.iter().all(|&s| buckets.iter().filter(|&&d| d < s).all(|&d| m.has_compact(s, d)))
+}
+
+/// The PR 5 load-bearing claim: a request that lives through pod
+/// compactions — its leased rows physically relocated into smaller pods
+/// while it runs — produces bit-identical text *and metrics* to its
+/// solo blocking run, for all four methods. The aggressive trigger
+/// (streak 1, ratio ~1) forces compaction at every opportunity, so the
+/// trace crosses several pod rewrites per request.
+#[test]
+fn requests_surviving_pod_compaction_are_bit_identical_to_blocking_runs() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) || !compact_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed/compact executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = Dataset::GsmSynth.generate(4, 91);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let order: Vec<usize> = (0..prompts.len()).collect();
+    let aggressive = FuseConfig { compact_ratio: 0.99, compact_streak: 1, ..FuseConfig::default() };
+
+    let mut any_compaction = false;
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        let blocking: Vec<GenOutput> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| run_method(&engine, p, &cfg, request_seed(5, i as u64)).expect("blocking"))
+            .collect();
+        for admit_seed in [1u64, 23] {
+            let (fused, stats) = run_fused_trace_with(
+                &engine, aggressive, true, &prompts, &cfg, 5, &order, admit_seed, 3,
+            );
+            any_compaction |= stats.compactions > 0;
+            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                assert_outputs_identical(
+                    b,
+                    f,
+                    &format!("{method:?} request {i} through compaction (admit seed {admit_seed})"),
+                );
+            }
+        }
+    }
+    assert!(
+        any_compaction,
+        "the aggressive trigger never compacted a pod — the test exercised nothing"
+    );
+}
+
+/// Evict/re-admit round trip: drivers are deterministic in
+/// `(prompt, seed)`, so dropping a partially-run driver (an eviction —
+/// its device residence is released on drop) and restarting it from
+/// scratch must reproduce the blocking run bit-for-bit. This is the
+/// property that makes `PreemptPolicy::EvictYoungest` a latency trade,
+/// never a correctness one.
+#[test]
+fn evicted_and_readmitted_requests_are_bit_identical_to_blocking_runs() {
+    let Some(engine) = load() else { return };
+    let problems = Dataset::GsmSynth.generate(2, 57);
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        for (i, p) in problems.iter().enumerate() {
+            let prompt = p.prompt();
+            let seed = request_seed(3, i as u64);
+            let blocking = run_method(&engine, &prompt, &cfg, seed).expect("blocking");
+
+            // First tenancy: part of the request runs, then the driver
+            // is dropped mid-flight (the eviction).
+            let mut evicted = make_driver(&engine, &prompt, &cfg, seed).expect("driver");
+            for _ in 0..5 {
+                if let StepOutcome::Done(_) = evicted.poll_step(&engine).expect("poll") {
+                    break;
+                }
+            }
+            drop(evicted);
+
+            // Re-admission: a fresh driver re-prefills from scratch.
+            let mut readmitted = make_driver(&engine, &prompt, &cfg, seed).expect("driver");
+            let out = loop {
+                if let StepOutcome::Done(out) = readmitted.poll_step(&engine).expect("poll") {
+                    break out;
+                }
+            };
+            assert_outputs_identical(
+                &blocking,
+                &out,
+                &format!("{method:?} request {i} after an evict/re-admit round trip"),
+            );
+        }
     }
 }
