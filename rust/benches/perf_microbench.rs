@@ -34,7 +34,11 @@
 //! `pod_compaction` (PR 5: physical `FusionHub::pod_bytes` strictly
 //! drops after sustained pruning at low occupancy, one device dispatch
 //! per compaction, fused-vs-solo bit-identity through the pod rewrites;
-//! evicted/compacted counters ride along in the JSON).
+//! evicted/compacted counters ride along in the JSON), and
+//! `fault_recovery` (PR 6: a seeded transient fault plan is absorbed by
+//! contained retries — zero user-visible errors, bit-identical output,
+//! retries matching the Runtime's injected-fault counters, goodput at
+//! or above the configured floor of the fault-free run).
 //!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
@@ -79,8 +83,9 @@ use kappa::coordinator::sampler::{self, SamplerScratch};
 use kappa::coordinator::signals::{raw_signals, SignalScratch};
 use kappa::coordinator::{make_driver_fused, run_method, Driver, GenOutput, StepOutcome, StepPlan};
 use kappa::data::Dataset;
-use kappa::engine::{Engine, FuseConfig, FusionHub};
+use kappa::engine::{Engine, FuseConfig, FusionHub, PodFault};
 use kappa::metrics::ServeMetrics;
+use kappa::runtime::{FaultError, FaultPlan, FaultSite};
 use kappa::server::{request_seed, Pollable, SchedConfig, Scheduler, Server};
 use kappa::util::json::Json;
 use kappa::util::rng::Pcg64;
@@ -698,6 +703,150 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- fault_recovery: the PR 6 acceptance section. A seeded
+    // transient fault plan takes down pods mid-trace; the retry loop
+    // (the worker's shape: requeue, fresh driver, same request seed)
+    // must absorb every injected fault with zero user-visible errors
+    // and bit-identical output, and the goodput under faults must hold
+    // a configured floor of the fault-free run. Per-request pods
+    // (`pod_bucket: 1`) make containment countable: retries total ==
+    // the Runtime's injected-fault counters exactly.
+    let mut fault_json = Json::Null;
+    if packed_ready {
+        // Goodput floor: faulted req/s ≥ this fraction of fault-free
+        // req/s. Two transient faults over 8 requests cost two
+        // re-prefills; 0.5 leaves headroom for timer noise while still
+        // catching retry storms or quarantine livelock.
+        const GOODPUT_FLOOR: f64 = 0.5;
+        let solo_pods = FuseConfig { pod_bucket: 1, ..FuseConfig::default() };
+        let run_trace = |label: &str| -> Result<(Vec<GenOutput>, Vec<usize>, f64, usize)> {
+            let hub = FusionHub::new(solo_pods);
+            let mut sched: Scheduler<FusedBench, usize> =
+                Scheduler::new(SchedConfig { max_inflight: 3, ..SchedConfig::default() });
+            let admission = engine.admission_cost(run_cfg.concurrent_branches())?;
+            let mut queue: VecDeque<usize> = (0..n_requests).collect();
+            let mut outputs: Vec<Option<GenOutput>> = (0..n_requests).map(|_| None).collect();
+            let mut retries = vec![0usize; n_requests];
+            let t0 = Instant::now();
+            let mut ticks = 0usize;
+            let mut failure: Option<anyhow::Error> = None;
+            while !(queue.is_empty() && sched.is_empty()) && failure.is_none() {
+                ticks += 1;
+                assert!(ticks < 100_000, "fault_recovery {label} trace runaway");
+                while !queue.is_empty() && sched.can_admit(admission.0, admission.1) {
+                    let i = queue.pop_front().unwrap();
+                    let driver = make_driver_fused(
+                        &engine,
+                        &hub,
+                        &prompts[i],
+                        &run_cfg,
+                        request_seed(606, i as u64),
+                    )?;
+                    sched.admit(FusedBench { driver, engine: &engine }, i);
+                }
+                let mut requeue: Vec<usize> = Vec::new();
+                sched.tick(
+                    || hub.flush(&engine),
+                    |i, r| match r {
+                        Ok(out) => outputs[i] = Some(out),
+                        Err(e) => {
+                            let contained = e.chain().any(|c| {
+                                c.downcast_ref::<PodFault>().is_some()
+                                    || c.downcast_ref::<FaultError>().is_some()
+                            });
+                            if contained {
+                                requeue.push(i);
+                            } else {
+                                failure = Some(e);
+                            }
+                        }
+                    },
+                );
+                for i in requeue {
+                    retries[i] += 1;
+                    queue.push_back(i);
+                }
+            }
+            if let Some(e) = failure {
+                return Err(e.context(format!("fault_recovery {label} trace")));
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let outputs: Vec<GenOutput> =
+                outputs.into_iter().map(|o| o.expect("request completed")).collect();
+            Ok((outputs, retries, wall, hub.stats().pod_faults))
+        };
+
+        model.runtime().set_fault_plan(None);
+        let (clean, clean_retries, wall_clean, _) = run_trace("fault-free")?;
+        assert_eq!(clean_retries.iter().sum::<usize>(), 0, "fault-free run must not retry");
+
+        model
+            .runtime()
+            .set_fault_plan(Some(FaultPlan::parse("decode@2,superstep@2,decode@9,superstep@9")?));
+        let (faulted, retries, wall_faulted, pod_faults) = run_trace("faulted")?;
+        let plan = model.runtime().fault_plan().expect("plan installed");
+        let injected = plan.injected_at(FaultSite::Decode) + plan.injected_at(FaultSite::Superstep);
+        model.runtime().set_fault_plan(None);
+
+        assert!(injected >= 1, "fault plan never fired — nothing was recovered from");
+        // Every injected fault was contained to one pod and surfaced as
+        // exactly one retry; the Runtime's counters and the request-side
+        // telemetry must agree.
+        assert_eq!(
+            pod_faults, injected,
+            "every injected fault must land as one contained pod fault"
+        );
+        assert_eq!(
+            retries.iter().sum::<usize>(),
+            injected,
+            "request retries {retries:?} must total the Runtime's injected-fault count"
+        );
+        // Zero user-visible errors, bit-identical recovery.
+        for (i, (c, f)) in clean.iter().zip(&faulted).enumerate() {
+            assert_eq!(c.text, f.text, "fault_recovery request {i}: text");
+            assert_eq!(c.chosen_branch, f.chosen_branch, "fault_recovery request {i}: branch");
+            assert_eq!(
+                c.metrics.total_tokens, f.metrics.total_tokens,
+                "fault_recovery request {i}: total tokens"
+            );
+            assert_eq!(
+                c.metrics.decode_calls, f.metrics.decode_calls,
+                "fault_recovery request {i}: decode calls"
+            );
+        }
+        let goodput_clean = n_requests as f64 / wall_clean;
+        let goodput_faulted = n_requests as f64 / wall_faulted;
+        let goodput_ratio = goodput_faulted / goodput_clean;
+        assert!(
+            goodput_ratio >= GOODPUT_FLOOR,
+            "goodput under faults fell through the floor \
+             ({goodput_faulted:.2} vs {goodput_clean:.2} req/s fault-free, \
+             ratio {goodput_ratio:.2} < {GOODPUT_FLOOR})"
+        );
+        println!(
+            "\nfault_recovery ({n_requests} requests, per-request pods):\n\
+               {injected} injected fault(s) absorbed by {} retr(ies), zero user-visible errors;\n\
+               goodput {goodput_faulted:.2} req/s vs {goodput_clean:.2} fault-free \
+               (ratio {goodput_ratio:.2}, floor {GOODPUT_FLOOR}); outputs bit-identical",
+            retries.iter().sum::<usize>(),
+        );
+        fault_json = Json::obj(vec![
+            ("injected_faults", Json::num(injected as f64)),
+            ("pod_faults", Json::num(pod_faults as f64)),
+            ("retries_total", Json::num(retries.iter().sum::<usize>() as f64)),
+            ("user_visible_errors", Json::num(0.0)),
+            ("requests_per_sec_faulted", Json::num(goodput_faulted)),
+            ("requests_per_sec_fault_free", Json::num(goodput_clean)),
+            ("goodput_ratio", Json::num(goodput_ratio)),
+            ("goodput_floor", Json::num(GOODPUT_FLOOR)),
+        ]);
+    } else {
+        println!(
+            "\nfault_recovery: SKIP (artifact set has no packed executables — \
+             re-export with `make artifacts`)"
+        );
+    }
+
     env.write_report(
         "BENCH_serve",
         Json::obj(vec![
@@ -728,6 +877,7 @@ fn main() -> Result<()> {
             ("occupancy_ratio", Json::num(occupancy_ratio)),
             ("batch_fusion", fusion_json),
             ("pod_compaction", compaction_json),
+            ("fault_recovery", fault_json),
         ]),
     )?;
     Ok(())

@@ -39,7 +39,11 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         # artifacts) the pod_compaction section: physical pod bytes
         # strictly drop after sustained pruning at low occupancy while
         # fused-vs-solo bit-identity holds, with evicted/compacted
-        # counters emitted into BENCH_serve.json. Here we only check the
+        # counters emitted into BENCH_serve.json — and (PR 6) the
+        # fault_recovery section: a seeded transient fault plan absorbed
+        # by contained retries with zero user-visible errors, goodput at
+        # or above the configured floor, and retries matching the
+        # Runtime's injected-fault counters. Here we only check the
         # machine-readable trajectories landed.
         for report in BENCH_decode BENCH_serve; do
             if [ ! -f "$ARTIFACTS/reports/$report.json" ]; then
@@ -47,7 +51,38 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
                 exit 1
             fi
         done
+        if ! grep -q '"fault_recovery"' "$ARTIFACTS/reports/BENCH_serve.json"; then
+            echo "[ci] BENCH_serve.json has no fault_recovery section"
+            exit 1
+        fi
         echo "[ci] perf smoke OK — decode + serve trajectories in $ARTIFACTS/reports/"
+
+        # Fault-injection serve smoke: a short replay under a fixed
+        # seeded fault plan must complete with zero user-visible errors
+        # and at least one recorded recovery (the injected faults are
+        # absorbed by pod-scoped retries, not surfaced to clients).
+        echo "[ci] fault smoke: serve under --fault-plan decode@1,superstep@1"
+        SMOKE_LOG="$(mktemp)"
+        trap 'rm -f "$SMOKE_LOG"' EXIT
+        cargo run --release --quiet -- serve \
+            --artifacts "$ARTIFACTS" --requests 6 --max-new 32 \
+            --fault-plan "decode@1,superstep@1" | tee "$SMOKE_LOG"
+        RECOVERY_LINE="$(grep '^fault recovery:' "$SMOKE_LOG" || true)"
+        if [ -z "$RECOVERY_LINE" ]; then
+            echo "[ci] fault smoke: serve never printed its fault-recovery summary"
+            exit 1
+        fi
+        case "$RECOVERY_LINE" in
+            *" errors=0"*) ;;
+            *) echo "[ci] fault smoke: user-visible errors under a transient plan: $RECOVERY_LINE"
+               exit 1 ;;
+        esac
+        case "$RECOVERY_LINE" in
+            *"retries=0 "*) echo "[ci] fault smoke: the fault plan never fired: $RECOVERY_LINE"
+                            exit 1 ;;
+            *) ;;
+        esac
+        echo "[ci] fault smoke OK — $RECOVERY_LINE"
     else
         if [ "${KAPPA_CI_REQUIRE_PERF:-0}" = "1" ]; then
             echo "[ci] perf smoke FAILED (KAPPA_CI_REQUIRE_PERF=1)"; exit 1

@@ -57,9 +57,52 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::runtime::faults::FaultError;
 use crate::runtime::KvCache;
 
 use super::{Engine, MemTracker};
+
+/// The typed error a pod-scoped failure surfaces as: a packed dispatch
+/// (or compaction) on this pod failed, the pod was torn down, and every
+/// request leasing rows in it must re-prefill. The scheduler classifies
+/// failures as retryable by finding this in the `anyhow` chain — pod
+/// loss is a *contained* fault domain, not an infrastructure error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PodFault {
+    pub pod: u64,
+    pub bucket: usize,
+    /// Fault site name (`runtime::faults::FaultSite::name`) when the
+    /// failure chain carries an injected [`FaultError`], else the pod
+    /// operation that failed ("dispatch" / "compact").
+    pub site: String,
+    pub detail: String,
+}
+
+impl PodFault {
+    /// Classify a pod-operation failure: pull the injected fault site
+    /// out of the error chain when there is one (`downcast_ref` on the
+    /// outermost error alone would miss wrapped faults).
+    fn classify(pod: u64, bucket: usize, default_site: &str, e: &anyhow::Error) -> PodFault {
+        let site = e
+            .chain()
+            .find_map(|c| c.downcast_ref::<FaultError>())
+            .map(|f| f.site.name().to_string())
+            .unwrap_or_else(|| default_site.to_string());
+        PodFault { pod, bucket, site, detail: format!("{e:#}") }
+    }
+}
+
+impl std::fmt::Display for PodFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pod {} (bucket {}) failed at {}: {}",
+            self.pod, self.bucket, self.site, self.detail
+        )
+    }
+}
+
+impl std::error::Error for PodFault {}
 
 /// Fusion-pool policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -141,6 +184,13 @@ pub struct FusedBatch {
     /// Consecutive flush ticks this pod spent at or under the
     /// compaction occupancy threshold (see [`FuseConfig`]).
     low_ticks: usize,
+    /// Set when a packed dispatch or compaction on this pod failed and
+    /// the hub tore it down. The pod's `Rc` stays alive until every
+    /// lease-holding request drops it; until then `stage`/`absorb_rows`
+    /// fail with the recorded [`PodFault`] so each leasing request is
+    /// contained and retried individually. `release` deliberately never
+    /// checks this — it runs from drop paths and must stay infallible.
+    poison: Option<PodFault>,
     // ---- dispatch assembly scratch (high-water mark, then reused) ----
     tokens_scratch: Vec<i32>,
     pos_scratch: Vec<i32>,
@@ -210,6 +260,9 @@ impl FusedBatch {
     /// Stage one decoded token per live slot for this tick. `pos` is the
     /// KV slot this step writes (the request's current position).
     pub fn stage(&mut self, id: u64, tokens: &[i32], pos: usize, signals: bool) -> Result<()> {
+        if let Some(fault) = &self.poison {
+            return Err(anyhow::Error::new(fault.clone()));
+        }
         let li = self.lease_index(id)?;
         let lease = &mut self.leases[li];
         if tokens.len() != lease.rows.len() {
@@ -424,6 +477,9 @@ impl FusedBatch {
         conf_out: &mut Vec<f32>,
         ent_out: &mut Vec<f32>,
     ) -> Result<bool> {
+        if let Some(fault) = &self.poison {
+            return Err(anyhow::Error::new(fault.clone()));
+        }
         let li = self.lease_index(id)?;
         let Some((epoch, had_signals)) = self.leases[li].ready else {
             bail!("fusion: absorb before the pod dispatched this lease's staged rows");
@@ -474,6 +530,10 @@ pub struct FuseStats {
     /// `perf_microbench` `pod_compaction` section and `BENCH_serve.json`
     /// read this).
     pub reclaimed_bytes: usize,
+    /// Pods torn down by a failed packed dispatch or compaction
+    /// (pod-scoped containment; each one failed only the requests
+    /// leasing rows in it).
+    pub pod_faults: usize,
 }
 
 /// The worker-level fusion pool: owns the pods, places admissions, and
@@ -609,6 +669,7 @@ impl FusionHub {
             next_lease: 1,
             epoch: 0,
             low_ticks: 0,
+            poison: None,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
@@ -624,6 +685,16 @@ impl FusionHub {
     /// (their device cache freed and their accounting zeroed) — so an
     /// idle wave's pod lingers at most until the next flush or
     /// placement.
+    ///
+    /// A pod whose dispatch fails is **contained**, not propagated: the
+    /// pod is poisoned with the failure (as a [`PodFault`]), dropped
+    /// from the hub, and its physical accounting is released — other
+    /// pods' dispatches proceed untouched. The poisoned pod's `Rc` stays
+    /// alive through its leases; each leasing request's next
+    /// `stage`/`absorb_rows` surfaces the `PodFault` so the scheduler
+    /// fails (and retries) exactly the requests in the failing pod.
+    /// `Err` from here therefore means hub-level infrastructure trouble,
+    /// never a single pod's dispatch.
     pub fn flush(&self, engine: &Engine) -> Result<()> {
         let mut inner = self.inner.borrow_mut();
         inner.retire_empty_pods();
@@ -632,12 +703,27 @@ impl FusionHub {
         // so the one-dispatch-per-occupied-pod invariant is checked
         // across two independent counters.
         let occupied = inner.pods.iter().filter(|p| p.borrow().has_staged()).count();
-        for pod in inner.pods.iter() {
-            pod.borrow_mut().flush(engine)?;
+        let HubInner { pods, mem, stats, .. } = &mut *inner;
+        let mut failed: Vec<usize> = Vec::new();
+        for (i, pod_rc) in pods.iter().enumerate() {
+            let mut pod = pod_rc.borrow_mut();
+            if let Err(e) = pod.flush(engine) {
+                let fault = PodFault::classify(pod.id, pod.bucket, "dispatch", &e);
+                pod.poison = Some(fault);
+                stats.pod_faults += 1;
+                mem.remove_component(&format!("pod{}", pod.id));
+                failed.push(i);
+            }
+        }
+        // Tear the failed pods out of the hub (reverse order keeps the
+        // collected indices valid); their device caches drop once the
+        // last leasing request releases its Rc.
+        for &i in failed.iter().rev() {
+            pods.remove(i);
         }
         if occupied > 0 {
-            inner.stats.flushes += 1;
-            inner.stats.occupied_pod_ticks += occupied;
+            stats.flushes += 1;
+            stats.occupied_pod_ticks += occupied;
         }
         // Compaction-trigger bookkeeping: one occupancy sample per pod
         // per flush tick. The streak (not the instantaneous ratio) is
@@ -671,9 +757,13 @@ impl FusionHub {
     /// Call sites sit **between ticks** (top of the scheduler loop /
     /// admission stall), where every pod is quiescent; pods that are
     /// somehow mid-flight are skipped, never rewritten under a pending
-    /// pull. A dispatch failure leaves the pod on its old cache — the
-    /// error propagates like any dispatch poisoning, with no state
-    /// half-rewritten.
+    /// pull. A compaction failure is **scoped to the compacted pod**
+    /// (the same containment as a failed packed dispatch): the pod —
+    /// still on its old cache, no state half-rewritten — is poisoned
+    /// and torn out of the hub, so only the requests leasing its rows
+    /// fail-and-retry while every other pod compacts (and serves)
+    /// normally. `Err` from here means hub-level trouble, never one
+    /// pod's dispatch.
     pub fn maybe_compact(&self, engine: &Engine, force: bool) -> Result<usize> {
         let mut inner = self.inner.borrow_mut();
         inner.retire_empty_pods();
@@ -686,7 +776,8 @@ impl FusionHub {
         let streak = cfg.compact_streak;
         let per_branch = model.config.kv_bytes_per_branch();
         let mut reclaimed_total = 0usize;
-        for pod_rc in pods.iter() {
+        let mut failed: Vec<usize> = Vec::new();
+        for (i, pod_rc) in pods.iter().enumerate() {
             let mut pod = pod_rc.borrow_mut();
             if pod.leases.is_empty() || !pod.quiescent() {
                 continue;
@@ -715,7 +806,12 @@ impl FusionHub {
                 Ok(dst) => dst,
                 Err(e) => {
                     mem.free("compact_transient", dst_bytes);
-                    return Err(e);
+                    let fault = PodFault::classify(pod.id, pod.bucket, "compact", &e);
+                    pod.poison = Some(fault);
+                    stats.pod_faults += 1;
+                    mem.remove_component(&format!("pod{}", pod.id));
+                    failed.push(i);
+                    continue;
                 }
             };
             let old_bucket = pod.bucket;
@@ -729,6 +825,9 @@ impl FusionHub {
             stats.compactions += 1;
             stats.reclaimed_bytes += reclaimed;
             reclaimed_total += reclaimed;
+        }
+        for &i in failed.iter().rev() {
+            pods.remove(i);
         }
         Ok(reclaimed_total)
     }
@@ -871,6 +970,7 @@ mod tests {
             next_lease: 0,
             epoch: 0,
             low_ticks: 0,
+            poison: None,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
@@ -1053,6 +1153,54 @@ mod tests {
         // A stale epoch (pod dispatched again before the pull) fails.
         pod.leases[0].ready = Some((2, false));
         assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).is_err());
+    }
+
+    #[test]
+    fn poisoned_pod_fails_stage_and_absorb_with_a_typed_pod_fault() {
+        let mut pod = offline_pod(4);
+        pod.free.clear();
+        pod.leases.push(lease(0, vec![0, 1], 5));
+        pod.leases[0].ready = Some((0, false));
+        pod.poison = Some(PodFault {
+            pod: 7,
+            bucket: 4,
+            site: "superstep".to_string(),
+            detail: "injected".to_string(),
+        });
+
+        let err = pod.stage(0, &[9, 9], 5, false).unwrap_err();
+        let fault = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<PodFault>())
+            .expect("stage on a poisoned pod must carry a PodFault");
+        assert_eq!(fault.pod, 7);
+        assert_eq!(fault.site, "superstep");
+
+        let mut lg = vec![0.0; 2 * 4];
+        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
+        let err = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).unwrap_err();
+        assert!(
+            err.chain().any(|c| c.downcast_ref::<PodFault>().is_some()),
+            "absorb on a poisoned pod must carry a PodFault: {err:#}"
+        );
+
+        // Release is the drop path — it must stay infallible on a
+        // poisoned pod so lease cleanup never double-faults.
+        pod.release(0);
+        assert_eq!(pod.lease_count(), 0);
+        assert_eq!(pod.free, vec![0, 1]);
+    }
+
+    #[test]
+    fn pod_fault_classify_extracts_the_injected_site() {
+        use crate::runtime::faults::{FaultError, FaultSite};
+        let inner = FaultError { site: FaultSite::Decode, occurrence: 3, persistent: false };
+        let wrapped = anyhow::Error::new(inner).context("packed dispatch");
+        let fault = PodFault::classify(2, 8, "dispatch", &wrapped);
+        assert_eq!(fault.site, "decode", "site must come from the wrapped FaultError");
+        assert_eq!(fault.pod, 2);
+        let plain = anyhow!("device hiccup");
+        assert_eq!(PodFault::classify(2, 8, "compact", &plain).site, "compact");
     }
 
     #[test]

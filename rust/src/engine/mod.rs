@@ -92,7 +92,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-pub use fusion::{FuseConfig, FuseStats, FusionHub};
+pub use fusion::{FuseConfig, FuseStats, FusionHub, PodFault};
 pub use mem::MemTracker;
 
 use crate::runtime::{KvCache, LoadedModel};

@@ -57,6 +57,15 @@ USAGE:
                                 head-of-line blocking when admission is
                                 memory-bound; evicted requests re-prefill and
                                 stay bit-identical)
+                 [--fault-plan SPEC]  (deterministic failure drill, e.g.
+                                \"seed=7,decode@3,superstep%0.01,compact@5!\" —
+                                site@N fires at the Nth dispatch of that site,
+                                site%P fires with seeded probability P, a
+                                trailing ! makes the fault persistent; sites:
+                                decode superstep fuse compact slab_download)
+                 [--retry-budget 2] [--backoff-ticks 2]
+                 [--quarantine-after 3] [--quarantine-cooldown 50]
+                 [--deadline-ms 0]    (0 = no per-request deadline)
 
 KAPPA hyperparameters (defaults = paper §4.1):
   --ema-alpha 0.5  --window 16  --mom-buckets 4
@@ -216,16 +225,33 @@ fn serve(args: &Args) -> Result<()> {
         } else {
             PreemptPolicy::Never
         },
+        retry_budget: args.usize_or("retry-budget", d.retry_budget),
+        backoff_ticks: args.u64_or("backoff-ticks", d.backoff_ticks),
+        quarantine_after: args.usize_or("quarantine-after", d.quarantine_after),
+        quarantine_cooldown: args.u64_or("quarantine-cooldown", d.quarantine_cooldown),
+        deadline_ms: args.u64_or("deadline-ms", d.deadline_ms),
     };
+    let fault_plan = args.get("fault-plan").map(str::to_string);
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots, fusion {}, preemption {}) …",
+         (≤{} in flight, {} slots, fusion {}, preemption {}{}) …",
         sched.max_inflight,
         sched.slot_budget,
         if sched.fuse { "on" } else { "off" },
         if sched.preempt == PreemptPolicy::EvictYoungest { "evict-youngest" } else { "off" },
+        match &fault_plan {
+            Some(spec) => format!(", fault plan {spec:?}"),
+            None => String::new(),
+        },
     );
-    let server = Server::start_with(&dir, &model, workers, cfg.clone(), sched)?;
+    let server = Server::start_with_faults(
+        &dir,
+        &model,
+        workers,
+        cfg.clone(),
+        sched,
+        fault_plan.as_deref(),
+    )?;
 
     let problems = dataset.generate(n_requests, args.u64_or("data-seed", 99));
     let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
@@ -286,6 +312,11 @@ fn serve(args: &Args) -> Result<()> {
         serve_kv_peak as f64 / (1024.0 * 1024.0),
         evictions,
     );
+    let retries: usize =
+        responses.iter().filter_map(|r| r.as_ref().ok().map(|r| r.retries)).sum();
+    let faults_survived: usize =
+        responses.iter().filter_map(|r| r.as_ref().ok().map(|r| r.faults_survived)).sum();
+    println!("fault recovery: retries={retries} faults_survived={faults_survived} errors={errors}");
     server.shutdown();
     Ok(())
 }

@@ -14,6 +14,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use super::faults::{FaultPlan, FaultSite};
+
 /// Shared PJRT CPU client + executable cache.
 pub struct Runtime {
     client: PjRtClient,
@@ -45,6 +47,12 @@ pub struct Runtime {
     /// decode family only, and compaction is a between-ticks lifecycle
     /// event, not a token dispatch.
     compact_dispatches: AtomicUsize,
+    /// Optional injected-fault plan (`runtime::faults`). Checked at
+    /// every execute/download site *before* the dispatch runs or its
+    /// counter moves, so an injected fault is indistinguishable from a
+    /// device call that never started. `RwLock` because the hot path
+    /// only ever reads; installation happens once at worker boot.
+    faults: std::sync::RwLock<Option<std::sync::Arc<FaultPlan>>>,
 }
 
 impl Runtime {
@@ -60,7 +68,43 @@ impl Runtime {
             slab_downloads: AtomicUsize::new(0),
             decode_dispatches: AtomicUsize::new(0),
             compact_dispatches: AtomicUsize::new(0),
+            faults: std::sync::RwLock::new(None),
         })
+    }
+
+    /// Install (or clear) the injected-fault plan. Fault checks at the
+    /// dispatch sites are no-ops while no plan is installed.
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        *self
+            .faults
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) =
+            plan.map(std::sync::Arc::new);
+    }
+
+    /// The installed fault plan, if any — benches and tests read its
+    /// per-site counters through this handle.
+    pub fn fault_plan(&self) -> Option<std::sync::Arc<FaultPlan>> {
+        self.faults
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Consult the fault plan for a dispatch at `site`. `Ok(())` when no
+    /// plan is installed or the plan lets this occurrence through.
+    pub(crate) fn fault_check(&self, site: FaultSite) -> Result<()> {
+        let guard =
+            self.faults.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match guard.as_ref() {
+            None => Ok(()),
+            Some(plan) => plan.check(site).map_err(anyhow::Error::new),
+        }
+    }
+
+    /// Total faults injected so far (0 with no plan installed).
+    pub fn faults_injected(&self) -> usize {
+        self.fault_plan().map_or(0, |p| p.injected_total())
     }
 
     pub fn client(&self) -> &PjRtClient {
@@ -247,6 +291,25 @@ mod tests {
         rt.note_compact_dispatch();
         assert_eq!(rt.compact_dispatch_count(), 1);
         assert_eq!(rt.decode_dispatch_count(), 2);
+    }
+
+    #[test]
+    fn fault_plan_install_and_check() {
+        let rt = Runtime::new().unwrap();
+        // No plan: checks are free passes and counters read zero.
+        assert!(rt.fault_check(FaultSite::Decode).is_ok());
+        assert_eq!(rt.faults_injected(), 0);
+        rt.set_fault_plan(Some(FaultPlan::parse("decode@0").unwrap()));
+        let err = rt.fault_check(FaultSite::Decode).unwrap_err();
+        assert!(
+            err.downcast_ref::<super::super::faults::FaultError>().is_some(),
+            "fault check must surface a typed FaultError"
+        );
+        assert_eq!(rt.faults_injected(), 1);
+        assert_eq!(rt.fault_plan().unwrap().dispatched_at(FaultSite::Decode), 1);
+        // Clearing the plan restores free passes.
+        rt.set_fault_plan(None);
+        assert!(rt.fault_check(FaultSite::Decode).is_ok());
     }
 
     #[test]

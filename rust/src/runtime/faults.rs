@@ -1,0 +1,322 @@
+//! Deterministic, site-addressable fault injection for the runtime's
+//! device-dispatch sites.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (the
+//! `kappa serve --fault-plan` flag) and installed on a [`Runtime`]
+//! (`crate::runtime::Runtime::set_fault_plan`). Every execute/download
+//! site calls [`FaultPlan::check`] *before* touching the device or
+//! bumping its dispatch counter, so an injected fault means the dispatch
+//! never happened: no KV was donated, no counter moved, and a retry
+//! re-prefills from a clean slate.
+//!
+//! Determinism contract: whether occurrence `n` at a site faults is a
+//! pure function of `(plan seed, site, n)` — fixed schedules (`site@N`)
+//! trivially so, probabilistic clauses (`site%P`) via a splitmix64 draw
+//! keyed on `(seed ^ site salt, n)`. Two runs of the same trace under
+//! the same plan fault at exactly the same dispatches, which is what
+//! lets the recovery tests pin bit-identical output.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//!   seed=7                  # PRNG seed for probabilistic clauses
+//!   decode@3                # fault the 4th decode dispatch (0-based)
+//!   superstep@0,superstep@5 # schedules are repeatable
+//!   fuse%0.1                # each fuse dispatch faults w.p. 0.1
+//!   compact@0!              # trailing '!': persistent — once fired,
+//!                           # every later dispatch at the site faults
+//!   slab_download%0.02
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::request_seed;
+
+/// A runtime dispatch site that can be told to fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Plain decode-step execute (solo and packed).
+    Decode,
+    /// Fused decode+signals superstep execute (solo and packed).
+    Superstep,
+    /// Pod prefix-fuse execute (admission into a shared pod).
+    Fuse,
+    /// Pod compaction execute.
+    Compact,
+    /// Logits-slab device→host download.
+    SlabDownload,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::Decode,
+        FaultSite::Superstep,
+        FaultSite::Fuse,
+        FaultSite::Compact,
+        FaultSite::SlabDownload,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Decode => "decode",
+            FaultSite::Superstep => "superstep",
+            FaultSite::Fuse => "fuse",
+            FaultSite::Compact => "compact",
+            FaultSite::SlabDownload => "slab_download",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|site| site.name() == s)
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::Decode => 0,
+            FaultSite::Superstep => 1,
+            FaultSite::Fuse => 2,
+            FaultSite::Compact => 3,
+            FaultSite::SlabDownload => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The typed error an injected fault surfaces as. Containment and retry
+/// logic classify failures by finding this (or a pod-level wrapper) in
+/// the `anyhow` chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultError {
+    pub site: FaultSite,
+    /// Which dispatch at the site faulted (0-based, per-site).
+    pub occurrence: u64,
+    pub persistent: bool,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "injected {} fault at {} dispatch {}",
+            if self.persistent { "persistent" } else { "transient" },
+            self.site,
+            self.occurrence
+        )
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Per-site schedule: explicit occurrence indices plus an independent
+/// per-dispatch probability. Empty/zero means the site never faults.
+#[derive(Debug, Clone, Default)]
+struct SiteSpec {
+    at: Vec<u64>,
+    prob: f64,
+    persistent: bool,
+}
+
+impl SiteSpec {
+    fn armed(&self) -> bool {
+        !self.at.is_empty() || self.prob > 0.0
+    }
+}
+
+/// A seeded, site-addressable fault plan. Shared (`Arc`) between the
+/// runtime's dispatch sites and whoever wants to read the counters, so
+/// every field is atomic; `check` is lock-free.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: [SiteSpec; 5],
+    /// Dispatch attempts per site (bumped on every `check`).
+    dispatched: [AtomicUsize; 5],
+    /// Faults actually injected per site.
+    injected: [AtomicUsize; 5],
+    /// Persistent clauses latch here once fired.
+    tripped: [AtomicBool; 5],
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` spec grammar (module docs). Rejects
+    /// unknown sites and out-of-range probabilities loudly — a typo'd
+    /// plan silently injecting nothing would invalidate a smoke run.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(',') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault plan: bad seed {seed:?}: {e}"))?;
+                continue;
+            }
+            let (body, persistent) = match clause.strip_suffix('!') {
+                Some(b) => (b, true),
+                None => (clause, false),
+            };
+            if let Some((site, n)) = body.split_once('@') {
+                let site = Self::site(site)?;
+                let n: u64 = n
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault plan: bad occurrence {n:?}: {e}"))?;
+                let spec = &mut plan.sites[site.index()];
+                spec.at.push(n);
+                spec.persistent |= persistent;
+            } else if let Some((site, p)) = body.split_once('%') {
+                let site = Self::site(site)?;
+                let p: f64 = p
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault plan: bad probability {p:?}: {e}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("fault plan: probability {p} outside [0, 1]");
+                }
+                let spec = &mut plan.sites[site.index()];
+                spec.prob = spec.prob.max(p);
+                spec.persistent |= persistent;
+            } else {
+                bail!(
+                    "fault plan: cannot parse clause {clause:?} \
+                     (expected seed=N, site@N or site%P; sites: {})",
+                    FaultSite::ALL.map(|s| s.name()).join(", ")
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    fn site(name: &str) -> Result<FaultSite> {
+        FaultSite::parse(name.trim()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "fault plan: unknown site {name:?} (sites: {})",
+                FaultSite::ALL.map(|s| s.name()).join(", ")
+            )
+        })
+    }
+
+    /// Deterministic per-(site, occurrence) uniform draw in [0, 1).
+    fn draw(&self, site: FaultSite, occurrence: u64) -> f64 {
+        // Distinct odd salt per site so identical occurrence indices at
+        // different sites draw independently.
+        let salt = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(site.index() as u64 + 1);
+        let h = request_seed(self.seed ^ salt, occurrence);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Called by the runtime immediately before a dispatch at `site`.
+    /// Returns `Err(FaultError)` when the plan says this occurrence
+    /// faults; always bumps the site's dispatch counter.
+    pub fn check(&self, site: FaultSite) -> std::result::Result<(), FaultError> {
+        let i = site.index();
+        let n = self.dispatched[i].fetch_add(1, Ordering::Relaxed) as u64;
+        let spec = &self.sites[i];
+        if !spec.armed() && !self.tripped[i].load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let fire = self.tripped[i].load(Ordering::Relaxed)
+            || spec.at.contains(&n)
+            || (spec.prob > 0.0 && self.draw(site, n) < spec.prob);
+        if !fire {
+            return Ok(());
+        }
+        if spec.persistent {
+            self.tripped[i].store(true, Ordering::Relaxed);
+        }
+        self.injected[i].fetch_add(1, Ordering::Relaxed);
+        Err(FaultError { site, occurrence: n, persistent: spec.persistent })
+    }
+
+    /// Dispatch attempts observed at `site` (faulted or not).
+    pub fn dispatched_at(&self, site: FaultSite) -> usize {
+        self.dispatched[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults injected at `site`.
+    pub fn injected_at(&self, site: FaultSite) -> usize {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across every site.
+    pub fn injected_total(&self) -> usize {
+        FaultSite::ALL.iter().map(|&s| self.injected_at(s)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_spec() {
+        let p = FaultPlan::parse("seed=9, decode@3, superstep%0.5, compact@0!").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.sites[FaultSite::Decode.index()].at, vec![3]);
+        assert!(!p.sites[FaultSite::Decode.index()].persistent);
+        assert_eq!(p.sites[FaultSite::Superstep.index()].prob, 0.5);
+        assert!(p.sites[FaultSite::Compact.index()].persistent);
+        assert!(FaultPlan::parse("decode@x").is_err());
+        assert!(FaultPlan::parse("warp@1").is_err());
+        assert!(FaultPlan::parse("fuse%1.5").is_err());
+        assert!(FaultPlan::parse("").unwrap().injected_total() == 0);
+    }
+
+    #[test]
+    fn fixed_schedule_fires_exactly_once() {
+        let p = FaultPlan::parse("decode@2").unwrap();
+        let hits: Vec<bool> =
+            (0..6).map(|_| p.check(FaultSite::Decode).is_err()).collect();
+        assert_eq!(hits, vec![false, false, true, false, false, false]);
+        assert_eq!(p.dispatched_at(FaultSite::Decode), 6);
+        assert_eq!(p.injected_at(FaultSite::Decode), 1);
+        assert_eq!(p.injected_total(), 1);
+        // Other sites untouched.
+        assert!(p.check(FaultSite::Superstep).is_ok());
+        assert_eq!(p.injected_at(FaultSite::Superstep), 0);
+    }
+
+    #[test]
+    fn fault_error_carries_site_and_occurrence() {
+        let p = FaultPlan::parse("superstep@1").unwrap();
+        assert!(p.check(FaultSite::Superstep).is_ok());
+        let e = p.check(FaultSite::Superstep).unwrap_err();
+        assert_eq!(e.site, FaultSite::Superstep);
+        assert_eq!(e.occurrence, 1);
+        assert!(!e.persistent);
+        assert!(e.to_string().contains("superstep"));
+        assert!(e.to_string().contains("transient"));
+    }
+
+    #[test]
+    fn probability_is_deterministic_in_seed() {
+        let trace = |seed: &str| -> Vec<bool> {
+            let p = FaultPlan::parse(&format!("seed={seed}, fuse%0.5")).unwrap();
+            (0..64).map(|_| p.check(FaultSite::Fuse).is_err()).collect()
+        };
+        let a = trace("7");
+        assert_eq!(a, trace("7"), "same seed must reproduce the fault trace");
+        assert_ne!(a, trace("8"), "different seed must perturb the trace");
+        let fired = a.iter().filter(|&&b| b).count();
+        assert!((8..=56).contains(&fired), "p=0.5 over 64 draws fired {fired} times");
+    }
+
+    #[test]
+    fn persistent_fault_latches() {
+        let p = FaultPlan::parse("compact@1!").unwrap();
+        assert!(p.check(FaultSite::Compact).is_ok());
+        for _ in 0..4 {
+            let e = p.check(FaultSite::Compact).unwrap_err();
+            assert!(e.persistent);
+        }
+        assert_eq!(p.injected_at(FaultSite::Compact), 4);
+    }
+}

@@ -4,10 +4,12 @@
 //! everything below is the `xla` crate's PJRT C API.
 
 pub mod client;
+pub mod faults;
 pub mod manifest;
 pub mod model;
 pub mod weights;
 
 pub use client::Runtime;
+pub use faults::{FaultError, FaultPlan, FaultSite};
 pub use manifest::{Manifest, ModelConfig, ModelManifest, ParamEntry};
 pub use model::{KvCache, LoadedModel};

@@ -43,6 +43,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use xla::{PjRtBuffer, PjRtLoadedExecutable};
 
 use super::client::Runtime;
+use super::faults::FaultSite;
 use super::manifest::{Manifest, ModelConfig, ModelManifest};
 use super::weights::load_weights;
 
@@ -271,6 +272,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.fault_check(FaultSite::Decode)?;
         self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_prefixed(&self.param_table, &[&tok, &posb, &cache.k, &cache.v])?
@@ -280,6 +282,7 @@ impl LoadedModel {
         }
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         let logits = self.rt.to_host_f32(&out[0])?;
         Ok((logits, KvCache { k, v, bucket: b }))
@@ -307,6 +310,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.fault_check(FaultSite::Decode)?;
         self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
@@ -318,6 +322,7 @@ impl LoadedModel {
         // the same statement that installs their aliased successors.
         cache.v = out.pop().unwrap();
         cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
         Ok(())
@@ -364,6 +369,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.fault_check(FaultSite::Superstep)?;
         self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(
@@ -377,6 +383,7 @@ impl LoadedModel {
         }
         cache.v = out.pop().unwrap();
         cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
         self.rt.to_host_f32_into(&out[1], kl_out)?;
@@ -438,6 +445,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.fault_check(FaultSite::Decode)?;
         self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
@@ -447,6 +455,7 @@ impl LoadedModel {
         }
         cache.v = out.pop().unwrap();
         cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
         Ok(())
@@ -478,6 +487,7 @@ impl LoadedModel {
 
         let tok = self.rt.i32_buffer(tokens, &[b])?;
         let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.fault_check(FaultSite::Superstep)?;
         self.rt.note_decode_dispatch();
         let mut out = exe
             .execute_b_donated(
@@ -491,6 +501,7 @@ impl LoadedModel {
         }
         cache.v = out.pop().unwrap();
         cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
         self.rt.to_host_f32_into(&out[1], kl_out)?;
@@ -525,6 +536,7 @@ impl LoadedModel {
             .ok_or_else(|| anyhow!("no fuse artifact for bucket {b}"))?;
         let exe = cell.get(&self.rt)?;
         let idxb = self.rt.i32_buffer(idx, &[b])?;
+        self.rt.fault_check(FaultSite::Fuse)?;
         let mut out = exe
             .execute_prefixed(&[], &[&dst.k, &dst.v, &src.k, &src.v, &idxb])?
             .swap_remove(0);
@@ -591,6 +603,7 @@ impl LoadedModel {
             })?;
         let exe = cell.get(&self.rt)?;
         let idxb = self.rt.i32_buffer(idx, &[dst.bucket])?;
+        self.rt.fault_check(FaultSite::Compact)?;
         self.rt.note_compact_dispatch();
         let mut out = exe
             .execute_b_donated(&[], &[&dst.k, &dst.v, &src.k, &src.v, &idxb], &[0, 1])?

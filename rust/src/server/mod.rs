@@ -51,8 +51,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::{make_driver, make_driver_fused, Driver, GenOutput, StepOutcome, StepPlan};
-use crate::engine::{Engine, FuseConfig, FusionHub};
-use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::engine::{Engine, FuseConfig, FusionHub, PodFault};
+use crate::runtime::{FaultError, FaultPlan, LoadedModel, Manifest, Runtime};
 
 /// Per-request seed mixing — the one derivation every submission path
 /// must use ([`Server::submit_all`] and any caller deriving seeds for
@@ -117,6 +117,35 @@ pub struct SchedConfig {
     /// Eviction policy for memory-blocked admission (see
     /// [`PreemptPolicy`]).
     pub preempt: PreemptPolicy,
+    /// How many times a request failed by a *contained* fault (a
+    /// [`PodFault`] or an injected [`FaultError`] in the error chain)
+    /// is requeued and re-prefilled before its error is surfaced as
+    /// [`RequestError::RetriesExhausted`]. Drivers are deterministic in
+    /// `(prompt, seed)`, so a retried request's output is bit-identical
+    /// to an uninterrupted run — retries cost latency, not correctness.
+    /// `0` disables retry (every contained fault surfaces immediately).
+    pub retry_budget: usize,
+    /// Scheduler ticks a faulted request waits in the worker backlog
+    /// before it becomes eligible for re-admission — deterministic
+    /// backoff in tick units (the loop's unit of progress), not wall
+    /// time, so recovery traces replay identically.
+    pub backoff_ticks: u64,
+    /// Consecutive packed-dispatch failure *ticks* on one bucket before
+    /// that bucket is quarantined: new admissions run solo dispatch
+    /// (bit-identical, just unfused) instead of leasing pod rows. A
+    /// whole pod failing in one tick counts once, however many requests
+    /// it took down.
+    pub quarantine_after: usize,
+    /// Ticks a quarantined bucket sits out before one admission is sent
+    /// back through the fused path as a probe. Probe success lifts the
+    /// quarantine; probe failure re-arms the cooldown.
+    pub quarantine_cooldown: u64,
+    /// Per-request deadline in milliseconds, measured from submission
+    /// (`0` = no deadline). Checked at plan time: an expired in-flight
+    /// request is dropped (its slots and pod rows free immediately) and
+    /// answers [`RequestError::DeadlineExceeded`]; an expired queued
+    /// request is refused at admission without ever spawning.
+    pub deadline_ms: u64,
 }
 
 impl Default for SchedConfig {
@@ -124,13 +153,20 @@ impl Default for SchedConfig {
         // Four concurrent requests, one largest-bucket's worth of slots;
         // memory bounded by the slot budget unless told otherwise;
         // co-resident requests fused into shared bucket dispatches; no
-        // preemption unless the operator opts in.
+        // preemption unless the operator opts in. Faulted requests get
+        // two retries with a short deterministic backoff; three bad
+        // ticks quarantine a bucket for fifty; no deadline.
         Self {
             max_inflight: 4,
             slot_budget: 32,
             mem_budget_bytes: 0,
             fuse: true,
             preempt: PreemptPolicy::Never,
+            retry_budget: 2,
+            backoff_ticks: 2,
+            quarantine_after: 3,
+            quarantine_cooldown: 50,
+            deadline_ms: 0,
         }
     }
 }
@@ -141,12 +177,43 @@ impl SchedConfig {
         Self {
             max_inflight: 1,
             slot_budget: usize::MAX,
-            mem_budget_bytes: 0,
             fuse: false,
-            preempt: PreemptPolicy::Never,
+            ..Self::default()
         }
     }
 }
+
+/// Named terminal request failures the fault-recovery machinery can
+/// produce — callers downcast the `anyhow` chain to tell "the fault
+/// domain gave up on this request" apart from infrastructure errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request was failed by a contained fault on every attempt and
+    /// its retry budget is spent. `site` names the fault site of the
+    /// *last* failure (a [`FaultSite`] name, or the pod-fault dispatch
+    /// site); `attempts` counts every tenancy, first admission included.
+    ///
+    /// [`FaultSite`]: crate::runtime::FaultSite
+    RetriesExhausted { site: String, attempts: usize },
+    /// The request's [`SchedConfig::deadline_ms`] elapsed before it
+    /// completed (in flight or still queued).
+    DeadlineExceeded { deadline_ms: u64 },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::RetriesExhausted { site, attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts (last fault at {site})")
+            }
+            RequestError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "request deadline of {deadline_ms}ms exceeded")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// What the scheduler needs from an in-flight request, split at the
 /// dispatch point (see `crate::coordinator`'s plan/absorb docs): stage
@@ -359,6 +426,22 @@ impl<P: Pollable, M> Scheduler<P, M> {
             on_abort(meta);
         }
     }
+
+    /// Remove every in-flight request whose metadata matches `pred`
+    /// (deadline enforcement): the dropped flight frees its device
+    /// residence (pod lease / cache) on the spot, the metadata is
+    /// handed back so the caller can send the terminal error.
+    pub fn drain_where(&mut self, mut pred: impl FnMut(&M) -> bool, mut on_removed: impl FnMut(M)) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if pred(&self.active[i].1) {
+                let (_, meta) = self.active.remove(i);
+                on_removed(meta);
+            } else {
+                i += 1;
+            }
+        }
+    }
 }
 
 /// One queued request.
@@ -368,6 +451,14 @@ struct Request {
     enqueued: Instant,
     /// Times this request has been evicted and requeued (0 at submit).
     evictions: usize,
+    /// Times this request was failed by a contained fault and requeued
+    /// for a bit-identical re-prefill (0 at submit).
+    retries: usize,
+    /// Contained faults that hit this request so far (0 at submit).
+    faults: usize,
+    /// Earliest scheduler tick this request may be re-admitted — the
+    /// deterministic retry backoff. 0 (always eligible) at submit.
+    not_before: u64,
     resp: Sender<Result<Response>>,
 }
 
@@ -400,6 +491,14 @@ pub struct Response {
     /// [`PreemptPolicy::EvictYoungest`]. The generation is bit-identical
     /// either way; evictions cost queue latency, not output.
     pub evictions: usize,
+    /// Times this request was failed by a contained fault and retried
+    /// (re-prefilled) before completing — 0 on a fault-free path. The
+    /// generation is bit-identical either way.
+    pub retries: usize,
+    /// Contained faults this request survived on its way to completion.
+    /// Equals `retries` for a successful response (every survived fault
+    /// cost exactly one retry).
+    pub faults_survived: usize,
 }
 
 /// Handle to the running server.
@@ -433,6 +532,27 @@ impl Server {
         run_cfg: RunConfig,
         sched_cfg: SchedConfig,
     ) -> Result<Server> {
+        Self::start_with_faults(artifacts_dir, model_name, n_workers, run_cfg, sched_cfg, None)
+    }
+
+    /// [`Server::start_with`] plus a deterministic fault plan (see
+    /// [`crate::runtime::FaultPlan::parse`] for the spec grammar)
+    /// installed on every worker's runtime — the failure-drill entry
+    /// point behind `kappa serve --fault-plan`. The spec is validated
+    /// here so a typo fails startup once, loudly; each worker then
+    /// parses its own copy (workers own their runtimes, so fault
+    /// counters are per-worker).
+    pub fn start_with_faults(
+        artifacts_dir: &str,
+        model_name: &str,
+        n_workers: usize,
+        run_cfg: RunConfig,
+        sched_cfg: SchedConfig,
+        fault_plan: Option<&str>,
+    ) -> Result<Server> {
+        if let Some(spec) = fault_plan {
+            FaultPlan::parse(spec).context("validating --fault-plan spec")?;
+        }
         let n_workers = n_workers.max(1);
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
@@ -447,10 +567,13 @@ impl Server {
             let dir = artifacts_dir.to_string();
             let model = model_name.to_string();
             let cfg = run_cfg.clone();
+            let faults = fault_plan.map(str::to_string);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("kappa-serve-{w}"))
-                    .spawn(move || worker_loop(w, &dir, &model, cfg, sched_cfg, rx, stop, ready))
+                    .spawn(move || {
+                        worker_loop(w, &dir, &model, cfg, sched_cfg, faults, rx, stop, ready)
+                    })
                     .context("spawning worker")?,
             );
         }
@@ -477,6 +600,9 @@ impl Server {
             seed,
             enqueued: Instant::now(),
             evictions: 0,
+            retries: 0,
+            faults: 0,
+            not_before: 0,
             resp: resp_tx,
         };
         let tx = self.tx.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
@@ -499,9 +625,18 @@ impl Server {
             .map(|(i, p)| self.submit(p, request_seed(seed0, i as u64)))
             .collect();
         rxs.into_iter()
-            .map(|rx| match rx {
-                Ok(rx) => rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped response"))),
-                Err(e) => Err(e),
+            .enumerate()
+            .map(|(i, rx)| match rx {
+                // A dropped response channel means the owning worker died
+                // mid-request — say which request and which method so a
+                // batch of 64 doesn't collapse into one anonymous error.
+                Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                    Err(anyhow!(
+                        "worker dropped response for request {i} (method {})",
+                        self.run_cfg.method.name()
+                    ))
+                }),
+                Err(e) => Err(e).context(format!("submitting request {i}")),
             })
             .collect()
     }
@@ -582,6 +717,60 @@ struct Meta {
     enqueued: Instant,
     admitted: Instant,
     evictions: usize,
+    /// Contained-fault retries so far (this tenancy is attempt
+    /// `retries + 1`).
+    retries: usize,
+    /// Contained faults that hit this request so far.
+    faults: usize,
+    /// This tenancy was admitted through the solo (unfused) path — a
+    /// quarantine degradation. Solo completions must not clear bucket
+    /// health: only a *fused* success proves the fused path recovered.
+    solo: bool,
+}
+
+/// Per-bucket packed-dispatch health, keyed by pod bucket — the
+/// quarantine state machine (see `scheduler_loop`'s fault-recovery
+/// docs).
+#[derive(Debug, Default)]
+struct BucketHealth {
+    /// Consecutive failure ticks (a whole pod failing in one tick
+    /// counts once, however many requests it took down).
+    consecutive: usize,
+    /// Tick at which the bucket was quarantined (None = healthy).
+    quarantined_since: Option<u64>,
+    /// A fused probe admission is in flight; further admissions stay
+    /// solo until it resolves.
+    probing: bool,
+    /// Dedupes same-tick failures for `consecutive` counting.
+    last_failure_tick: Option<u64>,
+}
+
+/// Queue-lock acquisition that survives a poisoned mutex: a worker
+/// thread that panicked while holding the lock must not cascade into
+/// every sibling panicking on `lock().unwrap()` — the receiver itself
+/// is still coherent (poisoning marks the *possibility* of broken
+/// invariants; a `Receiver` has none the panic could have torn).
+fn lock_queue(rx: &Mutex<Receiver<Request>>) -> std::sync::MutexGuard<'_, Receiver<Request>> {
+    rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Non-blocking flavor of [`lock_queue`]: `None` only when another
+/// worker actually holds the lock, never because of poison.
+fn try_lock_queue(
+    rx: &Mutex<Receiver<Request>>,
+) -> Option<std::sync::MutexGuard<'_, Receiver<Request>>> {
+    match rx.try_lock() {
+        Ok(guard) => Some(guard),
+        Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    }
+}
+
+/// Pop the first backlog entry whose retry backoff has elapsed
+/// (`not_before <= tick_no`), preserving order among the ready.
+fn pop_ready(backlog: &mut VecDeque<Request>, tick_no: u64) -> Option<Request> {
+    let i = backlog.iter().position(|r| r.not_before <= tick_no)?;
+    backlog.remove(i)
 }
 
 /// How long an **idle** worker may hold the queue lock waiting for work
@@ -596,6 +785,7 @@ fn worker_loop(
     model_name: &str,
     cfg: RunConfig,
     sched_cfg: SchedConfig,
+    fault_plan: Option<String>,
     rx: Arc<Mutex<Receiver<Request>>>,
     stop: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
@@ -609,6 +799,11 @@ fn worker_loop(
     let setup = (|| -> Result<(Engine, (usize, usize))> {
         let manifest = Manifest::load(artifacts_dir)?;
         let rt = Arc::new(Runtime::new()?);
+        // Failure drills: the seeded fault plan is armed before any
+        // dispatch so occurrence counters cover the whole serve.
+        if let Some(spec) = &fault_plan {
+            rt.set_fault_plan(Some(FaultPlan::parse(spec)?));
+        }
         let model = Arc::new(LoadedModel::load(rt, &manifest, model_name)?);
         let engine = Engine::new(model);
         let admission = engine
@@ -652,12 +847,24 @@ fn worker_loop(
             &rx,
             &stop,
             admission,
-            |prompt, seed| {
-                Ok(Flight {
-                    driver: make_driver_fused(&engine, &hub, prompt, &cfg, seed)?,
-                    engine: &engine,
-                    fused: true,
-                })
+            // Quarantined admissions run solo dispatch (bit-identical,
+            // just unfused) — they never touch a pod, so a persistently
+            // failing fused path degrades to solo service instead of
+            // burning every retry budget on the same bad dispatch.
+            |prompt, seed, solo| {
+                if solo {
+                    Ok(Flight {
+                        driver: make_driver(&engine, prompt, &cfg, seed)?,
+                        engine: &engine,
+                        fused: false,
+                    })
+                } else {
+                    Ok(Flight {
+                        driver: make_driver_fused(&engine, &hub, prompt, &cfg, seed)?,
+                        engine: &engine,
+                        fused: true,
+                    })
+                }
             },
             || hub.flush(&engine),
             // Physical admission gate: the next placement's pod bytes
@@ -680,7 +887,7 @@ fn worker_loop(
             &rx,
             &stop,
             admission,
-            |prompt, seed| {
+            |prompt, seed, _solo| {
                 Ok(Flight {
                     driver: make_driver(&engine, prompt, &cfg, seed)?,
                     engine: &engine,
@@ -733,6 +940,38 @@ fn worker_loop(
 /// The whole escalation, including the witness pull, runs only under
 /// the opt-in policy — `PreemptPolicy::Never` workers leave queued
 /// work on the shared queue for workers with capacity.
+///
+/// # Fault recovery (PR 6)
+///
+/// A request that fails with a *contained* fault — a [`PodFault`] or an
+/// injected [`FaultError`] anywhere in its error chain — is not
+/// surfaced: it is requeued into the worker backlog with a
+/// deterministic backoff ([`SchedConfig::backoff_ticks`] scheduler
+/// ticks) and re-prefilled from scratch on re-admission, up to
+/// [`SchedConfig::retry_budget`] times. Drivers are deterministic in
+/// `(prompt, seed)`, so the recovered output is bit-identical to a
+/// fault-free run. A spent budget surfaces
+/// [`RequestError::RetriesExhausted`] naming the last fault site and
+/// the attempt count. Any other error (infrastructure, bad prompt)
+/// surfaces immediately — retry is reserved for faults the containment
+/// machinery vouches for.
+///
+/// Pod-fault failures also drive per-bucket **quarantine**:
+/// [`SchedConfig::quarantine_after`] consecutive failure *ticks* on a
+/// bucket (a pod taking down N requests in one tick counts once) flip
+/// it to quarantined, and subsequent admissions spawn through the solo
+/// path (`spawn`'s third argument) until a cooldown of
+/// [`SchedConfig::quarantine_cooldown`] ticks has passed — then one
+/// admission is sent back through the fused path as a probe. A fused
+/// completion clears all quarantine state (the fused path demonstrably
+/// works); a probe failure re-arms the cooldown. Solo completions
+/// prove nothing about pods and clear nothing.
+///
+/// Per-request **deadlines** ([`SchedConfig::deadline_ms`], measured
+/// from submission) are enforced at plan time: expired in-flight
+/// requests are drained before the tick (their slots and pod rows free
+/// immediately) and expired queued requests are refused at admission,
+/// both with [`RequestError::DeadlineExceeded`].
 #[allow(clippy::too_many_arguments)]
 fn scheduler_loop<P: Pollable>(
     worker_id: usize,
@@ -740,7 +979,7 @@ fn scheduler_loop<P: Pollable>(
     rx: &Mutex<Receiver<Request>>,
     stop: &AtomicBool,
     admission: (usize, usize),
-    mut spawn: impl FnMut(&str, u64) -> Result<P>,
+    mut spawn: impl FnMut(&str, u64, bool) -> Result<P>,
     mut dispatch: impl FnMut() -> Result<()>,
     mut admit_extra: impl FnMut(bool) -> bool,
     mut reclaim: impl FnMut(bool) -> Result<usize>,
@@ -749,9 +988,18 @@ fn scheduler_loop<P: Pollable>(
     let mut closed = false;
     // Worker-local requeue: holds at most one queue-pulled witness while
     // admission is blocked, plus any evicted requests awaiting
-    // re-admission. Drained before the shared queue.
+    // re-admission and any faulted requests waiting out their retry
+    // backoff. Drained (backoff permitting) before the shared queue.
     let mut backlog: VecDeque<Request> = VecDeque::new();
+    // Monotone tick counter — the deterministic clock for retry backoff
+    // and quarantine cooldown. Advances every loop iteration (idle
+    // iterations included), so backed-off work never deadlocks.
+    let mut tick_no: u64 = 0;
+    // Per-bucket packed-dispatch health (quarantine state machine).
+    let mut health: std::collections::BTreeMap<usize, BucketHealth> =
+        std::collections::BTreeMap::new();
     loop {
+        tick_no += 1;
         if stop.load(Ordering::SeqCst) {
             // Immediate shutdown: abort in-flight work, refuse whatever
             // is still queued, exit. (`try_recv` keeps returning
@@ -764,21 +1012,39 @@ fn scheduler_loop<P: Pollable>(
             for req in backlog.drain(..) {
                 let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
             }
-            while let Ok(req) = rx.lock().unwrap().try_recv() {
+            while let Ok(req) = lock_queue(rx).try_recv() {
                 let _ = req.resp.send(Err(anyhow!("server shut down with request still queued")));
             }
             return;
         }
 
         // Between ticks every pod is quiescent: run the scheduled
-        // (streak-armed) compaction pass. Compaction is a dispatch; a
-        // failure poisons the in-flight set loudly, like a failed flush.
+        // (streak-armed) compaction pass. Compaction faults are
+        // contained pod-side (the failing pod is poisoned and its
+        // requests fail with a retryable `PodFault` at their next
+        // stage/absorb — see `FusionHub::maybe_compact`); an `Err` here
+        // is hub-level infrastructure, which does poison the in-flight
+        // set loudly.
         if let Err(e) = reclaim(false) {
             let msg = format!("{e:#}");
             sched.abort_all(|meta| {
                 let _ = meta.resp.send(Err(anyhow!("pod compaction failed: {msg}")));
             });
             continue;
+        }
+
+        // Deadline enforcement at plan time: expired in-flight requests
+        // free their slots (and pod rows) before the tick plans anyone.
+        if sched_cfg.deadline_ms > 0 {
+            let deadline = Duration::from_millis(sched_cfg.deadline_ms);
+            sched.drain_where(
+                |m: &Meta| m.enqueued.elapsed() >= deadline,
+                |meta| {
+                    let _ = meta.resp.send(Err(anyhow::Error::new(
+                        RequestError::DeadlineExceeded { deadline_ms: sched_cfg.deadline_ms },
+                    )));
+                },
+            );
         }
 
         // Admission: refill capacity freed since the last tick. An idle
@@ -796,11 +1062,11 @@ fn scheduler_loop<P: Pollable>(
             let verdict = sched.admit_verdict(admission.0, admission.1);
             let phys_ok = admit_extra(idle);
             if verdict == AdmitVerdict::Admit && phys_ok {
-                let polled = backlog.pop_front().or_else(|| {
+                let polled = pop_ready(&mut backlog, tick_no).or_else(|| {
                     if closed {
                         None
                     } else if idle {
-                        match rx.lock().unwrap().recv_timeout(IDLE_QUEUE_SLICE) {
+                        match lock_queue(rx).recv_timeout(IDLE_QUEUE_SLICE) {
                             Ok(r) => Some(r),
                             Err(RecvTimeoutError::Timeout) => None,
                             Err(RecvTimeoutError::Disconnected) => {
@@ -809,8 +1075,8 @@ fn scheduler_loop<P: Pollable>(
                             }
                         }
                     } else {
-                        match rx.try_lock() {
-                            Ok(queue) => match queue.try_recv() {
+                        match try_lock_queue(rx) {
+                            Some(queue) => match queue.try_recv() {
                                 Ok(r) => Some(r),
                                 Err(TryRecvError::Empty) => None,
                                 Err(TryRecvError::Disconnected) => {
@@ -818,7 +1084,7 @@ fn scheduler_loop<P: Pollable>(
                                     None
                                 }
                             },
-                            Err(_) => None,
+                            None => None,
                         }
                     }
                 });
@@ -828,8 +1094,37 @@ fn scheduler_loop<P: Pollable>(
                         req.resp.send(Err(anyhow!("server shut down with request still queued")));
                     continue;
                 }
+                // A request whose deadline lapsed while queued is
+                // refused before spending a prefill on it.
+                if sched_cfg.deadline_ms > 0
+                    && req.enqueued.elapsed() >= Duration::from_millis(sched_cfg.deadline_ms)
+                {
+                    let _ = req.resp.send(Err(anyhow::Error::new(
+                        RequestError::DeadlineExceeded { deadline_ms: sched_cfg.deadline_ms },
+                    )));
+                    continue;
+                }
+                // Quarantine check: while any bucket is quarantined,
+                // admissions degrade to solo dispatch — except that once
+                // a bucket's cooldown has elapsed, the next admission is
+                // sent through the fused path as the recovery probe (one
+                // probe in flight at a time; further admissions stay
+                // solo until it resolves).
+                let mut solo = false;
+                let mut probes: Vec<usize> = Vec::new();
+                for (&bucket, h) in health.iter_mut() {
+                    let Some(since) = h.quarantined_since else { continue };
+                    if h.probing {
+                        solo = true;
+                    } else if tick_no >= since.saturating_add(sched_cfg.quarantine_cooldown) {
+                        h.probing = true;
+                        probes.push(bucket);
+                    } else {
+                        solo = true;
+                    }
+                }
                 let admitted = Instant::now();
-                match spawn(&req.prompt, req.seed) {
+                match spawn(&req.prompt, req.seed, solo) {
                     Ok(flight) => {
                         sched.admit(
                             flight,
@@ -840,12 +1135,22 @@ fn scheduler_loop<P: Pollable>(
                                 enqueued: req.enqueued,
                                 admitted,
                                 evictions: req.evictions,
+                                retries: req.retries,
+                                faults: req.faults,
+                                solo,
                             },
                         );
                     }
                     // Driver construction failed (bad prompt, unsupported
-                    // config): fail this request, keep serving.
+                    // config): fail this request, keep serving. A probe
+                    // that never took flight proves nothing — put those
+                    // buckets back on cooldown-elapsed standby.
                     Err(e) => {
+                        for bucket in probes {
+                            if let Some(h) = health.get_mut(&bucket) {
+                                h.probing = false;
+                            }
+                        }
                         let _ = req.resp.send(Err(e));
                     }
                 }
@@ -931,6 +1236,9 @@ fn scheduler_loop<P: Pollable>(
                         seed: meta.seed,
                         enqueued: meta.enqueued,
                         evictions: meta.evictions + 1,
+                        retries: meta.retries,
+                        faults: meta.faults,
+                        not_before: 0,
                         resp: meta.resp,
                     });
                     continue;
@@ -950,15 +1258,21 @@ fn scheduler_loop<P: Pollable>(
         // One tick stale at worst (the current tick's growth lands in
         // the next response) — fine for a monotone high-water mark.
         let kv_peak = sched.mem_peak();
-        sched.tick(&mut dispatch, |meta, result| {
-            let result = result.map(|mut output| {
+        sched.tick(&mut dispatch, |meta, result| match result {
+            Ok(mut output) => {
+                // A fused completion proves the fused path healthy end
+                // to end — lift every quarantine. Solo completions prove
+                // nothing about pods and clear nothing.
+                if !meta.solo {
+                    health.clear();
+                }
                 // Service time spans the *final* admission; an evicted
-                // request's earlier tenancy shows up as queue time (it
-                // was returned to the queue, after all).
+                // or retried request's earlier tenancy shows up as
+                // queue time (it was returned to the queue, after all).
                 let service_seconds = meta.admitted.elapsed().as_secs_f64();
                 let queue_seconds = meta.admitted.duration_since(meta.enqueued).as_secs_f64();
                 output.metrics.wall_seconds = service_seconds;
-                Response {
+                let _ = meta.resp.send(Ok(Response {
                     output,
                     queue_seconds,
                     service_seconds,
@@ -966,9 +1280,69 @@ fn scheduler_loop<P: Pollable>(
                     inflight,
                     worker_kv_peak_bytes: kv_peak,
                     evictions: meta.evictions,
+                    retries: meta.retries,
+                    faults_survived: meta.faults,
+                }));
+            }
+            Err(e) => {
+                // Only faults the containment machinery vouches for are
+                // retryable: a pod-scoped dispatch failure or a directly
+                // injected fault. Everything else (infrastructure, bad
+                // prompt) surfaces immediately. `downcast_ref` on the
+                // error itself only sees the outermost layer — walk the
+                // whole context chain.
+                let pod_fault = e.chain().find_map(|c| c.downcast_ref::<PodFault>()).cloned();
+                let injected = e.chain().find_map(|c| c.downcast_ref::<FaultError>()).copied();
+                if pod_fault.is_none() && injected.is_none() {
+                    let _ = meta.resp.send(Err(e));
+                    return;
                 }
-            });
-            let _ = meta.resp.send(result);
+                // Quarantine bookkeeping: pod faults count per failure
+                // *tick* per bucket (one pod dying fails every request
+                // leasing its rows — that is one dispatch failure, not
+                // N).
+                if let Some(f) = &pod_fault {
+                    let h = health.entry(f.bucket).or_default();
+                    if h.probing {
+                        // The recovery probe failed: re-arm the cooldown.
+                        h.probing = false;
+                        h.quarantined_since = Some(tick_no);
+                        h.last_failure_tick = Some(tick_no);
+                    } else if h.last_failure_tick != Some(tick_no) {
+                        h.last_failure_tick = Some(tick_no);
+                        h.consecutive += 1;
+                        if h.quarantined_since.is_none()
+                            && h.consecutive >= sched_cfg.quarantine_after
+                        {
+                            h.quarantined_since = Some(tick_no);
+                        }
+                    }
+                }
+                if meta.retries < sched_cfg.retry_budget {
+                    // Requeue for a bit-identical re-prefill after the
+                    // deterministic backoff. Eviction history rides
+                    // along — a retried evictee keeps its eviction
+                    // immunity.
+                    backlog.push_back(Request {
+                        prompt: meta.prompt,
+                        seed: meta.seed,
+                        enqueued: meta.enqueued,
+                        evictions: meta.evictions,
+                        retries: meta.retries + 1,
+                        faults: meta.faults + 1,
+                        not_before: tick_no.saturating_add(sched_cfg.backoff_ticks),
+                        resp: meta.resp,
+                    });
+                } else {
+                    let site = pod_fault
+                        .map(|f| f.site)
+                        .or_else(|| injected.map(|f| f.site.name().to_string()))
+                        .unwrap_or_else(|| "unknown".to_string());
+                    let _ = meta.resp.send(Err(anyhow::Error::new(
+                        RequestError::RetriesExhausted { site, attempts: meta.retries + 1 },
+                    )));
+                }
+            }
         });
     }
 }
@@ -997,6 +1371,9 @@ mod tests {
         /// Slots after each remaining poll (front = next poll).
         slot_plan: Vec<usize>,
         fail: bool,
+        /// Fail with a retryable contained fault (a [`PodFault`] in the
+        /// error chain) instead of `fail`'s bare infrastructure error.
+        fault: bool,
         /// Shared completion log — records cross-request finish order.
         done_log: Option<Arc<Mutex<Vec<String>>>>,
     }
@@ -1010,6 +1387,7 @@ mod tests {
                 slots,
                 slot_plan: Vec::new(),
                 fail: false,
+                fault: false,
                 done_log: None,
             }
         }
@@ -1025,6 +1403,15 @@ mod tests {
         fn absorb(&mut self) -> Result<StepOutcome> {
             if self.fail {
                 return Err(anyhow!("injected failure"));
+            }
+            if self.fault {
+                return Err(anyhow::Error::new(PodFault {
+                    pod: 7,
+                    bucket: 8,
+                    site: "superstep".to_string(),
+                    detail: "injected pod fault".to_string(),
+                })
+                .context("absorbing fused step"));
             }
             if let Some(next) = self.slot_plan.first().copied() {
                 self.slots = next;
@@ -1107,7 +1494,8 @@ mod tests {
 
     #[test]
     fn scheduler_admission_respects_and_refills_slot_budget() {
-        let cfg = SchedConfig { max_inflight: 8, slot_budget: 8, fuse: false, ..SchedConfig::default() };
+        let cfg =
+            SchedConfig { max_inflight: 8, slot_budget: 8, fuse: false, ..SchedConfig::default() };
         let mut sched: Scheduler<FakeFlight, usize> = Scheduler::new(cfg);
         // Request A holds 8 slots, pruning to 2 on its first poll.
         let mut a = FakeFlight::new("a", 4, 8);
@@ -1312,6 +1700,12 @@ mod tests {
         assert_eq!(done, vec![("b", true), ("c", true), ("a", true)]);
     }
 
+    /// A dispatch-hook `Err` still fails the whole in-flight set: since
+    /// PR 6 the fusion hub *contains* pod-scoped failures (poisoning the
+    /// pod and returning `Ok` — victims fail individually with a
+    /// retryable [`PodFault`] at absorb), so an `Err` escaping the
+    /// dispatch hook means hub-level infrastructure died, and limping on
+    /// would serve every request from torn state.
     #[test]
     fn tick_dispatch_failure_fails_the_inflight_set_loudly() {
         let dispatches = Arc::new(Mutex::new(0usize));
@@ -1339,6 +1733,9 @@ mod tests {
             seed,
             enqueued: Instant::now(),
             evictions: 0,
+            retries: 0,
+            faults: 0,
+            not_before: 0,
             resp: resp_tx,
         })
         .expect("queue open");
@@ -1350,7 +1747,8 @@ mod tests {
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         let stop = Arc::new(AtomicBool::new(false));
-        let cfg = SchedConfig { max_inflight: 3, slot_budget: 16, fuse: false, ..SchedConfig::default() };
+        let cfg =
+            SchedConfig { max_inflight: 3, slot_budget: 16, fuse: false, ..SchedConfig::default() };
 
         // Request "len:k" runs k polls; slower requests must not block
         // faster ones admitted behind them.
@@ -1370,7 +1768,7 @@ mod tests {
                     &rx,
                     &stop,
                     (4, 0),
-                    |prompt, _seed| {
+                    |prompt, _seed, _solo| {
                         let polls: usize = prompt.trim_start_matches("len:").parse().unwrap();
                         let mut f = FakeFlight::new(prompt, polls, 4);
                         f.done_log = Some(Arc::clone(&done_log));
@@ -1406,7 +1804,8 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         // Capacity 1: the second and third requests stay queued behind a
         // long-running first request.
-        let cfg = SchedConfig { max_inflight: 1, slot_budget: 4, fuse: false, ..SchedConfig::default() };
+        let cfg =
+            SchedConfig { max_inflight: 1, slot_budget: 4, fuse: false, ..SchedConfig::default() };
 
         let in_flight = submit_to(&tx, "len:1000000", 0);
         let queued_a = submit_to(&tx, "len:1", 1);
@@ -1422,7 +1821,7 @@ mod tests {
                     &rx,
                     &stop,
                     (4, 0),
-                    |prompt, _seed| {
+                    |prompt, _seed, _solo| {
                         let polls: usize = prompt.trim_start_matches("len:").parse().unwrap();
                         Ok(FakeFlight::new(prompt, polls, 4))
                     },
@@ -1465,7 +1864,7 @@ mod tests {
                     &rx,
                     &stop,
                     (1, 0),
-                    |prompt, _| {
+                    |prompt, _, _| {
                         if prompt == "bad" {
                             Err(anyhow!("oversized prompt"))
                         } else {
@@ -1504,6 +1903,7 @@ mod tests {
             mem_budget_bytes: 8192,
             fuse: false,
             preempt: PreemptPolicy::EvictYoungest,
+            ..SchedConfig::default()
         };
 
         // Spawn log proves the evictee really was restarted (two spawns).
@@ -1524,7 +1924,7 @@ mod tests {
                     &rx,
                     &stop,
                     (3, 3 * 1024),
-                    |prompt, _seed| {
+                    |prompt, _seed, _solo| {
                         spawns.lock().unwrap().push(prompt.to_string());
                         let polls: usize =
                             prompt.rsplit("len:").next().unwrap().parse().unwrap();
@@ -1569,6 +1969,7 @@ mod tests {
             mem_budget_bytes: 8192,
             fuse: false,
             preempt: PreemptPolicy::Never,
+            ..SchedConfig::default()
         };
 
         let rxs: Vec<_> = [("a:len:4", 0), ("b:len:4", 1), ("c:len:2", 2)]
@@ -1587,7 +1988,7 @@ mod tests {
                     &rx,
                     &stop,
                     (3, 3 * 1024),
-                    |prompt, _seed| {
+                    |prompt, _seed, _solo| {
                         let polls: usize =
                             prompt.rsplit("len:").next().unwrap().parse().unwrap();
                         Ok(FakeFlight::new(prompt, polls, 3))
@@ -1620,6 +2021,7 @@ mod tests {
             mem_budget_bytes: 8192,
             fuse: false,
             preempt: PreemptPolicy::EvictYoungest,
+            ..SchedConfig::default()
         };
 
         let rx_a = submit_to(&tx, "a:len:6", 0);
@@ -1645,7 +2047,7 @@ mod tests {
                     &rx,
                     &stop,
                     (1, 1024),
-                    |prompt, _seed| {
+                    |prompt, _seed, _solo| {
                         let polls: usize =
                             prompt.rsplit("len:").next().unwrap().parse().unwrap();
                         // Admitting the second request "fills" the pods.
@@ -1675,5 +2077,477 @@ mod tests {
         }
         worker.join().expect("clean exit");
         assert!(*forced.lock().unwrap() >= 1, "memory-blocked admission must force a reclaim");
+    }
+
+    // ---- fault containment, retry, quarantine, deadlines (PR 6) ----
+
+    /// A request failed by a contained fault (a [`PodFault`] in its
+    /// error chain) is requeued and re-prefilled — the caller sees one
+    /// successful response with the recovery in its telemetry, and
+    /// bystander requests are untouched. `backoff_ticks: 5` doubles as
+    /// the liveness check: the tick clock must advance while the worker
+    /// idles, or the backed-off retry would never re-admit.
+    #[test]
+    fn scheduler_loop_retries_a_pod_faulted_request_to_success() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            fuse: false,
+            retry_budget: 2,
+            backoff_ticks: 5,
+            ..SchedConfig::default()
+        };
+
+        let rx_a = submit_to(&tx, "a", 0);
+        let rx_b = submit_to(&tx, "b", 1);
+        drop(tx);
+
+        let spawns: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let spawns = Arc::clone(&spawns);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, _solo| {
+                        spawns.lock().unwrap().push(prompt.to_string());
+                        let mut f = FakeFlight::new(prompt, 2, 1);
+                        // "a" is hit by a fault on its first tenancy only.
+                        f.fault = prompt == "a"
+                            && spawns.lock().unwrap().iter().filter(|p| *p == "a").count() == 1;
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let ra = rx_a.recv().expect("alive").expect("the faulted request must recover");
+        let rb = rx_b.recv().expect("alive").expect("bystander ok");
+        worker.join().expect("clean exit");
+
+        assert_eq!(ra.retries, 1, "one contained fault costs exactly one retry");
+        assert_eq!(ra.faults_survived, 1);
+        assert_eq!((rb.retries, rb.faults_survived), (0, 0), "bystander saw no fault");
+        let log = spawns.lock().unwrap().clone();
+        assert_eq!(log.iter().filter(|p| *p == "a").count(), 2, "re-prefilled once: {log:?}");
+        assert_eq!(log.iter().filter(|p| *p == "b").count(), 1, "no extra dispatches: {log:?}");
+    }
+
+    /// A persistently faulting request spends its whole retry budget and
+    /// surfaces the named terminal error carrying the fault site and the
+    /// attempt count — not a success, not a hang, not an anonymous
+    /// string.
+    #[test]
+    fn scheduler_loop_surfaces_retries_exhausted_with_site_and_attempts() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            fuse: false,
+            retry_budget: 2,
+            backoff_ticks: 0,
+            ..SchedConfig::default()
+        };
+
+        let rx_a = submit_to(&tx, "doomed", 0);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, _solo| {
+                        let mut f = FakeFlight::new(prompt, 2, 1);
+                        f.fault = true; // every tenancy faults
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let err = rx_a.recv().expect("alive").expect_err("the budget must run out");
+        worker.join().expect("clean exit");
+        let named = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<RequestError>())
+            .expect("terminal error must be a typed RequestError");
+        assert_eq!(
+            *named,
+            RequestError::RetriesExhausted { site: "superstep".to_string(), attempts: 3 },
+            "attempts = first admission + retry_budget retries, site = last fault's site"
+        );
+    }
+
+    /// The quarantine state machine, end to end on one worker
+    /// (`max_inflight: 1` makes the tick sequence deterministic): a
+    /// pod-faulting fused admission quarantines the bucket
+    /// (`quarantine_after: 1`), the retry is admitted through the solo
+    /// path, a later admission past the cooldown probes the fused path,
+    /// and the probe's success lifts the quarantine for everyone after.
+    #[test]
+    fn scheduler_loop_quarantines_to_solo_and_probes_back_to_fused() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            max_inflight: 1,
+            fuse: false,
+            retry_budget: 2,
+            backoff_ticks: 0,
+            quarantine_after: 1,
+            quarantine_cooldown: 2,
+            ..SchedConfig::default()
+        };
+
+        let rx_bad = submit_to(&tx, "bad", 0);
+        let rx_second = submit_to(&tx, "second", 1);
+        let rx_third = submit_to(&tx, "third", 2);
+        drop(tx);
+
+        let spawns: Arc<Mutex<Vec<(String, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let spawns = Arc::clone(&spawns);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, solo| {
+                        spawns.lock().unwrap().push((prompt.to_string(), solo));
+                        let mut f = FakeFlight::new(prompt, 1, 1);
+                        // The fused path faults "bad"; solo never faults.
+                        f.fault = prompt == "bad" && !solo;
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let rbad = rx_bad.recv().expect("alive").expect("recovers via solo");
+        let rsecond = rx_second.recv().expect("alive").expect("probe ok");
+        let rthird = rx_third.recv().expect("alive").expect("post-recovery ok");
+        worker.join().expect("clean exit");
+
+        assert_eq!(rbad.retries, 1);
+        assert_eq!((rsecond.retries, rthird.retries), (0, 0));
+        let log = spawns.lock().unwrap().clone();
+        assert_eq!(
+            log,
+            vec![
+                ("bad".to_string(), false),   // fused admission faults → quarantine
+                ("bad".to_string(), true),    // retry degraded to solo (inside cooldown)
+                ("second".to_string(), false), // cooldown elapsed: fused probe, succeeds
+                ("third".to_string(), false), // quarantine lifted by the probe
+            ],
+            "quarantine must degrade to solo, then probe back to fused"
+        );
+    }
+
+    /// Eviction × retry (PR 5 × PR 6): a request that was evicted once
+    /// and later hit by a contained fault keeps both histories — the
+    /// retry preserves its eviction count (and with it the
+    /// evicted-at-most-once immunity) and the response reports both.
+    #[test]
+    fn scheduler_loop_retried_evictee_keeps_eviction_immunity_and_telemetry() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            max_inflight: 8,
+            slot_budget: usize::MAX,
+            mem_budget_bytes: 8192,
+            fuse: false,
+            preempt: PreemptPolicy::EvictYoungest,
+            retry_budget: 2,
+            backoff_ticks: 0,
+            ..SchedConfig::default()
+        };
+
+        let spawns: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let rx_a = submit_to(&tx, "a:len:6", 0);
+        let rx_b = submit_to(&tx, "b:len:6", 1);
+        let rx_c = submit_to(&tx, "c:len:2", 2);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let spawns = Arc::clone(&spawns);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (3, 3 * 1024),
+                    |prompt, _seed, _solo| {
+                        spawns.lock().unwrap().push(prompt.to_string());
+                        let polls: usize =
+                            prompt.rsplit("len:").next().unwrap().parse().unwrap();
+                        let mut f = FakeFlight::new(prompt, polls, 3);
+                        // B's post-eviction tenancy (its second spawn) is
+                        // hit by a contained fault.
+                        f.fault = prompt.starts_with("b:")
+                            && spawns
+                                .lock()
+                                .unwrap()
+                                .iter()
+                                .filter(|p| p.starts_with("b:"))
+                                .count()
+                                == 2;
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let ra = rx_a.recv().expect("alive").expect("a ok");
+        let rb = rx_b.recv().expect("alive").expect("b survives eviction and fault");
+        let rc = rx_c.recv().expect("alive").expect("c ok");
+        worker.join().expect("clean exit");
+
+        assert_eq!(rb.evictions, 1, "the eviction must survive the retry requeue");
+        assert_eq!(rb.retries, 1);
+        assert_eq!(rb.faults_survived, 1);
+        assert_eq!((ra.evictions, ra.retries), (0, 0));
+        assert_eq!((rc.evictions, rc.retries), (0, 0));
+        let log = spawns.lock().unwrap().clone();
+        assert_eq!(
+            log.iter().filter(|p| p.starts_with("b:")).count(),
+            3,
+            "b: admit, re-admit after eviction, re-admit after fault: {log:?}"
+        );
+    }
+
+    /// Shutdown with a faulted request waiting out its retry backoff:
+    /// the backlog entry is refused with an error — never silently
+    /// dropped, never a hang.
+    #[test]
+    fn scheduler_loop_shutdown_with_pending_retry_errs_without_deadlock() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Effectively infinite backoff: the retry can never re-admit on
+        // its own; only the shutdown path can resolve it.
+        let cfg = SchedConfig {
+            fuse: false,
+            retry_budget: 5,
+            backoff_ticks: u64::MAX / 2,
+            ..SchedConfig::default()
+        };
+
+        let (spawned_tx, spawned_rx) = channel::<()>();
+        let rx_a = submit_to(&tx, "doomed", 0);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    move |prompt, _seed, _solo| {
+                        let mut f = FakeFlight::new(prompt, 1, 1);
+                        f.fault = true;
+                        let _ = spawned_tx.send(());
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        // Wait until the doomed request is in flight, give its fault a
+        // moment to land in the backlog, then shut down.
+        spawned_rx.recv().expect("first spawn happened");
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::SeqCst);
+        drop(tx);
+        worker.join().expect("no deadlock with a backed-off retry pending");
+        assert!(
+            rx_a.recv().expect("channel alive").is_err(),
+            "the pending retry must be refused, not dropped"
+        );
+    }
+
+    /// A worker thread that panicked while holding the queue lock
+    /// poisons the mutex; surviving workers must recover the guard and
+    /// keep serving instead of cascading the panic through
+    /// `lock().unwrap()`.
+    #[test]
+    fn scheduler_loop_survives_a_poisoned_queue_mutex() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        {
+            let rx = Arc::clone(&rx);
+            let _ = std::thread::spawn(move || {
+                let _guard = rx.lock().unwrap();
+                panic!("poisoning the queue lock");
+            })
+            .join();
+        }
+        assert!(rx.is_poisoned(), "precondition: the queue lock is poisoned");
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let rx_a = submit_to(&tx, "len:2", 0);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    SchedConfig { fuse: false, ..SchedConfig::default() },
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, _solo| Ok(FakeFlight::new(prompt, 2, 1)),
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        assert!(
+            rx_a.recv().expect("alive").is_ok(),
+            "a poisoned queue lock must not take the worker down"
+        );
+        worker.join().expect("clean exit");
+    }
+
+    /// Per-request deadlines: an in-flight request past its deadline is
+    /// drained at plan time (freeing the slot for the next admission),
+    /// and a queued request whose deadline lapsed while waiting is
+    /// refused without spawning — both with the typed terminal error.
+    #[test]
+    fn scheduler_loop_enforces_per_request_deadlines() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig {
+            max_inflight: 1,
+            fuse: false,
+            deadline_ms: 60,
+            ..SchedConfig::default()
+        };
+
+        // Both requests are effectively endless — neither can complete
+        // inside the deadline, whether it runs or waits.
+        let rx_slow = submit_to(&tx, "len:100000000", 0);
+        let rx_queued = submit_to(&tx, "len:100000000", 1);
+        drop(tx);
+
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, _solo| {
+                        let polls: usize = prompt.trim_start_matches("len:").parse().unwrap();
+                        Ok(FakeFlight::new(prompt, polls, 1))
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        for rx in [rx_slow, rx_queued] {
+            let err = rx.recv().expect("alive").expect_err("the deadline must fire");
+            let named = err
+                .chain()
+                .find_map(|c| c.downcast_ref::<RequestError>())
+                .expect("typed deadline error");
+            assert_eq!(*named, RequestError::DeadlineExceeded { deadline_ms: 60 });
+        }
+        worker.join().expect("expired requests free their slots and the worker exits");
+    }
+
+    /// Non-contained errors are not retried: a bare infrastructure
+    /// failure (no `PodFault`/`FaultError` in the chain) surfaces
+    /// immediately even with retry budget to spare.
+    #[test]
+    fn scheduler_loop_does_not_retry_infrastructure_errors() {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SchedConfig { fuse: false, retry_budget: 5, ..SchedConfig::default() };
+
+        let rx_a = submit_to(&tx, "a", 0);
+        drop(tx);
+
+        let spawns = Arc::new(Mutex::new(0usize));
+        let worker = {
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let spawns = Arc::clone(&spawns);
+            std::thread::spawn(move || {
+                scheduler_loop(
+                    0,
+                    cfg,
+                    &rx,
+                    &stop,
+                    (1, 0),
+                    |prompt, _seed, _solo| {
+                        *spawns.lock().unwrap() += 1;
+                        let mut f = FakeFlight::new(prompt, 2, 1);
+                        f.fail = true; // bare error, not a contained fault
+                        Ok(f)
+                    },
+                    no_dispatch,
+                    |_| true,
+                    |_| Ok(0),
+                );
+            })
+        };
+
+        let err = rx_a.recv().expect("alive").expect_err("must fail straight through");
+        worker.join().expect("clean exit");
+        assert_eq!(*spawns.lock().unwrap(), 1, "no retry for non-contained errors");
+        assert!(
+            err.chain().find_map(|c| c.downcast_ref::<RequestError>()).is_none(),
+            "the original error surfaces, not a retry wrapper: {err:#}"
+        );
     }
 }

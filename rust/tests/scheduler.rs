@@ -24,8 +24,8 @@ use kappa::coordinator::{
     make_driver, make_driver_fused, run_method, Driver, GenOutput, StepOutcome, StepPlan,
 };
 use kappa::data::Dataset;
-use kappa::engine::{Engine, FuseConfig, FusionHub};
-use kappa::runtime::{LoadedModel, Manifest, Runtime};
+use kappa::engine::{Engine, FuseConfig, FusionHub, PodFault};
+use kappa::runtime::{FaultError, FaultPlan, FaultSite, LoadedModel, Manifest, Runtime};
 use kappa::server::{request_seed, Pollable, SchedConfig, Scheduler, Server};
 use kappa::util::rng::Pcg64;
 
@@ -142,7 +142,8 @@ fn server_schedules_many_requests_onto_few_workers() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 4, slot_budget: 32, fuse: true, ..SchedConfig::default() };
+    let sched =
+        SchedConfig { max_inflight: 4, slot_budget: 32, fuse: true, ..SchedConfig::default() };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(8, 41);
@@ -374,7 +375,8 @@ fn server_shutdown_now_fails_queued_requests_without_deadlock() {
         return;
     }
     let cfg = RunConfig { method: Method::Kappa, n: 4, ..RunConfig::default() };
-    let sched = SchedConfig { max_inflight: 1, slot_budget: 32, fuse: true, ..SchedConfig::default() };
+    let sched =
+        SchedConfig { max_inflight: 1, slot_budget: 32, fuse: true, ..SchedConfig::default() };
     let server = Server::start_with(&artifacts_dir(), "sm", 1, cfg, sched).expect("boot");
 
     let problems = Dataset::GsmSynth.generate(6, 51);
@@ -445,6 +447,151 @@ fn requests_surviving_pod_compaction_are_bit_identical_to_blocking_runs() {
         any_compaction,
         "the aggressive trigger never compacted a pod — the test exercised nothing"
     );
+}
+
+// ---- fault-domain isolation and deterministic recovery (PR 6) ----
+
+/// Run `prompts` through the fused scheduler core under an installed
+/// fault plan, retrying any request failed by a *contained* fault (a
+/// [`PodFault`] or [`FaultError`] in its error chain) exactly the way
+/// the worker loop does: requeue, fresh driver, same `(prompt, seed)`.
+/// Any non-contained error fails the test. Returns outputs indexed by
+/// original position, per-request retry and spawn counts, and the hub
+/// stats.
+fn run_faulted_fused_trace(
+    engine: &Engine,
+    fuse_cfg: FuseConfig,
+    prompts: &[String],
+    cfg: &RunConfig,
+    seed0: u64,
+    max_inflight: usize,
+) -> (Vec<GenOutput>, Vec<usize>, Vec<usize>, kappa::engine::FuseStats) {
+    let hub = FusionHub::new(fuse_cfg);
+    let sched_cfg =
+        SchedConfig { max_inflight, slot_budget: 32, fuse: true, ..SchedConfig::default() };
+    let mut sched: Scheduler<FusedFlight, usize> = Scheduler::new(sched_cfg);
+    let admission = engine.admission_cost(cfg.concurrent_branches()).expect("admission cost");
+    let mut queue: VecDeque<usize> = (0..prompts.len()).collect();
+    let mut out: Vec<Option<GenOutput>> = (0..prompts.len()).map(|_| None).collect();
+    let mut retries = vec![0usize; prompts.len()];
+    let mut spawns = vec![0usize; prompts.len()];
+    let mut ticks = 0usize;
+    while !(queue.is_empty() && sched.is_empty()) {
+        ticks += 1;
+        assert!(ticks < 100_000, "faulted trace runaway");
+        while !queue.is_empty() && sched.can_admit(admission.0, admission.1) {
+            let i = queue.pop_front().unwrap();
+            spawns[i] += 1;
+            let driver =
+                make_driver_fused(engine, &hub, &prompts[i], cfg, request_seed(seed0, i as u64))
+                    .expect("fused driver");
+            sched.admit(FusedFlight { driver, engine }, i);
+        }
+        let mut requeue: Vec<usize> = Vec::new();
+        sched.tick(
+            || hub.flush(engine),
+            |i, r| match r {
+                Ok(o) => out[i] = Some(o),
+                Err(e) => {
+                    let contained = e.chain().any(|c| {
+                        c.downcast_ref::<PodFault>().is_some()
+                            || c.downcast_ref::<FaultError>().is_some()
+                    });
+                    assert!(contained, "request {i} failed with a non-contained error: {e:#}");
+                    requeue.push(i);
+                }
+            },
+        );
+        for i in requeue {
+            retries[i] += 1;
+            queue.push_back(i);
+        }
+    }
+    let stats = hub.stats();
+    (
+        out.into_iter().map(|o| o.expect("request never completed")).collect(),
+        retries,
+        spawns,
+        stats,
+    )
+}
+
+/// The PR 6 load-bearing claim, pinned for all four methods: under a
+/// seeded transient fault plan that takes down one pod, only the
+/// requests leasing rows in that pod retry — and they complete
+/// **bit-identical** to a fault-free run — while every other request
+/// observes zero errors and zero extra dispatches. `pod_bucket: 1`
+/// clamps each pod to one request's bucket, so pod containment is
+/// observable per request, and the Runtime's dispatch counter must show
+/// the exact deficit of the aborted dispatches (an injected fault fires
+/// *before* the execute and before the counter).
+#[test]
+fn injected_pod_faults_recover_bit_identical_with_containment() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = Dataset::GsmSynth.generate(5, 77);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let per_request_pods = FuseConfig { pod_bucket: 1, ..FuseConfig::default() };
+    let rt = engine.model().runtime();
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        rt.set_fault_plan(None);
+        let blocking: Vec<GenOutput> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| run_method(&engine, p, &cfg, request_seed(5, i as u64)).expect("blocking"))
+            .collect();
+
+        // A transient fault at the third decode-family dispatch of each
+        // flavor (whichever this method's policy uses) — each hit takes
+        // down exactly one pod.
+        rt.set_fault_plan(Some(FaultPlan::parse("decode@2,superstep@2").expect("plan")));
+        let before = rt.decode_dispatch_count();
+        let (fused, retries, spawns, stats) =
+            run_faulted_fused_trace(&engine, per_request_pods, &prompts, &cfg, 5, 3);
+        let plan = rt.fault_plan().expect("plan installed");
+        let injected =
+            plan.injected_at(FaultSite::Decode) + plan.injected_at(FaultSite::Superstep);
+        let dispatched = rt.decode_dispatch_count() - before;
+        rt.set_fault_plan(None);
+
+        assert!(injected >= 1, "{method:?}: the fault plan never fired");
+        assert_eq!(
+            stats.pod_faults, injected,
+            "{method:?}: every injected fault must be contained pod-side"
+        );
+        // Recovery is bit-identical for everyone, victims included.
+        for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+            assert_outputs_identical(
+                b,
+                f,
+                &format!("{method:?} request {i} under injected faults"),
+            );
+        }
+        // Containment: one retry per injected fault, landing only on
+        // the faulted pod's request; bystanders spawn exactly once
+        // (zero extra dispatches).
+        assert_eq!(
+            retries.iter().sum::<usize>(),
+            injected,
+            "{method:?}: retries {retries:?} must match injected faults"
+        );
+        for (i, (&r, &s)) in retries.iter().zip(&spawns).enumerate() {
+            assert_eq!(s, 1 + r, "{method:?} request {i}: spawns must be 1 + retries");
+        }
+        // The dispatch/pod-tick ledger: an aborted dispatch was counted
+        // as an occupied pod-tick but never reached the execute, so the
+        // fused invariant becomes an exact deficit.
+        assert_eq!(
+            dispatched,
+            stats.occupied_pod_ticks - injected,
+            "{method:?}: decode dispatches must equal occupied pod-ticks minus injected faults"
+        );
+    }
 }
 
 /// Evict/re-admit round trip: drivers are deterministic in
