@@ -28,6 +28,15 @@ Exports, per model size m ∈ {sm, lg}:
                                           with the destination k/v donated
                                           (same alias-table contract as
                                           the decode/superstep families)
+  artifacts/fork_{m}_b{S}to{D}.hlo.txt    prefix-sharing copy-on-write
+                                          fork: broadcast a shared
+                                          bucket-1 prefix entry into a
+                                          pod's leased rows in one device
+                                          call, destination k/v donated
+                                          (same alias-table contract as
+                                          compact); the source entry is
+                                          never donated — it stays in the
+                                          prefix store for later readers
   artifacts/weights_{m}.bin               flat little-endian f32 params
 plus model-independent:
   artifacts/signals_b{B}.hlo.txt          fused Pallas KL/conf/entropy kernel
@@ -59,6 +68,7 @@ from .model import (
     compact_rows,
     decode_step,
     decode_step_packed,
+    fork_rows,
     fuse_rows,
     prefill,
 )
@@ -232,6 +242,33 @@ def lower_compact(cfg: ModelConfig, src_b: int, dst_b: int, donate: bool = True)
     )
 
 
+def lower_fork(cfg: ModelConfig, src_b: int, dst_b: int, donate: bool = True):
+    """Lower the prefix-sharing copy-on-write fork ``src_b`` → ``dst_b``:
+    args are (k_dst[L,D,…], v_dst, k_src[L,S,…], v_src, idx[D]) — see
+    ``model.fork_rows``. The **destination** k/v (flat args 0 / 1) are
+    donated and alias tuple outputs 0 / 1 — the exact
+    ``input_output_alias`` contract ``lower_compact`` carries — so XLA
+    plans the in-place broadcast into the pod's leased rows at compile
+    time. The source (the shared prefix entry) is never donated: it
+    stays live in the prefix store for the next reader. No parameter
+    prefix (pure data movement). ``test_fork.py`` pins the alias table,
+    the donated-vs-undonated parity, and bitwise row equality against a
+    per-branch solo prefill."""
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def fork_fn(kd, vd, ks, vs, idx):
+        return fork_rows(kd, vd, ks, vs, idx)
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(fork_fn, donate_argnums=donate_argnums).lower(
+        _spec((lyr, dst_b, h, s, dh)),
+        _spec((lyr, dst_b, h, s, dh)),
+        _spec((lyr, src_b, h, s, dh)),
+        _spec((lyr, src_b, h, s, dh)),
+        _spec((dst_b,), jnp.int32),
+    )
+
+
 def to_hlo_text(lowered) -> str:
     """jax Lowered → XLA HLO text (the only interchange the Rust side accepts)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -270,6 +307,14 @@ def compact_pairs(buckets=BATCH_BUCKETS):
     return sorted((s, d) for s in buckets for d in buckets if d < s)
 
 
+def fork_pairs(buckets=BATCH_BUCKETS):
+    """(src, dst) bucket pairs the prefix fork needs: a shared prefix
+    entry is always a bucket-1 prefill cache, broadcast into any pod
+    bucket (including bucket 1 — a solo request forking its own copy of
+    the shared entry)."""
+    return sorted((1, d) for d in buckets)
+
+
 def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUCKETS):
     """Lower all graphs for one model size; returns manifest fragment."""
     names = cfg.param_names()
@@ -285,6 +330,7 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
         "superstep_packed": {},
         "fuse": {},
         "compact": {},
+        "fork": {},
     }
 
     def as_dict(flat):
@@ -355,6 +401,16 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
             out_dir,
             f"compact_{cfg.name}_b{src}to{dst}.hlo.txt",
             to_hlo_text(lower_compact(cfg, src, dst)),
+        )
+
+    # --- prefix fork (PR 7): broadcast a shared bucket-1 prefix entry
+    # into a pod's leased rows, destination k/v donated (in-place on
+    # device); the source entry survives for the next reader.
+    for src, dst in fork_pairs(buckets):
+        arts["fork"][f"{src}to{dst}"] = _write(
+            out_dir,
+            f"fork_{cfg.name}_b{src}to{dst}.hlo.txt",
+            to_hlo_text(lower_fork(cfg, src, dst)),
         )
 
     # --- KV gather (broadcast / compaction) ---

@@ -343,6 +343,42 @@ def fuse_rows(k_dst, v_dst, k_src, v_src, idx):
     return k, v
 
 
+def fork_rows(k_dst, v_dst, k_src, v_src, idx):
+    """Copy-on-write fork: broadcast shared-prefix rows into pod rows.
+
+    The prefix-sharing companion of ``fuse_rows``/``compact_rows``: a
+    prompt prefix is prefilled **once** into a bucket-1 store entry, and
+    admission forks it into a request's leased pod rows in one device
+    call instead of re-running prefill per request. ``idx`` is a ``[D]``
+    int32 vector over the *destination* rows: row ``r`` of the result is
+    the **source** (shared prefix) row ``idx[r]`` when ``idx[r] >= 0``,
+    or the destination's own row ``r`` (a resident or free row, left
+    untouched) when ``idx[r] < 0``.
+
+    Donation contract (``aot.lower_fork``): the destination k/v are the
+    donated operands — outputs alias them exactly like ``compact_rows``
+    — while the source is **never** donated: the shared prefix entry
+    stays live in the store for the next reader. The divergence point is
+    the first decode after the fork: each forked row's subsequent K/V
+    writes land in its own (donated) pod row, never back in the shared
+    entry, which is what makes the copy-on-write safe.
+
+    Args:
+      k_dst, v_dst: [L, D, H, S, Dh] — the pod cache being written.
+      k_src, v_src: [L, B, H, S, Dh] — the shared prefix entry (B = 1 in
+        the exported pairs; the formula is bucket-generic).
+      idx: [D] int32 source-row selector (see above).
+
+    Returns:
+      forked (k, v), both [L, D, H, S, Dh].
+    """
+    take_src = (idx >= 0)[None, :, None, None, None]
+    sel = jnp.clip(idx, 0, k_src.shape[1] - 1)
+    k = jnp.where(take_src, jnp.take(k_src, sel, axis=1), k_dst)
+    v = jnp.where(take_src, jnp.take(v_src, sel, axis=1), v_dst)
+    return k, v
+
+
 def forward_train(cfg: ModelConfig, params, tokens):
     """Teacher-forced logits over a [B, T] batch (training only, no cache)."""
     b, t = tokens.shape

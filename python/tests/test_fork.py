@@ -1,0 +1,187 @@
+"""Prompt-prefix KV sharing: the ``fork`` artifact family (PR 7).
+
+The Rust engine's prefix store prefills each unique token prefix **once**
+into a shared bucket-1 entry and admits later readers by *forking* that
+entry into their pod rows — copy-on-write at the divergence point. The
+correctness claims pinned here at the graph level:
+
+- a forked row is **bitwise identical** to the row a per-branch solo
+  prefill would have produced (fork-from-shared-entry ≡ cold prefill);
+- fork writes exactly the selected rows and leaves every other pod row
+  untouched (resident requests are invisible to an admission fork);
+- decode after a fork is bitwise identical to decode after the existing
+  gather-broadcast admission — the fused scheduler may use either
+  dispatch for the same request without perturbing its output;
+- the source (shared) entry operands are never donated: the exported
+  HLO's ``input_output_alias`` table aliases outputs 0/1 to the
+  **destination** k/v at flat args 0/1 only (the ``compact`` contract),
+  and the donated lowering is result-identical to the undonated one.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import fork_pairs, lower_fork, to_hlo_text
+from compile.model import (
+    BATCH_BUCKETS,
+    CONFIGS,
+    decode_step_packed,
+    fork_rows,
+    fuse_rows,
+    init_params,
+    prefill,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["sm"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # One shared prefix (the store entry) and one distinct resident
+    # request already living in the pod.
+    tok_p = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1).at[0, 1].set(3)
+    tok_r = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1).at[0, 1].set(5)
+    _, kp1, vp1 = prefill(cfg, params, tok_p, jnp.int32(5))
+    _, kr1, vr1 = prefill(cfg, params, tok_r, jnp.int32(6))
+    return cfg, params, tok_p, (kp1, vp1), (kr1, vr1)
+
+
+def pod_with_resident(cfg, resident, rows_r=2, bucket=8, garb_seed=11):
+    """Bucket-``bucket`` pod: rows [0, rows_r) hold ``resident``'s
+    branches, the rest is garbage (free rows)."""
+    kr = jnp.repeat(resident[0], rows_r, axis=1)
+    vr = jnp.repeat(resident[1], rows_r, axis=1)
+    shape = (cfg.n_layers, bucket - rows_r, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    garb = jax.random.normal(jax.random.PRNGKey(garb_seed), shape, jnp.float32)
+    kp = jnp.concatenate([kr, garb], axis=1)
+    vp = jnp.concatenate([vr, 2.0 * garb], axis=1)
+    return (kr, vr), (kp, vp)
+
+
+class TestForkRows:
+    def test_forked_rows_bitwise_equal_cold_prefill(self, setup):
+        # The tentpole claim: admitting from the shared entry produces
+        # rows bitwise equal to what a per-branch solo prefill would
+        # have produced (the entry IS a cold prefill's cache, and fork
+        # must copy it exactly).
+        cfg, params, tok_p, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        cold_k, cold_v = prefill(cfg, params, tok_p, jnp.int32(5))[1:]
+        idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        kf, vf = fork_rows(kp, vp, entry[0], entry[1], idx)
+        for r in (2, 3, 4):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(cold_k)[:, 0])
+            np.testing.assert_array_equal(np.asarray(vf)[:, r], np.asarray(cold_v)[:, 0])
+
+    def test_fork_leaves_unselected_rows_untouched(self, setup):
+        # Resident rows (0, 1) and free rows (5..7) must come through
+        # the fork dispatch bitwise intact — an admission is invisible
+        # to every co-resident request.
+        cfg, params, _, entry, resident = setup
+        (kr, vr), (kp, vp) = pod_with_resident(cfg, resident)
+        idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        kf, vf = fork_rows(kp, vp, entry[0], entry[1], idx)
+        np.testing.assert_array_equal(np.asarray(kf)[:, :2], np.asarray(kr))
+        np.testing.assert_array_equal(np.asarray(vf)[:, :2], np.asarray(vr))
+        np.testing.assert_array_equal(np.asarray(kf)[:, 5:], np.asarray(kp)[:, 5:])
+        np.testing.assert_array_equal(np.asarray(vf)[:, 5:], np.asarray(vp)[:, 5:])
+
+    def test_scattered_lease_rows_are_supported(self, setup):
+        # Leases are row lists, not intervals.
+        cfg, params, _, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        idx = jnp.array([-1, 0, -1, 0, -1, -1, 0, -1], jnp.int32)
+        kf, _ = fork_rows(kp, vp, entry[0], entry[1], idx)
+        for r in (1, 3, 6):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(entry[0])[:, 0])
+        for r in (0, 2, 4, 5, 7):
+            np.testing.assert_array_equal(np.asarray(kf)[:, r], np.asarray(kp)[:, r])
+
+    def test_fork_equals_fuse_for_the_same_admission(self, setup):
+        # fork (select-src convention, dst donated) and fuse (keep-dst
+        # convention, nothing donated) are two dispatches for the same
+        # admission; the engine falls back to fuse when fork artifacts
+        # are absent, so the results must be bitwise identical.
+        cfg, params, _, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        fork_idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        fuse_idx = jnp.array([0, 1, -1, -1, -1, 5, 6, 7], jnp.int32)
+        k_fork, v_fork = fork_rows(kp, vp, entry[0], entry[1], fork_idx)
+        k_fuse, v_fuse = fuse_rows(kp, vp, entry[0], entry[1], fuse_idx)
+        np.testing.assert_array_equal(np.asarray(k_fork), np.asarray(k_fuse))
+        np.testing.assert_array_equal(np.asarray(v_fork), np.asarray(v_fuse))
+
+    def test_decode_after_fork_bitwise_equals_decode_after_broadcast(self, setup):
+        # The divergence point: the first decode after admission. Rows
+        # admitted by fork must decode bitwise identically to rows
+        # admitted by the gather broadcast (the no-sharing path), which
+        # is what makes a prefix-store hit invisible in the output.
+        cfg, params, _, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        kf, vf = fork_rows(kp, vp, entry[0], entry[1], idx)
+        # Broadcast admission: the same rows filled via jnp.take (the
+        # gather executable's graph).
+        sel = jnp.array([0, 0, 0], jnp.int32)
+        kb = kp.at[:, 2:5].set(jnp.take(entry[0], sel, axis=1))
+        vb = vp.at[:, 2:5].set(jnp.take(entry[1], sel, axis=1))
+        np.testing.assert_array_equal(np.asarray(kf), np.asarray(kb))
+
+        tok = jnp.array([0, 0, 9, 13, 17, 0, 0, 0], jnp.int32)
+        pos = jnp.array([6, 6, 5, 5, 5, 0, 0, 0], jnp.int32)
+        lg_f, k_f, v_f = decode_step_packed(cfg, params, tok, pos, kf, vf)
+        lg_b, k_b, v_b = decode_step_packed(cfg, params, tok, pos, kb, vb)
+        np.testing.assert_array_equal(np.asarray(lg_f), np.asarray(lg_b))
+        np.testing.assert_array_equal(np.asarray(k_f), np.asarray(k_b))
+        np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_b))
+
+    def test_fork_pairs_broadcast_from_one_into_every_bucket(self):
+        pairs = fork_pairs()
+        assert pairs == sorted((1, d) for d in BATCH_BUCKETS)
+
+
+class TestForkExport:
+    def test_fork_hlo_carries_dst_kv_alias_only(self, setup):
+        cfg, *_ = setup
+        hlo = to_hlo_text(lower_fork(cfg, 1, 8))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        # Outputs (k, v) alias the donated destination k/v at flat args
+        # 0 / 1 — and the source entry (flat args 2 / 3) must never
+        # appear as an alias target: the store keeps it for the next
+        # reader.
+        assert re.search(r"\{0\}:\s*\(0,", header), header
+        assert re.search(r"\{1\}:\s*\(1,", header), header
+        assert not re.search(r"\(2,", header), header
+        assert not re.search(r"\(3,", header), header
+
+    def test_donated_fork_lowering_result_identical_to_undonated(self, setup):
+        cfg, params, _, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        want = fork_rows(kp, vp, entry[0], entry[1], idx)
+        plain = lower_fork(cfg, 1, 8, donate=False).compile()(kp, vp, entry[0], entry[1], idx)
+        # Last: donation deletes the kp/vp buffers.
+        donated = lower_fork(cfg, 1, 8).compile()(kp, vp, entry[0], entry[1], idx)
+        assert len(donated) == len(plain) == 2
+        for got_d, got_p, ref in zip(donated, plain, want):
+            np.testing.assert_array_equal(np.asarray(got_d), np.asarray(got_p))
+            np.testing.assert_array_equal(np.asarray(got_d), np.asarray(ref))
+
+    def test_source_entry_survives_a_donated_fork(self, setup):
+        # The load-bearing sharing property at the buffer level: after a
+        # donated fork dispatch the source arrays are still readable and
+        # unchanged (only dst was donated), so the store entry can serve
+        # the next reader.
+        cfg, params, _, entry, resident = setup
+        _, (kp, vp) = pod_with_resident(cfg, resident)
+        ks = jnp.array(np.asarray(entry[0]))
+        vs = jnp.array(np.asarray(entry[1]))
+        want_k = np.asarray(ks).copy()
+        idx = jnp.array([-1, -1, 0, 0, 0, -1, -1, -1], jnp.int32)
+        lower_fork(cfg, 1, 8).compile()(kp, vp, ks, vs, idx)
+        np.testing.assert_array_equal(np.asarray(ks), want_k)

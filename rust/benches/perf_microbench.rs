@@ -38,7 +38,12 @@
 //! `fault_recovery` (PR 6: a seeded transient fault plan is absorbed by
 //! contained retries — zero user-visible errors, bit-identical output,
 //! retries matching the Runtime's injected-fault counters, goodput at
-//! or above the configured floor of the fault-free run).
+//! or above the configured floor of the fault-free run), and
+//! `prefix_sharing` (PR 7: prefill dispatches == unique prompt
+//! prefixes, strictly fewer than requests; physical co-resident KV
+//! peak strictly below the unshared run at the same budgets; all four
+//! methods bit-identical to their sharing-disabled runs, including
+//! across an evict/re-admit and a prefill-fault retry).
 //!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
@@ -81,9 +86,11 @@ use kappa::bench::{BenchEnv, Table};
 use kappa::coordinator::config::{Method, RunConfig, SamplerConfig};
 use kappa::coordinator::sampler::{self, SamplerScratch};
 use kappa::coordinator::signals::{raw_signals, SignalScratch};
-use kappa::coordinator::{make_driver_fused, run_method, Driver, GenOutput, StepOutcome, StepPlan};
+use kappa::coordinator::{
+    make_driver_fused, make_driver_shared, run_method, Driver, GenOutput, StepOutcome, StepPlan,
+};
 use kappa::data::Dataset;
-use kappa::engine::{Engine, FuseConfig, FusionHub, PodFault};
+use kappa::engine::{Engine, FuseConfig, FusionHub, PodFault, PrefixStore};
 use kappa::metrics::ServeMetrics;
 use kappa::runtime::{FaultError, FaultPlan, FaultSite};
 use kappa::server::{request_seed, Pollable, SchedConfig, Scheduler, Server};
@@ -847,6 +854,276 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- prefix_sharing: the PR 7 acceptance section. N requests over a
+    // handful of *unique* prompts, all co-resident (inflight == N, slots
+    // sized to hold the trace), so every prefix entry stays live until
+    // the trace drains. Asserted:
+    // - the shared run prefills exactly once per unique prefix — the
+    //   Runtime's `prefill_dispatch_count` is the witness — strictly
+    //   fewer dispatches than requests, while the unshared run pays one
+    //   prefill per request;
+    // - physical co-resident KV at peak (pod bytes discounted for
+    //   copy-on-write prefix rows, plus the store's resident entries)
+    //   is strictly below the unshared run's pod peak at the same
+    //   scheduler budgets;
+    // - all four methods produce bit-identical text and metrics with
+    //   sharing on (miss path and hit path), including across a
+    //   mid-flight eviction/re-admit and a prefill-fault retry.
+    let fork_ready = model.buckets().iter().all(|&b| model.has_fork(b));
+    let mut prefix_json = Json::Null;
+    if packed_ready && fork_ready {
+        let uniq = 3.min(n_requests.max(1));
+        let n_req = n_requests.max(uniq);
+        let share_prompts: Vec<String> = (0..n_req).map(|i| prompts[i % uniq].clone()).collect();
+        // Same budgets for both runs; wide enough that the whole trace
+        // co-resides (a released prefix entry frees itself, so a
+        // drained-and-refilled prefix would legitimately prefill twice —
+        // full co-residency pins the count at exactly `uniq`).
+        let share_sched = SchedConfig {
+            max_inflight: n_req,
+            slot_budget: n_req * run_cfg.concurrent_branches(),
+            ..SchedConfig::default()
+        };
+
+        // Fused trace runner — the same plan → hub-flush → absorb
+        // phasing as the server worker; `shared` swaps the driver
+        // constructor and owns a prefix store.
+        let run_share_trace =
+            |shared: bool| -> Result<(Vec<GenOutput>, usize, usize, Option<PrefixStore>)> {
+                let hub = FusionHub::new(FuseConfig::default());
+                let store = shared.then(PrefixStore::default);
+                let mut sched: Scheduler<FusedBench, usize> = Scheduler::new(share_sched);
+                let admission = if shared {
+                    engine.admission_cost_shared(run_cfg.concurrent_branches(), 1)?
+                } else {
+                    engine.admission_cost(run_cfg.concurrent_branches())?
+                };
+                let p0 = model.runtime().prefill_dispatch_count();
+                let mut queue: VecDeque<usize> = (0..n_req).collect();
+                let mut outputs: Vec<Option<GenOutput>> = (0..n_req).map(|_| None).collect();
+                let mut failure: Option<anyhow::Error> = None;
+                let mut ticks = 0usize;
+                while !(queue.is_empty() && sched.is_empty()) && failure.is_none() {
+                    ticks += 1;
+                    assert!(ticks < 100_000, "prefix_sharing trace runaway");
+                    while !queue.is_empty() && sched.can_admit(admission.0, admission.1) {
+                        let i = queue.pop_front().unwrap();
+                        let seed = request_seed(777, i as u64);
+                        let driver = match &store {
+                            Some(s) => make_driver_shared(
+                                &engine,
+                                Some(&hub),
+                                s,
+                                &share_prompts[i],
+                                &run_cfg,
+                                seed,
+                            )?,
+                            None => {
+                                make_driver_fused(&engine, &hub, &share_prompts[i], &run_cfg, seed)?
+                            }
+                        };
+                        sched.admit(FusedBench { driver, engine: &engine }, i);
+                    }
+                    sched.tick(
+                        || hub.flush(&engine),
+                        |i, r| match r {
+                            Ok(out) => outputs[i] = Some(out),
+                            Err(e) => failure = Some(e),
+                        },
+                    );
+                }
+                if let Some(e) = failure {
+                    return Err(e.context("prefix_sharing fused trace"));
+                }
+                let prefills = model.runtime().prefill_dispatch_count() - p0;
+                let outputs: Vec<GenOutput> =
+                    outputs.into_iter().map(|o| o.expect("request completed")).collect();
+                Ok((outputs, prefills, hub.pod_bytes_peak(), store))
+            };
+
+        let (out_private, prefills_private, pod_peak_private, _) = run_share_trace(false)?;
+        let (out_shared, prefills_shared, pod_peak_shared, store) = run_share_trace(true)?;
+        let store = store.expect("shared trace owns a store");
+
+        // Prefill once per unique prefix — strictly fewer than requests.
+        assert!(uniq < n_req, "trace must repeat prompts for sharing to be observable");
+        assert_eq!(
+            prefills_private, n_req,
+            "the unshared run pays one prefill dispatch per request"
+        );
+        assert_eq!(
+            prefills_shared, uniq,
+            "the shared run must prefill exactly once per unique prefix \
+             ({prefills_shared} dispatches vs {uniq} unique prompts)"
+        );
+        assert_eq!(store.misses(), uniq, "one store fill per unique prefix");
+        assert_eq!(store.hits(), n_req - uniq, "every repeat admission must hit the store");
+        assert_eq!(store.entry_count(), 0, "drained trace must have released every entry");
+
+        // Physical co-resident KV peak: discounted pods plus the store's
+        // resident entries, strictly below the unshared pod peak. (Peaks
+        // are sampled independently, so the sum *over*-states the shared
+        // side — the assertion is conservative.)
+        let phys_peak_shared = pod_peak_shared + store.shared_bytes_peak();
+        assert!(
+            phys_peak_shared < pod_peak_private,
+            "prefix sharing must strictly lower the physical co-resident KV peak \
+             ({phys_peak_shared} vs {pod_peak_private} unshared)"
+        );
+
+        // Sharing-on vs sharing-off bit-identity on the fused trace.
+        for (i, (s, p)) in out_shared.iter().zip(&out_private).enumerate() {
+            assert_eq!(s.text, p.text, "prefix_sharing request {i}: text");
+            assert_eq!(s.chosen_branch, p.chosen_branch, "prefix_sharing request {i}: branch");
+            assert_eq!(
+                s.metrics.total_tokens, p.metrics.total_tokens,
+                "prefix_sharing request {i}: total tokens"
+            );
+            assert_eq!(
+                s.metrics.peak_mem_bytes, p.metrics.peak_mem_bytes,
+                "prefix_sharing request {i}: accounted peak"
+            );
+            assert_eq!(
+                s.metrics.decode_calls, p.metrics.decode_calls,
+                "prefix_sharing request {i}: decode calls"
+            );
+        }
+
+        // All four methods, miss path and hit path: two co-resident
+        // shared solo drivers per prompt (the second acquires the
+        // first's live entry) against the private blocking run.
+        let drive = |d: &mut Box<dyn Driver>| -> Result<GenOutput> {
+            loop {
+                if let StepOutcome::Done(out) = d.poll_step(&engine)? {
+                    return Ok(out);
+                }
+            }
+        };
+        for m in Method::all() {
+            let mcfg =
+                RunConfig { method: m, n: 4, max_new_tokens: 32, ..RunConfig::default() };
+            let mstore = PrefixStore::default();
+            for p in share_prompts.iter().take(uniq) {
+                let seed = request_seed(888, 0);
+                let private = run_method(&engine, p, &mcfg, seed)?;
+                let mut d_miss = make_driver_shared(&engine, None, &mstore, p, &mcfg, seed)?;
+                let mut d_hit = make_driver_shared(&engine, None, &mstore, p, &mcfg, seed)?;
+                for (tag, out) in [("miss", drive(&mut d_miss)?), ("hit", drive(&mut d_hit)?)] {
+                    let name = m.name();
+                    assert_eq!(out.text, private.text, "prefix_sharing {name} {tag}: text");
+                    assert_eq!(
+                        out.chosen_branch, private.chosen_branch,
+                        "prefix_sharing {name} {tag}: branch"
+                    );
+                    assert_eq!(
+                        out.metrics.total_tokens, private.metrics.total_tokens,
+                        "prefix_sharing {name} {tag}: total tokens"
+                    );
+                    assert_eq!(
+                        out.metrics.peak_mem_bytes, private.metrics.peak_mem_bytes,
+                        "prefix_sharing {name} {tag}: accounted peak"
+                    );
+                    assert_eq!(
+                        out.metrics.decode_calls, private.metrics.decode_calls,
+                        "prefix_sharing {name} {tag}: decode calls"
+                    );
+                }
+            }
+        }
+
+        // Evict/re-admit: drop a half-run shared driver (its prefix
+        // handle releases — the last reader frees the entry) and respawn
+        // from scratch: bit-identical, exactly like the unshared
+        // eviction contract.
+        {
+            let seed = request_seed(999, 0);
+            let private = run_method(&engine, &share_prompts[0], &run_cfg, seed)?;
+            let estore = PrefixStore::default();
+            let mut d =
+                make_driver_shared(&engine, None, &estore, &share_prompts[0], &run_cfg, seed)?;
+            for _ in 0..3 {
+                let _ = d.poll_step(&engine)?;
+            }
+            drop(d);
+            assert_eq!(estore.entry_count(), 0, "evicted last reader must free its entry");
+            let mut d =
+                make_driver_shared(&engine, None, &estore, &share_prompts[0], &run_cfg, seed)?;
+            let out = drive(&mut d)?;
+            assert_eq!(out.text, private.text, "prefix_sharing evict/re-admit: text");
+            assert_eq!(
+                out.metrics.peak_mem_bytes, private.metrics.peak_mem_bytes,
+                "prefix_sharing evict/re-admit: accounted peak"
+            );
+            assert_eq!(
+                out.metrics.total_tokens, private.metrics.total_tokens,
+                "prefix_sharing evict/re-admit: total tokens"
+            );
+        }
+
+        // Prefill-fault retry: the shared *fill* faults. Containment
+        // guarantees nothing is cached, and the retry refills and
+        // recovers bit-identically.
+        {
+            let seed = request_seed(1111, 0);
+            let private = run_method(&engine, &share_prompts[1], &run_cfg, seed)?;
+            let fstore = PrefixStore::default();
+            model.runtime().set_fault_plan(Some(FaultPlan::parse("prefill@1")?));
+            let err = make_driver_shared(&engine, None, &fstore, &share_prompts[1], &run_cfg, seed)
+                .expect_err("prefill@1 must fault the shared fill");
+            assert!(
+                err.chain().any(|c| c.downcast_ref::<FaultError>().is_some()),
+                "a prefill fault must surface as a contained FaultError"
+            );
+            assert_eq!(fstore.entry_count(), 0, "a failing fill must cache nothing");
+            let mut d =
+                make_driver_shared(&engine, None, &fstore, &share_prompts[1], &run_cfg, seed)?;
+            let out = drive(&mut d)?;
+            model.runtime().set_fault_plan(None);
+            assert_eq!(out.text, private.text, "prefix_sharing fault-retry: text");
+            assert_eq!(
+                out.metrics.peak_mem_bytes, private.metrics.peak_mem_bytes,
+                "prefix_sharing fault-retry: accounted peak"
+            );
+            assert_eq!(
+                out.metrics.total_tokens, private.metrics.total_tokens,
+                "prefix_sharing fault-retry: total tokens"
+            );
+        }
+
+        let hit_rate = store.hits() as f64 / (store.hits() + store.misses()).max(1) as f64;
+        println!(
+            "\nprefix_sharing ({n_req} requests over {uniq} unique prompts):\n\
+               {prefills_shared} prefill dispatch(es) shared vs {prefills_private} unshared \
+               (hit rate {hit_rate:.2});\n\
+               physical KV peak {:.1} KiB shared ({:.1} KiB pods + {:.1} KiB store) \
+               vs {:.1} KiB unshared;\n\
+               all four methods bit-identical incl. evict/re-admit and prefill-fault retry",
+            phys_peak_shared as f64 / 1024.0,
+            pod_peak_shared as f64 / 1024.0,
+            store.shared_bytes_peak() as f64 / 1024.0,
+            pod_peak_private as f64 / 1024.0,
+        );
+        prefix_json = Json::obj(vec![
+            ("requests", Json::num(n_req as f64)),
+            ("unique_prefixes", Json::num(uniq as f64)),
+            ("prefill_dispatches_shared", Json::num(prefills_shared as f64)),
+            ("prefill_dispatches_private", Json::num(prefills_private as f64)),
+            ("prefix_hits", Json::num(store.hits() as f64)),
+            ("prefix_misses", Json::num(store.misses() as f64)),
+            ("prefix_hit_rate", Json::num(hit_rate)),
+            ("shared_kv_bytes_peak", Json::num(store.shared_bytes_peak() as f64)),
+            ("pod_bytes_peak_shared", Json::num(pod_peak_shared as f64)),
+            ("pod_bytes_peak_private", Json::num(pod_peak_private as f64)),
+            ("physical_kv_peak_shared", Json::num(phys_peak_shared as f64)),
+            ("bit_identical_methods", Json::num(Method::all().len() as f64)),
+        ]);
+    } else {
+        println!(
+            "\nprefix_sharing: SKIP (artifact set has no packed/fork executables — \
+             re-export with `make artifacts`)"
+        );
+    }
+
     env.write_report(
         "BENCH_serve",
         Json::obj(vec![
@@ -878,6 +1155,7 @@ fn main() -> Result<()> {
             ("batch_fusion", fusion_json),
             ("pod_compaction", compaction_json),
             ("fault_recovery", fault_json),
+            ("prefix_sharing", prefix_json),
         ]),
     )?;
     Ok(())

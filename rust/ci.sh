@@ -23,6 +23,17 @@ cargo build --release
 echo "[ci] cargo test -q"
 cargo test -q
 
+# AOT kernel parity gate (JAX lowering vs the pure-python reference):
+# covers the fork copy-on-write broadcast family alongside the existing
+# decode/gather/compact/packed kernels. Gated on python3 so the
+# Rust-only lint/test gate stays usable without a python toolchain.
+if command -v python3 >/dev/null 2>&1; then
+    echo "[ci] python kernel parity: pytest python/tests"
+    (cd ../python && python3 -m pytest tests -x -q)
+else
+    echo "[ci] python3 missing — skipping AOT kernel parity tests"
+fi
+
 ARTIFACTS="${KAPPA_ARTIFACTS:-artifacts}"
 if [ -f "$ARTIFACTS/manifest.json" ]; then
     echo "[ci] perf smoke: cargo bench --bench perf_microbench -- --iters 3"
@@ -43,30 +54,40 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         # fault_recovery section: a seeded transient fault plan absorbed
         # by contained retries with zero user-visible errors, goodput at
         # or above the configured floor, and retries matching the
-        # Runtime's injected-fault counters. Here we only check the
-        # machine-readable trajectories landed.
+        # Runtime's injected-fault counters — and (PR 7) the
+        # prefix_sharing section: prefill dispatches equal to the number
+        # of unique prompt prefixes (strictly fewer than requests),
+        # physical co-resident KV peak strictly below the unshared run,
+        # and all four methods bit-identical to their sharing-disabled
+        # runs. Here we only check the machine-readable trajectories
+        # landed.
         for report in BENCH_decode BENCH_serve; do
             if [ ! -f "$ARTIFACTS/reports/$report.json" ]; then
                 echo "[ci] perf smoke ran but $ARTIFACTS/reports/$report.json is missing"
                 exit 1
             fi
         done
-        if ! grep -q '"fault_recovery"' "$ARTIFACTS/reports/BENCH_serve.json"; then
-            echo "[ci] BENCH_serve.json has no fault_recovery section"
-            exit 1
-        fi
+        for section in fault_recovery prefix_sharing; do
+            if ! grep -q "\"$section\"" "$ARTIFACTS/reports/BENCH_serve.json"; then
+                echo "[ci] BENCH_serve.json has no $section section"
+                exit 1
+            fi
+        done
         echo "[ci] perf smoke OK — decode + serve trajectories in $ARTIFACTS/reports/"
 
         # Fault-injection serve smoke: a short replay under a fixed
         # seeded fault plan must complete with zero user-visible errors
         # and at least one recorded recovery (the injected faults are
         # absorbed by pod-scoped retries, not surfaced to clients).
-        echo "[ci] fault smoke: serve under --fault-plan decode@1,superstep@1"
+        # Prefix sharing rides along (--prefix-share) and the plan also
+        # hits the prefill site, so the shared-fill retry path is
+        # exercised end to end under the serve binary.
+        echo "[ci] fault smoke: serve --prefix-share under --fault-plan prefill@1,decode@1,superstep@1"
         SMOKE_LOG="$(mktemp)"
         trap 'rm -f "$SMOKE_LOG"' EXIT
         cargo run --release --quiet -- serve \
-            --artifacts "$ARTIFACTS" --requests 6 --max-new 32 \
-            --fault-plan "decode@1,superstep@1" | tee "$SMOKE_LOG"
+            --artifacts "$ARTIFACTS" --requests 6 --max-new 32 --prefix-share \
+            --fault-plan "prefill@1,decode@1,superstep@1" | tee "$SMOKE_LOG"
         RECOVERY_LINE="$(grep '^fault recovery:' "$SMOKE_LOG" || true)"
         if [ -z "$RECOVERY_LINE" ]; then
             echo "[ci] fault smoke: serve never printed its fault-recovery summary"

@@ -81,7 +81,7 @@ pub mod stbon;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{Engine, FusionHub, GenState, StartOpts};
+use crate::engine::{Engine, FusionHub, GenState, PrefixStore, StartOpts};
 use crate::metrics::RequestMetrics;
 use crate::util::rng::Pcg64;
 
@@ -171,6 +171,44 @@ impl DriverCore {
             bail!("batch fusion requires bucket compaction (compact=false is solo-only)");
         }
         let state = engine.start_fused(hub, prompt, n)?;
+        Ok(Self::with_state(state, cfg, seed, n))
+    }
+
+    /// [`DriverCore::new`] with the prompt prefill planned as a
+    /// lookup-or-fill against the worker's shared [`PrefixStore`]: a
+    /// request whose exact token prefix is already resident skips the
+    /// prefill dispatch and broadcasts the shared entry instead
+    /// (bit-identical state either way).
+    pub fn new_shared(
+        engine: &Engine,
+        store: &PrefixStore,
+        prompt: &str,
+        cfg: &RunConfig,
+        seed: u64,
+        n: usize,
+        compact: bool,
+    ) -> Result<DriverCore> {
+        let state = engine.start_opts_shared(store, prompt, n, StartOpts { compact })?;
+        Ok(Self::with_state(state, cfg, seed, n))
+    }
+
+    /// [`DriverCore::new_fused`] against the shared [`PrefixStore`]: the
+    /// resident prefix entry is forked copy-on-write into the leased pod
+    /// rows (see `engine::prefix`).
+    pub fn new_fused_shared(
+        engine: &Engine,
+        hub: &FusionHub,
+        store: &PrefixStore,
+        prompt: &str,
+        cfg: &RunConfig,
+        seed: u64,
+        n: usize,
+        compact: bool,
+    ) -> Result<DriverCore> {
+        if !compact {
+            bail!("batch fusion requires bucket compaction (compact=false is solo-only)");
+        }
+        let state = engine.start_fused_shared(hub, store, prompt, n)?;
         Ok(Self::with_state(state, cfg, seed, n))
     }
 
@@ -264,7 +302,7 @@ pub fn make_driver(
     cfg: &RunConfig,
     seed: u64,
 ) -> Result<Box<dyn Driver>> {
-    make_driver_with(engine, None, prompt, cfg, seed)
+    make_driver_with(engine, None, None, prompt, cfg, seed)
 }
 
 /// [`make_driver`] with the request's branches leased in the fusion
@@ -277,12 +315,29 @@ pub fn make_driver_fused(
     cfg: &RunConfig,
     seed: u64,
 ) -> Result<Box<dyn Driver>> {
-    make_driver_with(engine, Some(hub), prompt, cfg, seed)
+    make_driver_with(engine, Some(hub), None, prompt, cfg, seed)
+}
+
+/// [`make_driver`]/[`make_driver_fused`] with the prompt prefill planned
+/// as a lookup-or-fill against the worker's shared [`PrefixStore`]
+/// (prefix KV sharing, PR 7): one prefill dispatch per unique resident
+/// token prefix, however many co-resident requests — and branches —
+/// read it. Pass `hub` for the fused residence.
+pub fn make_driver_shared(
+    engine: &Engine,
+    hub: Option<&FusionHub>,
+    store: &PrefixStore,
+    prompt: &str,
+    cfg: &RunConfig,
+    seed: u64,
+) -> Result<Box<dyn Driver>> {
+    make_driver_with(engine, hub, Some(store), prompt, cfg, seed)
 }
 
 fn make_driver_with(
     engine: &Engine,
     hub: Option<&FusionHub>,
+    store: Option<&PrefixStore>,
     prompt: &str,
     cfg: &RunConfig,
     seed: u64,
@@ -293,9 +348,13 @@ fn make_driver_with(
         Method::Greedy => (1, true),
         _ => (cfg.n, cfg.compact),
     };
-    let core = match hub {
-        None => DriverCore::new(engine, prompt, cfg, seed, n, compact)?,
-        Some(h) => DriverCore::new_fused(engine, h, prompt, cfg, seed, n, compact)?,
+    let core = match (hub, store) {
+        (None, None) => DriverCore::new(engine, prompt, cfg, seed, n, compact)?,
+        (None, Some(s)) => DriverCore::new_shared(engine, s, prompt, cfg, seed, n, compact)?,
+        (Some(h), None) => DriverCore::new_fused(engine, h, prompt, cfg, seed, n, compact)?,
+        (Some(h), Some(s)) => {
+            DriverCore::new_fused_shared(engine, h, s, prompt, cfg, seed, n, compact)?
+        }
     };
     Ok(match cfg.method {
         Method::Greedy => Box::new(greedy::GreedyDriver::from_core(core)),

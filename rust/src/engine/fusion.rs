@@ -144,6 +144,13 @@ struct Lease {
     /// Kept current so non-participating ticks clobber only the
     /// not-yet-written slot (see module docs).
     pos: usize,
+    /// Leading KV slots of every leased row still shared copy-on-write
+    /// with a prefix-store entry (0 = privately prefilled). Decode only
+    /// writes positions `>= prompt_len`, so the shared region is never
+    /// materialized for the lease's lifetime; the hub's physical
+    /// accounting discounts these slots (charged once, on the store's
+    /// tracker — see [`super::prefix`]).
+    prefix_tokens: usize,
     /// Tokens staged for this tick (parallel to `rows`), plus whether
     /// the request wants on-device signals. Reused across ticks.
     staged_tokens: Vec<i32>,
@@ -575,7 +582,9 @@ impl FusionHub {
     /// free capacity (first fit), or open a new pod sized to
     /// `FuseConfig::pod_bucket`. The prompt cache is broadcast into
     /// exactly the leased rows (one `fuse` dispatch for an existing pod;
-    /// the broadcast gather for a fresh one).
+    /// the broadcast gather for a fresh one). Consumes the caller's
+    /// private prefill cache; shared-prefix admissions go through
+    /// [`Self::place_from`] instead.
     pub fn place(
         &self,
         engine: &Engine,
@@ -583,51 +592,112 @@ impl FusionHub {
         n: usize,
         pos: usize,
     ) -> Result<(Rc<RefCell<FusedBatch>>, u64)> {
+        self.place_from(engine, &cache1, n, pos, 0)
+    }
+
+    /// [`Self::place`] generalized to a **borrowed** source cache: the
+    /// source is never consumed, so a prefix-store entry can seed any
+    /// number of admissions. For an existing pod the broadcast is the
+    /// `fork_b1to{bucket}` executable when the artifact set exports it —
+    /// pod k/v donated, one in-place device call, no whole-pod copy —
+    /// falling back to the non-donating `fuse` (bit-identical rows,
+    /// pinned by `python/tests/test_fork.py`); a fresh pod uses the
+    /// broadcast gather either way. `prefix_tokens > 0` marks the
+    /// admitted rows' leading KV slots as CoW-shared with the store
+    /// (see [`Lease::prefix_tokens`]) and discounts them from the pod's
+    /// physical accounting.
+    pub fn place_from(
+        &self,
+        engine: &Engine,
+        src: &KvCache,
+        n: usize,
+        pos: usize,
+        prefix_tokens: usize,
+    ) -> Result<(Rc<RefCell<FusedBatch>>, u64)> {
         if n == 0 {
             bail!("fusion: cannot place a zero-row request");
         }
         let mut inner = self.inner.borrow_mut();
         // Drop pods that emptied since the last placement (their device
-        // cache is reclaimed; accounting follows).
+        // cache is reclaimed; accounting follows), then refresh every
+        // surviving pod's accounted bytes — lease releases run from
+        // `GenState::drop` without a hub reference, so their discount
+        // changes land lazily at the next hub operation.
         inner.retire_empty_pods();
+        inner.reaccount_pods(&engine.model().config);
 
         let model = engine.model();
-        for pod_rc in inner.pods.iter() {
+        // First fit (deterministic: pods in open order, lowest free rows).
+        let candidate = inner.pods.iter().position(|p| p.borrow().free.len() >= n);
+        if let Some(pi) = candidate {
+            let pod_rc = Rc::clone(&inner.pods[pi]);
             let mut pod = pod_rc.borrow_mut();
-            if pod.free.len() >= n {
-                // Take the n lowest free rows (deterministic placement).
-                let rows: Vec<usize> = pod.free.drain(..n).collect();
-                let bucket = pod.bucket;
-                pod.fuse_idx.clear();
-                pod.fuse_idx.extend(0..bucket as i32);
+            let rows: Vec<usize> = pod.free.drain(..n).collect();
+            let bucket = pod.bucket;
+            let use_fork = model.has_fork(bucket);
+            let mut idx = std::mem::take(&mut pod.fuse_idx);
+            let merged: Result<()> = if use_fork {
+                // fork convention: idx[r] ≥ 0 pulls src row idx[r] into
+                // dst row r; −1 keeps the dst row. Donates the pod k/v.
+                idx.clear();
+                idx.resize(bucket, -1);
                 for &r in &rows {
-                    pod.fuse_idx[r] = -1;
+                    idx[r] = 0;
                 }
-                let fuse_idx = std::mem::take(&mut pod.fuse_idx);
-                let merged = model.fuse(&pod.cache, &cache1, &fuse_idx);
-                pod.fuse_idx = fuse_idx;
-                match merged {
-                    Ok(cache) => {
-                        pod.cache = cache;
-                        let id = pod.next_lease;
-                        pod.next_lease += 1;
-                        pod.leases.push(Lease {
-                            id,
-                            rows,
-                            pos,
-                            staged_tokens: Vec::new(),
-                            staged: false,
-                            staged_signals: false,
-                            ready: None,
-                        });
-                        return Ok((Rc::clone(pod_rc), id));
-                    }
-                    Err(e) => {
-                        // Roll the rows back before failing the request.
-                        pod.free.extend(rows);
-                        pod.free.sort_unstable();
-                        return Err(e);
-                    }
+                model.fork_into(src, &mut pod.cache, &idx)
+            } else {
+                // fuse convention (complement): idx[r] ≥ 0 keeps dst row
+                // idx[r]; −1 pulls src row 0. Produces a fresh cache.
+                idx.clear();
+                idx.extend(0..bucket as i32);
+                for &r in &rows {
+                    idx[r] = -1;
+                }
+                model.fuse(&pod.cache, src, &idx).map(|cache| {
+                    pod.cache = cache;
+                })
+            };
+            pod.fuse_idx = idx;
+            match merged {
+                Ok(()) => {
+                    let id = pod.next_lease;
+                    pod.next_lease += 1;
+                    pod.leases.push(Lease {
+                        id,
+                        rows,
+                        pos,
+                        prefix_tokens,
+                        staged_tokens: Vec::new(),
+                        staged: false,
+                        staged_signals: false,
+                        ready: None,
+                    });
+                    let (pod_id, bytes) =
+                        (pod.id, pod_accounted_bytes(&pod, &model.config));
+                    drop(pod);
+                    inner.mem.set_component(&format!("pod{pod_id}"), bytes);
+                    return Ok((pod_rc, id));
+                }
+                Err(e) if use_fork => {
+                    // A failed fork consumed the donated pod k/v — the
+                    // pod is gone, same containment as a failed packed
+                    // dispatch: poison it, tear it out of the hub, and
+                    // fail only the requests leasing its rows.
+                    let fault = PodFault::classify(pod.id, pod.bucket, "fork", &e);
+                    pod.poison = Some(fault);
+                    let pod_id = pod.id;
+                    drop(pod);
+                    inner.stats.pod_faults += 1;
+                    inner.mem.remove_component(&format!("pod{pod_id}"));
+                    inner.pods.remove(pi);
+                    return Err(e);
+                }
+                Err(e) => {
+                    // A failed fuse never touched the pod cache: roll the
+                    // rows back before failing the request.
+                    pod.free.extend(rows);
+                    pod.free.sort_unstable();
+                    return Err(e);
                 }
             }
         }
@@ -641,11 +711,10 @@ impl FusionHub {
             model.buckets().iter().copied().max().ok_or_else(|| anyhow!("no buckets"))?;
         let bucket = model.bucket_for(inner.cfg.pod_bucket.clamp(min_bucket, largest))?;
         let idx = vec![0i32; bucket];
-        let cache = model.gather(&cache1, bucket, &idx)?;
+        let cache = model.gather(src, bucket, &idx)?;
         let cfg = &model.config;
         let pod_id = inner.next_pod;
         inner.next_pod += 1;
-        inner.mem.set_component(&format!("pod{pod_id}"), bucket * cfg.kv_bytes_per_branch());
         let pod = FusedBatch {
             id: pod_id,
             bucket,
@@ -660,6 +729,7 @@ impl FusionHub {
                 id: 0,
                 rows: (0..n).collect(),
                 pos,
+                prefix_tokens,
                 staged_tokens: Vec::new(),
                 staged: false,
                 staged_signals: false,
@@ -674,6 +744,10 @@ impl FusionHub {
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
         };
+        // Charged at the discounted value from the start — a shared-
+        // prefix admission must never spike the tracker to the full
+        // bucket even transiently (the peak is the bench criterion).
+        inner.mem.set_component(&format!("pod{pod_id}"), pod_accounted_bytes(&pod, cfg));
         let rc = Rc::new(RefCell::new(pod));
         inner.pods.push(Rc::clone(&rc));
         Ok((rc, 0))
@@ -698,6 +772,7 @@ impl FusionHub {
     pub fn flush(&self, engine: &Engine) -> Result<()> {
         let mut inner = self.inner.borrow_mut();
         inner.retire_empty_pods();
+        inner.reaccount_pods(&engine.model().config);
         // Occupancy is measured before dispatching; the dispatches
         // themselves are counted by the Runtime at the execute sites,
         // so the one-dispatch-per-occupied-pod invariant is checked
@@ -767,6 +842,7 @@ impl FusionHub {
     pub fn maybe_compact(&self, engine: &Engine, force: bool) -> Result<usize> {
         let mut inner = self.inner.borrow_mut();
         inner.retire_empty_pods();
+        inner.reaccount_pods(&engine.model().config);
         // Disjoint field borrows: the pod list is iterated while the
         // tracker/stats are updated — no per-call clone of the pod
         // handles (this runs at the top of every scheduler tick, which
@@ -819,7 +895,13 @@ impl FusionHub {
             // statement block (`install_compacted`); the old pod cache
             // drops here, which is the physical reclaim.
             pod.install_compacted(dst, dst_bucket);
-            mem.set_component(&format!("pod{}", pod.id), dst_bytes);
+            // Discounted, like every pod component: the CoW prefix model
+            // survives compaction (the rewrite is a page-table copy of
+            // the shared region, not a materialization).
+            mem.set_component(
+                &format!("pod{}", pod.id),
+                pod_accounted_bytes(&pod, &model.config),
+            );
             mem.free("compact_transient", dst_bytes);
             let reclaimed = (old_bucket - dst_bucket) * per_branch;
             stats.compactions += 1;
@@ -872,7 +954,38 @@ impl FusionHub {
     }
 }
 
+/// Accounted physical bytes of one pod under the CoW prefix model: the
+/// full `bucket × kv_bytes_per_branch` allocation minus, for every live
+/// lease, the leading `prefix_tokens` KV slots of each of its rows —
+/// those pages are still shared copy-on-write with a prefix-store entry
+/// and charged once, on the store's own tracker (see [`super::prefix`]).
+/// Decode only writes positions `>= prompt_len`, so the shared region is
+/// never materialized for a lease's lifetime and the discount holds
+/// until release.
+fn pod_accounted_bytes(pod: &FusedBatch, cfg: &crate::runtime::ModelConfig) -> usize {
+    let full = pod.bucket * cfg.kv_bytes_per_branch();
+    let shared: usize = pod
+        .leases
+        .iter()
+        .map(|l| l.rows.len() * l.prefix_tokens * cfg.kv_bytes_per_token())
+        .sum();
+    full.saturating_sub(shared)
+}
+
 impl HubInner {
+    /// Re-derive every pod's accounted component from its current leases
+    /// ([`pod_accounted_bytes`]). Lazy — run at the top of each hub
+    /// operation — because lease releases happen from `GenState::drop`
+    /// without a hub reference, so a release's discount change cannot
+    /// land synchronously.
+    fn reaccount_pods(&mut self, cfg: &crate::runtime::ModelConfig) {
+        let mem = &mut self.mem;
+        for pod_rc in &self.pods {
+            let p = pod_rc.borrow();
+            mem.set_component(&format!("pod{}", p.id), pod_accounted_bytes(&p, cfg));
+        }
+    }
+
     fn retire_empty_pods(&mut self) {
         let mem = &mut self.mem;
         self.pods.retain(|pod| {
@@ -901,6 +1014,7 @@ mod tests {
             id,
             rows,
             pos,
+            prefix_tokens: 0,
             staged_tokens: Vec::new(),
             staged: false,
             staged_signals: false,
@@ -1090,6 +1204,70 @@ mod tests {
         assert_eq!(inner.pods.len(), 1);
         assert_eq!(inner.mem.current(), 4096);
         assert_eq!(inner.mem.component_count(), 1, "retired pod entry must be removed");
+    }
+
+    fn tiny_cfg() -> crate::runtime::ModelConfig {
+        crate::runtime::ModelConfig {
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            max_seq: 16,
+            prompt_len: 8,
+            vocab: 4,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn pod_accounting_discounts_cow_shared_prefix_rows() {
+        let cfg = tiny_cfg();
+        let (bpb, bpt) = (cfg.kv_bytes_per_branch(), cfg.kv_bytes_per_token());
+        let mut pod = offline_pod(8);
+        // No leases: the pod is charged in full.
+        assert_eq!(pod_accounted_bytes(&pod, &cfg), 8 * bpb);
+        // A shared-prefix lease discounts prefix_tokens slots per row; a
+        // private lease discounts nothing.
+        let mut shared = lease(0, vec![0, 1, 2], 5);
+        shared.prefix_tokens = 5;
+        pod.leases.push(shared);
+        pod.leases.push(lease(1, vec![3, 4], 5));
+        assert_eq!(pod_accounted_bytes(&pod, &cfg), 8 * bpb - 3 * 5 * bpt);
+        // Pruning a shared row shrinks the discount with it.
+        pod.shrink(0, &[0, 2]).unwrap();
+        assert_eq!(pod_accounted_bytes(&pod, &cfg), 8 * bpb - 2 * 5 * bpt);
+    }
+
+    #[test]
+    fn reaccount_pods_lands_release_discount_changes_lazily() {
+        // A lease release runs from GenState::drop without a hub
+        // reference; the next hub operation's reaccount pass must bring
+        // the pod component back up to its undiscounted value.
+        let cfg = tiny_cfg();
+        let (bpb, bpt) = (cfg.kv_bytes_per_branch(), cfg.kv_bytes_per_token());
+        let mut inner = HubInner {
+            cfg: FuseConfig::default(),
+            pods: Vec::new(),
+            mem: MemTracker::new(),
+            next_pod: 1,
+            stats: FuseStats::default(),
+        };
+        let mut pod = offline_pod(4);
+        pod.free.clear();
+        let mut shared = lease(0, vec![0, 1], 7);
+        shared.prefix_tokens = 7;
+        pod.leases.push(shared);
+        pod.leases.push(lease(1, vec![2, 3], 7));
+        inner.mem.set_component("pod0", pod_accounted_bytes(&pod, &cfg));
+        let pod_rc = Rc::new(RefCell::new(pod));
+        inner.pods.push(Rc::clone(&pod_rc));
+        assert_eq!(inner.mem.current(), 4 * bpb - 2 * 7 * bpt);
+
+        // The shared-prefix request completes out-of-band.
+        pod_rc.borrow_mut().release(0);
+        assert_eq!(inner.mem.current(), 4 * bpb - 2 * 7 * bpt, "stale until the next hub op");
+        inner.reaccount_pods(&cfg);
+        assert_eq!(inner.mem.current(), 4 * bpb, "discount gone once no shared lease remains");
     }
 
     #[test]

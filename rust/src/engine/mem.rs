@@ -30,6 +30,26 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+/// One journal line: what moved, by how much, and where `current`
+/// landed. For **shared** components (prefix-store entries read by
+/// several requests at once) the reader refcount at write time rides
+/// along — a share/release pair used to journal as two opaque size-0
+/// events, which made the pod-bytes trajectory in `BENCH_serve.json`
+/// unreadable for shared pages; `readers` disambiguates
+/// first-fill / extra-reader / last-release at a glance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalEntry {
+    pub label: String,
+    /// Signed byte delta this write applied.
+    pub delta: i64,
+    /// `current` immediately after the write.
+    pub current: usize,
+    /// Reader refcount at write time — `Some` only for shared-component
+    /// writes ([`MemTracker::set_component_shared`] /
+    /// [`MemTracker::remove_component_shared`]).
+    pub readers: Option<usize>,
+}
+
 /// Tracks current and peak accounted bytes, with named components for
 /// quantities that are *set* (recomputed) rather than alloc'd/freed.
 #[derive(Debug, Clone, Default)]
@@ -37,11 +57,11 @@ pub struct MemTracker {
     current: usize,
     peak: usize,
     components: BTreeMap<String, usize>,
-    /// Rolling journal of (label, delta-bytes, current-after): a ring
-    /// bounded at `journal_cap` — the oldest entries fall off, so a
-    /// long-running tracker keeps the *recent* history (the useful part
-    /// for debugging an accounting bug) at constant memory.
-    journal: VecDeque<(String, i64, usize)>,
+    /// Rolling journal ring bounded at `journal_cap` — the oldest
+    /// entries fall off, so a long-running tracker keeps the *recent*
+    /// history (the useful part for debugging an accounting bug) at
+    /// constant memory.
+    journal: VecDeque<JournalEntry>,
     journal_cap: usize,
 }
 
@@ -60,7 +80,7 @@ impl MemTracker {
     pub fn alloc(&mut self, label: &str, bytes: usize) {
         self.current += bytes;
         self.bump_peak();
-        self.log(label, bytes as i64);
+        self.log(label, bytes as i64, None);
     }
 
     /// One-shot free. Freeing more than is currently tracked is a
@@ -76,11 +96,11 @@ impl MemTracker {
         let Some(next) = self.current.checked_sub(bytes) else {
             let had = self.current;
             self.current = 0;
-            self.log(label, -(bytes as i64));
+            self.log(label, -(bytes as i64), None);
             panic!("MemTracker::free underflow: freeing {bytes} bytes of {label:?} with only {had} tracked");
         };
         self.current = next;
-        self.log(label, -(bytes as i64));
+        self.log(label, -(bytes as i64), None);
     }
 
     /// Set a named component to an absolute byte count (the KV cache's
@@ -89,7 +109,21 @@ impl MemTracker {
         let old = self.components.insert(label.to_string(), bytes).unwrap_or(0);
         self.current = self.current + bytes - old.min(self.current);
         self.bump_peak();
-        self.log(label, bytes as i64 - old as i64);
+        self.log(label, bytes as i64 - old as i64, None);
+    }
+
+    /// [`Self::set_component`] for a **shared** component, recording the
+    /// reader refcount at write time in the journal. The byte value is
+    /// charged once however many readers hold the entry (that is the
+    /// point of sharing); the journal line carries `readers` so a
+    /// hit (delta 0, readers up) is distinguishable from a first fill
+    /// (delta +bytes, readers 1) and from a mid-life release (delta 0,
+    /// readers down).
+    pub fn set_component_shared(&mut self, label: &str, bytes: usize, readers: usize) {
+        let old = self.components.insert(label.to_string(), bytes).unwrap_or(0);
+        self.current = self.current + bytes - old.min(self.current);
+        self.bump_peak();
+        self.log(label, bytes as i64 - old as i64, Some(readers));
     }
 
     /// Drop a component entirely: its bytes leave `current` and the map
@@ -100,7 +134,19 @@ impl MemTracker {
     pub fn remove_component(&mut self, label: &str) {
         if let Some(old) = self.components.remove(label) {
             self.current = self.current.saturating_sub(old);
-            self.log(label, -(old as i64));
+            self.log(label, -(old as i64), None);
+        }
+    }
+
+    /// [`Self::remove_component`] for a **shared** component — the
+    /// last-reader release. Journals `readers` (0 at that point) so the
+    /// free is attributable: exactly one journal line per shared entry
+    /// carries the negative delta, and it names the refcount that
+    /// justified it.
+    pub fn remove_component_shared(&mut self, label: &str, readers: usize) {
+        if let Some(old) = self.components.remove(label) {
+            self.current = self.current.saturating_sub(old);
+            self.log(label, -(old as i64), Some(readers));
         }
     }
 
@@ -120,14 +166,19 @@ impl MemTracker {
         }
     }
 
-    fn log(&mut self, label: &str, delta: i64) {
+    fn log(&mut self, label: &str, delta: i64, readers: Option<usize>) {
         if self.journal_cap == 0 {
             return;
         }
         while self.journal.len() >= self.journal_cap {
             self.journal.pop_front();
         }
-        self.journal.push_back((label.to_string(), delta, self.current));
+        self.journal.push_back(JournalEntry {
+            label: label.to_string(),
+            delta,
+            current: self.current,
+            readers,
+        });
     }
 
     pub fn current(&self) -> usize {
@@ -142,7 +193,7 @@ impl MemTracker {
         self.peak as f64 / (1024.0 * 1024.0)
     }
 
-    pub fn journal(&self) -> &VecDeque<(String, i64, usize)> {
+    pub fn journal(&self) -> &VecDeque<JournalEntry> {
         &self.journal
     }
 }
@@ -207,9 +258,34 @@ mod tests {
         m.free("x", 10);
         m.set_component("kv", 5);
         assert_eq!(m.journal().len(), 3);
-        assert_eq!(m.journal()[0].1, 10);
-        assert_eq!(m.journal()[1].1, -10);
-        assert_eq!(m.journal()[2].1, 5);
+        assert_eq!(m.journal()[0].delta, 10);
+        assert_eq!(m.journal()[1].delta, -10);
+        assert_eq!(m.journal()[2].delta, 5);
+        // Non-shared ops never carry a refcount.
+        assert!(m.journal().iter().all(|e| e.readers.is_none()));
+    }
+
+    #[test]
+    fn shared_component_journal_records_reader_refcounts() {
+        // Prefix-store lifecycle as the journal should show it: first
+        // fill charges the bytes at readers=1, a second reader is a
+        // delta-0 line at readers=2, a mid-life release is delta-0 at
+        // readers=1, and the last-reader release is the single negative
+        // line, at readers=0.
+        let mut m = MemTracker::new();
+        m.set_component_shared("prefix:a1", 4096, 1);
+        m.set_component_shared("prefix:a1", 4096, 2);
+        m.set_component_shared("prefix:a1", 4096, 1);
+        m.remove_component_shared("prefix:a1", 0);
+        let j: Vec<(i64, Option<usize>)> =
+            m.journal().iter().map(|e| (e.delta, e.readers)).collect();
+        assert_eq!(
+            j,
+            vec![(4096, Some(1)), (0, Some(2)), (0, Some(1)), (-4096, Some(0))]
+        );
+        assert_eq!(m.current(), 0);
+        assert_eq!(m.peak(), 4096, "sharing must charge the entry once, not per reader");
+        assert_eq!(m.component_count(), 0, "last release must drop the map entry");
     }
 
     #[test]
@@ -222,7 +298,7 @@ mod tests {
             m.set_component("kv", i * 100);
         }
         assert_eq!(m.journal().len(), 4);
-        let last: Vec<usize> = m.journal().iter().map(|e| e.2).collect();
+        let last: Vec<usize> = m.journal().iter().map(|e| e.current).collect();
         assert_eq!(last, vec![600, 700, 800, 900], "ring must keep the newest entries");
         // A zero cap disables journaling entirely.
         let mut quiet = MemTracker::with_journal_cap(0);

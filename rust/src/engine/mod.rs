@@ -85,6 +85,7 @@
 
 pub mod fusion;
 pub mod mem;
+pub mod prefix;
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -94,6 +95,7 @@ use anyhow::{bail, Context, Result};
 
 pub use fusion::{FuseConfig, FuseStats, FusionHub, PodFault};
 pub use mem::MemTracker;
+pub use prefix::{PrefixEntryData, PrefixHandle, PrefixStore};
 
 use crate::runtime::{KvCache, LoadedModel};
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
@@ -168,6 +170,28 @@ impl Engine {
         admission_projection(self.model.buckets(), n, &self.model.config)
     }
 
+    /// [`Engine::admission_cost`] under prompt-prefix KV sharing (see
+    /// [`admission_projection_shared`]): the prefix's KV slots are
+    /// charged once (shared), only the per-branch suffix growth scales
+    /// with the bucket — strictly cheaper than the private projection
+    /// for every bucket ≥ 2, which is what admits strictly more
+    /// co-resident work at the same `mem_budget_bytes`.
+    pub fn admission_cost_shared(&self, n: usize, prompt_len: usize) -> Result<(usize, usize)> {
+        admission_projection_shared(self.model.buckets(), n, prompt_len, &self.model.config)
+    }
+
+    /// Token length the prompt's prefix-store key will have — the
+    /// `prompt_len` input [`Engine::admission_cost_shared`] wants,
+    /// computable before any device work.
+    pub fn prompt_tokens(&self, prompt: &str) -> Result<usize> {
+        let cfg = &self.model.config;
+        let (_, prompt_len) = self
+            .tokenizer
+            .encode_prompt(prompt, cfg.prompt_len)
+            .with_context(|| format!("encoding prompt {prompt:?}"))?;
+        Ok(prompt_len)
+    }
+
     /// [`Engine::start`] with options (see [`StartOpts`]) — the **solo**
     /// residence: the request owns its bucketed KV cache.
     pub fn start_opts(&self, prompt: &str, n: usize, opts: StartOpts) -> Result<GenState> {
@@ -211,6 +235,113 @@ impl Engine {
             mem,
             StartOpts::default(),
         ))
+    }
+
+    /// [`Engine::start_opts`] against a shared [`PrefixStore`] — the
+    /// prompt prefix is prefilled **once per unique resident token
+    /// prefix** across every request using the store. A hit skips the
+    /// prefill dispatch entirely and broadcasts the resident bucket-1
+    /// entry into this request's own cache via the non-consuming gather;
+    /// the request's logits seed, virtual memory components, and
+    /// counters are bit-identical to the private path either way.
+    pub fn start_opts_shared(
+        &self,
+        store: &PrefixStore,
+        prompt: &str,
+        n: usize,
+        opts: StartOpts,
+    ) -> Result<GenState> {
+        let (logits_row, handle, mut mem, prompt_len) =
+            self.prefill_request_shared(store, prompt, n)?;
+        let cfg = &self.model.config;
+        let bucket = self.model.bucket_for(n)?;
+        // Broadcast into an owned cache (gather never consumes the
+        // shared source; (1, 1) is exported, so bucket-1 requests take
+        // an identity-broadcast copy).
+        let idx = vec![0i32; bucket];
+        let cache = handle.with_entry(|e| self.model.gather(&e.cache, bucket, &idx))?;
+        if bucket > 1 {
+            mem.set_component("kv", bucket * prompt_len * cfg.kv_bytes_per_token());
+        }
+        let mut st =
+            self.init_state(Residence::Solo(cache), bucket, n, prompt_len, &logits_row, mem, opts);
+        st.prefix = Some(handle);
+        Ok(st)
+    }
+
+    /// [`Engine::start_fused`] against a shared [`PrefixStore`]: the
+    /// resident prefix entry seeds the pod lease through
+    /// [`FusionHub::place_from`] — the `fork` executable broadcasts it
+    /// into the leased rows in place (pod k/v donated; `fuse`/`gather`
+    /// fallbacks are bit-identical), and the leased rows' prefix region
+    /// stays copy-on-write against the store entry, discounted from the
+    /// hub's physical accounting.
+    pub fn start_fused_shared(
+        &self,
+        hub: &FusionHub,
+        store: &PrefixStore,
+        prompt: &str,
+        n: usize,
+    ) -> Result<GenState> {
+        let (logits_row, handle, mut mem, prompt_len) =
+            self.prefill_request_shared(store, prompt, n)?;
+        let cfg = &self.model.config;
+        let bucket = self.model.bucket_for(n)?;
+        if bucket > 1 {
+            mem.set_component("kv", bucket * prompt_len * cfg.kv_bytes_per_token());
+        }
+        let (pool, lease) =
+            handle.with_entry(|e| hub.place_from(self, &e.cache, n, prompt_len, prompt_len))?;
+        let mut st = self.init_state(
+            Residence::Fused { pool, lease },
+            bucket,
+            n,
+            prompt_len,
+            &logits_row,
+            mem,
+            StartOpts::default(),
+        );
+        st.prefix = Some(handle);
+        Ok(st)
+    }
+
+    /// Shared-prefix start prologue: tokenize, account the weight floor,
+    /// then *look up or fill* the prefix entry — the fill (a real
+    /// prefill dispatch) runs only when no resident request holds this
+    /// exact token prefix. The per-request paged model is charged
+    /// exactly as a private prefill would be, hit or miss.
+    fn prefill_request_shared(
+        &self,
+        store: &PrefixStore,
+        prompt: &str,
+        n: usize,
+    ) -> Result<(Vec<f32>, PrefixHandle, MemTracker, usize)> {
+        if n == 0 {
+            bail!("need at least one branch");
+        }
+        let cfg = &self.model.config;
+        let (ids, prompt_len) = self
+            .tokenizer
+            .encode_prompt(prompt, cfg.prompt_len)
+            .with_context(|| format!("encoding prompt {prompt:?}"))?;
+        let ids_i32: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
+        let key = &ids_i32[..prompt_len.max(1)];
+
+        let mut mem = MemTracker::new();
+        mem.alloc("weights", cfg.n_params * 4);
+
+        let handle = store.acquire_with(key, || {
+            let (logits, cache) = self.model.prefill(key)?;
+            Ok(PrefixEntryData {
+                logits,
+                cache,
+                prompt_len,
+                bytes: prompt_len * cfg.kv_bytes_per_token(),
+            })
+        })?;
+        mem.set_component("kv", prompt_len * cfg.kv_bytes_per_token());
+        let logits_row = handle.with_entry(|e| e.logits.clone());
+        Ok((logits_row, handle, mem, prompt_len))
     }
 
     /// Shared start prologue: tokenize, account the weight floor, run
@@ -294,6 +425,7 @@ impl Engine {
             sig_ent: Vec::new(),
             sig_spare: Vec::new(),
             fused_valid: false,
+            prefix: None,
         }
     }
 }
@@ -382,6 +514,11 @@ pub struct GenState {
     /// [`Self::step_fused`], maintained across retain/compaction
     /// repacks, cleared by plain [`Self::step`].
     fused_valid: bool,
+    /// Hold on the shared prefix-store entry this request's prefill came
+    /// from (`None` on the private paths). Dropping the state — on
+    /// completion, eviction, or fault unwind — releases the hold, and
+    /// the last reader's release reclaims the entry (see [`prefix`]).
+    prefix: Option<PrefixHandle>,
 }
 
 /// Repack a row-major `[rows × width]` buffer so destination row `i`
@@ -423,6 +560,31 @@ pub fn admission_projection(
         .find(|&b| b >= n)
         .ok_or_else(|| anyhow::anyhow!("no bucket holds {n} branches"))?;
     Ok((bucket, bucket * cfg.max_seq * cfg.kv_bytes_per_token()))
+}
+
+/// [`admission_projection`] under prompt-prefix KV sharing: the
+/// `prompt_len` prefix slots are charged **once** (they live on the
+/// prefix store, copy-on-write for every reader row), so a request adds
+/// one shared prefix plus `bucket` private suffixes —
+/// `(prompt_len + bucket × (max_seq − prompt_len)) × bytes/token`.
+/// Strictly below the private projection whenever `bucket ≥ 2` and the
+/// prompt is non-empty, which is what lets the scheduler admit strictly
+/// more co-resident work at the same `mem_budget_bytes`. Worst-cases the
+/// same way as the private rule: branch count rounded up to the bucket,
+/// suffixes projected to `max_seq`.
+pub fn admission_projection_shared(
+    buckets: &[usize],
+    n: usize,
+    prompt_len: usize,
+    cfg: &crate::runtime::ModelConfig,
+) -> Result<(usize, usize)> {
+    let bucket = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| anyhow::anyhow!("no bucket holds {n} branches"))?;
+    let suffix = cfg.max_seq.saturating_sub(prompt_len);
+    Ok((bucket, (prompt_len + bucket * suffix) * cfg.kv_bytes_per_token()))
 }
 
 impl GenState {
@@ -862,6 +1024,33 @@ mod tests {
         assert_eq!(admission_projection(&buckets, 1, &c).unwrap(), (1, 16 * bpt));
         // Beyond the largest bucket is an error, not a silent clamp.
         assert!(admission_projection(&buckets, 9, &c).is_err());
+    }
+
+    #[test]
+    fn shared_projection_charges_the_prefix_once() {
+        let buckets = [1usize, 2, 4, 8];
+        let c = cfg(); // max_seq 16
+        let bpt = c.kv_bytes_per_token();
+        // One shared 6-token prefix + bucket private 10-token suffixes.
+        assert_eq!(
+            admission_projection_shared(&buckets, 5, 6, &c).unwrap(),
+            (8, (6 + 8 * 10) * bpt)
+        );
+        // Strictly below the private projection for bucket ≥ 2...
+        let (_, private) = admission_projection(&buckets, 5, &c).unwrap();
+        let (_, shared) = admission_projection_shared(&buckets, 5, 6, &c).unwrap();
+        assert!(shared < private, "{shared} vs {private}");
+        // ...and identical to it for bucket 1 (nothing to share across).
+        assert_eq!(
+            admission_projection_shared(&buckets, 1, 6, &c).unwrap().1,
+            admission_projection(&buckets, 1, &c).unwrap().1
+        );
+        // Empty prefix degenerates to the private rule.
+        assert_eq!(
+            admission_projection_shared(&buckets, 5, 0, &c).unwrap(),
+            admission_projection(&buckets, 5, &c).unwrap()
+        );
+        assert!(admission_projection_shared(&buckets, 9, 6, &c).is_err());
     }
 
     #[test]

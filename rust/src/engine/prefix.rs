@@ -1,0 +1,384 @@
+//! Prompt-prefix KV sharing: prefill once per unique token prefix.
+//!
+//! Serving traces repeat prompts — a Best-of-N request already fans one
+//! prompt into `n` branches, and co-resident requests frequently carry
+//! the *same* prompt (benchmark replays, templated system prefixes).
+//! Before this store, every admission paid a full prefill dispatch and
+//! the prompt's KV bytes per request. Now the first request to present
+//! a token prefix fills one **shared** bucket-1 entry (prefill logits +
+//! primed KV cache); every later request with the same prefix acquires
+//! the entry by refcount and broadcasts it into its own rows — copy-on-
+//! write at the divergence point via `fork_{m}_b1to{D}` (or the
+//! non-donating `fuse`/`gather` fallbacks), so the shared entry is
+//! never consumed by a reader.
+//!
+//! Lifecycle invariants (property-tested below, artifact-free):
+//! - an entry with live readers is never reclaimed;
+//! - the last reader's release frees the entry **exactly once** — a
+//!   fault-retried request that already released its handle cannot
+//!   double-free;
+//! - two requests racing to fill the same prefix converge to one entry
+//!   and one fill (the loser's closure never runs);
+//! - a **failing** fill caches nothing: the next acquire re-runs the
+//!   fill instead of serving a poisoned entry.
+//!
+//! Accounting: the store owns its own [`MemTracker`] and charges each
+//! entry's prefix KV bytes **once** however many readers share it, via
+//! the refcount-journaling shared-component API
+//! ([`MemTracker::set_component_shared`]) — so the journal shows
+//! first-fill / extra-reader / last-release transitions explicitly, and
+//! `shared bytes = store.mem().current()` is directly comparable to the
+//! hub's private pod bytes in `BENCH_serve.json`. Per-request virtual
+//! trackers are untouched: a request's own `peak_mem_bytes` stays
+//! bit-identical whether its prefill was a hit or a miss.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::KvCache;
+
+use super::mem::MemTracker;
+
+/// What a fill produces and the store retains: one prefilled bucket-1
+/// prefix, ready to broadcast into any reader's rows.
+pub struct PrefixEntryData {
+    /// Prefill logits row `[vocab]` — seeds every reader branch's first
+    /// sample, exactly as a private prefill's logits would.
+    pub logits: Vec<f32>,
+    /// The primed bucket-1 KV cache. Readers `fork`/`fuse`/`gather`
+    /// *from* it (none of those donate the source), so it stays valid
+    /// for the entry's whole life.
+    pub cache: KvCache,
+    /// Token length of the prefix (the divergence point: readers own
+    /// every position `>= prompt_len`).
+    pub prompt_len: usize,
+    /// Accounted KV bytes of the shared prefix
+    /// (`prompt_len × kv_bytes_per_token`), charged once on the store's
+    /// tracker.
+    pub bytes: usize,
+}
+
+struct Entry {
+    data: PrefixEntryData,
+    /// Live handles over this entry. The entry is reclaimed when this
+    /// reaches zero — no idle retention, so the store's footprint is
+    /// exactly the prefixes some resident request still reads.
+    readers: usize,
+    /// Journal label, stable for the entry's life
+    /// (`prefix:{fnv1a(key):016x}`).
+    label: String,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    /// Keyed by the **exact** token-id prefix — the hash is only a
+    /// journal label; collisions cannot alias two different prompts.
+    entries: BTreeMap<Vec<i32>, Entry>,
+    mem: MemTracker,
+    hits: usize,
+    misses: usize,
+}
+
+/// Refcounted store of prefilled prompt prefixes, shared by every
+/// request a worker admits (module docs). Cheaply cloneable; clones
+/// share the same entries.
+#[derive(Clone, Default)]
+pub struct PrefixStore {
+    inner: Rc<RefCell<StoreInner>>,
+}
+
+/// FNV-1a over the token ids — journal/bench label only (entry identity
+/// is the exact token vector).
+fn prefix_hash(key: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in key {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+impl PrefixStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire the entry for `key`, running `fill` only if no request
+    /// currently holds it (one prefill per unique resident prefix — the
+    /// bench invariant). The fill runs *outside* the store's borrow, so
+    /// it may dispatch through the same engine that owns the store; if
+    /// it errors, nothing is cached and the error propagates — the next
+    /// acquire re-fills.
+    pub fn acquire_with(
+        &self,
+        key: &[i32],
+        fill: impl FnOnce() -> Result<PrefixEntryData>,
+    ) -> Result<PrefixHandle> {
+        {
+            let mut inner = self.inner.borrow_mut();
+            if let Some(e) = inner.entries.get_mut(key) {
+                e.readers += 1;
+                let (label, bytes, readers) = (e.label.clone(), e.data.bytes, e.readers);
+                inner.hits += 1;
+                // Delta-0 journal line: same bytes, one more reader.
+                inner.mem.set_component_shared(&label, bytes, readers);
+                return Ok(self.handle(key));
+            }
+        }
+        let data = fill()?;
+        let mut inner = self.inner.borrow_mut();
+        // Re-check: a reentrant fill could have populated the key while
+        // our borrow was released. Converge on the existing entry (one
+        // entry, one fill's bytes) rather than clobbering it under its
+        // readers.
+        if let Some(e) = inner.entries.get_mut(key) {
+            e.readers += 1;
+            let (label, bytes, readers) = (e.label.clone(), e.data.bytes, e.readers);
+            inner.hits += 1;
+            inner.mem.set_component_shared(&label, bytes, readers);
+            return Ok(self.handle(key));
+        }
+        inner.misses += 1;
+        let label = format!("prefix:{:016x}", prefix_hash(key));
+        inner.mem.set_component_shared(&label, data.bytes, 1);
+        inner.entries.insert(key.to_vec(), Entry { data, readers: 1, label });
+        Ok(self.handle(key))
+    }
+
+    fn handle(&self, key: &[i32]) -> PrefixHandle {
+        PrefixHandle { inner: Rc::clone(&self.inner), key: key.to_vec(), released: false }
+    }
+
+    /// Prefixes currently resident (each held by ≥ 1 reader).
+    pub fn entry_count(&self) -> usize {
+        self.inner.borrow().entries.len()
+    }
+
+    /// Acquires served from an already-resident entry.
+    pub fn hits(&self) -> usize {
+        self.inner.borrow().hits
+    }
+
+    /// Acquires that ran a fill.
+    pub fn misses(&self) -> usize {
+        self.inner.borrow().misses
+    }
+
+    /// Shared prefix KV bytes currently charged (each entry once,
+    /// however many readers).
+    pub fn shared_bytes(&self) -> usize {
+        self.inner.borrow().mem.current()
+    }
+
+    /// High-water mark of [`Self::shared_bytes`].
+    pub fn shared_bytes_peak(&self) -> usize {
+        self.inner.borrow().mem.peak()
+    }
+
+    /// Borrow the store's tracker (journal inspection: the shared
+    /// entries' refcounted history).
+    pub fn with_mem<R>(&self, f: impl FnOnce(&MemTracker) -> R) -> R {
+        f(&self.inner.borrow().mem)
+    }
+}
+
+/// One reader's hold on a shared prefix entry. Releases exactly once —
+/// explicitly via [`PrefixHandle::release`] or implicitly on drop
+/// (request completion, eviction, fault unwind all funnel through the
+/// owning `GenState`'s drop). The last release reclaims the entry.
+pub struct PrefixHandle {
+    inner: Rc<RefCell<StoreInner>>,
+    key: Vec<i32>,
+    released: bool,
+}
+
+impl PrefixHandle {
+    /// Read the shared entry. Closure-scoped because the store is
+    /// `RefCell`-guarded — do not re-enter the store from `f`.
+    pub fn with_entry<R>(&self, f: impl FnOnce(&PrefixEntryData) -> R) -> R {
+        let inner = self.inner.borrow();
+        let e = inner
+            .entries
+            .get(&self.key)
+            .expect("prefix entry reclaimed while a live handle reads it");
+        f(&e.data)
+    }
+
+    /// Token length of the shared prefix (the divergence point).
+    pub fn prompt_len(&self) -> usize {
+        self.with_entry(|e| e.prompt_len)
+    }
+
+    /// Release this hold. Idempotent: a second call (or the drop after
+    /// an explicit release) is a no-op, so a fault-retry path that
+    /// already released cannot double-free the entry.
+    pub fn release(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        let mut inner = self.inner.borrow_mut();
+        let Some(e) = inner.entries.get_mut(&self.key) else {
+            return;
+        };
+        e.readers -= 1;
+        if e.readers == 0 {
+            let label = e.label.clone();
+            inner.entries.remove(&self.key);
+            inner.mem.remove_component_shared(&label, 0);
+        } else {
+            let (label, bytes, readers) = (e.label.clone(), e.data.bytes, e.readers);
+            inner.mem.set_component_shared(&label, bytes, readers);
+        }
+    }
+}
+
+impl Drop for PrefixHandle {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    /// Offline entry data — the stub client builds buffers without
+    /// artifacts; only executes are refused, and the store never
+    /// executes.
+    fn entry(bytes: usize) -> PrefixEntryData {
+        let rt = crate::runtime::Runtime::new().unwrap();
+        let k = rt.f32_buffer(&[0.0], &[1]).unwrap();
+        let v = rt.f32_buffer(&[0.0], &[1]).unwrap();
+        PrefixEntryData {
+            logits: vec![0.0; 4],
+            cache: KvCache { k, v, bucket: 1 },
+            prompt_len: 3,
+            bytes,
+        }
+    }
+
+    #[test]
+    fn racing_acquires_converge_to_one_entry_and_one_fill() {
+        let store = PrefixStore::new();
+        let key = [5, 6, 7];
+        let mut fills = 0usize;
+        let a = store
+            .acquire_with(&key, || {
+                fills += 1;
+                Ok(entry(1024))
+            })
+            .unwrap();
+        let b = store
+            .acquire_with(&key, || {
+                fills += 1;
+                Ok(entry(1024))
+            })
+            .unwrap();
+        assert_eq!(fills, 1, "second acquire must be a hit, not a second prefill");
+        assert_eq!(store.entry_count(), 1);
+        assert_eq!((store.hits(), store.misses()), (1, 1));
+        // Charged once, not per reader.
+        assert_eq!(store.shared_bytes(), 1024);
+        // Both handles read the same prefix.
+        assert_eq!(a.prompt_len(), 3);
+        assert_eq!(b.prompt_len(), 3);
+        drop((a, b));
+    }
+
+    #[test]
+    fn live_reader_entries_are_never_reclaimed() {
+        let store = PrefixStore::new();
+        let a = store.acquire_with(&[1], || Ok(entry(100))).unwrap();
+        let b = store.acquire_with(&[1], || Ok(entry(100))).unwrap();
+        drop(a);
+        // One reader still live: entry and bytes must survive.
+        assert_eq!(store.entry_count(), 1);
+        assert_eq!(store.shared_bytes(), 100);
+        b.with_entry(|e| assert_eq!(e.prompt_len, 3));
+        drop(b);
+        assert_eq!(store.entry_count(), 0);
+        assert_eq!(store.shared_bytes(), 0);
+    }
+
+    #[test]
+    fn last_release_frees_exactly_once_even_on_fault_retry_double_release() {
+        let store = PrefixStore::new();
+        let mut a = store.acquire_with(&[9, 9], || Ok(entry(256))).unwrap();
+        // Fault path releases explicitly...
+        a.release();
+        assert_eq!(store.shared_bytes(), 0);
+        // ...then the retry re-acquires (a fresh fill: the entry was
+        // reclaimed) while the old handle is still in scope.
+        let b = store.acquire_with(&[9, 9], || Ok(entry(256))).unwrap();
+        assert_eq!(store.shared_bytes(), 256);
+        // The stale handle's drop must NOT decrement the new entry.
+        drop(a);
+        assert_eq!(store.entry_count(), 1, "stale double-release reclaimed a live entry");
+        assert_eq!(store.shared_bytes(), 256);
+        drop(b);
+        assert_eq!(store.entry_count(), 0);
+        // Journal tells the full story: fill(1) → remove(0) → fill(1) →
+        // remove(0), every line refcounted.
+        store.with_mem(|m| {
+            let rs: Vec<Option<usize>> = m.journal().iter().map(|e| e.readers).collect();
+            assert_eq!(rs, vec![Some(1), Some(0), Some(1), Some(0)]);
+        });
+    }
+
+    #[test]
+    fn failing_fill_caches_nothing_and_the_next_acquire_refills() {
+        let store = PrefixStore::new();
+        let err = store
+            .acquire_with(&[3, 1], || -> Result<PrefixEntryData> { bail!("injected: prefill@1") })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        assert_eq!(store.entry_count(), 0, "a failed fill must not leave a poisoned entry");
+        assert_eq!((store.hits(), store.misses()), (0, 0));
+        assert_eq!(store.shared_bytes(), 0);
+        // Containment: the next acquire re-runs the fill and succeeds.
+        let h = store.acquire_with(&[3, 1], || Ok(entry(64))).unwrap();
+        assert_eq!((store.hits(), store.misses()), (0, 1));
+        assert_eq!(store.shared_bytes(), 64);
+        drop(h);
+    }
+
+    #[test]
+    fn distinct_prefixes_get_distinct_entries() {
+        let store = PrefixStore::new();
+        let a = store.acquire_with(&[1, 2], || Ok(entry(10))).unwrap();
+        let b = store.acquire_with(&[1, 3], || Ok(entry(20))).unwrap();
+        assert_eq!(store.entry_count(), 2);
+        assert_eq!(store.shared_bytes(), 30);
+        assert_eq!(store.misses(), 2);
+        drop(a);
+        assert_eq!(store.shared_bytes(), 20);
+        drop(b);
+        assert_eq!(store.shared_bytes(), 0);
+        assert_eq!(store.shared_bytes_peak(), 30);
+    }
+
+    #[test]
+    fn journal_shows_refcount_transitions_for_a_shared_entry() {
+        let store = PrefixStore::new();
+        let a = store.acquire_with(&[7], || Ok(entry(512))).unwrap();
+        let b = store.acquire_with(&[7], || Ok(entry(512))).unwrap();
+        drop(a);
+        drop(b);
+        store.with_mem(|m| {
+            let j: Vec<(i64, Option<usize>)> =
+                m.journal().iter().map(|e| (e.delta, e.readers)).collect();
+            assert_eq!(
+                j,
+                vec![(512, Some(1)), (0, Some(2)), (0, Some(1)), (-512, Some(0))],
+                "fill / extra-reader / release / last-release must each journal its refcount"
+            );
+        });
+    }
+}

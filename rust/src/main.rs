@@ -53,6 +53,9 @@ USAGE:
   kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
                  [--requests 20] [--dataset gsm]
                  [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0] [--no-fuse]
+                 [--prefix-share]  (prefill once per unique prompt prefix and
+                                share its KV copy-on-write across co-resident
+                                requests; outputs stay bit-identical)
                  [--preempt]   (evict the youngest-progress request instead of
                                 head-of-line blocking when admission is
                                 memory-bound; evicted requests re-prefill and
@@ -230,14 +233,16 @@ fn serve(args: &Args) -> Result<()> {
         quarantine_after: args.usize_or("quarantine-after", d.quarantine_after),
         quarantine_cooldown: args.u64_or("quarantine-cooldown", d.quarantine_cooldown),
         deadline_ms: args.u64_or("deadline-ms", d.deadline_ms),
+        prefix_share: args.bool_or("prefix-share", false),
     };
     let fault_plan = args.get("fault-plan").map(str::to_string);
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots, fusion {}, preemption {}{}) …",
+         (≤{} in flight, {} slots, fusion {}, prefix share {}, preemption {}{}) …",
         sched.max_inflight,
         sched.slot_budget,
         if sched.fuse { "on" } else { "off" },
+        if sched.prefix_share { "on" } else { "off" },
         if sched.preempt == PreemptPolicy::EvictYoungest { "evict-youngest" } else { "off" },
         match &fault_plan {
             Some(spec) => format!(", fault plan {spec:?}"),

@@ -47,6 +47,15 @@ pub struct Runtime {
     /// decode family only, and compaction is a between-ticks lifecycle
     /// event, not a token dispatch.
     compact_dispatches: AtomicUsize,
+    /// Request prompt-prefill dispatches issued so far (the load-time
+    /// BOS pass for `q` is excluded — it is a model constant, not
+    /// request work). The prefix-sharing invariant is stated in this
+    /// counter: with the prefix store on, one scheduler epoch issues
+    /// exactly one prefill per **unique token prefix**, however many
+    /// requests/branches share it — `perf_microbench`'s
+    /// `prefix_sharing` section asserts it against the per-request
+    /// baseline.
+    prefill_dispatches: AtomicUsize,
     /// Optional injected-fault plan (`runtime::faults`). Checked at
     /// every execute/download site *before* the dispatch runs or its
     /// counter moves, so an injected fault is indistinguishable from a
@@ -68,6 +77,7 @@ impl Runtime {
             slab_downloads: AtomicUsize::new(0),
             decode_dispatches: AtomicUsize::new(0),
             compact_dispatches: AtomicUsize::new(0),
+            prefill_dispatches: AtomicUsize::new(0),
             faults: std::sync::RwLock::new(None),
         })
     }
@@ -186,6 +196,18 @@ impl Runtime {
         self.compact_dispatches.load(Ordering::Relaxed)
     }
 
+    /// Note one request prompt-prefill dispatch
+    /// (`LoadedModel::prefill`) — the unit prefix sharing amortizes
+    /// across requests.
+    pub fn note_prefill_dispatch(&self) {
+        self.prefill_dispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Request prompt-prefill dispatches issued so far.
+    pub fn prefill_dispatch_count(&self) -> usize {
+        self.prefill_dispatches.load(Ordering::Relaxed)
+    }
+
     // ---- host → device helpers ----
 
     pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
@@ -290,6 +312,13 @@ mod tests {
         assert_eq!(rt.compact_dispatch_count(), 0);
         rt.note_compact_dispatch();
         assert_eq!(rt.compact_dispatch_count(), 1);
+        assert_eq!(rt.decode_dispatch_count(), 2);
+        // Prefill dispatches count separately — the prefix-sharing
+        // one-prefill-per-unique-prefix invariant is stated in this
+        // counter and must never be polluted by decode traffic.
+        assert_eq!(rt.prefill_dispatch_count(), 0);
+        rt.note_prefill_dispatch();
+        assert_eq!(rt.prefill_dispatch_count(), 1);
         assert_eq!(rt.decode_dispatch_count(), 2);
     }
 

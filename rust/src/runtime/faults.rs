@@ -26,6 +26,10 @@
 //!   compact@0!              # trailing '!': persistent — once fired,
 //!                           # every later dispatch at the site faults
 //!   slab_download%0.02
+//!   prefill@1               # fault the 2nd prompt-prefill dispatch
+//!                           # (request prefill and the shared
+//!                           # prefix-store fill path — see
+//!                           # `engine::prefix`)
 //! ```
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -47,15 +51,19 @@ pub enum FaultSite {
     Compact,
     /// Logits-slab device→host download.
     SlabDownload,
+    /// Prompt prefill execute (request prefill and the shared
+    /// prefix-store fill / fork path).
+    Prefill,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 5] = [
+    pub const ALL: [FaultSite; 6] = [
         FaultSite::Decode,
         FaultSite::Superstep,
         FaultSite::Fuse,
         FaultSite::Compact,
         FaultSite::SlabDownload,
+        FaultSite::Prefill,
     ];
 
     pub fn name(self) -> &'static str {
@@ -65,6 +73,7 @@ impl FaultSite {
             FaultSite::Fuse => "fuse",
             FaultSite::Compact => "compact",
             FaultSite::SlabDownload => "slab_download",
+            FaultSite::Prefill => "prefill",
         }
     }
 
@@ -79,6 +88,7 @@ impl FaultSite {
             FaultSite::Fuse => 2,
             FaultSite::Compact => 3,
             FaultSite::SlabDownload => 4,
+            FaultSite::Prefill => 5,
         }
     }
 }
@@ -135,13 +145,13 @@ impl SiteSpec {
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     seed: u64,
-    sites: [SiteSpec; 5],
+    sites: [SiteSpec; 6],
     /// Dispatch attempts per site (bumped on every `check`).
-    dispatched: [AtomicUsize; 5],
+    dispatched: [AtomicUsize; 6],
     /// Faults actually injected per site.
-    injected: [AtomicUsize; 5],
+    injected: [AtomicUsize; 6],
     /// Persistent clauses latch here once fired.
-    tripped: [AtomicBool; 5],
+    tripped: [AtomicBool; 6],
 }
 
 impl FaultPlan {
@@ -307,6 +317,24 @@ mod tests {
         assert_ne!(a, trace("8"), "different seed must perturb the trace");
         let fired = a.iter().filter(|&&b| b).count();
         assert!((8..=56).contains(&fired), "p=0.5 over 64 draws fired {fired} times");
+    }
+
+    #[test]
+    fn prefill_is_a_recognized_site() {
+        // PR 7: the shared-prefill path is drillable under --fault-plan.
+        assert_eq!(FaultSite::parse("prefill"), Some(FaultSite::Prefill));
+        let p = FaultPlan::parse("prefill@1").unwrap();
+        assert!(p.check(FaultSite::Prefill).is_ok());
+        let e = p.check(FaultSite::Prefill).unwrap_err();
+        assert_eq!(e.site, FaultSite::Prefill);
+        assert_eq!(e.occurrence, 1);
+        assert_eq!(p.injected_total(), 1);
+        // The new site's index extends the table without renumbering
+        // the existing sites (fault traces keyed on site salts stay
+        // reproducible across versions).
+        assert_eq!(FaultSite::Prefill.index(), 5);
+        assert_eq!(FaultSite::SlabDownload.index(), 4);
+        assert_eq!(FaultSite::ALL.len(), 6);
     }
 
     #[test]

@@ -86,6 +86,11 @@ pub struct ModelManifest {
     /// artifact sets predating the pod lifecycle manager carry none, and
     /// the fusion hub then simply never shrinks occupied pods).
     pub compact: BTreeMap<(usize, usize), PathBuf>,
+    /// (src_bucket, dst_bucket) → prefix-sharing copy-on-write fork HLO
+    /// path (optional — artifact sets predating the prefix store carry
+    /// none; admission then falls back to the non-donating
+    /// `fuse`/`gather` dispatches, which share equally correctly).
+    pub fork: BTreeMap<(usize, usize), PathBuf>,
     /// Greedy accuracy measured at export time (training-quality gate).
     pub greedy_acc: BTreeMap<String, f64>,
 }
@@ -227,6 +232,7 @@ impl Manifest {
         };
         let gather = pair_map("gather")?;
         let compact = pair_map("compact")?;
+        let fork = pair_map("fork")?;
 
         let mut greedy_acc = BTreeMap::new();
         if let Some(accs) = mj.at(&["training", "greedy_acc"]).and_then(Json::as_obj) {
@@ -254,6 +260,7 @@ impl Manifest {
             superstep_packed,
             fuse,
             compact,
+            fork,
             greedy_acc,
         })
     }
@@ -298,7 +305,8 @@ mod tests {
                 "decode_packed": {"2": "decode_packed_sm_b2.hlo.txt"},
                 "superstep_packed": {"2": "superstep_packed_sm_b2.hlo.txt"},
                 "fuse": {"2": "fuse_sm_b2.hlo.txt"},
-                "compact": {"2to1": "compact_sm_b2to1.hlo.txt", "4to2": "compact_sm_b4to2.hlo.txt"}
+                "compact": {"2to1": "compact_sm_b2to1.hlo.txt", "4to2": "compact_sm_b4to2.hlo.txt"},
+                "fork": {"1to2": "fork_sm_b1to2.hlo.txt", "1to4": "fork_sm_b1to4.hlo.txt"}
               },
               "training": {"greedy_acc": {"gsm_synth": 0.5}}
             }
@@ -337,6 +345,14 @@ mod tests {
             sm.compact.get(&(4, 2)).unwrap(),
             &PathBuf::from("/tmp/a/compact_sm_b4to2.hlo.txt")
         );
+        assert_eq!(
+            sm.fork.get(&(1, 2)).unwrap(),
+            &PathBuf::from("/tmp/a/fork_sm_b1to2.hlo.txt")
+        );
+        assert_eq!(
+            sm.fork.get(&(1, 4)).unwrap(),
+            &PathBuf::from("/tmp/a/fork_sm_b1to4.hlo.txt")
+        );
         assert_eq!(sm.greedy_acc["gsm_synth"], 0.5);
         assert!(m.model("nope").is_err());
     }
@@ -362,6 +378,19 @@ mod tests {
         let j = json::parse(&text).unwrap();
         let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
         assert!(m.model("sm").unwrap().compact.is_empty());
+    }
+
+    #[test]
+    fn fork_is_optional_for_older_artifact_sets() {
+        // Pre-prefix-store manifests carry no fork key; parsing must
+        // yield an empty map (admission then falls back to fuse/gather).
+        let text = tiny_manifest_json().replace(
+            r#""fork": {"1to2": "fork_sm_b1to2.hlo.txt", "1to4": "fork_sm_b1to4.hlo.txt"}"#,
+            r#""fork2": {}"#,
+        );
+        let j = json::parse(&text).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("sm").unwrap().fork.is_empty());
     }
 
     #[test]

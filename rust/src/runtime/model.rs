@@ -120,6 +120,9 @@ pub struct LoadedModel {
     fuse_exes: BTreeMap<usize, ExeCell>,
     /// (src bucket, dst bucket) → pod-compaction executable.
     compact_exes: BTreeMap<(usize, usize), ExeCell>,
+    /// (src bucket, dst bucket) → prefix-sharing copy-on-write fork
+    /// executable (src is always 1: a shared bucket-1 prefix entry).
+    fork_exes: BTreeMap<(usize, usize), ExeCell>,
 }
 
 impl LoadedModel {
@@ -150,6 +153,7 @@ impl LoadedModel {
         let fuse_exes = mm.fuse.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let compact_exes =
             mm.compact.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
+        let fork_exes = mm.fork.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let mut model = LoadedModel {
             rt,
             name: name.to_string(),
@@ -164,6 +168,7 @@ impl LoadedModel {
             superstep_packed_exes,
             fuse_exes,
             compact_exes,
+            fork_exes,
             param_table,
             q_logits: Vec::new(),
             q_buf: OnceLock::new(),
@@ -171,9 +176,12 @@ impl LoadedModel {
         };
         // Reference distribution q: logits after a BOS-only prompt
         // (Algorithm 2 line 9: "generate unconditional logits q from
-        // Beginning of Sentence token").
+        // Beginning of Sentence token"). Runs uncounted and unfaulted:
+        // it is a load-time model constant, not request work — the
+        // prefill dispatch counter and the `prefill` fault site cover
+        // request/store prefills only.
         let bos = vec![crate::tokenizer::BOS_ID as i32];
-        let (q, _cache) = model.prefill(&bos)?;
+        let (q, _cache) = model.prefill_uncounted(&bos)?;
         let q_dev = model.rt.f32_buffer(&q, &[model.config.vocab]).context("uploading q")?;
         let _ = model.q_buf.set(q_dev);
         model.q_logits = q;
@@ -211,7 +219,22 @@ impl LoadedModel {
     /// sequence; padding to `prompt_len` happens here. Returns the logits
     /// at the last real token and a bucket-1 KV cache primed with the
     /// prompt keys/values.
+    ///
+    /// Counted (`Runtime::prefill_dispatch_count`) and fault-checked at
+    /// [`FaultSite::Prefill`] *before* the dispatch, mirroring the
+    /// decode family: an injected fault means the prefill never
+    /// happened — no counter moved, nothing was cached — so a retry
+    /// (or the prefix store's next reader) re-prefills from a clean
+    /// slate.
     pub fn prefill(&self, prompt_ids: &[i32]) -> Result<(Vec<f32>, KvCache)> {
+        self.rt.fault_check(FaultSite::Prefill)?;
+        self.rt.note_prefill_dispatch();
+        self.prefill_uncounted(prompt_ids)
+    }
+
+    /// [`Self::prefill`] without the dispatch counter or fault check —
+    /// the load-time BOS pass for `q` only.
+    fn prefill_uncounted(&self, prompt_ids: &[i32]) -> Result<(Vec<f32>, KvCache)> {
         let p = self.config.prompt_len;
         if prompt_ids.is_empty() || prompt_ids.len() > p {
             bail!("prompt length {} out of range 1..={p}", prompt_ids.len());
@@ -610,6 +633,61 @@ impl LoadedModel {
             .swap_remove(0);
         if out.len() != 2 {
             bail!("compact returned {} outputs, expected 2", out.len());
+        }
+        // Donation contract: install the aliased outputs over the stale
+        // dst handles in one statement.
+        dst.v = out.pop().unwrap();
+        dst.k = out.pop().unwrap();
+        Ok(())
+    }
+
+    /// Whether the prefix-sharing fork executable for a bucket-1 shared
+    /// entry → `dst_bucket` broadcast exists (artifact sets predating
+    /// the prefix store carry none — admission then falls back to the
+    /// non-donating `fuse`/`gather` dispatches, which share equally
+    /// correctly but without the in-place write).
+    pub fn has_fork(&self, dst_bucket: usize) -> bool {
+        self.fork_exes.contains_key(&(1, dst_bucket))
+    }
+
+    /// Prefix-sharing copy-on-write fork: broadcast a shared bucket-1
+    /// prefix entry's row into `dst`'s selected rows in **one device
+    /// call**. `idx.len()` must equal `dst.bucket`; row `i` of the
+    /// result is `src`'s row `idx[i]` when `idx[i] >= 0`, or `dst`'s
+    /// own row `i` (a resident or free row, untouched) when
+    /// `idx[i] < 0`. The destination k/v are **donated**
+    /// (`execute_b_donated`, mirrored by the exported HLO's
+    /// `input_output_alias` — see `aot.lower_fork`), exactly the
+    /// compact donation discipline; `src` is *never* donated — the
+    /// shared entry stays live in the prefix store for the next
+    /// reader. Fault-checked at [`FaultSite::Prefill`] (the prefill /
+    /// fork admission path shares one drillable site).
+    pub fn fork_into(&self, src: &KvCache, dst: &mut KvCache, idx: &[i32]) -> Result<()> {
+        if src.bucket != 1 {
+            bail!("fork: source must be a bucket-1 prefix entry, got {}", src.bucket);
+        }
+        if idx.len() != dst.bucket {
+            bail!("fork: {} indices for dst bucket {}", idx.len(), dst.bucket);
+        }
+        for &i in idx {
+            if i >= src.bucket as i32 {
+                bail!("fork: index {i} out of source bucket {}", src.bucket);
+            }
+        }
+        let cell = self
+            .fork_exes
+            .get(&(src.bucket, dst.bucket))
+            .ok_or_else(|| {
+                anyhow!("no fork artifact for buckets {}to{}", src.bucket, dst.bucket)
+            })?;
+        let exe = cell.get(&self.rt)?;
+        let idxb = self.rt.i32_buffer(idx, &[dst.bucket])?;
+        self.rt.fault_check(FaultSite::Prefill)?;
+        let mut out = exe
+            .execute_b_donated(&[], &[&dst.k, &dst.v, &src.k, &src.v, &idxb], &[0, 1])?
+            .swap_remove(0);
+        if out.len() != 2 {
+            bail!("fork returned {} outputs, expected 2", out.len());
         }
         // Donation contract: install the aliased outputs over the stale
         // dst handles in one statement.

@@ -50,8 +50,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::{make_driver, make_driver_fused, Driver, GenOutput, StepOutcome, StepPlan};
-use crate::engine::{Engine, FuseConfig, FusionHub, PodFault};
+use crate::coordinator::{
+    make_driver, make_driver_fused, make_driver_shared, Driver, GenOutput, StepOutcome, StepPlan,
+};
+use crate::engine::{Engine, FuseConfig, FusionHub, PodFault, PrefixStore};
 use crate::runtime::{FaultError, FaultPlan, LoadedModel, Manifest, Runtime};
 
 /// Per-request seed mixing — the one derivation every submission path
@@ -146,6 +148,19 @@ pub struct SchedConfig {
     /// answers [`RequestError::DeadlineExceeded`]; an expired queued
     /// request is refused at admission without ever spawning.
     pub deadline_ms: u64,
+    /// Prompt-prefix KV sharing: the worker keeps a
+    /// [`crate::engine::PrefixStore`] and prefills **once per unique
+    /// resident token prefix** — co-resident requests with the same
+    /// prompt reuse the entry (copy-on-write at the divergence point;
+    /// see [`crate::engine::prefix`]). Admission then projects incoming
+    /// requests at [`crate::engine::Engine::admission_cost_shared`]
+    /// (one shared prefix + `bucket` private suffixes), which is
+    /// strictly below the private projection for every bucket ≥ 2 —
+    /// the same `mem_budget_bytes` admits strictly more co-resident
+    /// work. Outputs and per-request metrics are bit-identical to the
+    /// unshared path (sharing is a physical-residency optimization;
+    /// the per-request virtual accounting never changes). Default off.
+    pub prefix_share: bool,
 }
 
 impl Default for SchedConfig {
@@ -167,6 +182,7 @@ impl Default for SchedConfig {
             quarantine_after: 3,
             quarantine_cooldown: 50,
             deadline_ms: 0,
+            prefix_share: false,
         }
     }
 }
@@ -806,9 +822,23 @@ fn worker_loop(
         }
         let model = Arc::new(LoadedModel::load(rt, &manifest, model_name)?);
         let engine = Engine::new(model);
-        let admission = engine
-            .admission_cost(cfg.concurrent_branches())
-            .context("projecting request admission cost")?;
+        let admission = if sched_cfg.prefix_share {
+            // Shared projection, worst-cased over prompt length: the
+            // shared-prefix bytes *decrease* as the prefix grows (more
+            // of each branch's KV is copy-on-write against the store
+            // entry), and every encoded prompt holds at least the BOS
+            // token — so `prompt_len = 1` bounds every request while
+            // staying strictly below the private projection for every
+            // bucket ≥ 2. Same `mem_budget_bytes`, strictly more
+            // admissible co-resident work.
+            engine
+                .admission_cost_shared(cfg.concurrent_branches(), 1)
+                .context("projecting shared request admission cost")?
+        } else {
+            engine
+                .admission_cost(cfg.concurrent_branches())
+                .context("projecting request admission cost")?
+        };
         Ok((engine, admission))
     })();
     let (engine, admission) = match setup {
@@ -821,6 +851,12 @@ fn worker_loop(
             return;
         }
     };
+    // Prompt-prefix KV sharing: the worker owns the store for its
+    // engine's lifetime. Entries free themselves on last release (see
+    // `PrefixStore`); the store itself drops with the worker. Sharing
+    // is orthogonal to fusion — quarantined (solo) admissions still
+    // share the prefix store; only the pod residence degrades.
+    let store = sched_cfg.prefix_share.then(PrefixStore::default);
     // Batch fusion needs the packed executables for every bucket a pod
     // might open, and bucket compaction (the pinned-bucket ablation is a
     // solo-only shape) — otherwise fall back to solo dispatch, which is
@@ -852,19 +888,14 @@ fn worker_loop(
             // failing fused path degrades to solo service instead of
             // burning every retry budget on the same bad dispatch.
             |prompt, seed, solo| {
-                if solo {
-                    Ok(Flight {
-                        driver: make_driver(&engine, prompt, &cfg, seed)?,
-                        engine: &engine,
-                        fused: false,
-                    })
-                } else {
-                    Ok(Flight {
-                        driver: make_driver_fused(&engine, &hub, prompt, &cfg, seed)?,
-                        engine: &engine,
-                        fused: true,
-                    })
-                }
+                let driver = match (&store, solo) {
+                    (Some(s), _) => {
+                        make_driver_shared(&engine, (!solo).then_some(&hub), s, prompt, &cfg, seed)?
+                    }
+                    (None, true) => make_driver(&engine, prompt, &cfg, seed)?,
+                    (None, false) => make_driver_fused(&engine, &hub, prompt, &cfg, seed)?,
+                };
+                Ok(Flight { driver, engine: &engine, fused: !solo })
             },
             || hub.flush(&engine),
             // Physical admission gate: the next placement's pod bytes
@@ -888,11 +919,11 @@ fn worker_loop(
             &stop,
             admission,
             |prompt, seed, _solo| {
-                Ok(Flight {
-                    driver: make_driver(&engine, prompt, &cfg, seed)?,
-                    engine: &engine,
-                    fused: false,
-                })
+                let driver = match &store {
+                    Some(s) => make_driver_shared(&engine, None, s, prompt, &cfg, seed)?,
+                    None => make_driver(&engine, prompt, &cfg, seed)?,
+                };
+                Ok(Flight { driver, engine: &engine, fused: false })
             },
             || Ok(()),
             |_| true,
@@ -954,7 +985,10 @@ fn worker_loop(
 /// [`RequestError::RetriesExhausted`] naming the last fault site and
 /// the attempt count. Any other error (infrastructure, bad prompt)
 /// surfaces immediately — retry is reserved for faults the containment
-/// machinery vouches for.
+/// machinery vouches for. Spawn-time failures are classified the same
+/// way (PR 7): the prefill — and, under prefix sharing, the shared
+/// prefix fill — runs at driver construction, so a contained fault
+/// there is requeued exactly like an in-flight one.
 ///
 /// Pod-fault failures also drive per-bucket **quarantine**:
 /// [`SchedConfig::quarantine_after`] consecutive failure *ticks* on a
@@ -1141,17 +1175,52 @@ fn scheduler_loop<P: Pollable>(
                             },
                         );
                     }
-                    // Driver construction failed (bad prompt, unsupported
-                    // config): fail this request, keep serving. A probe
-                    // that never took flight proves nothing — put those
-                    // buckets back on cooldown-elapsed standby.
+                    // Driver construction failed. A probe that never
+                    // took flight proves nothing — put those buckets
+                    // back on cooldown-elapsed standby. Spawn runs the
+                    // prefill (and under prefix sharing, the shared
+                    // fill), so a *contained* fault here — an injected
+                    // [`FaultError`] at the prefill site, or a
+                    // [`PodFault`] from the placement — is retryable
+                    // exactly like an in-flight fault: requeue with
+                    // backoff, surface `RetriesExhausted` on a spent
+                    // budget. Anything else (bad prompt, unsupported
+                    // config) fails the request immediately.
                     Err(e) => {
                         for bucket in probes {
                             if let Some(h) = health.get_mut(&bucket) {
                                 h.probing = false;
                             }
                         }
-                        let _ = req.resp.send(Err(e));
+                        let pod_fault =
+                            e.chain().find_map(|c| c.downcast_ref::<PodFault>()).cloned();
+                        let injected =
+                            e.chain().find_map(|c| c.downcast_ref::<FaultError>()).copied();
+                        if pod_fault.is_none() && injected.is_none() {
+                            let _ = req.resp.send(Err(e));
+                        } else if req.retries < sched_cfg.retry_budget {
+                            backlog.push_back(Request {
+                                prompt: req.prompt,
+                                seed: req.seed,
+                                enqueued: req.enqueued,
+                                evictions: req.evictions,
+                                retries: req.retries + 1,
+                                faults: req.faults + 1,
+                                not_before: tick_no.saturating_add(sched_cfg.backoff_ticks),
+                                resp: req.resp,
+                            });
+                        } else {
+                            let site = pod_fault
+                                .map(|f| f.site)
+                                .or_else(|| injected.map(|f| f.site.name().to_string()))
+                                .unwrap_or_else(|| "unknown".to_string());
+                            let _ = req.resp.send(Err(anyhow::Error::new(
+                                RequestError::RetriesExhausted {
+                                    site,
+                                    attempts: req.retries + 1,
+                                },
+                            )));
+                        }
                     }
                 }
                 continue;
