@@ -68,6 +68,8 @@ from .model import (
     compact_rows,
     decode_step,
     decode_step_packed,
+    decode_step_packed_tap,
+    decode_step_tap,
     fork_rows,
     fuse_rows,
     prefill,
@@ -120,6 +122,53 @@ def lower_superstep(cfg: ModelConfig, b: int, donate: bool = True):
         p = dict(zip(names, args[:n_p]))
         token, pos, kc, vc, q = args[n_p : n_p + 5]
         return superstep(cfg, p, token, pos, kc, vc, q)
+
+    donate_argnums = (n_p + 2, n_p + 3) if donate else ()
+    return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
+        *param_specs,
+        _spec((b,), jnp.int32),
+        _spec((), jnp.int32),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+        _spec((cfg.vocab,)),
+    )
+
+
+def superstep_tap(cfg: ModelConfig, params: dict, token, pos, k_cache, v_cache, q_logits):
+    """Tapped superstep: the fused decode→signals dispatch plus one
+    **hidden-state tap row per branch** (the post-final-layernorm hidden,
+    ``model.decode_step_tap``) for learned pruning probes.
+
+    The tap is **appended** as output 6 of
+    ``(logits, kl, conf, ent, k, v, tap)`` so the k/v outputs keep their
+    positions 4 / 5 — the donation alias table is literally the untapped
+    superstep's table, and the runtime's ``execute_b_donated(..., &[2, 3])``
+    contract is unchanged. ``test_superstep_tap.py`` pins both the alias
+    table and the bitwise parity of outputs 0–5 against the untapped
+    artifact.
+    """
+    logits, tap, k_cache, v_cache = decode_step_tap(
+        cfg, params, token, pos, k_cache, v_cache, use_pallas=True
+    )
+    kl, conf, ent = signals(logits, q_logits)
+    return logits, kl, conf, ent, k_cache, v_cache, tap
+
+
+def lower_superstep_tap(cfg: ModelConfig, b: int, donate: bool = True):
+    """Lower the tapped superstep for bucket ``b``. Flat args and the k/v
+    donation (``n_params + 2`` / ``n_params + 3`` aliasing tuple outputs
+    4 / 5) are exactly ``lower_superstep``'s; the tap rides along as the
+    extra, never-aliased output 6."""
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def superstep_fn(*args):
+        p = dict(zip(names, args[:n_p]))
+        token, pos, kc, vc, q = args[n_p : n_p + 5]
+        return superstep_tap(cfg, p, token, pos, kc, vc, q)
 
     donate_argnums = (n_p + 2, n_p + 3) if donate else ()
     return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
@@ -186,6 +235,42 @@ def lower_superstep_packed(cfg: ModelConfig, b: int, donate: bool = True):
         p = dict(zip(names, args[:n_p]))
         token, pos, kc, vc, q = args[n_p : n_p + 5]
         return superstep_packed(cfg, p, token, pos, kc, vc, q)
+
+    donate_argnums = (n_p + 2, n_p + 3) if donate else ()
+    return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
+        *param_specs,
+        _spec((b,), jnp.int32),
+        _spec((b,), jnp.int32),
+        _spec((lyr, b, h, s, dh)),
+        _spec((lyr, b, h, s, dh)),
+        _spec((cfg.vocab,)),
+    )
+
+
+def superstep_tap_packed(cfg: ModelConfig, params: dict, token, pos, k_cache, v_cache, q_logits):
+    """Tapped packed superstep: ``decode_step_packed_tap`` chained into
+    the fused signal kernel, tap appended as output 6 — the packed
+    counterpart of ``superstep_tap`` with the same unchanged k/v alias
+    table."""
+    logits, tap, k_cache, v_cache = decode_step_packed_tap(cfg, params, token, pos, k_cache, v_cache)
+    kl, conf, ent = signals(logits, q_logits)
+    return logits, kl, conf, ent, k_cache, v_cache, tap
+
+
+def lower_superstep_tap_packed(cfg: ModelConfig, b: int, donate: bool = True):
+    """Lower the tapped packed superstep for bucket ``b`` — flat args and
+    k/v donation exactly ``lower_superstep_packed``'s, tap as the extra
+    never-aliased output 6."""
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    n_p = len(names)
+    param_specs = [_spec(shapes[n]) for n in names]
+    lyr, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    def superstep_fn(*args):
+        p = dict(zip(names, args[:n_p]))
+        token, pos, kc, vc, q = args[n_p : n_p + 5]
+        return superstep_tap_packed(cfg, p, token, pos, kc, vc, q)
 
     donate_argnums = (n_p + 2, n_p + 3) if donate else ()
     return jax.jit(superstep_fn, donate_argnums=donate_argnums).lower(
@@ -325,9 +410,11 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
     arts: dict = {
         "decode": {},
         "superstep": {},
+        "superstep_tap": {},
         "gather": {},
         "decode_packed": {},
         "superstep_packed": {},
+        "superstep_tap_packed": {},
         "fuse": {},
         "compact": {},
         "fork": {},
@@ -376,6 +463,18 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
             out_dir, f"superstep_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_superstep(cfg, b))
         )
 
+    # --- tapped superstep per bucket (PR 8): the pluggable-signal-family
+    # variant emitting one hidden-state tap row per branch as an appended
+    # output 6, so k/v keep positions 4/5 and the donation alias table is
+    # unchanged. Optional on the Rust side — older artifact sets without
+    # it still load; the hidden-probe scorer just reports unavailable.
+    for b in buckets:
+        arts["superstep_tap"][str(b)] = _write(
+            out_dir,
+            f"superstep_tap_{cfg.name}_b{b}.hlo.txt",
+            to_hlo_text(lower_superstep_tap(cfg, b)),
+        )
+
     # --- cross-request batch fusion (PR 4): packed decode/superstep with
     # per-row positions, plus the pod-admission row merge. Same donation
     # contract as the solo superstep (k/v alias into the outputs).
@@ -389,6 +488,11 @@ def export_model(cfg: ModelConfig, params: dict, out_dir: str, buckets=BATCH_BUC
             out_dir,
             f"superstep_packed_{cfg.name}_b{b}.hlo.txt",
             to_hlo_text(lower_superstep_packed(cfg, b)),
+        )
+        arts["superstep_tap_packed"][str(b)] = _write(
+            out_dir,
+            f"superstep_tap_packed_{cfg.name}_b{b}.hlo.txt",
+            to_hlo_text(lower_superstep_tap_packed(cfg, b)),
         )
         arts["fuse"][str(b)] = _write(
             out_dir, f"fuse_{cfg.name}_b{b}.hlo.txt", to_hlo_text(lower_fuse(cfg, b))
@@ -489,6 +593,12 @@ def main() -> None:
     )
     ap.add_argument("--peak-lr", type=float, default=None)
     ap.add_argument("--eval-n", type=int, default=50)
+    ap.add_argument(
+        "--probe-n",
+        type=int,
+        default=60,
+        help="tapped rollouts per dataset for the pruning-probe fit (0 disables)",
+    )
     args = ap.parse_args()
 
     out_dir = args.out
@@ -531,6 +641,19 @@ def main() -> None:
             )
             save_params_npz(params, cache)
         frag = export_model(cfg, params, out_dir)
+        if args.probe_n:
+            # Linear pruning probe over the tapped hidden rows (PR 8):
+            # fitted on greedy tapped rollouts at build time, shipped as
+            # a tiny JSON artifact the Rust HiddenProbeScorer loads.
+            probe = train.fit_probe(cfg, params, n=args.probe_n)
+            probe_file = f"probe_{name}.json"
+            with open(os.path.join(out_dir, probe_file), "w") as f:
+                json.dump(probe, f, indent=1)
+            frag["artifacts"]["probe"] = probe_file
+            print(
+                f"[aot] {name} probe fit: rows={probe['rows']}"
+                f" train_acc={probe['train_acc']:.3f}"
+            )
         if args.eval_n:
             accs = {}
             for ds in ("gsm_synth", "math_synth"):

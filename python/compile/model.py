@@ -184,18 +184,14 @@ def prefill(cfg: ModelConfig, params, tokens, length):
     return last, k_cache, v_cache
 
 
-def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_pallas=True):
-    """One autoregressive step for every branch in the bucket.
+def _decode_body(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_pallas=True):
+    """Shared decode-step body: everything up to (and including) the final
+    layernorm. Both ``decode_step`` and ``decode_step_tap`` call this so
+    the two graphs perform the same ops in the same order — the tapped
+    artifact's logits and caches are bitwise identical to the untapped
+    one (``test_superstep_tap.py`` pins it).
 
-    Args:
-      token: [B] int32 — tokens sampled at the previous step.
-      pos:   scalar int32 — slot this step writes (== current seq length).
-      k_cache, v_cache: [L, B, H, S, Dh].
-      use_pallas: route attention through the L1 Pallas kernel (default) or
-        the pure-jnp oracle (differential testing).
-
-    Returns:
-      logits [B, V], updated caches.
+    Returns post-``lnf`` hidden ``x`` [B, d] and the updated caches.
     """
     b = token.shape[0]
     h, dh, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
@@ -226,7 +222,42 @@ def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_p
         x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
 
     x = _ln(x, params["lnf_g"], params["lnf_b"])
+    return x, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_pallas=True):
+    """One autoregressive step for every branch in the bucket.
+
+    Args:
+      token: [B] int32 — tokens sampled at the previous step.
+      pos:   scalar int32 — slot this step writes (== current seq length).
+      k_cache, v_cache: [L, B, H, S, Dh].
+      use_pallas: route attention through the L1 Pallas kernel (default) or
+        the pure-jnp oracle (differential testing).
+
+    Returns:
+      logits [B, V], updated caches.
+    """
+    x, k_cache, v_cache = _decode_body(
+        cfg, params, token, pos, k_cache, v_cache, use_pallas=use_pallas
+    )
     return x @ params["head"], k_cache, v_cache
+
+
+def decode_step_tap(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, use_pallas=True):
+    """``decode_step`` plus the **hidden-state tap**: the post-final-
+    layernorm hidden row per branch, exported for learned pruning probes
+    ("Hidden States as Early Signals"). The tap is the exact intermediate
+    the head projection consumes — no extra compute, one extra output —
+    so logits/caches remain bitwise identical to the untapped step.
+
+    Returns:
+      logits [B, V], tap [B, d], updated caches.
+    """
+    x, k_cache, v_cache = _decode_body(
+        cfg, params, token, pos, k_cache, v_cache, use_pallas=use_pallas
+    )
+    return x @ params["head"], x, k_cache, v_cache
 
 
 def decode_step_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
@@ -257,6 +288,25 @@ def decode_step_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
     Returns:
       logits [B, V], updated caches.
     """
+    x, k_cache, v_cache = _decode_body_packed(cfg, params, token, pos, k_cache, v_cache)
+    return x @ params["head"], k_cache, v_cache
+
+
+def decode_step_packed_tap(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
+    """``decode_step_packed`` plus the hidden-state tap (see
+    ``decode_step_tap``): same shared body, one extra output, logits and
+    caches bitwise identical to the untapped packed step.
+
+    Returns:
+      logits [B, V], tap [B, d], updated caches.
+    """
+    x, k_cache, v_cache = _decode_body_packed(cfg, params, token, pos, k_cache, v_cache)
+    return x @ params["head"], x, k_cache, v_cache
+
+
+def _decode_body_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
+    """Shared packed decode-step body (see ``_decode_body``): returns the
+    post-``lnf`` hidden ``x`` [B, d] and the updated caches."""
     b = token.shape[0]
     h, dh, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
     x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, d]
@@ -283,7 +333,7 @@ def decode_step_packed(cfg: ModelConfig, params, token, pos, k_cache, v_cache):
         x = x + (jax.nn.gelu(hdd @ params[pref + "w1"] + params[pref + "b1"])) @ params[pref + "w2"] + params[pref + "b2"]
 
     x = _ln(x, params["lnf_g"], params["lnf_b"])
-    return x @ params["head"], k_cache, v_cache
+    return x, k_cache, v_cache
 
 
 def compact_rows(k_dst, v_dst, k_src, v_src, idx):

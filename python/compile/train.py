@@ -161,3 +161,92 @@ def greedy_eval(cfg: ModelConfig, params, dataset: str, n: int = 50, seed: int =
         if f"#### {s.answer}" in text:
             correct += 1
     return correct / n
+
+
+def collect_tap_rollouts(cfg: ModelConfig, params, dataset: str, n: int, seed: int = 31, max_new: int = 80):
+    """Greedy tapped rollouts for probe fitting: one row per decode step.
+
+    Each decode step's post-final-layernorm hidden (the superstep tap row,
+    ``model.decode_step_tap``) becomes one training row; the row's label is
+    whether the *whole rollout* reached the correct answer — the probe
+    learns to read "this trajectory will land" from the hidden state, the
+    step-level early signal of PAPERS.md's hidden-state pruning line.
+
+    Returns (taps [N, d_model] f32, labels [N] f32 in {0, 1}).
+    """
+    from .model import decode_step_tap, prefill  # local import to keep top light
+
+    samples = datagen.generate(dataset, n, seed)
+    pre = jax.jit(lambda p, t, l: prefill(cfg, p, t, l))
+    dec = jax.jit(
+        lambda p, tok, pos, kc, vc: decode_step_tap(cfg, p, tok, pos, kc, vc, use_pallas=False)
+    )
+    taps: list[np.ndarray] = []
+    labels: list[float] = []
+    for s in samples:
+        ids, length = tokenizer.encode_prompt(s.prompt(), cfg.prompt_len)
+        logits, kc, vc = pre(params, jnp.asarray([ids], jnp.int32), jnp.int32(length))
+        out = []
+        rollout_taps = []
+        pos = length
+        tok = int(jnp.argmax(logits[0]))
+        for _ in range(max_new):
+            if tok == tokenizer.EOS_ID or pos >= cfg.max_seq:
+                break
+            out.append(tok)
+            logits, tap, kc, vc = dec(params, jnp.asarray([tok], jnp.int32), jnp.int32(pos), kc, vc)
+            rollout_taps.append(np.asarray(tap[0], np.float32))
+            pos += 1
+            tok = int(jnp.argmax(logits[0]))
+        label = 1.0 if f"#### {s.answer}" in tokenizer.decode(out) else 0.0
+        taps.extend(rollout_taps)
+        labels.extend([label] * len(rollout_taps))
+    if not taps:
+        return np.zeros((0, cfg.d_model), np.float32), np.zeros((0,), np.float32)
+    return np.stack(taps), np.asarray(labels, np.float32)
+
+
+def fit_probe(cfg: ModelConfig, params, *, n: int = 60, seed: int = 31, steps: int = 400, lr: float = 0.5, max_new: int = 80):
+    """Fit the tiny linear pruning probe on tapped rollouts.
+
+    Logistic regression (hand-rolled full-batch gradient descent — no
+    sklearn in the image) over standardized tap rows from both synthetic
+    datasets; the standardization is folded into the final weights so the
+    runtime applies a bare affine score ``sigmoid(w · tap + b)``.
+
+    Returns the probe-artifact dict ``aot.py`` serializes as
+    ``probe_{m}.json``: d_model, w [d_model], b, rows, train_acc.
+    """
+    xs, ys = [], []
+    for i, ds in enumerate(("gsm_synth", "math_synth")):
+        x, y = collect_tap_rollouts(cfg, params, ds, n=n, seed=seed + 17 * i, max_new=max_new)
+        xs.append(x)
+        ys.append(y)
+    x = np.concatenate(xs)
+    y = np.concatenate(ys)
+    rows = int(x.shape[0])
+    if rows == 0:
+        return {"d_model": cfg.d_model, "w": [0.0] * cfg.d_model, "b": 0.0, "rows": 0, "train_acc": 0.0}
+
+    mu = x.mean(axis=0)
+    sd = x.std(axis=0) + 1e-6
+    xn = (x - mu) / sd
+    w = np.zeros(cfg.d_model, np.float64)
+    b = 0.0
+    for _ in range(steps):
+        z = xn @ w + b
+        p = 1.0 / (1.0 + np.exp(-z))
+        g = p - y
+        w -= lr * (xn.T @ g / rows + 1e-4 * w)
+        b -= lr * float(g.mean())
+    acc = float(((xn @ w + b > 0) == (y > 0.5)).mean())
+    # Fold standardization into the shipped affine form: w'·x + b' == w·xn + b.
+    w_raw = w / sd
+    b_raw = b - float(w_raw @ mu)
+    return {
+        "d_model": cfg.d_model,
+        "w": [float(v) for v in w_raw],
+        "b": float(b_raw),
+        "rows": rows,
+        "train_acc": acc,
+    }

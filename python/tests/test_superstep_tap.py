@@ -1,0 +1,157 @@
+"""Tapped superstep vs the untapped artifact (PR 8: pluggable signal
+families).
+
+The tapped superstep appends one hidden-state tap row per branch as
+output 6 of ``(logits, kl, conf, ent, k, v, tap)``. The Rust engine only
+enables the hidden-probe scorer when these invariants hold, and the
+analytic default keeps dispatching the untapped artifact — so the whole
+refactor rests on the facts pinned here:
+
+- outputs 0–5 are **bitwise identical** to the untapped superstep (the
+  tap adds an output, never perturbs the shared body);
+- the tap IS the post-final-layernorm hidden the head projection reads;
+- the k/v donation alias table is literally the untapped one
+  ({4} ← n_p+2, {5} ← n_p+3) and the tap output is never aliased.
+"""
+
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train
+from compile.aot import (
+    lower_superstep_tap,
+    superstep,
+    superstep_packed,
+    superstep_tap,
+    superstep_tap_packed,
+    to_hlo_text,
+)
+from compile.model import CONFIGS, _decode_body, decode_step, decode_step_tap, init_params, prefill
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["sm"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1)
+    _, k1, v1 = prefill(cfg, params, tokens, jnp.int32(4))
+    q = jax.random.normal(jax.random.PRNGKey(9), (cfg.vocab,), jnp.float32)
+    return cfg, params, k1, v1, q
+
+
+def broadcast_cache(c, b):
+    return jnp.repeat(c, b, axis=1)
+
+
+class TestSuperstepTapParity:
+    @pytest.mark.parametrize("b", [1, 2, 4, 8])
+    def test_outputs_bitwise_identical_to_untapped(self, setup, b):
+        # The contract the analytic bit-identity rail rests on: enabling
+        # the tap family must not change a single bit of the logits, the
+        # three signal rows, or the caches.
+        cfg, params, k1, v1, q = setup
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+        pos = jnp.int32(4)
+
+        tapped = superstep_tap(cfg, params, token, pos, kc, vc, q)
+        plain = superstep(cfg, params, token, pos, kc, vc, q)
+        assert len(tapped) == 7 and len(plain) == 6
+        for got, want in zip(tapped[:6], plain):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert tapped[6].shape == (b, cfg.d_model)
+
+    def test_tap_is_the_post_lnf_hidden(self, setup):
+        # The tap row must be exactly the intermediate the head
+        # projection consumes — the shared `_decode_body` output — not a
+        # re-derived or re-normalized copy.
+        cfg, params, k1, v1, q = setup
+        token = jnp.zeros((1,), jnp.int32)
+        pos = jnp.int32(4)
+
+        logits_t, tap, k_t, v_t = decode_step_tap(cfg, params, token, pos, k1, v1)
+        hidden, k_b, v_b = _decode_body(cfg, params, token, pos, k1, v1)
+        np.testing.assert_array_equal(np.asarray(tap), np.asarray(hidden))
+        logits_u, k_u, v_u = decode_step(cfg, params, token, pos, k1, v1)
+        np.testing.assert_array_equal(np.asarray(logits_t), np.asarray(logits_u))
+        np.testing.assert_array_equal(np.asarray(k_t), np.asarray(k_u))
+        np.testing.assert_array_equal(np.asarray(v_t), np.asarray(v_u))
+
+    @pytest.mark.parametrize("b", [1, 4])
+    def test_alias_table_unchanged_and_tap_never_aliased(self, setup, b):
+        # Outputs are (logits, kl, conf, ent, k, v, tap): k/v keep tuple
+        # positions 4/5, so the alias table must be the untapped
+        # superstep's ({4} ← n_p+2, {5} ← n_p+3) and the appended tap
+        # output {6} must not alias any donated operand.
+        cfg, *_ = setup
+        n_p = len(cfg.param_names())
+        hlo = to_hlo_text(lower_superstep_tap(cfg, b))
+        header = hlo.splitlines()[0]
+        assert "input_output_alias=" in header, f"alias config lost: {header}"
+        assert re.search(rf"\{{4\}}:\s*\({n_p + 2},", header), header
+        assert re.search(rf"\{{5\}}:\s*\({n_p + 3},", header), header
+        assert not re.search(r"\{6\}:", header), f"tap output aliased: {header}"
+
+    def test_donated_lowering_is_result_identical_to_undonated(self, setup):
+        cfg, params, k1, v1, q = setup
+        b = 2
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+        pos = jnp.int32(4)
+
+        names = cfg.param_names()
+        flat = [params[n] for n in names]
+        # Undonated oracle first: the donated call consumes kc/vc.
+        plain = lower_superstep_tap(cfg, b, donate=False).compile()(*flat, token, pos, kc, vc, q)
+        donated = lower_superstep_tap(cfg, b).compile()(*flat, token, pos, kc, vc, q)
+        assert len(donated) == len(plain) == 7
+        for got, want in zip(donated, plain):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("b", [2, 4])
+    def test_packed_outputs_bitwise_identical_to_untapped_packed(self, setup, b):
+        cfg, params, k1, v1, q = setup
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+        pos = jnp.full((b,), 4, jnp.int32)
+
+        tapped = superstep_tap_packed(cfg, params, token, pos, kc, vc, q)
+        plain = superstep_packed(cfg, params, token, pos, kc, vc, q)
+        assert len(tapped) == 7 and len(plain) == 6
+        for got, want in zip(tapped[:6], plain):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_packed_tap_rows_match_solo_tap_rows(self, setup):
+        # Same per-row position → the packed tap row is bitwise the solo
+        # tap row, the same lockstep parity the packed decode pins.
+        cfg, params, k1, v1, q = setup
+        b = 2
+        kc, vc = broadcast_cache(k1, b), broadcast_cache(v1, b)
+        token = jnp.arange(b, dtype=jnp.int32) % cfg.vocab
+
+        tap_solo = superstep_tap(cfg, params, token, jnp.int32(4), kc, vc, q)[6]
+        tap_packed = superstep_tap_packed(
+            cfg, params, token, jnp.full((b,), 4, jnp.int32), kc, vc, q
+        )[6]
+        np.testing.assert_array_equal(np.asarray(tap_packed), np.asarray(tap_solo))
+
+
+class TestProbeFit:
+    def test_fit_probe_smoke_and_json_round_trip(self, setup):
+        # Build-time probe fitting must produce a well-formed, finite,
+        # JSON-serializable artifact even on a tiny rollout budget.
+        cfg, params, *_ = setup
+        probe = train.fit_probe(cfg, params, n=3, steps=40, max_new=6)
+        assert probe["d_model"] == cfg.d_model
+        assert len(probe["w"]) == cfg.d_model
+        assert np.all(np.isfinite(np.asarray(probe["w"])))
+        assert np.isfinite(probe["b"])
+        assert probe["rows"] >= 0
+        assert 0.0 <= probe["train_acc"] <= 1.0
+        loaded = json.loads(json.dumps(probe))
+        assert loaded["w"] == probe["w"] and loaded["b"] == probe["b"]

@@ -5,12 +5,22 @@
 //! native-Rust signals instead of the fused Pallas executable
 //! (numeric-equivalence + throughput comparison).
 //!
+//! PR 8 adds the **signal-family frontier**: accuracy vs tokens across
+//! scorer families (analytic scalars vs the hidden-state probe) ×
+//! cadence (token vs reasoning-step), written machine-readably into
+//! `BENCH_ablation.json` under `signal_families`. Probe rows are
+//! artifact-gated — without `superstep_tap` + probe weights in the
+//! artifact set the frontier still lands, analytic-only, with
+//! `probe_available: false` recorded so a reader can tell "probe loses"
+//! apart from "probe never ran".
+//!
 //!   cargo bench --bench ablation_signals -- --problems 40 --n 10
 
 use anyhow::Result;
 use kappa::bench::{f1, f3, BenchEnv, Table};
 use kappa::coordinator::config::{KappaConfig, Method, RunConfig};
 use kappa::coordinator::metrics_for;
+use kappa::coordinator::scorer::{Cadence, ScorerKind};
 use kappa::util::json::Json;
 
 fn main() -> Result<()> {
@@ -68,6 +78,65 @@ fn main() -> Result<()> {
         table.print();
     }
 
+    // ---- Signal-family frontier (PR 8): accuracy vs tokens per
+    // (scorer, cadence) point. The analytic/token point is the exact
+    // pre-refactor KAPPA configuration; probe points only run when the
+    // artifact set ships the tap family + probe weights.
+    let probe_available = engine.tap_ready(false) && engine.model().probe().is_some();
+    let mut families: Vec<(ScorerKind, Cadence)> =
+        vec![(ScorerKind::Analytic, Cadence::Token), (ScorerKind::Analytic, Cadence::Step)];
+    if probe_available {
+        families.push((ScorerKind::Probe, Cadence::Token));
+        families.push((ScorerKind::Probe, Cadence::Step));
+    } else {
+        eprintln!(
+            "[ablation] no tap/probe artifacts — signal_families frontier runs analytic only"
+        );
+    }
+    let mut fam_rows = Vec::new();
+    for dataset in env.datasets() {
+        let problems = dataset.generate(problems_n, seed ^ 0xD5);
+        println!(
+            "\nSignal-family frontier — {model} on {}, N={n} ({problems_n} problems)\n",
+            dataset.name()
+        );
+        let mut table = Table::new(&["family", "cadence", "accuracy", "total_tok", "time_s"]);
+        for &(scorer, cadence) in &families {
+            let cfg = RunConfig {
+                method: Method::Kappa,
+                n,
+                seed,
+                kappa: KappaConfig { scorer, cadence, ..d.clone() },
+                ..RunConfig::default()
+            };
+            let m = metrics_for(&engine, &problems, &cfg)?;
+            table.row(vec![
+                scorer.name().to_string(),
+                cadence.name().to_string(),
+                f3(m.accuracy()),
+                f1(m.mean_total_tokens()),
+                f3(m.mean_wall_seconds()),
+            ]);
+            fam_rows.push(Json::obj(vec![
+                ("dataset", Json::str(dataset.name())),
+                ("scorer", Json::str(scorer.name())),
+                ("cadence", Json::str(cadence.name())),
+                ("accuracy", Json::num(m.accuracy())),
+                ("total_tokens", Json::num(m.mean_total_tokens())),
+                ("peak_memory_mb", Json::num(m.peak_mem_mb())),
+                ("time_s", Json::num(m.mean_wall_seconds())),
+            ]));
+            eprintln!(
+                "[ablation] {} / {}:{} done ({:.0}s)",
+                dataset.name(),
+                scorer.name(),
+                cadence.name(),
+                env.elapsed()
+            );
+        }
+        table.print();
+    }
+
     env.write_report(
         "ablation_signals",
         Json::obj(vec![
@@ -75,6 +144,16 @@ fn main() -> Result<()> {
             ("n", Json::num(n as f64)),
             ("problems", Json::num(problems_n as f64)),
             ("rows", Json::Arr(rows)),
+        ]),
+    )?;
+    env.write_report(
+        "BENCH_ablation",
+        Json::obj(vec![
+            ("model", Json::str(&model)),
+            ("n", Json::num(n as f64)),
+            ("problems", Json::num(problems_n as f64)),
+            ("probe_available", Json::Bool(probe_available)),
+            ("signal_families", Json::Arr(fam_rows)),
         ]),
     )?;
     Ok(())

@@ -83,9 +83,12 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 use kappa::bench::{BenchEnv, Table};
-use kappa::coordinator::config::{Method, RunConfig, SamplerConfig};
+use kappa::coordinator::config::{KappaConfig, Method, RunConfig, SamplerConfig};
 use kappa::coordinator::sampler::{self, SamplerScratch};
-use kappa::coordinator::signals::{raw_signals, SignalScratch};
+use kappa::coordinator::signals::{
+    combine_scores, combine_scores_into, raw_signals, BranchSignalState, ScoreScratch,
+    SignalScratch,
+};
 use kappa::coordinator::{
     make_driver_fused, make_driver_shared, run_method, Driver, GenOutput, StepOutcome, StepPlan,
 };
@@ -341,10 +344,73 @@ fn main() -> Result<()> {
     // a non-finite token into perf.json (Json::Num serializes "inf").
     let speedup = if med_batched > 0.0 { med / med_batched } else { f64::INFINITY };
 
+    // Scoring hot path (PR 8 satellite): `combine_scores_into` through
+    // reusable scratch must be allocation-free in steady state. One
+    // warm-up call grows the scratch to its high-water mark; the
+    // measured window then asserts **zero** allocator events — a hard
+    // invariant, not a trend — with the allocating `combine_scores`
+    // reference wrapper measured alongside as the before.
+    let nb = 8usize;
+    let kcfg = KappaConfig::default();
+    let mut sig: Vec<BranchSignalState> = (0..nb).map(|_| BranchSignalState::new(16)).collect();
+    let live_sc: Vec<usize> = (0..nb).collect();
+    let ema_sc: Vec<f64> = (0..nb).map(|i| i as f64 * 0.1 - 0.3).collect();
+    let conf_sc: Vec<f64> = (0..nb).map(|i| 0.1 + i as f64 * 0.05).collect();
+    let ent_sc: Vec<f64> = (0..nb).map(|i| 2.0 - i as f64 * 0.1).collect();
+    let mut score_scratch = ScoreScratch::new();
+    combine_scores_into(&mut sig, &live_sc, &ema_sc, &conf_sc, &ent_sc, 1, &kcfg, &mut score_scratch);
+    let a0 = alloc_count();
+    for t in 0..iters {
+        combine_scores_into(
+            &mut sig,
+            &live_sc,
+            &ema_sc,
+            &conf_sc,
+            &ent_sc,
+            t + 2,
+            &kcfg,
+            &mut score_scratch,
+        );
+    }
+    let combine_allocs = alloc_count() - a0;
+    assert_eq!(
+        combine_allocs, 0,
+        "combine_scores_into allocated in steady state ({combine_allocs} events over {iters} calls)"
+    );
+    let a0 = alloc_count();
+    for t in 0..iters {
+        let _ = combine_scores(&mut sig, &live_sc, &ema_sc, &conf_sc, &ent_sc, t + 2, &kcfg);
+    }
+    let combine_allocs_ref = (alloc_count() - a0) as f64 / iters as f64;
+    let (med_combine, p95_combine) = time_op(iters, || {
+        combine_scores_into(
+            &mut sig,
+            &live_sc,
+            &ema_sc,
+            &conf_sc,
+            &ent_sc,
+            99,
+            &kcfg,
+            &mut score_scratch,
+        );
+    });
+    push(&mut table, "combine_scores_into", nb, med_combine, p95_combine);
+    println!(
+        "allocs_per_token (combine_scores, {nb} branches): scratch 0.00 (asserted), \
+         allocating reference {combine_allocs_ref:.2}"
+    );
+
     table.print();
     println!("\nsample_x32_host / sample_batched speedup: {speedup:.2}x (target ≥ 2x)");
     let speedup_json = if speedup.is_finite() { Json::num(speedup) } else { Json::Null };
     let mut counters = vec![("sample_speedup", speedup_json)];
+    counters.push((
+        "combine_scores",
+        Json::obj(vec![
+            ("allocs_per_token_scratch", Json::num(combine_allocs as f64)),
+            ("allocs_per_token_allocating", Json::num(combine_allocs_ref)),
+        ]),
+    ));
     for &(b, per_call) in &upload_counters {
         println!(
             "q_upload — uploads per signals_padded call (bucket {b}): {per_call:.2} \

@@ -30,6 +30,12 @@ cargo test -q
 if command -v python3 >/dev/null 2>&1; then
     echo "[ci] python kernel parity: pytest python/tests"
     (cd ../python && python3 -m pytest tests -x -q)
+    # Tap-family parity gets its own named invocation (PR 8): the
+    # superstep_tap artifacts must stay bitwise-identical to the
+    # untapped superstep on every shared output, or the scorer
+    # refactor's "tap rides along for free" claim is void.
+    echo "[ci] tap parity: pytest python/tests/test_superstep_tap.py"
+    (cd ../python && python3 -m pytest tests/test_superstep_tap.py -x -q)
 else
     echo "[ci] python3 missing — skipping AOT kernel parity tests"
 fi
@@ -75,6 +81,23 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         done
         echo "[ci] perf smoke OK — decode + serve trajectories in $ARTIFACTS/reports/"
 
+        # Signal-family frontier (PR 8): the ablation bench must land a
+        # machine-readable accuracy-vs-tokens frontier across scorer
+        # families into BENCH_ablation.json. Analytic rows always run;
+        # probe rows are artifact-gated and recorded as such via
+        # probe_available, so the grep only pins the frontier's shape.
+        echo "[ci] ablation smoke: cargo bench --bench ablation_signals"
+        cargo bench --bench ablation_signals -- --artifacts "$ARTIFACTS" --problems 2 --n 4
+        if [ ! -f "$ARTIFACTS/reports/BENCH_ablation.json" ]; then
+            echo "[ci] ablation smoke ran but $ARTIFACTS/reports/BENCH_ablation.json is missing"
+            exit 1
+        fi
+        if ! grep -q '"signal_families"' "$ARTIFACTS/reports/BENCH_ablation.json"; then
+            echo "[ci] BENCH_ablation.json has no signal_families frontier"
+            exit 1
+        fi
+        echo "[ci] ablation smoke OK — signal_families frontier in BENCH_ablation.json"
+
         # Fault-injection serve smoke: a short replay under a fixed
         # seeded fault plan must complete with zero user-visible errors
         # and at least one recorded recovery (the injected faults are
@@ -82,11 +105,14 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         # Prefix sharing rides along (--prefix-share) and the plan also
         # hits the prefill site, so the shared-fill retry path is
         # exercised end to end under the serve binary.
-        echo "[ci] fault smoke: serve --prefix-share under --fault-plan prefill@1,decode@1,superstep@1"
+        # --scorer analytic rides along (PR 8): the serve binary must
+        # parse the scorer selector and boot with the named family.
+        echo "[ci] fault smoke: serve --scorer analytic --prefix-share under --fault-plan prefill@1,decode@1,superstep@1"
         SMOKE_LOG="$(mktemp)"
         trap 'rm -f "$SMOKE_LOG"' EXIT
         cargo run --release --quiet -- serve \
             --artifacts "$ARTIFACTS" --requests 6 --max-new 32 --prefix-share \
+            --scorer analytic \
             --fault-plan "prefill@1,decode@1,superstep@1" | tee "$SMOKE_LOG"
         RECOVERY_LINE="$(grep '^fault recovery:' "$SMOKE_LOG" || true)"
         if [ -z "$RECOVERY_LINE" ]; then

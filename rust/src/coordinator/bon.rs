@@ -72,7 +72,7 @@ impl Driver for BonDriver {
             && core.state.remaining() > 0
             && core.snapshot_live()
         {
-            core.stage_sampled(engine, false)?;
+            core.stage_sampled(engine, crate::engine::SignalSet::NONE)?;
             self.planned_decode = true;
             return Ok(StepPlan::Decode { signals: false });
         }

@@ -4,6 +4,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
+use super::scorer::{Cadence, ScorerKind};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -75,6 +76,13 @@ pub struct KappaConfig {
     /// Compute signals with the Rust scalar path instead of the fused
     /// Pallas executable (differential testing / ablation).
     pub native_signals: bool,
+    /// Signal family scoring the gating phase (PR 8): the analytic
+    /// scalar pipeline (default, bit-identical to the pre-scorer code)
+    /// or the hidden-state linear probe.
+    pub scorer: ScorerKind,
+    /// When gated ticks are scoreable: every token tick (default) or
+    /// only at reasoning-step boundaries.
+    pub cadence: Cadence,
 }
 
 impl Default for KappaConfig {
@@ -91,6 +99,8 @@ impl Default for KappaConfig {
             max_draft: 8,
             schedule: Schedule::Linear,
             native_signals: false,
+            scorer: ScorerKind::Analytic,
+            cadence: Cadence::Token,
         }
     }
 }
@@ -116,6 +126,12 @@ impl KappaConfig {
         let schedule_str = args.str_or("schedule", "linear");
         let schedule = Schedule::parse(&schedule_str)
             .ok_or_else(|| anyhow!("--schedule: expected linear|cosine, got {schedule_str:?}"))?;
+        let scorer_str = args.str_or("scorer", "analytic");
+        let scorer = ScorerKind::parse(&scorer_str)
+            .ok_or_else(|| anyhow!("--scorer: expected analytic|probe, got {scorer_str:?}"))?;
+        let cadence_str = args.str_or("cadence", "token");
+        let cadence = Cadence::parse(&cadence_str)
+            .ok_or_else(|| anyhow!("--cadence: expected token|step, got {cadence_str:?}"))?;
         Ok(Self {
             window: args.usize_or("window", d.window),
             mom_buckets: args.usize_or("mom-buckets", d.mom_buckets),
@@ -128,6 +144,8 @@ impl KappaConfig {
             max_draft: args.usize_or("max-draft", d.max_draft),
             schedule,
             native_signals: args.bool_or("native-signals", false),
+            scorer,
+            cadence,
         })
     }
 }
@@ -244,6 +262,8 @@ impl RunConfig {
             ("w_conf", Json::num(self.kappa.w_conf)),
             ("w_ent", Json::num(self.kappa.w_ent)),
             ("schedule", Json::str(self.kappa.schedule.name())),
+            ("scorer", Json::str(self.kappa.scorer.name())),
+            ("cadence", Json::str(self.kappa.cadence.name())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -314,5 +334,32 @@ mod tests {
         let err = KappaConfig::from_args(&bad_sched).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("--schedule") && msg.contains("warp"), "{msg}");
+    }
+
+    #[test]
+    fn scorer_and_cadence_from_args() {
+        let d = KappaConfig::from_args(&crate::util::cli::Args::parse(std::iter::empty::<String>()))
+            .expect("defaults");
+        assert_eq!(d.scorer, ScorerKind::Analytic);
+        assert_eq!(d.cadence, Cadence::Token);
+
+        let args = crate::util::cli::Args::parse(
+            "--scorer probe --cadence step".split_whitespace().map(String::from),
+        );
+        let k = KappaConfig::from_args(&args).expect("valid flags");
+        assert_eq!(k.scorer, ScorerKind::Probe);
+        assert_eq!(k.cadence, Cadence::Step);
+
+        let bad = crate::util::cli::Args::parse(
+            "--scorer oracle".split_whitespace().map(String::from),
+        );
+        let msg = format!("{:#}", KappaConfig::from_args(&bad).unwrap_err());
+        assert!(msg.contains("--scorer") && msg.contains("oracle"), "{msg}");
+
+        let bad = crate::util::cli::Args::parse(
+            "--cadence epoch".split_whitespace().map(String::from),
+        );
+        let msg = format!("{:#}", KappaConfig::from_args(&bad).unwrap_err());
+        assert!(msg.contains("--cadence") && msg.contains("epoch"), "{msg}");
     }
 }

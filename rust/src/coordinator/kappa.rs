@@ -27,8 +27,8 @@
 //!
 //! Hot-path discipline (see `crate::engine` module docs): one
 //! `SamplerScratch` serves every draw of the request; gating steps stage
-//! **gated** tokens (`StepPlan::Decode { signals: true }`), so the (KL,
-//! confidence, entropy) rows ride back with the forward pass — through
+//! **gated** tokens (`StepPlan::Decode { signals: true }`), so the
+//! scorer's signal families ride back with the forward pass — through
 //! the solo superstep on the blocking path, or the *packed* superstep
 //! shared with co-resident requests on the fused path — and the logits
 //! slab crosses the host boundary once per gated bucket-tick, never
@@ -38,14 +38,30 @@
 //! Gating membership runs over a reusable boolean mask (no `contains`
 //! scans); score ordering uses `f64::total_cmp`, so a NaN score
 //! degrades into a deterministic ranking instead of a panic.
+//!
+//! # Pluggable scoring (PR 8)
+//!
+//! Phase II no longer hard-wires the analytic pipeline: the driver owns
+//! a [`Scorer`] (built from `KappaConfig::scorer` at the Draft → Gate
+//! transition) and per gated tick it *collects* the signal rows the
+//! scorer declared it consumes ([`Scorer::wants`]), packages them as a
+//! [`SignalTick`] and hands them over. [`super::scorer::Cadence`]
+//! decides which gated ticks are *scoreable* (every token tick, or only
+//! reasoning-step boundaries); only scoreable ticks advance the
+//! schedule index `k` and run the pruning half in `gate_absorb`.
+//! Emission is unconditional — cadence gates consumption and pruning,
+//! never the dispatch shape — so the default
+//! (`--scorer analytic --cadence token`) is bit-identical to the
+//! pre-scorer code, a property `tests/scorer_equivalence.rs` pins.
 
 use anyhow::{bail, Result};
 
-use crate::engine::{Branch, Engine};
+use crate::engine::{Branch, Engine, SignalSet};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
-use super::signals::{combine_scores, BranchSignalState, SignalScratch};
+use super::scorer::{make_scorer, Cadence, Scorer, SignalTick};
+use super::signals::SignalScratch;
 use super::{draft, finalize, schedule, Driver, DriverCore, StepOutcome, StepPlan};
 
 /// Phase III entry decision: who won, and whether decoding continues.
@@ -116,24 +132,30 @@ pub struct KappaDriver {
     core: DriverCore,
     tau: usize,
     // ---- Phase II state (initialized at the Draft → Gate transition) ----
-    /// Per-branch signal accumulators, parallel to `state.branches`.
-    sig: Vec<BranchSignalState>,
+    /// The pluggable signal-family consumer (module docs) — owns the
+    /// per-branch trajectory scores the pruning policy ranks.
+    scorer: Option<Box<dyn Scorer>>,
     /// Host-side scoring scratch — only the native ablation path.
     sig_scratch: Option<SignalScratch>,
-    /// Gating step index (1-based in the schedule).
+    /// The last gate tick was scoreable (cadence boundary AND the scorer
+    /// consumed it) — gates the pruning half in `gate_absorb`.
+    scored_tick: bool,
+    /// Step-delimiter token id, resolved from the tokenizer at gate init
+    /// (only consulted under [`Cadence::Step`]).
+    newline_id: u32,
+    /// Gating step index (1-based in the schedule; counts *scored*
+    /// ticks).
     k: usize,
     /// Phase II ended early (all survivors finished / no live branch
     /// left) — the blocking loop's `break`s. The Phase III transition in
     /// `plan_step` still runs winner selection afterwards.
     gating_over: bool,
-    // Per-step buffers, allocated once for the request. (The per-token
-    // sampling path is fully allocation-free; `combine_scores` still
-    // builds its small z-norm temporaries each *gating* step, which runs
-    // at most τ times per request.)
+    // Per-step collection buffers, allocated once for the request (the
+    // scoring path itself is allocation-free past each buffer's
+    // high-water mark — see `signals::ScoreScratch`).
     kl: Vec<f64>,
     conf: Vec<f64>,
     ent: Vec<f64>,
-    ema: Vec<f64>,
     candidates: Vec<usize>,
     ranked: Vec<usize>,
     keep_live: Vec<usize>,
@@ -158,14 +180,15 @@ impl KappaDriver {
         KappaDriver {
             core,
             tau,
-            sig: Vec::new(),
+            scorer: None,
             sig_scratch: None,
+            scored_tick: false,
+            newline_id: 0,
             k: 0,
             gating_over: false,
             kl: Vec::with_capacity(n),
             conf: Vec::with_capacity(n),
             ent: Vec::with_capacity(n),
-            ema: Vec::with_capacity(n),
             candidates: Vec::with_capacity(n),
             ranked: Vec::with_capacity(n),
             keep_live: Vec::with_capacity(n),
@@ -198,26 +221,105 @@ impl KappaDriver {
         if !core.snapshot_live() {
             return Ok(None);
         }
-        core.stage_sampled(engine, false)?;
+        core.stage_sampled(engine, SignalSet::NONE)?;
         self.planned = Planned::DraftDecode;
         Ok(Some(StepPlan::Decode { signals: false }))
     }
 
-    /// Draft → Gate transition: allocate the per-branch signal
-    /// accumulators and (for the native ablation) the host scoring
-    /// scratch.
-    fn init_gate(&mut self, engine: &Engine) {
+    /// Draft → Gate transition: build the configured scorer (validating
+    /// its artifact requirements up front, with named errors), resolve
+    /// the step delimiter for step cadence, and (for the native
+    /// ablation) allocate the host scoring scratch.
+    fn init_gate(&mut self, engine: &Engine) -> Result<()> {
         let n = self.core.cfg.n;
         let kcfg = &self.core.cfg.kappa;
-        self.sig = (0..n).map(|_| BranchSignalState::new(kcfg.window)).collect();
         // Only the native ablation path needs the host-side q work.
         self.sig_scratch = if kcfg.native_signals {
             Some(SignalScratch::new(engine.model().q_logits()))
         } else {
             None
         };
+        let mut scorer =
+            make_scorer(kcfg.scorer, engine, self.core.state.is_fused(), kcfg.native_signals)?;
+        scorer.begin(n, kcfg);
+        self.scorer = Some(scorer);
+        self.newline_id = match kcfg.cadence {
+            Cadence::Token => 0,
+            Cadence::Step => {
+                let ids = engine.tokenizer().encode("\n")?;
+                match ids.as_slice() {
+                    [id] => *id,
+                    _ => bail!("step cadence: the step delimiter must encode to one token"),
+                }
+            }
+        };
         self.k = 0;
         self.gating_over = false;
+        self.scored_tick = false;
+        Ok(())
+    }
+
+    /// Collect this tick's signal rows and hand them to the scorer as
+    /// one [`SignalTick`]. Returns whether the scorer consumed the tick
+    /// (e.g. the hidden probe cannot score the first gating tick, whose
+    /// slab came from a draft-phase decode with no tap rows).
+    fn collect_and_observe(&mut self, engine: &Engine) -> Result<bool> {
+        let Some(mut scorer) = self.scorer.take() else {
+            bail!("kappa gating without an initialized scorer");
+        };
+        let wants = scorer.wants();
+        let core = &self.core;
+        let rows = core.live.len();
+        let kcfg = &core.cfg.kappa;
+
+        // -- Signal rows for the live slots. Steady state: they rode
+        // back with the superstep that produced this slab
+        // (`fused_signals` / `fused_tap`) — zero extra dispatches, zero
+        // slab re-upload; on the fused scheduler path the packed
+        // superstep served every co-resident request with the same
+        // dispatch. Fallbacks: the native ablation computes the scalars
+        // on the host, and the unfused borrowed-slab call covers the
+        // first gating step (draft-phase slab) / superstep-less
+        // artifact sets.
+        self.kl.clear();
+        self.conf.clear();
+        self.ent.clear();
+        if wants.scalars {
+            if let Some(scr) = self.sig_scratch.as_mut() {
+                for slot in 0..rows {
+                    let (a, b, c) = scr.raw(core.state.logits_for_slot(slot));
+                    self.kl.push(a);
+                    self.conf.push(b);
+                    self.ent.push(c);
+                }
+            } else if let Some((a, b, c)) = core.state.fused_signals() {
+                self.kl.extend(a.iter().map(|&x| x as f64));
+                self.conf.extend(b.iter().map(|&x| x as f64));
+                self.ent.extend(c.iter().map(|&x| x as f64));
+            } else {
+                let (a, b, c) = engine.model().signals_padded(
+                    core.state.logits_slab(),
+                    rows,
+                    core.state.bucket(),
+                )?;
+                self.kl.extend(a.into_iter().map(|x| x as f64));
+                self.conf.extend(b.into_iter().map(|x| x as f64));
+                self.ent.extend(c.into_iter().map(|x| x as f64));
+            }
+        }
+        let tap = if wants.tap { core.state.fused_tap() } else { None };
+        let tick = SignalTick {
+            live: &core.live,
+            kl: &self.kl,
+            conf: &self.conf,
+            ent: &self.ent,
+            tap,
+            tap_width: core.state.tap_width(),
+            t: core.steps + 1,
+        };
+        let scored = scorer.observe(&tick, kcfg);
+        self.scorer = Some(scorer);
+        Ok(scored)
     }
 
     /// Phase II planning (score → stage continuation): `None` when the
@@ -233,125 +335,110 @@ impl KappaDriver {
         if !self.core.snapshot_live() {
             return Ok(None);
         }
-        self.k += 1;
-        let core = &mut self.core;
-        let rows = core.live.len();
-        let kcfg = &core.cfg.kappa;
 
-        // -- Signals for the live rows. Steady state: they rode back
-        // with the superstep that produced this slab (`fused_signals`) —
-        // zero extra dispatches, zero slab re-upload; on the fused
-        // scheduler path the packed superstep served every co-resident
-        // request with the same dispatch. Fallbacks: the native
-        // ablation, or the unfused borrowed-slab call for the first
-        // gating step (draft-phase slab) / superstep-less artifacts.
-        self.kl.clear();
-        self.conf.clear();
-        self.ent.clear();
-        if let Some(scr) = self.sig_scratch.as_mut() {
-            for slot in 0..rows {
-                let (a, b, c) = scr.raw(core.state.logits_for_slot(slot));
-                self.kl.push(a);
-                self.conf.push(b);
-                self.ent.push(c);
+        // -- Cadence: is this gated tick scoreable? Token cadence
+        // scores every tick (the default — and what keeps the analytic
+        // family bit-identical to the pre-scorer code); step cadence
+        // scores only when a live branch just closed a reasoning step
+        // (its last token is the step delimiter). Emission below is
+        // unconditional either way — cadence gates consumption and
+        // pruning, never the dispatch shape, so the KV trace does not
+        // depend on it.
+        let boundary = match self.core.cfg.kappa.cadence {
+            Cadence::Token => true,
+            Cadence::Step => {
+                let st = &self.core.state;
+                self.core
+                    .live
+                    .iter()
+                    .any(|&bi| st.branches[bi].tokens.last() == Some(&self.newline_id))
             }
-        } else if let Some((a, b, c)) = core.state.fused_signals() {
-            self.kl.extend(a.iter().map(|&x| x as f64));
-            self.conf.extend(b.iter().map(|&x| x as f64));
-            self.ent.extend(c.iter().map(|&x| x as f64));
-        } else {
-            let (a, b, c) = engine.model().signals_padded(
-                core.state.logits_slab(),
-                rows,
-                core.state.bucket(),
-            )?;
-            self.kl.extend(a.into_iter().map(|x| x as f64));
-            self.conf.extend(b.into_iter().map(|x| x as f64));
-            self.ent.extend(c.into_iter().map(|x| x as f64));
+        };
+        self.scored_tick = boundary && self.collect_and_observe(engine)?;
+        if self.scored_tick {
+            // Only scored ticks advance the schedule: τ counts scoring
+            // steps, and the survivor curve moves when scores move.
+            self.k += 1;
         }
-
-        // -- Robustified KL information change per live branch.
-        self.ema.clear();
-        for (slot, &bi) in core.live.iter().enumerate() {
-            self.ema.push(self.sig[bi].update_kl(self.kl[slot], kcfg));
-        }
-
-        // -- Across-branch z-norm + weighted combine + trajectory update.
-        combine_scores(
-            &mut self.sig,
-            &core.live,
-            &self.ema,
-            &self.conf,
-            &self.ent,
-            core.steps + 1,
-            kcfg,
-        );
 
         // -- Stage the one-step continuation for the next scoring round
-        // as a gated token: the new slab's signals come back with the
-        // same (solo or packed) dispatch and are consumed at the top of
-        // the next iteration. The native ablation scores on the host
-        // instead, so it stages a plain decode.
-        let signals = self.sig_scratch.is_none();
-        core.stage_sampled(engine, signals)?;
+        // as a gated token, requesting the scorer's signal families so
+        // they ride back with the same (solo or packed) dispatch and
+        // are consumed at the top of the next iteration. The native
+        // ablation scores on the host instead, so it stages a plain
+        // decode.
+        let wants = match (&self.sig_scratch, self.scorer.as_ref()) {
+            (Some(_), _) => SignalSet::NONE,
+            (None, Some(s)) => s.wants(),
+            (None, None) => bail!("kappa gating without an initialized scorer"),
+        };
+        self.core.stage_sampled(engine, wants)?;
         self.planned = Planned::GateDecode;
-        Ok(Some(StepPlan::Decode { signals }))
+        Ok(Some(StepPlan::Decode { signals: wants.any() }))
     }
 
     /// Phase II post-dispatch half: gating — prune candidates down to
-    /// the schedule's target, compact EOS branches.
+    /// the schedule's target, compact EOS branches. The pruning half
+    /// runs only on scored ticks (`scored_tick` — cadence boundary AND
+    /// the scorer consumed the tick): an unscored tick carries no new
+    /// score information, so pruning on it would rank stale state.
     fn gate_absorb(&mut self, engine: &Engine) -> Result<()> {
         let core = &mut self.core;
         core.state.finish_dispatched(engine)?;
         core.steps += 1;
 
-        let kcfg = &core.cfg.kappa;
-        self.candidates.clear();
-        self.candidates
-            .extend((0..core.state.branches.len()).filter(|&bi| !core.state.branches[bi].pruned));
-        let target = schedule::survivors(kcfg.schedule, core.cfg.n, self.k, self.tau)
-            .min(self.candidates.len())
-            .max(1);
-        if target < self.candidates.len() {
-            self.ranked.clear();
-            self.ranked.extend_from_slice(&self.candidates);
-            // Strict total order (score desc, index asc): same permutation
-            // a stable sort under `partial_cmp` gave (see
-            // `stats::total_order` for the ±0.0/NaN semantics),
-            // allocation-free.
-            let sig = &self.sig;
-            self.ranked.sort_unstable_by(|&a, &b| {
-                stats::total_order(sig[b].score, sig[a].score).then(a.cmp(&b))
-            });
-            self.keep_mask.iter_mut().for_each(|m| *m = false);
-            for &bi in &self.ranked[..target] {
-                self.keep_mask[bi] = true;
-            }
-            // Device batch keeps only the unfinished survivors, in slot
-            // order.
-            self.keep_live.clear();
-            self.keep_live.extend(
-                core.state.live_branches().iter().copied().filter(|&bi| self.keep_mask[bi]),
+        if self.scored_tick {
+            let Some(scorer) = self.scorer.as_deref() else {
+                bail!("kappa gating without an initialized scorer");
+            };
+            let kcfg = &core.cfg.kappa;
+            self.candidates.clear();
+            self.candidates.extend(
+                (0..core.state.branches.len()).filter(|&bi| !core.state.branches[bi].pruned),
             );
-            if self.keep_live.is_empty() {
-                // All survivors already finished: mark the rest pruned
-                // and exit the gating loop.
+            let target = schedule::survivors(kcfg.schedule, core.cfg.n, self.k, self.tau)
+                .min(self.candidates.len())
+                .max(1);
+            if target < self.candidates.len() {
+                self.ranked.clear();
+                self.ranked.extend_from_slice(&self.candidates);
+                // Strict total order (score desc, index asc): same
+                // permutation a stable sort under `partial_cmp` gave
+                // (see `stats::total_order` for the ±0.0/NaN
+                // semantics), allocation-free.
+                self.ranked.sort_unstable_by(|&a, &b| {
+                    stats::total_order(scorer.score(b), scorer.score(a)).then(a.cmp(&b))
+                });
+                self.keep_mask.iter_mut().for_each(|m| *m = false);
+                for &bi in &self.ranked[..target] {
+                    self.keep_mask[bi] = true;
+                }
+                // Device batch keeps only the unfinished survivors, in
+                // slot order.
+                self.keep_live.clear();
+                self.keep_live.extend(
+                    core.state.live_branches().iter().copied().filter(|&bi| self.keep_mask[bi]),
+                );
+                if self.keep_live.is_empty() {
+                    // All survivors already finished: mark the rest
+                    // pruned and exit the gating loop.
+                    for &bi in &self.candidates {
+                        if !self.keep_mask[bi] {
+                            core.state.branches[bi].pruned = true;
+                        }
+                    }
+                    self.gating_over = true;
+                    return Ok(());
+                }
+                // Pruned slots are released here — the scheduler refills
+                // them from its queue within one tick of this poll.
+                core.state.retain_branches(engine, &self.keep_live)?;
+                // Mark finished non-kept candidates as pruned (they were
+                // not live, so retain_branches couldn't see them).
                 for &bi in &self.candidates {
                     if !self.keep_mask[bi] {
                         core.state.branches[bi].pruned = true;
                     }
-                }
-                self.gating_over = true;
-                return Ok(());
-            }
-            // Pruned slots are released here — the scheduler refills
-            // them from its queue within one tick of this poll.
-            core.state.retain_branches(engine, &self.keep_live)?;
-            // Mark finished non-kept candidates as pruned (they were not
-            // live, so retain_branches couldn't see them).
-            for &bi in &self.candidates {
-                if !self.keep_mask[bi] {
-                    core.state.branches[bi].pruned = true;
                 }
             }
         }
@@ -379,7 +466,7 @@ impl Driver for KappaDriver {
                         return Ok(plan);
                     }
                     self.phase = Phase::Gate;
-                    self.init_gate(engine);
+                    self.init_gate(engine)?;
                 }
                 Phase::Gate => {
                     if let Some(plan) = self.gate_plan(engine)? {
@@ -388,11 +475,11 @@ impl Driver for KappaDriver {
                     // Phase III entry: pick the winner, enforce the
                     // continuation invariant, truncate the losers.
                     let core = &mut self.core;
-                    let sig = &self.sig;
+                    let scorer = self.scorer.as_deref();
                     match plan_continuation(
                         &core.state.branches,
                         core.state.live_branches(),
-                        |bi| sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY),
+                        |bi| scorer.map(|s| s.score(bi)).unwrap_or(f64::NEG_INFINITY),
                     )? {
                         Continuation::Finished(chosen) => {
                             self.chosen = chosen;
@@ -452,7 +539,7 @@ impl Driver for KappaDriver {
                     // scores Phase III selects on) before `gating_over`
                     // ends Phase II.
                     self.phase = Phase::Gate;
-                    self.init_gate(engine);
+                    self.init_gate(engine)?;
                 }
                 Ok(StepOutcome::Pending)
             }

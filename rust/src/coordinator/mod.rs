@@ -76,12 +76,13 @@ pub mod greedy;
 pub mod kappa;
 pub mod sampler;
 pub mod schedule;
+pub mod scorer;
 pub mod signals;
 pub mod stbon;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{Engine, FusionHub, GenState, PrefixStore, StartOpts};
+use crate::engine::{Engine, FusionHub, GenState, PrefixStore, SignalSet, StartOpts};
 use crate::metrics::RequestMetrics;
 use crate::util::rng::Pcg64;
 
@@ -234,8 +235,11 @@ impl DriverCore {
 
     /// The shared draft-step body: sample every snapshotted live row
     /// from the current logits slab (each branch from its own RNG
-    /// stream) and stage the tokens for this poll's dispatch.
-    pub fn stage_sampled(&mut self, engine: &Engine, signals: bool) -> Result<()> {
+    /// stream) and stage the tokens for this poll's dispatch. `signals`
+    /// names the signal families the dispatch should emit alongside the
+    /// forward pass (the active scorer's [`scorer::Scorer::wants`] on
+    /// gated ticks, [`SignalSet::NONE`] elsewhere).
+    pub fn stage_sampled(&mut self, engine: &Engine, signals: SignalSet) -> Result<()> {
         let vocab = engine.model().config.vocab;
         let sampled = self.scratch.sample_slab(
             self.state.logits_slab(),
@@ -250,7 +254,7 @@ impl DriverCore {
     /// Stage a single already-sampled row (the winner-continuation
     /// phases decode one branch with a cloned RNG stream).
     pub fn stage_single(&mut self, tok: u32, logprob: f64) -> Result<()> {
-        self.state.stage_step(&[(tok, logprob)], false)
+        self.state.stage_step(&[(tok, logprob)], SignalSet::NONE)
     }
 }
 

@@ -1,0 +1,414 @@
+//! Pluggable signal families: the [`Scorer`] abstraction between the
+//! engine's signal emission and the pruning policy.
+//!
+//! KAPPA's gating loop (see [`super::kappa`]) is signal-family agnostic:
+//! each gated tick it *collects* whatever rode back with the dispatch —
+//! the analytic scalar rows (KL, confidence, entropy) and/or one
+//! hidden-state tap row per branch — packages them as a [`SignalTick`],
+//! and hands them to the request's [`Scorer`]. The scorer declares which
+//! families it consumes ([`Scorer::wants`] — this becomes the *emission*
+//! request staged with every gated dispatch) and folds each scoreable
+//! tick into per-branch trajectory scores the pruning policy ranks with
+//! `f64::total_cmp`.
+//!
+//! Two families ship:
+//!
+//! - [`AnalyticScorer`] — the paper's Algorithm 2 pipeline (ΔI
+//!   median-of-means → bias-corrected EMA → across-branch z-norm →
+//!   weighted combine → trajectory fold), **bit-identical** to the
+//!   pre-refactor hard-wired path: same float ops in the same order,
+//!   through the allocation-free `combine_scores_into`.
+//! - [`HiddenProbeScorer`] — a linear probe over the post-final-layernorm
+//!   hidden-state tap (`probe_{m}.json`, fitted offline by
+//!   `train.fit_probe`); the per-branch instantaneous score is
+//!   `sigmoid(w · tap + b)`, folded through the same trajectory
+//!   machinery.
+//!
+//! Orthogonally, [`Cadence`] decides *when* a gated tick is scoreable:
+//! every token tick (the default, and what keeps the analytic family
+//! bit-identical), or only at reasoning-step boundaries (a branch just
+//! emitted the step-delimiter token). Cadence gates **consumption and
+//! pruning, never emission** — families are requested on every gated
+//! dispatch, so the dispatch sequence (and therefore the KV trace) does
+//! not depend on the cadence.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::{Engine, SignalSet};
+use crate::runtime::ProbeWeights;
+
+use super::config::KappaConfig;
+use super::signals::{combine_scores_into, BranchSignalState, ScoreScratch};
+
+/// Which scorer family a run uses. Parsed from `--scorer` (CLI) or
+/// selected per worker through `server::SchedConfig::scorer`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScorerKind {
+    /// Algorithm 2's analytic scalar pipeline (the default — the
+    /// pre-refactor KAPPA path, bit-identical).
+    #[default]
+    Analytic,
+    /// Linear hidden-state probe (requires tap artifacts + probe
+    /// weights in the manifest).
+    Probe,
+}
+
+impl ScorerKind {
+    pub fn parse(s: &str) -> Option<ScorerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" | "kl" => Some(ScorerKind::Analytic),
+            "probe" | "hidden-probe" => Some(ScorerKind::Probe),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScorerKind::Analytic => "analytic",
+            ScorerKind::Probe => "probe",
+        }
+    }
+}
+
+/// When a gated tick is scoreable (consumption/pruning cadence; emission
+/// is unconditional — module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Cadence {
+    /// Score and prune on every gated token tick (default; keeps the
+    /// analytic path bit-identical to the pre-refactor code).
+    #[default]
+    Token,
+    /// Score and prune only when a live branch just emitted the
+    /// reasoning-step delimiter (the newline token) — step-level
+    /// pruning granularity instead of token-level.
+    Step,
+}
+
+impl Cadence {
+    pub fn parse(s: &str) -> Option<Cadence> {
+        match s.to_ascii_lowercase().as_str() {
+            "token" => Some(Cadence::Token),
+            "step" => Some(Cadence::Step),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cadence::Token => "token",
+            Cadence::Step => "step",
+        }
+    }
+}
+
+/// One gated tick's signal rows, in live-slot order: `live[i]` names the
+/// branch whose rows sit at index `i`. Scalar slices are empty when the
+/// scalar family was not collected this tick; `tap` is `None` when no
+/// tap rows rode along (e.g. the first gating tick, whose logits slab
+/// came from a draft-phase decode).
+pub struct SignalTick<'a> {
+    pub live: &'a [usize],
+    pub kl: &'a [f64],
+    pub conf: &'a [f64],
+    pub ent: &'a [f64],
+    /// `[live.len() × tap_width]` hidden-state rows.
+    pub tap: Option<&'a [f32]>,
+    pub tap_width: usize,
+    /// Decode position t (trajectory weight).
+    pub t: usize,
+}
+
+/// A pluggable signal-family consumer (module docs). One per request,
+/// created at the Draft → Gate transition.
+pub trait Scorer {
+    /// Signal families this scorer consumes — staged as the emission
+    /// request with every gated dispatch.
+    fn wants(&self) -> SignalSet;
+
+    /// (Re)initialize for a request with `n` branches.
+    fn begin(&mut self, n: usize, cfg: &KappaConfig);
+
+    /// Fold one gated tick into the per-branch trajectory scores.
+    /// Returns `false` when the tick carried nothing this scorer can
+    /// consume (the caller must not count it as a scored gating step).
+    fn observe(&mut self, tick: &SignalTick<'_>, cfg: &KappaConfig) -> bool;
+
+    /// Current trajectory score of branch `bi`
+    /// (`f64::NEG_INFINITY` for an unknown branch).
+    fn score(&self, bi: usize) -> f64;
+}
+
+/// Algorithm 2's analytic pipeline behind the [`Scorer`] trait —
+/// bit-identical to the pre-refactor hard-wired gating code.
+#[derive(Debug, Default)]
+pub struct AnalyticScorer {
+    sig: Vec<BranchSignalState>,
+    ema: Vec<f64>,
+    scratch: ScoreScratch,
+}
+
+impl AnalyticScorer {
+    pub fn new() -> AnalyticScorer {
+        AnalyticScorer::default()
+    }
+}
+
+impl Scorer for AnalyticScorer {
+    fn wants(&self) -> SignalSet {
+        SignalSet::SCALARS
+    }
+
+    fn begin(&mut self, n: usize, cfg: &KappaConfig) {
+        self.sig.clear();
+        self.sig.extend((0..n).map(|_| BranchSignalState::new(cfg.window)));
+    }
+
+    fn observe(&mut self, tick: &SignalTick<'_>, cfg: &KappaConfig) -> bool {
+        if tick.kl.len() != tick.live.len() {
+            return false;
+        }
+        self.ema.clear();
+        for (slot, &bi) in tick.live.iter().enumerate() {
+            self.ema.push(self.sig[bi].update_kl(tick.kl[slot], cfg));
+        }
+        combine_scores_into(
+            &mut self.sig,
+            tick.live,
+            &self.ema,
+            tick.conf,
+            tick.ent,
+            tick.t,
+            cfg,
+            &mut self.scratch,
+        );
+        true
+    }
+
+    fn score(&self, bi: usize) -> f64 {
+        self.sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY)
+    }
+}
+
+/// Linear hidden-state probe behind the [`Scorer`] trait: instantaneous
+/// score `sigmoid(w · tap + b)` per branch (the probability the probe
+/// assigns to "this trajectory ends correct"), folded through the same
+/// trajectory-weighted total the analytic family uses.
+#[derive(Debug)]
+pub struct HiddenProbeScorer {
+    probe: ProbeWeights,
+    sig: Vec<BranchSignalState>,
+}
+
+impl HiddenProbeScorer {
+    pub fn new(probe: ProbeWeights) -> HiddenProbeScorer {
+        HiddenProbeScorer { probe, sig: Vec::new() }
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl Scorer for HiddenProbeScorer {
+    fn wants(&self) -> SignalSet {
+        SignalSet { scalars: false, tap: true }
+    }
+
+    fn begin(&mut self, n: usize, cfg: &KappaConfig) {
+        self.sig.clear();
+        self.sig.extend((0..n).map(|_| BranchSignalState::new(cfg.window)));
+    }
+
+    fn observe(&mut self, tick: &SignalTick<'_>, _cfg: &KappaConfig) -> bool {
+        let Some(tap) = tick.tap else {
+            // No tap rows this tick (draft-phase slab, or a degraded
+            // dispatch without the tapped artifact): unscoreable.
+            return false;
+        };
+        let d = self.probe.d_model;
+        if tick.tap_width != d || tap.len() != tick.live.len() * d {
+            return false;
+        }
+        for (slot, &bi) in tick.live.iter().enumerate() {
+            let p = sigmoid(self.probe.logit(&tap[slot * d..(slot + 1) * d]));
+            self.sig[bi].update_trajectory(p, tick.t);
+        }
+        true
+    }
+
+    fn score(&self, bi: usize) -> f64 {
+        self.sig.get(bi).map(|s| s.score).unwrap_or(f64::NEG_INFINITY)
+    }
+}
+
+/// Build the configured scorer for one request, validating its artifact
+/// requirements up front with named errors (`fused` requests additionally
+/// need the *packed* tap family — see [`Engine::tap_ready`]).
+pub fn make_scorer(
+    kind: ScorerKind,
+    engine: &Engine,
+    fused: bool,
+    native_signals: bool,
+) -> Result<Box<dyn Scorer>> {
+    match kind {
+        ScorerKind::Analytic => Ok(Box::new(AnalyticScorer::new())),
+        ScorerKind::Probe => {
+            if native_signals {
+                bail!("--scorer probe is incompatible with --native-signals (the probe consumes the on-device hidden-state tap)");
+            }
+            let probe = engine.model().probe().ok_or_else(|| {
+                anyhow!("--scorer probe: no probe weights in the artifact set (manifest key 'probe' / probe_*.json missing)")
+            })?;
+            if !engine.tap_ready(fused) {
+                bail!(
+                    "--scorer probe: artifact set lacks superstep_tap{} executables for every bucket",
+                    if fused { " (+ superstep_tap_packed)" } else { "" }
+                );
+            }
+            Ok(Box::new(HiddenProbeScorer::new(probe.clone())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::signals::combine_scores;
+
+    #[test]
+    fn kind_and_cadence_parse_and_name_roundtrip() {
+        assert_eq!(ScorerKind::parse("analytic"), Some(ScorerKind::Analytic));
+        assert_eq!(ScorerKind::parse("KL"), Some(ScorerKind::Analytic));
+        assert_eq!(ScorerKind::parse("probe"), Some(ScorerKind::Probe));
+        assert_eq!(ScorerKind::parse("hidden-probe"), Some(ScorerKind::Probe));
+        assert_eq!(ScorerKind::parse("magic"), None);
+        assert_eq!(ScorerKind::Analytic.name(), "analytic");
+        assert_eq!(ScorerKind::Probe.name(), "probe");
+        assert_eq!(ScorerKind::default(), ScorerKind::Analytic);
+
+        assert_eq!(Cadence::parse("token"), Some(Cadence::Token));
+        assert_eq!(Cadence::parse("Step"), Some(Cadence::Step));
+        assert_eq!(Cadence::parse("epoch"), None);
+        assert_eq!(Cadence::Token.name(), "token");
+        assert_eq!(Cadence::Step.name(), "step");
+        assert_eq!(Cadence::default(), Cadence::Token);
+    }
+
+    #[test]
+    fn analytic_scorer_matches_hardwired_pipeline_bitwise() {
+        // The scorer must reproduce exactly what the pre-refactor code
+        // computed: update_kl per live branch, then combine_scores.
+        let cfg = KappaConfig::default();
+        let n = 4;
+        let mut scorer = AnalyticScorer::new();
+        scorer.begin(n, &cfg);
+        let mut reference: Vec<BranchSignalState> =
+            (0..n).map(|_| BranchSignalState::new(cfg.window)).collect();
+
+        let mut live: Vec<usize> = (0..n).collect();
+        for t in 1..=6 {
+            let base = t as f64;
+            let kl: Vec<f64> = live.iter().map(|&bi| base * 0.3 + bi as f64 * 0.11).collect();
+            let conf: Vec<f64> = live.iter().map(|&bi| 0.1 + bi as f64 * 0.2).collect();
+            let ent: Vec<f64> = live.iter().map(|&bi| 2.0 - bi as f64 * 0.3).collect();
+
+            let mut ema = Vec::new();
+            for (slot, &bi) in live.iter().enumerate() {
+                ema.push(reference[bi].update_kl(kl[slot], &cfg));
+            }
+            combine_scores(&mut reference, &live, &ema, &conf, &ent, t, &cfg);
+
+            let tick = SignalTick {
+                live: &live,
+                kl: &kl,
+                conf: &conf,
+                ent: &ent,
+                tap: None,
+                tap_width: 0,
+                t,
+            };
+            assert!(scorer.observe(&tick, &cfg));
+            for bi in 0..n {
+                assert_eq!(
+                    reference[bi].score.to_bits(),
+                    scorer.score(bi).to_bits(),
+                    "branch {bi}, t {t}"
+                );
+            }
+            // Prune one branch mid-stream: the live mapping must keep
+            // rows and branches aligned.
+            if t == 3 {
+                live.remove(1);
+            }
+        }
+        assert_eq!(scorer.score(99), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn analytic_scorer_rejects_tickless_rows() {
+        let cfg = KappaConfig::default();
+        let mut scorer = AnalyticScorer::new();
+        scorer.begin(2, &cfg);
+        let tick = SignalTick {
+            live: &[0, 1],
+            kl: &[], // scalar family absent
+            conf: &[],
+            ent: &[],
+            tap: None,
+            tap_width: 0,
+            t: 1,
+        };
+        assert!(!scorer.observe(&tick, &cfg), "no scalar rows ⇒ unscoreable tick");
+    }
+
+    #[test]
+    fn probe_scorer_scores_from_tap_rows_and_skips_tapless_ticks() {
+        let cfg = KappaConfig::default();
+        // d_model = 2, w = (1, -1), b = 0: row [a, b] scores sigmoid(a−b).
+        let probe = ProbeWeights { d_model: 2, w: vec![1.0, -1.0], b: 0.0 };
+        let mut scorer = HiddenProbeScorer::new(probe);
+        scorer.begin(2, &cfg);
+
+        // Tapless tick (draft slab): unscoreable, scores untouched.
+        let no_tap =
+            SignalTick { live: &[0, 1], kl: &[], conf: &[], ent: &[], tap: None, tap_width: 2, t: 1 };
+        assert!(!scorer.observe(&no_tap, &cfg));
+        assert_eq!(scorer.score(0), 0.0);
+
+        // Branch 0's tap row says "correct" (large positive logit),
+        // branch 1's the opposite.
+        let tap = [5.0f32, 0.0, 0.0, 5.0];
+        let tick = SignalTick {
+            live: &[0, 1],
+            kl: &[],
+            conf: &[],
+            ent: &[],
+            tap: Some(&tap),
+            tap_width: 2,
+            t: 3,
+        };
+        assert!(scorer.observe(&tick, &cfg));
+        assert!(scorer.score(0) > 0.9 && scorer.score(1) < 0.1);
+        assert!(scorer.score(0) > scorer.score(1));
+
+        // A mis-sized tap row set is rejected, not misread.
+        let short = [1.0f32, 2.0];
+        let bad = SignalTick {
+            live: &[0, 1],
+            kl: &[],
+            conf: &[],
+            ent: &[],
+            tap: Some(&short),
+            tap_width: 2,
+            t: 4,
+        };
+        assert!(!scorer.observe(&bad, &cfg));
+    }
+
+    #[test]
+    fn probe_wants_tap_only_and_analytic_wants_scalars_only() {
+        let probe = ProbeWeights { d_model: 1, w: vec![1.0], b: 0.0 };
+        assert_eq!(HiddenProbeScorer::new(probe).wants(), SignalSet { scalars: false, tap: true });
+        assert_eq!(AnalyticScorer::new().wants(), SignalSet::SCALARS);
+    }
+}

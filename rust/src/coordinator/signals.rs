@@ -126,7 +126,14 @@ impl BranchSignalState {
 
     /// Feed this step's raw KL divergence; returns the bias-corrected,
     /// MoM-robustified EMA of ΔI (Algorithm 2 lines 14–17).
+    ///
+    /// A non-finite input (a NaN/inf logit row upstream) is treated as
+    /// "no information this step" (ΔI = 0): the accumulators stay
+    /// finite and later finite steps recover, instead of one poisoned
+    /// row NaN-ing the branch's score for the rest of the request. The
+    /// finite path is untouched — bit-identical to the unguarded code.
     pub fn update_kl(&mut self, kl: f64, cfg: &KappaConfig) -> f64 {
+        let kl = if kl.is_finite() { kl } else { self.prev_kl };
         let delta = kl - self.prev_kl;
         self.prev_kl = kl;
         if self.delta_window.len() == self.window {
@@ -147,11 +154,42 @@ impl BranchSignalState {
     /// Accumulate the instantaneous score s_t into the trajectory-weighted
     /// total with weight ∝ t (later steps count more); `t` is the global
     /// decode position, so weights grow along the generation.
+    ///
+    /// A non-finite s_t is dropped (score unchanged): once NaN enters
+    /// `traj_num` it never leaves, and a NaN score would make every
+    /// later `total_cmp` ranking of this branch an artifact of NaN
+    /// ordering rather than of the signals. `t == 0` contributes weight
+    /// 0 and leaves the score at its deterministic 0.0 default — short
+    /// trajectories degrade, never divide by zero. The finite path is
+    /// bit-identical to the unguarded code.
     pub fn update_trajectory(&mut self, s_t: f64, t: usize) {
+        if !s_t.is_finite() {
+            return;
+        }
         let w = t as f64;
         self.traj_num += w * s_t;
         self.traj_den += w;
         self.score = if self.traj_den > 0.0 { self.traj_num / self.traj_den } else { 0.0 };
+    }
+}
+
+/// Reusable buffers for [`combine_scores_into`]: the three per-step
+/// z-norm rows plus the instantaneous scores. One per request — after
+/// the first gating step every combine is allocation-free (asserted by
+/// the `combine_scores` section of `perf_microbench`).
+#[derive(Debug, Clone, Default)]
+pub struct ScoreScratch {
+    zn_ema: Vec<f64>,
+    zn_conf: Vec<f64>,
+    zn_ent: Vec<f64>,
+    /// Per-row instantaneous scores of the last combine, parallel to its
+    /// `live` slice.
+    pub scores: Vec<f64>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
     }
 }
 
@@ -162,6 +200,9 @@ impl BranchSignalState {
 /// `sig` is the full per-branch state array; `live[i]` names the branch
 /// whose signals sit at row `i` of `ema`/`conf`/`ent`. `t` is the decode
 /// position. Returns the per-row instantaneous scores.
+///
+/// Allocating reference wrapper around [`combine_scores_into`] — same
+/// float ops in the same order, bit-identical results.
 pub fn combine_scores(
     sig: &mut [BranchSignalState],
     live: &[usize],
@@ -171,18 +212,38 @@ pub fn combine_scores(
     t: usize,
     cfg: &KappaConfig,
 ) -> Vec<f64> {
+    let mut scratch = ScoreScratch::new();
+    combine_scores_into(sig, live, ema, conf, ent, t, cfg, &mut scratch);
+    scratch.scores
+}
+
+/// [`combine_scores`] through caller-owned scratch: zero steady-state
+/// allocation past the buffers' high-water marks (the hot gating path —
+/// every scorer family runs through here each scored tick).
+#[allow(clippy::too_many_arguments)]
+pub fn combine_scores_into(
+    sig: &mut [BranchSignalState],
+    live: &[usize],
+    ema: &[f64],
+    conf: &[f64],
+    ent: &[f64],
+    t: usize,
+    cfg: &KappaConfig,
+    scratch: &mut ScoreScratch,
+) {
     debug_assert_eq!(live.len(), ema.len());
     let eps = 1e-8;
-    let zn_ema = stats::z_normalize(ema, eps, cfg.z_clamp);
-    let zn_conf = stats::z_normalize(conf, eps, cfg.z_clamp);
-    let zn_ent = stats::z_normalize(ent, eps, cfg.z_clamp);
-    let mut out = Vec::with_capacity(live.len());
+    stats::z_normalize_into(ema, eps, cfg.z_clamp, &mut scratch.zn_ema);
+    stats::z_normalize_into(conf, eps, cfg.z_clamp, &mut scratch.zn_conf);
+    stats::z_normalize_into(ent, eps, cfg.z_clamp, &mut scratch.zn_ent);
+    scratch.scores.clear();
     for (i, &bi) in live.iter().enumerate() {
-        let s_t = cfg.w_kl * zn_ema[i] + cfg.w_conf * zn_conf[i] + cfg.w_ent * zn_ent[i];
+        let s_t = cfg.w_kl * scratch.zn_ema[i]
+            + cfg.w_conf * scratch.zn_conf[i]
+            + cfg.w_ent * scratch.zn_ent[i];
         sig[bi].update_trajectory(s_t, t);
-        out.push(s_t);
+        scratch.scores.push(s_t);
     }
-    out
 }
 
 #[cfg(test)]
@@ -282,6 +343,141 @@ mod tests {
         combine_scores(&mut sig, &[2, 0], &[5.0, -5.0], &[0.5, 0.5], &[0.5, 0.5], 3, &cfg);
         assert!(sig[2].score > sig[0].score);
         assert_eq!(sig[1].score, 0.0); // untouched
+    }
+
+    #[test]
+    fn combine_scores_into_matches_reference_bitwise_across_reuse() {
+        let cfg = KappaConfig::default();
+        let live = [2usize, 0, 3];
+        let mut scratch = ScoreScratch::new();
+        for round in 0..4 {
+            let base = round as f64;
+            let ema = [base + 1.0, base - 0.5, base * 0.25];
+            let conf = [0.9 - base * 0.1, 0.2, 0.5];
+            let ent = [1.0, 2.0 + base, 0.5];
+            let mut sig_a: Vec<BranchSignalState> =
+                (0..4).map(|_| BranchSignalState::new(cfg.window)).collect();
+            let mut sig_b = sig_a.clone();
+            let reference = combine_scores(&mut sig_a, &live, &ema, &conf, &ent, 5, &cfg);
+            // The scratch is reused dirty across rounds — results must
+            // still be bit-identical to the allocating reference.
+            combine_scores_into(&mut sig_b, &live, &ema, &conf, &ent, 5, &cfg, &mut scratch);
+            assert_eq!(reference.len(), scratch.scores.len());
+            for (a, b) in reference.iter().zip(scratch.scores.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+            }
+            for (a, b) in sig_a.iter().zip(sig_b.iter()) {
+                assert_eq!(a.score.to_bits(), b.score.to_bits(), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_window_degrades_to_window_one() {
+        let cfg = KappaConfig::default();
+        let mut z = BranchSignalState::new(0);
+        let mut one = BranchSignalState::new(1);
+        let mut kl = 0.0;
+        for _ in 0..8 {
+            kl += 0.3;
+            let a = z.update_kl(kl, &cfg);
+            let b = one.update_kl(kl, &cfg);
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert!(a.is_finite());
+        }
+    }
+
+    #[test]
+    fn short_trajectories_degrade_deterministically() {
+        // No updates at all, and a t = 0 update (weight 0), both leave
+        // the deterministic 0.0 default — never NaN from 0/0.
+        let mut st = BranchSignalState::new(4);
+        assert_eq!(st.score, 0.0);
+        st.update_trajectory(1.5, 0);
+        assert_eq!(st.score, 0.0);
+        st.update_trajectory(1.5, 1);
+        assert!((st.score - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_kl_does_not_poison_the_accumulators() {
+        let cfg = KappaConfig::default();
+        let mut st = BranchSignalState::new(cfg.window);
+        let mut kl = 0.0;
+        for _ in 0..6 {
+            kl += 0.5;
+            st.update_kl(kl, &cfg);
+        }
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let out = st.update_kl(bad, &cfg);
+            assert!(out.is_finite(), "poisoned by {bad}");
+        }
+        // Finite steps afterwards recover toward the constant ΔI.
+        let mut last = 0.0;
+        for _ in 0..100 {
+            kl += 0.5;
+            last = st.update_kl(kl, &cfg);
+        }
+        assert!((last - 0.5).abs() < 1e-6, "{last}");
+    }
+
+    #[test]
+    fn non_finite_instantaneous_score_is_dropped_not_folded() {
+        let mut st = BranchSignalState::new(4);
+        st.update_trajectory(1.0, 1);
+        let before = st.score;
+        st.update_trajectory(f64::NAN, 2);
+        st.update_trajectory(f64::INFINITY, 3);
+        assert_eq!(st.score.to_bits(), before.to_bits());
+        st.update_trajectory(1.0, 2);
+        assert!(st.score.is_finite());
+    }
+
+    #[test]
+    fn property_scores_stay_finite_and_totally_ordered_under_adversarial_input() {
+        // Deterministic pseudo-random sweep (xorshift, no external
+        // crates): raw KL streams with injected NaN/inf spikes must
+        // never leak a non-finite score, and the resulting scores must
+        // always admit a deterministic total_cmp ranking.
+        let cfg = KappaConfig::default();
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        for window in [0usize, 1, 2, 16] {
+            let mut sig: Vec<BranchSignalState> =
+                (0..3).map(|_| BranchSignalState::new(window)).collect();
+            let live = [0usize, 1, 2];
+            let mut scratch = ScoreScratch::new();
+            let (mut ema, mut conf, mut ent) = (vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
+            for t in 1..=40 {
+                for (i, s) in sig.iter_mut().enumerate() {
+                    let r = next();
+                    let kl = match r % 11 {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        2 => f64::NEG_INFINITY,
+                        _ => (r % 1000) as f64 / 100.0 - 5.0,
+                    };
+                    ema[i] = s.update_kl(kl, &cfg);
+                    conf[i] = (next() % 100) as f64 / 100.0;
+                    ent[i] = (next() % 300) as f64 / 100.0;
+                    assert!(ema[i].is_finite(), "window {window}, t {t}");
+                }
+                combine_scores_into(&mut sig, &live, &ema, &conf, &ent, t, &cfg, &mut scratch);
+                let mut order: Vec<usize> = live.to_vec();
+                order.sort_unstable_by(|&a, &b| {
+                    stats::total_order(sig[b].score, sig[a].score).then(a.cmp(&b))
+                });
+                for s in sig.iter() {
+                    assert!(s.score.is_finite(), "window {window}, t {t}: {}", s.score);
+                }
+                assert_eq!(order.len(), 3);
+            }
+        }
     }
 
     #[test]

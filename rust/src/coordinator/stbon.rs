@@ -113,7 +113,7 @@ impl StBonDriver {
         if !core.snapshot_live() {
             return Ok(None);
         }
-        core.stage_sampled(engine, false)?;
+        core.stage_sampled(engine, crate::engine::SignalSet::NONE)?;
         self.planned = Planned::DraftDecode;
         Ok(Some(StepPlan::Decode { signals: false }))
     }

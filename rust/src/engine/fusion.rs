@@ -60,7 +60,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::runtime::faults::FaultError;
 use crate::runtime::KvCache;
 
-use super::{Engine, MemTracker};
+use super::{Engine, MemTracker, SignalSet};
 
 /// The typed error a pod-scoped failure surfaces as: a packed dispatch
 /// (or compaction) on this pod failed, the pod was torn down, and every
@@ -151,14 +151,16 @@ struct Lease {
     /// accounting discounts these slots (charged once, on the store's
     /// tracker — see [`super::prefix`]).
     prefix_tokens: usize,
-    /// Tokens staged for this tick (parallel to `rows`), plus whether
-    /// the request wants on-device signals. Reused across ticks.
+    /// Tokens staged for this tick (parallel to `rows`), plus which
+    /// signal families the request wants emitted. Reused across ticks.
     staged_tokens: Vec<i32>,
     staged: bool,
-    staged_signals: bool,
+    staged_signals: SignalSet,
     /// Epoch of the pod dispatch that served this lease's staged rows
-    /// (+ whether signals rode along); consumed by `absorb_rows`.
-    ready: Option<(u64, bool)>,
+    /// (+ which signal families the dispatch actually emitted — the
+    /// union request may exceed what this lease asked for); consumed by
+    /// `absorb_rows`.
+    ready: Option<(u64, SignalSet)>,
 }
 
 /// A shared per-bucket device residence (see module docs).
@@ -170,12 +172,17 @@ pub struct FusedBatch {
     vocab: usize,
     cache: KvCache,
     /// Shared `[bucket × vocab]` download staging + signal rows (the
-    /// signal rows are meaningful only for epochs whose dispatch was a
-    /// packed superstep — the per-lease `ready` flag records that).
+    /// signal rows are meaningful only for epochs whose dispatch emitted
+    /// that family — the per-lease `ready` set records what ran).
     logits: Vec<f32>,
     sig_kl: Vec<f32>,
     sig_conf: Vec<f32>,
     sig_ent: Vec<f32>,
+    /// Hidden-state tap rows, `[bucket × d_model]` (meaningful only for
+    /// epochs whose dispatch was a packed tapped superstep).
+    sig_tap: Vec<f32>,
+    /// Row stride of `sig_tap` (the model's hidden width).
+    d_model: usize,
     leases: Vec<Lease>,
     /// Free row indices, ascending (insertion order is deterministic so
     /// packing order cannot influence row assignment given the same
@@ -207,7 +214,9 @@ pub struct FusedBatch {
 /// Build the dispatch token/pos vectors for one pod tick. Pure so the
 /// assembly rules (PAD + clamped own-pos for silent rows, staged tokens
 /// for participants) are unit-testable without device artifacts.
-/// Returns whether any lease staged rows and whether any wants signals.
+/// Returns whether any lease staged rows and the **union** of signal
+/// families staged participants want emitted (a family rides along for
+/// all rows once any co-resident request asks for it).
 fn assemble_tick(
     leases: &[Lease],
     bucket: usize,
@@ -215,13 +224,13 @@ fn assemble_tick(
     pad: i32,
     tokens: &mut Vec<i32>,
     pos: &mut Vec<i32>,
-) -> (bool, bool) {
+) -> (bool, SignalSet) {
     tokens.clear();
     tokens.resize(bucket, pad);
     pos.clear();
     pos.resize(bucket, 0);
     let mut any = false;
-    let mut signals = false;
+    let mut signals = SignalSet::NONE;
     for lease in leases {
         // Silent rows write garbage at their own next slot (clamped at
         // the last slot once the budget is exhausted — by then the
@@ -234,7 +243,9 @@ fn assemble_tick(
             }
         }
         any |= lease.staged;
-        signals |= lease.staged && lease.staged_signals;
+        if lease.staged {
+            signals = signals.or(lease.staged_signals);
+        }
     }
     (any, signals)
 }
@@ -265,8 +276,10 @@ impl FusedBatch {
     }
 
     /// Stage one decoded token per live slot for this tick. `pos` is the
-    /// KV slot this step writes (the request's current position).
-    pub fn stage(&mut self, id: u64, tokens: &[i32], pos: usize, signals: bool) -> Result<()> {
+    /// KV slot this step writes (the request's current position);
+    /// `signals` is the set of signal families this request wants the
+    /// tick's dispatch to emit.
+    pub fn stage(&mut self, id: u64, tokens: &[i32], pos: usize, signals: SignalSet) -> Result<()> {
         if let Some(fault) = &self.poison {
             return Err(anyhow::Error::new(fault.clone()));
         }
@@ -413,42 +426,68 @@ impl FusedBatch {
         self.sig_kl.truncate(dst_bucket);
         self.sig_conf.truncate(dst_bucket);
         self.sig_ent.truncate(dst_bucket);
+        self.sig_tap.truncate(dst_bucket * self.d_model);
     }
 
     /// One packed dispatch for everything staged in this pod: packed
-    /// superstep when any participant is gating (signals ride along for
-    /// all rows), packed decode otherwise. The shared slab is downloaded
-    /// once into the pod staging; participants pull their rows via
-    /// [`Self::absorb_rows`]. Returns whether a dispatch was issued.
+    /// tapped superstep when any participant wants the tap family (and
+    /// the artifact set exports it for this bucket), packed superstep
+    /// when any participant is gating on the scalar family (signals ride
+    /// along for all rows), packed decode otherwise. The shared slab is
+    /// downloaded once into the pod staging; participants pull their
+    /// rows via [`Self::absorb_rows`]. Returns whether a dispatch was
+    /// issued.
     pub fn flush(&mut self, engine: &Engine) -> Result<bool> {
         let pad = crate::tokenizer::PAD_ID as i32;
         let mut tokens = std::mem::take(&mut self.tokens_scratch);
         let mut pos = std::mem::take(&mut self.pos_scratch);
-        let (any, signals) =
+        let (any, wanted) =
             assemble_tick(&self.leases, self.bucket, self.max_seq, pad, &mut tokens, &mut pos);
         let result = if !any {
             Ok(false)
         } else {
             let model = engine.model();
-            let run = if signals {
-                model.superstep_packed_into(
-                    &tokens,
-                    &pos,
-                    &mut self.cache,
-                    &mut self.logits,
-                    &mut self.sig_kl,
-                    &mut self.sig_conf,
-                    &mut self.sig_ent,
-                )
+            // What a dispatch *emits* can exceed what a given lease
+            // asked for (union semantics) and can fall short of the
+            // union request (tap wanted, tapped packed artifact absent —
+            // degrade to the scalar superstep). `ready` records what
+            // actually ran; each lease masks it against its own request.
+            let run = if wanted.tap && model.has_tap_packed(self.bucket) {
+                model
+                    .superstep_tap_packed_into(
+                        &tokens,
+                        &pos,
+                        &mut self.cache,
+                        &mut self.logits,
+                        &mut self.sig_kl,
+                        &mut self.sig_conf,
+                        &mut self.sig_ent,
+                        &mut self.sig_tap,
+                    )
+                    .map(|()| SignalSet::ALL)
+            } else if wanted.any() {
+                model
+                    .superstep_packed_into(
+                        &tokens,
+                        &pos,
+                        &mut self.cache,
+                        &mut self.logits,
+                        &mut self.sig_kl,
+                        &mut self.sig_conf,
+                        &mut self.sig_ent,
+                    )
+                    .map(|()| SignalSet::SCALARS)
             } else {
-                model.decode_packed_into(&tokens, &pos, &mut self.cache, &mut self.logits)
+                model
+                    .decode_packed_into(&tokens, &pos, &mut self.cache, &mut self.logits)
+                    .map(|()| SignalSet::NONE)
             };
-            run.map(|()| {
+            run.map(|ran| {
                 self.epoch += 1;
                 for lease in self.leases.iter_mut() {
                     if lease.staged {
                         lease.staged = false;
-                        lease.ready = Some((self.epoch, signals));
+                        lease.ready = Some((self.epoch, ran));
                         // The dispatch wrote this row set's KV at `pos`;
                         // the next (possibly silent) write slot is past it.
                         lease.pos += 1;
@@ -472,10 +511,11 @@ impl FusedBatch {
     }
 
     /// Pull a request's rows of the last dispatch into its own staging
-    /// buffers (slot order). Returns whether signal rows rode along.
-    /// Fails loudly when the pod never dispatched for this lease or a
-    /// newer dispatch has since overwritten the slab — both scheduler
-    /// bugs, not recoverable states.
+    /// buffers (slot order). Returns the signal families that rode along
+    /// (the dispatch's union emission — callers mask it against what
+    /// they asked for). Fails loudly when the pod never dispatched for
+    /// this lease or a newer dispatch has since overwritten the slab —
+    /// both scheduler bugs, not recoverable states.
     pub fn absorb_rows(
         &mut self,
         id: u64,
@@ -483,12 +523,13 @@ impl FusedBatch {
         kl_out: &mut Vec<f32>,
         conf_out: &mut Vec<f32>,
         ent_out: &mut Vec<f32>,
-    ) -> Result<bool> {
+        tap_out: &mut Vec<f32>,
+    ) -> Result<SignalSet> {
         if let Some(fault) = &self.poison {
             return Err(anyhow::Error::new(fault.clone()));
         }
         let li = self.lease_index(id)?;
-        let Some((epoch, had_signals)) = self.leases[li].ready else {
+        let Some((epoch, ran)) = self.leases[li].ready else {
             bail!("fusion: absorb before the pod dispatched this lease's staged rows");
         };
         if epoch != self.epoch {
@@ -502,7 +543,7 @@ impl FusedBatch {
         for (slot, &r) in rows.iter().enumerate() {
             logits_out[slot * v..(slot + 1) * v].copy_from_slice(&self.logits[r * v..(r + 1) * v]);
         }
-        if had_signals {
+        if ran.scalars {
             kl_out.clear();
             conf_out.clear();
             ent_out.clear();
@@ -512,8 +553,16 @@ impl FusedBatch {
                 ent_out.push(self.sig_ent[r]);
             }
         }
+        if ran.tap {
+            let d = self.d_model;
+            tap_out.clear();
+            tap_out.reserve(rows.len() * d);
+            for &r in rows.iter() {
+                tap_out.extend_from_slice(&self.sig_tap[r * d..(r + 1) * d]);
+            }
+        }
         self.leases[li].ready = None;
-        Ok(had_signals)
+        Ok(ran)
     }
 }
 
@@ -669,7 +718,7 @@ impl FusionHub {
                         prefix_tokens,
                         staged_tokens: Vec::new(),
                         staged: false,
-                        staged_signals: false,
+                        staged_signals: SignalSet::NONE,
                         ready: None,
                     });
                     let (pod_id, bytes) =
@@ -725,6 +774,8 @@ impl FusionHub {
             sig_kl: Vec::new(),
             sig_conf: Vec::new(),
             sig_ent: Vec::new(),
+            sig_tap: Vec::new(),
+            d_model: cfg.d_model,
             leases: vec![Lease {
                 id: 0,
                 rows: (0..n).collect(),
@@ -732,7 +783,7 @@ impl FusionHub {
                 prefix_tokens,
                 staged_tokens: Vec::new(),
                 staged: false,
-                staged_signals: false,
+                staged_signals: SignalSet::NONE,
                 ready: None,
             }],
             free: (n..bucket).collect(),
@@ -1017,7 +1068,7 @@ mod tests {
             prefix_tokens: 0,
             staged_tokens: Vec::new(),
             staged: false,
-            staged_signals: false,
+            staged_signals: SignalSet::NONE,
             ready: None,
         }
     }
@@ -1026,12 +1077,13 @@ mod tests {
     fn assemble_tick_places_staged_tokens_and_silent_positions() {
         let mut a = lease(0, vec![0, 1, 2], 10);
         a.staged = true;
-        a.staged_signals = true;
+        a.staged_signals = SignalSet::SCALARS;
         a.staged_tokens = vec![7, 8, 9];
         let b = lease(1, vec![5, 6], 4); // silent this tick
         let (mut tokens, mut pos) = (Vec::new(), Vec::new());
         let (any, signals) = assemble_tick(&[a, b], 8, 224, -1, &mut tokens, &mut pos);
-        assert!(any && signals);
+        assert!(any);
+        assert_eq!(signals, SignalSet::SCALARS);
         assert_eq!(tokens, vec![7, 8, 9, -1, -1, -1, -1, -1]);
         // Staged rows write at their request's pos; silent leased rows
         // at their own (not-yet-written) pos; free rows at 0.
@@ -1054,13 +1106,42 @@ mod tests {
         a.staged_tokens = vec![3];
         let mut b = lease(1, vec![1], 6);
         b.staged = true;
-        b.staged_signals = true;
+        b.staged_signals = SignalSet::SCALARS;
         b.staged_tokens = vec![4];
         let (mut tokens, mut pos) = (Vec::new(), Vec::new());
         let (any, signals) = assemble_tick(&[a], 2, 224, 0, &mut tokens, &mut pos);
-        assert!(any && !signals, "plain decode participant alone must not request signals");
+        assert!(any, "plain decode participant alone must not request signals");
+        assert_eq!(signals, SignalSet::NONE);
         let (any, signals) = assemble_tick(&[b], 2, 224, 0, &mut tokens, &mut pos);
-        assert!(any && signals);
+        assert!(any);
+        assert_eq!(signals, SignalSet::SCALARS);
+    }
+
+    #[test]
+    fn assemble_tick_unions_signal_families_across_participants() {
+        // One scalar-gating and one tap-wanting participant: the tick's
+        // emission request is the union; a silent tap-wanting lease
+        // contributes nothing.
+        let mut a = lease(0, vec![0], 5);
+        a.staged = true;
+        a.staged_signals = SignalSet::SCALARS;
+        a.staged_tokens = vec![3];
+        let mut b = lease(1, vec![1], 6);
+        b.staged = true;
+        b.staged_signals = SignalSet::ALL;
+        b.staged_tokens = vec![4];
+        let silent_tap = || {
+            let mut c = lease(2, vec![2], 7);
+            c.staged_signals = SignalSet::ALL; // not staged ⇒ ignored
+            c
+        };
+        let (mut tokens, mut pos) = (Vec::new(), Vec::new());
+        let (any, signals) = assemble_tick(&[a, silent_tap()], 4, 224, 0, &mut tokens, &mut pos);
+        assert!(any);
+        assert_eq!(signals, SignalSet::SCALARS, "silent lease must not widen the request");
+        let (any, signals) = assemble_tick(&[b, silent_tap()], 4, 224, 0, &mut tokens, &mut pos);
+        assert!(any);
+        assert_eq!(signals, SignalSet::ALL);
     }
 
     fn offline_pod(bucket: usize) -> FusedBatch {
@@ -1079,6 +1160,8 @@ mod tests {
             sig_kl: vec![0.0; bucket],
             sig_conf: vec![0.0; bucket],
             sig_ent: vec![0.0; bucket],
+            sig_tap: vec![0.0; bucket * 2],
+            d_model: 2,
             leases: Vec::new(),
             free: (0..bucket).collect(),
             next_lease: 0,
@@ -1161,7 +1244,7 @@ mod tests {
         // A lease that (buggily) still holds an unabsorbed dispatch:
         // the epoch bump must make its pull fail loudly after the
         // rewrite.
-        pod.leases[1].ready = Some((11, false));
+        pod.leases[1].ready = Some((11, SignalSet::NONE));
 
         pod.install_compacted(offline_cache(6), 6);
         // Sequential rewrite matching `compaction_idx`'s plan: lease 0
@@ -1171,10 +1254,15 @@ mod tests {
         assert_eq!(pod.free, vec![5]);
         assert_eq!(pod.bucket(), 6);
         assert_eq!(pod.epoch, 12);
+        // The shared staging slabs shrink with the bucket — the tap slab
+        // by its d_model row stride.
+        assert_eq!(pod.logits.len(), 6 * 4);
+        assert_eq!(pod.sig_kl.len(), 6);
+        assert_eq!(pod.sig_tap.len(), 6 * 2);
 
         let mut lg = vec![0.0; 2 * 4];
-        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
-        let err = pod.absorb_rows(1, &mut lg, &mut kl, &mut conf, &mut ent).unwrap_err();
+        let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let err = pod.absorb_rows(1, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap_err();
         assert!(format!("{err:#}").contains("stale"), "{err:#}");
     }
 
@@ -1290,11 +1378,11 @@ mod tests {
         let mut pod = offline_pod(4);
         pod.free.clear();
         pod.leases.push(lease(0, vec![0, 1], 5));
-        assert!(pod.stage(0, &[9], 5, false).is_err(), "token count != rows");
-        assert!(pod.stage(0, &[9, 9], 224, false).is_err(), "pos out of range");
-        pod.stage(0, &[9, 9], 5, true).unwrap();
-        assert!(pod.stage(0, &[9, 9], 5, true).is_err(), "double stage");
-        assert!(pod.stage(7, &[9], 5, false).is_err(), "unknown lease");
+        assert!(pod.stage(0, &[9], 5, SignalSet::NONE).is_err(), "token count != rows");
+        assert!(pod.stage(0, &[9, 9], 224, SignalSet::NONE).is_err(), "pos out of range");
+        pod.stage(0, &[9, 9], 5, SignalSet::SCALARS).unwrap();
+        assert!(pod.stage(0, &[9, 9], 5, SignalSet::SCALARS).is_err(), "double stage");
+        assert!(pod.stage(7, &[9], 5, SignalSet::NONE).is_err(), "unknown lease");
     }
 
     #[test]
@@ -1302,7 +1390,8 @@ mod tests {
         let mut pod = offline_pod(8);
         pod.free.clear();
         pod.leases.push(lease(0, vec![6, 1, 4], 5));
-        // Pretend a dispatch landed: slab row r holds [r, r, r, r].
+        // Pretend a dispatch landed: slab row r holds [r, r, r, r]; the
+        // tap slab (d_model = 2) holds [100 + 2r, 101 + 2r] at row r.
         for r in 0..8 {
             for c in 0..4 {
                 pod.logits[r * 4 + c] = r as f32;
@@ -1310,27 +1399,38 @@ mod tests {
             pod.sig_kl[r] = 10.0 + r as f32;
             pod.sig_conf[r] = 20.0 + r as f32;
             pod.sig_ent[r] = 30.0 + r as f32;
+            pod.sig_tap[r * 2] = 100.0 + 2.0 * r as f32;
+            pod.sig_tap[r * 2 + 1] = 101.0 + 2.0 * r as f32;
         }
         pod.epoch = 3;
-        pod.leases[0].ready = Some((3, true));
+        pod.leases[0].ready = Some((3, SignalSet::ALL));
 
         let mut lg = vec![0.0; 3 * 4];
-        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
-        let had = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).unwrap();
-        assert!(had);
+        let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let ran = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap();
+        assert_eq!(ran, SignalSet::ALL);
         assert_eq!(&lg[..4], &[6.0; 4]);
         assert_eq!(&lg[4..8], &[1.0; 4]);
         assert_eq!(&lg[8..], &[4.0; 4]);
         assert_eq!(kl, vec![16.0, 11.0, 14.0]);
         assert_eq!(conf, vec![26.0, 21.0, 24.0]);
         assert_eq!(ent, vec![36.0, 31.0, 34.0]);
+        // Tap rows pull in the same slot order, d_model-wide.
+        assert_eq!(tap, vec![112.0, 113.0, 102.0, 103.0, 108.0, 109.0]);
 
         // Ready is consumed; a second absorb is a scheduler bug.
-        assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).is_err());
+        assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).is_err());
+
+        // A scalar-only dispatch leaves the tap output untouched.
+        pod.leases[0].ready = Some((3, SignalSet::SCALARS));
+        let before = tap.clone();
+        let ran = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap();
+        assert_eq!(ran, SignalSet::SCALARS);
+        assert_eq!(tap, before);
 
         // A stale epoch (pod dispatched again before the pull) fails.
-        pod.leases[0].ready = Some((2, false));
-        assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).is_err());
+        pod.leases[0].ready = Some((2, SignalSet::NONE));
+        assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).is_err());
     }
 
     #[test]
@@ -1338,7 +1438,7 @@ mod tests {
         let mut pod = offline_pod(4);
         pod.free.clear();
         pod.leases.push(lease(0, vec![0, 1], 5));
-        pod.leases[0].ready = Some((0, false));
+        pod.leases[0].ready = Some((0, SignalSet::NONE));
         pod.poison = Some(PodFault {
             pod: 7,
             bucket: 4,
@@ -1346,7 +1446,7 @@ mod tests {
             detail: "injected".to_string(),
         });
 
-        let err = pod.stage(0, &[9, 9], 5, false).unwrap_err();
+        let err = pod.stage(0, &[9, 9], 5, SignalSet::NONE).unwrap_err();
         let fault = err
             .chain()
             .find_map(|c| c.downcast_ref::<PodFault>())
@@ -1355,8 +1455,8 @@ mod tests {
         assert_eq!(fault.site, "superstep");
 
         let mut lg = vec![0.0; 2 * 4];
-        let (mut kl, mut conf, mut ent) = (Vec::new(), Vec::new(), Vec::new());
-        let err = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent).unwrap_err();
+        let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let err = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap_err();
         assert!(
             err.chain().any(|c| c.downcast_ref::<PodFault>().is_some()),
             "absorb on a poisoned pod must carry a PodFault: {err:#}"

@@ -180,6 +180,17 @@ impl Engine {
         admission_projection_shared(self.model.buckets(), n, prompt_len, &self.model.config)
     }
 
+    /// Can the hidden-state tap family be emitted for every bucket a
+    /// request might shrink through? The solo path dispatches
+    /// `superstep_tap_{m}_b{B}` per bucket; `fused` additionally
+    /// requires the packed variant (the pod bucket's dispatch). Scorer
+    /// selection checks this once at construction so a missing artifact
+    /// is a named error, not a silent analytic fallback.
+    pub fn tap_ready(&self, fused: bool) -> bool {
+        let solo = self.model.buckets().iter().all(|&b| self.model.has_tap(b));
+        solo && (!fused || self.model.buckets().iter().all(|&b| self.model.has_tap_packed(b)))
+    }
+
     /// Token length the prompt's prefix-store key will have — the
     /// `prompt_len` input [`Engine::admission_cost_shared`] wants,
     /// computable before any device work.
@@ -425,8 +436,58 @@ impl Engine {
             sig_ent: Vec::new(),
             sig_spare: Vec::new(),
             fused_valid: false,
+            sig_tap: Vec::new(),
+            tap_spare: Vec::new(),
+            tap_valid: false,
+            d_model: cfg.d_model,
             prefix: None,
         }
+    }
+}
+
+/// Which signal families a staged step asks the dispatch to emit —
+/// the engine-level face of the pluggable-scorer architecture (PR 8).
+///
+/// Families are **emission** requests: the dispatch computes every
+/// requested family's rows alongside the decode in the same device
+/// call. What a scorer *consumes* (and when — see
+/// `coordinator::scorer::Cadence`) is policy layered on top; the engine
+/// only guarantees that requested-and-ran families describe the current
+/// logits slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SignalSet {
+    /// The analytic scalar family: one `(kl, conf, ent)` triple per
+    /// branch row (the fused Pallas signal kernel's output).
+    pub scalars: bool,
+    /// The hidden-state tap family: one post-final-layernorm hidden row
+    /// `[d_model]` per branch (output 6 of the tapped superstep) — the
+    /// probe scorer's input.
+    pub tap: bool,
+}
+
+impl SignalSet {
+    /// No families: the plain decode path.
+    pub const NONE: SignalSet = SignalSet { scalars: false, tap: false };
+    /// Scalars only — the pre-PR 8 `signals: true`, and the analytic
+    /// scorer's request. Dispatch choice is bit-identical to it.
+    pub const SCALARS: SignalSet = SignalSet { scalars: true, tap: false };
+    /// Every family (the probe scorer's request: tap rows to score,
+    /// scalar rows so the analytic oracle stays comparable).
+    pub const ALL: SignalSet = SignalSet { scalars: true, tap: true };
+
+    /// Any family requested at all?
+    pub fn any(self) -> bool {
+        self.scalars || self.tap
+    }
+
+    /// Families present in both sets (what "requested AND ran" means).
+    pub fn and(self, other: SignalSet) -> SignalSet {
+        SignalSet { scalars: self.scalars && other.scalars, tap: self.tap && other.tap }
+    }
+
+    /// Union (a pod dispatch emits the union of its participants' asks).
+    pub fn or(self, other: SignalSet) -> SignalSet {
+        SignalSet { scalars: self.scalars || other.scalars, tap: self.tap || other.tap }
     }
 }
 
@@ -467,9 +528,9 @@ pub struct GenState {
     /// bit-identical however the request is scheduled. Equals the owned
     /// cache's bucket in solo mode.
     bucket: usize,
-    /// Step staged but not yet finished: `Some(signals_wanted)` between
+    /// Step staged but not yet finished: `Some(families_wanted)` between
     /// [`GenState::stage_step`] and [`GenState::finish_dispatched`].
-    staged: Option<bool>,
+    staged: Option<SignalSet>,
     /// Solo residence: the staged step's dispatch already ran.
     committed: bool,
     /// Current logits slab `[bucket * vocab]`; rows beyond `slots.len()`
@@ -514,6 +575,18 @@ pub struct GenState {
     /// [`Self::step_fused`], maintained across retain/compaction
     /// repacks, cleared by plain [`Self::step`].
     fused_valid: bool,
+    /// Per-slot hidden-state tap rows `[bucket × d_model]` from the last
+    /// tapped dispatch (rows ≥ `n_live()` are padding); meaningful only
+    /// while `tap_valid`. `tap_spare` is their repack spare — separate
+    /// from `sig_spare` because tap rows are `d_model` wide, not 1.
+    sig_tap: Vec<f32>,
+    tap_spare: Vec<f32>,
+    /// Whether `sig_tap` describes the current logits slab (set when a
+    /// staged-and-ran dispatch carried the tap family; follows the same
+    /// repack/invalidate discipline as `fused_valid`).
+    tap_valid: bool,
+    /// Hidden width — the tap row stride (cached off the model config).
+    d_model: usize,
     /// Hold on the shared prefix-store entry this request's prefill came
     /// from (`None` on the private paths). Dropping the state — on
     /// completion, eviction, or fault unwind — releases the hold, and
@@ -652,9 +725,10 @@ impl GenState {
     /// Phase 1 of the per-token step: record the sampled tokens/log-probs
     /// (`sampled[i]` belongs to slot `i`), fill the decode token scratch,
     /// and — in fused residence — stage the rows with the pod so the
-    /// scheduler's next flush decodes them. `signals` asks for on-device
-    /// signal scoring to ride along (the gated-token path).
-    pub fn stage_step(&mut self, sampled: &[(u32, f64)], signals: bool) -> Result<()> {
+    /// scheduler's next flush decodes them. `signals` names the signal
+    /// families asked to ride along on the dispatch (the gated-token
+    /// path stages [`SignalSet::SCALARS`]; the probe scorer adds `tap`).
+    pub fn stage_step(&mut self, sampled: &[(u32, f64)], signals: SignalSet) -> Result<()> {
         if sampled.len() != self.slots.len() {
             bail!("step: {} samples for {} slots", sampled.len(), self.slots.len());
         }
@@ -705,9 +779,24 @@ impl GenState {
         let Residence::Solo(cache) = &mut self.residence else {
             bail!("commit_solo on a fused-residence request");
         };
-        if signals {
+        if signals.any() {
             let bucket = cache.bucket;
-            if engine.model.has_superstep(bucket) {
+            if signals.tap && engine.model.has_tap(bucket) {
+                // Tapped superstep: outputs 0–5 are bitwise the untapped
+                // superstep's (pinned by test_superstep_tap.py), so
+                // adding the tap family never perturbs scalar scoring.
+                engine.model.superstep_tap_into(
+                    &self.tokens_scratch,
+                    self.pos,
+                    cache,
+                    &mut self.logits,
+                    &mut self.sig_kl,
+                    &mut self.sig_conf,
+                    &mut self.sig_ent,
+                    &mut self.sig_tap,
+                )?;
+                self.tap_valid = true;
+            } else if engine.model.has_superstep(bucket) {
                 engine.model.superstep_into(
                     &self.tokens_scratch,
                     self.pos,
@@ -717,6 +806,7 @@ impl GenState {
                     &mut self.sig_conf,
                     &mut self.sig_ent,
                 )?;
+                self.tap_valid = false;
             } else {
                 engine.model.decode_into(
                     &self.tokens_scratch,
@@ -734,11 +824,13 @@ impl GenState {
                     &mut self.sig_conf,
                     &mut self.sig_ent,
                 )?;
+                self.tap_valid = false;
             }
             self.fused_valid = true;
         } else {
             engine.model.decode_into(&self.tokens_scratch, self.pos, cache, &mut self.logits)?;
             self.fused_valid = false;
+            self.tap_valid = false;
         }
         self.committed = true;
         Ok(())
@@ -764,14 +856,19 @@ impl GenState {
             }
             Residence::Fused { pool, lease } => {
                 let n = self.slots.len() * self.vocab;
-                let ran_signals = pool.borrow_mut().absorb_rows(
+                let ran = pool.borrow_mut().absorb_rows(
                     *lease,
                     &mut self.logits[..n],
                     &mut self.sig_kl,
                     &mut self.sig_conf,
                     &mut self.sig_ent,
+                    &mut self.sig_tap,
                 )?;
-                self.fused_valid = signals && ran_signals;
+                // A family is valid only when this lease asked for it
+                // AND the pod dispatch actually emitted it.
+                let got = signals.and(ran);
+                self.fused_valid = got.scalars;
+                self.tap_valid = got.tap;
             }
         }
         self.finish_step(engine);
@@ -804,7 +901,7 @@ impl GenState {
     /// three-phase composition — same sequence, same bytes as before the
     /// stage/commit/finish split.)
     pub fn step(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
-        self.stage_step(sampled, false)?;
+        self.stage_step(sampled, SignalSet::NONE)?;
         self.commit_solo(engine)?;
         self.finish_dispatched(engine)
     }
@@ -817,7 +914,7 @@ impl GenState {
     /// results, one extra slab round-trip) when the loaded artifact set
     /// has no superstep for the current bucket.
     pub fn step_fused(&mut self, engine: &Engine, sampled: &[(u32, f64)]) -> Result<()> {
-        self.stage_step(sampled, true)?;
+        self.stage_step(sampled, SignalSet::SCALARS)?;
         self.commit_solo(engine)?;
         self.finish_dispatched(engine)
     }
@@ -832,6 +929,29 @@ impl GenState {
         }
         let n = self.slots.len();
         Some((&self.sig_kl[..n], &self.sig_conf[..n], &self.sig_ent[..n]))
+    }
+
+    /// Per-slot hidden-state tap rows (`[n_live × d_model]`, slot order,
+    /// row stride [`Self::tap_width`]) for the **current** logits slab —
+    /// `None` when the last dispatch did not carry the tap family. Rows
+    /// survive retain/compaction repacks like the scalar signals.
+    pub fn fused_tap(&self) -> Option<&[f32]> {
+        if !self.tap_valid {
+            return None;
+        }
+        Some(&self.sig_tap[..self.slots.len() * self.d_model])
+    }
+
+    /// Row stride of [`Self::fused_tap`] (the model's hidden width).
+    pub fn tap_width(&self) -> usize {
+        self.d_model
+    }
+
+    /// Whether this request's branches lease rows in a shared pod (the
+    /// fused residence) — scorer setup uses this to require the *packed*
+    /// tap artifacts only when a packed dispatch would serve the rows.
+    pub fn is_fused(&self) -> bool {
+        matches!(self.residence, Residence::Fused { .. })
     }
 
     /// Keep only `keep` (branch indices; must be live). Re-gathers the KV
@@ -933,6 +1053,10 @@ impl GenState {
                 repack_rows(&mut self.sig_kl, &mut self.sig_spare, ks, 1, nb);
                 repack_rows(&mut self.sig_conf, &mut self.sig_spare, ks, 1, nb);
                 repack_rows(&mut self.sig_ent, &mut self.sig_spare, ks, 1, nb);
+            }
+            if self.tap_valid {
+                let d = self.d_model;
+                repack_rows(&mut self.sig_tap, &mut self.tap_spare, &self.keep_slots, d, new_bucket);
             }
             self.mem.set_component("logits", new_bucket * v * 4);
             self.bucket = new_bucket;

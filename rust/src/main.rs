@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use kappa::coordinator::config::{KappaConfig, Method, RunConfig, SamplerConfig, StBonConfig};
 use kappa::coordinator::{metrics_for, run_method};
@@ -69,11 +69,17 @@ USAGE:
                  [--retry-budget 2] [--backoff-ticks 2]
                  [--quarantine-after 3] [--quarantine-cooldown 50]
                  [--deadline-ms 0]    (0 = no per-request deadline)
+                 [--scorer analytic|probe]  (signal family the pool scores
+                                with — applied as a scheduler-level override
+                                onto the run config)
 
 KAPPA hyperparameters (defaults = paper §4.1):
   --ema-alpha 0.5  --window 16  --mom-buckets 4
   --w-kl 0.7  --w-conf 0.2  --w-ent 0.1  --z-clamp 3
   --schedule linear|cosine  --tau STEPS  --max-draft 24  --native-signals
+  --scorer analytic|probe   (probe requires tap + probe artifacts)
+  --cadence token|step      (score every token, or only at reasoning-step
+                             boundaries; emission is unconditional)
 Sampling: --temperature 0.7 --top-k 20 --top-p 0.95  --max-new 96
 ";
 
@@ -234,14 +240,26 @@ fn serve(args: &Args) -> Result<()> {
         quarantine_cooldown: args.u64_or("quarantine-cooldown", d.quarantine_cooldown),
         deadline_ms: args.u64_or("deadline-ms", d.deadline_ms),
         prefix_share: args.bool_or("prefix-share", false),
+        // `--scorer` on the serve command travels as a pool-level
+        // override so the scheduler owns the effective signal family
+        // (cfg.kappa.scorer already parsed the same flag; the override
+        // makes the SchedConfig path authoritative and exercised).
+        scorer: args
+            .get("scorer")
+            .map(|v| {
+                kappa::coordinator::scorer::ScorerKind::parse(v)
+                    .ok_or_else(|| anyhow!("--scorer: expected analytic|probe, got {v:?}"))
+            })
+            .transpose()?,
     };
     let fault_plan = args.get("fault-plan").map(str::to_string);
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots, fusion {}, prefix share {}, preemption {}{}) …",
+         (≤{} in flight, {} slots, fusion {}, scorer {}, prefix share {}, preemption {}{}) …",
         sched.max_inflight,
         sched.slot_budget,
         if sched.fuse { "on" } else { "off" },
+        sched.scorer.unwrap_or(cfg.kappa.scorer).name(),
         if sched.prefix_share { "on" } else { "off" },
         if sched.preempt == PreemptPolicy::EvictYoungest { "evict-youngest" } else { "off" },
         match &fault_plan {

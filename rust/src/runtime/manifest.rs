@@ -71,6 +71,13 @@ pub struct ModelManifest {
     /// bucket is absent the runtime falls back to the unfused
     /// decode → signals sequence for gated tokens.
     pub superstep: BTreeMap<usize, PathBuf>,
+    /// bucket → **tapped** superstep HLO path: the superstep with one
+    /// hidden-state tap row per branch appended as output 6
+    /// (`(logits, kl, conf, ent, k, v, tap)` — k/v keep positions 4/5,
+    /// so the donation alias table is the untapped one). Optional:
+    /// artifact sets predating signal families carry none, and the
+    /// hidden-probe scorer then reports unavailable.
+    pub superstep_tap: BTreeMap<usize, PathBuf>,
     /// (src_bucket, dst_bucket) → gather HLO path.
     pub gather: BTreeMap<(usize, usize), PathBuf>,
     /// bucket → cross-request packed decode HLO path (per-row `pos`
@@ -80,6 +87,9 @@ pub struct ModelManifest {
     pub decode_packed: BTreeMap<usize, PathBuf>,
     /// bucket → packed decode+signals superstep HLO path (optional).
     pub superstep_packed: BTreeMap<usize, PathBuf>,
+    /// bucket → tapped packed superstep HLO path (optional, see
+    /// `superstep_tap`).
+    pub superstep_tap_packed: BTreeMap<usize, PathBuf>,
     /// bucket → pod-admission row-merge HLO path (optional).
     pub fuse: BTreeMap<usize, PathBuf>,
     /// (src_bucket, dst_bucket) → pod-compaction HLO path (optional —
@@ -91,6 +101,10 @@ pub struct ModelManifest {
     /// none; admission then falls back to the non-donating
     /// `fuse`/`gather` dispatches, which share equally correctly).
     pub fork: BTreeMap<(usize, usize), PathBuf>,
+    /// Linear pruning-probe weights (`probe_{m}.json`, fitted by
+    /// `train.fit_probe` on tapped rollouts). Optional like the tap
+    /// family it scores; `HiddenProbeScorer` needs both.
+    pub probe: Option<PathBuf>,
     /// Greedy accuracy measured at export time (training-quality gate).
     pub greedy_acc: BTreeMap<String, f64>,
 }
@@ -204,23 +218,29 @@ impl Manifest {
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("model {name}: artifacts.prefill"))?,
         );
-        let mut decode = BTreeMap::new();
-        for (k, v) in arts.get("decode").and_then(Json::as_obj).into_iter().flatten() {
-            decode.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
-        }
-        let mut superstep = BTreeMap::new();
-        for (k, v) in arts.get("superstep").and_then(Json::as_obj).into_iter().flatten() {
-            superstep.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
-        }
+        // Bucket-keyed artifact families share one parser so a malformed
+        // key or path surfaces a named error (`parse_pair_key`'s
+        // convention: the error carries the family and the offending
+        // key) instead of a bare ParseIntError or a silently empty path.
         let bucket_map = |key: &str| -> Result<BTreeMap<usize, PathBuf>> {
             let mut m = BTreeMap::new();
             for (k, v) in arts.get(key).and_then(Json::as_obj).into_iter().flatten() {
-                m.insert(k.parse::<usize>()?, dir.join(v.as_str().unwrap_or_default()));
+                let b = k
+                    .parse::<usize>()
+                    .with_context(|| format!("model {name}: {key}: bad bucket key {k:?}"))?;
+                let p = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("model {name}: {key}[{k}]: path must be a string"))?;
+                m.insert(b, dir.join(p));
             }
             Ok(m)
         };
+        let decode = bucket_map("decode")?;
+        let superstep = bucket_map("superstep")?;
+        let superstep_tap = bucket_map("superstep_tap")?;
         let decode_packed = bucket_map("decode_packed")?;
         let superstep_packed = bucket_map("superstep_packed")?;
+        let superstep_tap_packed = bucket_map("superstep_tap_packed")?;
         let fuse = bucket_map("fuse")?;
         let pair_map = |key: &str| -> Result<BTreeMap<(usize, usize), PathBuf>> {
             let mut m = BTreeMap::new();
@@ -233,6 +253,15 @@ impl Manifest {
         let gather = pair_map("gather")?;
         let compact = pair_map("compact")?;
         let fork = pair_map("fork")?;
+
+        // Probe weights are a single optional path; a present-but-non-
+        // string value is malformed, not missing — name it.
+        let probe = match arts.get("probe") {
+            None => None,
+            Some(v) => Some(dir.join(v.as_str().ok_or_else(|| {
+                anyhow!("model {name}: artifacts.probe: path must be a string, got {v:?}")
+            })?)),
+        };
 
         let mut greedy_acc = BTreeMap::new();
         if let Some(accs) = mj.at(&["training", "greedy_acc"]).and_then(Json::as_obj) {
@@ -255,12 +284,15 @@ impl Manifest {
             prefill,
             decode,
             superstep,
+            superstep_tap,
             gather,
             decode_packed,
             superstep_packed,
+            superstep_tap_packed,
             fuse,
             compact,
             fork,
+            probe,
             greedy_acc,
         })
     }
@@ -301,9 +333,12 @@ mod tests {
                 "prefill": "prefill_sm_b1.hlo.txt",
                 "decode": {"1": "decode_sm_b1.hlo.txt", "2": "decode_sm_b2.hlo.txt"},
                 "superstep": {"1": "superstep_sm_b1.hlo.txt"},
+                "superstep_tap": {"1": "superstep_tap_sm_b1.hlo.txt"},
                 "gather": {"1to2": "gather_sm_b1to2.hlo.txt"},
                 "decode_packed": {"2": "decode_packed_sm_b2.hlo.txt"},
                 "superstep_packed": {"2": "superstep_packed_sm_b2.hlo.txt"},
+                "superstep_tap_packed": {"2": "superstep_tap_packed_sm_b2.hlo.txt"},
+                "probe": "probe_sm.json",
                 "fuse": {"2": "fuse_sm_b2.hlo.txt"},
                 "compact": {"2to1": "compact_sm_b2to1.hlo.txt", "4to2": "compact_sm_b4to2.hlo.txt"},
                 "fork": {"1to2": "fork_sm_b1to2.hlo.txt", "1to4": "fork_sm_b1to4.hlo.txt"}
@@ -336,6 +371,15 @@ mod tests {
             sm.superstep_packed.get(&2).unwrap(),
             &PathBuf::from("/tmp/a/superstep_packed_sm_b2.hlo.txt")
         );
+        assert_eq!(
+            sm.superstep_tap.get(&1).unwrap(),
+            &PathBuf::from("/tmp/a/superstep_tap_sm_b1.hlo.txt")
+        );
+        assert_eq!(
+            sm.superstep_tap_packed.get(&2).unwrap(),
+            &PathBuf::from("/tmp/a/superstep_tap_packed_sm_b2.hlo.txt")
+        );
+        assert_eq!(sm.probe.as_deref(), Some(std::path::Path::new("/tmp/a/probe_sm.json")));
         assert_eq!(sm.fuse.get(&2).unwrap(), &PathBuf::from("/tmp/a/fuse_sm_b2.hlo.txt"));
         assert_eq!(
             sm.compact.get(&(2, 1)).unwrap(),
@@ -417,6 +461,75 @@ mod tests {
         assert!(sm.decode_packed.is_empty());
         assert!(sm.superstep_packed.is_empty());
         assert!(sm.fuse.is_empty());
+    }
+
+    #[test]
+    fn tap_and_probe_are_optional_for_older_artifact_sets() {
+        // Pre-signal-family manifests carry no tap/probe keys; parsing
+        // must yield empty maps / None (the hidden-probe scorer then
+        // reports unavailable; the analytic default is unaffected).
+        let text = tiny_manifest_json()
+            .replace(r#""superstep_tap": {"1": "superstep_tap_sm_b1.hlo.txt"},"#, "")
+            .replace(r#""superstep_tap_packed": {"2": "superstep_tap_packed_sm_b2.hlo.txt"},"#, "")
+            .replace(r#""probe": "probe_sm.json","#, "");
+        let j = json::parse(&text).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        let sm = m.model("sm").unwrap();
+        assert!(sm.superstep_tap.is_empty());
+        assert!(sm.superstep_tap_packed.is_empty());
+        assert!(sm.probe.is_none());
+    }
+
+    #[test]
+    fn malformed_tap_bucket_key_errs_with_family_and_key_named() {
+        let text = tiny_manifest_json().replace(
+            r#""superstep_tap": {"1": "superstep_tap_sm_b1.hlo.txt"}"#,
+            r#""superstep_tap": {"one": "superstep_tap_sm_b1.hlo.txt"}"#,
+        );
+        let j = json::parse(&text).unwrap();
+        let err = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("superstep_tap"), "{msg}");
+        assert!(msg.contains("\"one\""), "{msg}");
+    }
+
+    #[test]
+    fn non_string_tap_path_errs_with_family_and_bucket_named() {
+        let text = tiny_manifest_json().replace(
+            r#""superstep_tap_packed": {"2": "superstep_tap_packed_sm_b2.hlo.txt"}"#,
+            r#""superstep_tap_packed": {"2": 7}"#,
+        );
+        let j = json::parse(&text).unwrap();
+        let err = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("superstep_tap_packed[2]"), "{msg}");
+        assert!(msg.contains("path must be a string"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_probe_value_errs_named() {
+        let text = tiny_manifest_json()
+            .replace(r#""probe": "probe_sm.json""#, r#""probe": {"w": []}"#);
+        let j = json::parse(&text).unwrap();
+        let err = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("artifacts.probe"), "{msg}");
+        assert!(msg.contains("path must be a string"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_decode_bucket_key_errs_with_family_named() {
+        // The named-key convention covers the pre-existing families too
+        // (they share the same parser).
+        let text = tiny_manifest_json().replace(
+            r#""decode": {"1": "decode_sm_b1.hlo.txt", "2": "decode_sm_b2.hlo.txt"}"#,
+            r#""decode": {"1x": "decode_sm_b1.hlo.txt"}"#,
+        );
+        let j = json::parse(&text).unwrap();
+        let err = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("decode"), "{msg}");
+        assert!(msg.contains("\"1x\""), "{msg}");
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod weights;
 pub use client::Runtime;
 pub use faults::{FaultError, FaultPlan, FaultSite};
 pub use manifest::{Manifest, ModelConfig, ModelManifest, ParamEntry};
-pub use model::{KvCache, LoadedModel};
+pub use model::{KvCache, LoadedModel, ProbeWeights};

@@ -46,6 +46,61 @@ use super::client::Runtime;
 use super::faults::FaultSite;
 use super::manifest::{Manifest, ModelConfig, ModelManifest};
 use super::weights::load_weights;
+use crate::util::json::{self, Json};
+
+/// Linear pruning-probe weights (`probe_{m}.json`, fitted by
+/// `train.fit_probe` on tapped rollouts at build time). The runtime's
+/// `HiddenProbeScorer` applies the bare affine form
+/// `w · tap + b` to each branch's hidden-state tap row — the
+/// standardization was folded into `w`/`b` at fit time.
+#[derive(Debug, Clone)]
+pub struct ProbeWeights {
+    pub d_model: usize,
+    pub w: Vec<f32>,
+    pub b: f32,
+}
+
+impl ProbeWeights {
+    /// Parse probe weights from their JSON artifact, with errors naming
+    /// the offending field (the manifest-robustness convention).
+    pub fn from_json(j: &Json, what: &str) -> Result<ProbeWeights> {
+        let d_model = j
+            .get("d_model")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{what}: d_model must be a non-negative integer"))?;
+        let warr = j
+            .get("w")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{what}: w must be an array"))?;
+        let mut w = Vec::with_capacity(warr.len());
+        for (i, v) in warr.iter().enumerate() {
+            w.push(
+                v.as_f64().ok_or_else(|| anyhow!("{what}: w[{i}] must be a number, got {v:?}"))?
+                    as f32,
+            );
+        }
+        if w.len() != d_model {
+            bail!("{what}: w has {} entries for d_model {d_model}", w.len());
+        }
+        let b = j
+            .get("b")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("{what}: b must be a number"))? as f32;
+        Ok(ProbeWeights { d_model, w, b })
+    }
+
+    /// The probe's pre-sigmoid score for one tap row. Panics are not an
+    /// option on the decode path, so a mis-sized row is a contract
+    /// violation checked by the caller (`d_model` is validated at load).
+    pub fn logit(&self, tap: &[f32]) -> f64 {
+        debug_assert_eq!(tap.len(), self.w.len());
+        let mut acc = 0.0f64;
+        for (x, w) in tap.iter().zip(&self.w) {
+            acc += *x as f64 * *w as f64;
+        }
+        acc + self.b as f64
+    }
+}
 
 /// Device-resident KV cache for one bucketed branch batch.
 pub struct KvCache {
@@ -108,6 +163,10 @@ pub struct LoadedModel {
     decode_exes: BTreeMap<usize, ExeCell>,
     /// bucket → fused decode+signals superstep executable.
     superstep_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → tapped superstep executable (output 6 is one
+    /// hidden-state tap row per branch; k/v keep outputs 4/5 so the
+    /// donation contract is unchanged).
+    superstep_tap_exes: BTreeMap<usize, ExeCell>,
     /// (src bucket, dst bucket) → gather executable.
     gather_exes: BTreeMap<(usize, usize), ExeCell>,
     /// bucket → fused signal-kernel executable.
@@ -116,6 +175,8 @@ pub struct LoadedModel {
     decode_packed_exes: BTreeMap<usize, ExeCell>,
     /// bucket → packed decode+signals superstep executable.
     superstep_packed_exes: BTreeMap<usize, ExeCell>,
+    /// bucket → tapped packed superstep executable.
+    superstep_tap_packed_exes: BTreeMap<usize, ExeCell>,
     /// bucket → pod-admission row-merge executable.
     fuse_exes: BTreeMap<usize, ExeCell>,
     /// (src bucket, dst bucket) → pod-compaction executable.
@@ -123,6 +184,9 @@ pub struct LoadedModel {
     /// (src bucket, dst bucket) → prefix-sharing copy-on-write fork
     /// executable (src is always 1: a shared bucket-1 prefix entry).
     fork_exes: BTreeMap<(usize, usize), ExeCell>,
+    /// Linear pruning-probe weights, loaded (and validated against
+    /// `config.d_model`) when the manifest references them.
+    probe: Option<ProbeWeights>,
 }
 
 impl LoadedModel {
@@ -142,6 +206,8 @@ impl LoadedModel {
             mm.decode.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let superstep_exes =
             mm.superstep.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let superstep_tap_exes =
+            mm.superstep_tap.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let gather_exes =
             mm.gather.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let signal_exes =
@@ -150,10 +216,33 @@ impl LoadedModel {
             mm.decode_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let superstep_packed_exes =
             mm.superstep_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
+        let superstep_tap_packed_exes =
+            mm.superstep_tap_packed.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let fuse_exes = mm.fuse.iter().map(|(&b, p)| (b, ExeCell::new(p.clone()))).collect();
         let compact_exes =
             mm.compact.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
         let fork_exes = mm.fork.iter().map(|(&k, p)| (k, ExeCell::new(p.clone()))).collect();
+        // Probe weights load eagerly so a malformed artifact fails at
+        // load with a named error, not mid-request; a d_model mismatch
+        // is a build-system bug (probe fitted against another model).
+        let probe = match &mm.probe {
+            None => None,
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("model {name}: reading probe weights {path:?}"))?;
+                let j = json::parse(&text)
+                    .with_context(|| format!("model {name}: parsing probe weights {path:?}"))?;
+                let p = ProbeWeights::from_json(&j, &format!("model {name}: probe"))?;
+                if p.d_model != mm.config.d_model {
+                    bail!(
+                        "model {name}: probe d_model {} != model d_model {}",
+                        p.d_model,
+                        mm.config.d_model
+                    );
+                }
+                Some(p)
+            }
+        };
         let mut model = LoadedModel {
             rt,
             name: name.to_string(),
@@ -162,13 +251,16 @@ impl LoadedModel {
             prefill_exe: ExeCell::new(mm.prefill.clone()),
             decode_exes,
             superstep_exes,
+            superstep_tap_exes,
             gather_exes,
             signal_exes,
             decode_packed_exes,
             superstep_packed_exes,
+            superstep_tap_packed_exes,
             fuse_exes,
             compact_exes,
             fork_exes,
+            probe,
             param_table,
             q_logits: Vec::new(),
             q_buf: OnceLock::new(),
@@ -412,6 +504,132 @@ impl LoadedModel {
         self.rt.to_host_f32_into(&out[1], kl_out)?;
         self.rt.to_host_f32_into(&out[2], conf_out)?;
         self.rt.to_host_f32_into(&out[3], ent_out)?;
+        Ok(())
+    }
+
+    /// Whether the tapped superstep executable exists for `bucket`
+    /// (artifact sets predating signal families carry none — the
+    /// hidden-probe scorer is then unavailable and the analytic default
+    /// keeps dispatching the untapped superstep).
+    pub fn has_tap(&self, bucket: usize) -> bool {
+        self.superstep_tap_exes.contains_key(&bucket)
+    }
+
+    /// Whether the tapped packed superstep executable exists for
+    /// `bucket` (the fused scheduler's tap path).
+    pub fn has_tap_packed(&self, bucket: usize) -> bool {
+        self.superstep_tap_packed_exes.contains_key(&bucket)
+    }
+
+    /// The loaded linear pruning-probe weights, when the artifact set
+    /// ships them.
+    pub fn probe(&self) -> Option<&ProbeWeights> {
+        self.probe.as_ref()
+    }
+
+    /// Tapped superstep: [`Self::superstep_into`] plus one hidden-state
+    /// tap row per branch (`[bucket × d_model]`, into `tap_out`). The
+    /// tap is appended as output 6 of
+    /// `(logits, kl, conf, ent, k, v, tap)` — k/v keep outputs 4/5, so
+    /// the donation contract (`execute_b_donated(..., &[2, 3])`) is
+    /// literally the untapped superstep's. Outputs 0–5 are bitwise
+    /// identical to the untapped artifact
+    /// (`python/tests/test_superstep_tap.py` pins it at the graph
+    /// level).
+    #[allow(clippy::too_many_arguments)]
+    pub fn superstep_tap_into(
+        &self,
+        tokens: &[i32],
+        pos: usize,
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+        kl_out: &mut Vec<f32>,
+        conf_out: &mut Vec<f32>,
+        ent_out: &mut Vec<f32>,
+        tap_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step(tokens, pos, b)?;
+        let cell = self
+            .superstep_tap_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no superstep_tap artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_scalar(pos as i32)?;
+        self.rt.fault_check(FaultSite::Superstep)?;
+        self.rt.note_decode_dispatch();
+        let mut out = exe
+            .execute_b_donated(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[2, 3],
+            )?
+            .swap_remove(0);
+        if out.len() != 7 {
+            bail!("superstep_tap returned {} outputs, expected 7", out.len());
+        }
+        let tap = out.pop().unwrap();
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        self.rt.to_host_f32_into(&out[1], kl_out)?;
+        self.rt.to_host_f32_into(&out[2], conf_out)?;
+        self.rt.to_host_f32_into(&out[3], ent_out)?;
+        self.rt.to_host_f32_into(&tap, tap_out)?;
+        Ok(())
+    }
+
+    /// Tapped packed superstep: [`Self::superstep_packed_into`] plus the
+    /// `[bucket × d_model]` tap slab — same appended-output-6 contract
+    /// as [`Self::superstep_tap_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn superstep_tap_packed_into(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+        kl_out: &mut Vec<f32>,
+        conf_out: &mut Vec<f32>,
+        ent_out: &mut Vec<f32>,
+        tap_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = cache.bucket;
+        self.check_step_packed(tokens, pos, b)?;
+        let cell = self
+            .superstep_tap_packed_exes
+            .get(&b)
+            .ok_or_else(|| anyhow!("no superstep_tap_packed artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.fault_check(FaultSite::Superstep)?;
+        self.rt.note_decode_dispatch();
+        let mut out = exe
+            .execute_b_donated(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[2, 3],
+            )?
+            .swap_remove(0);
+        if out.len() != 7 {
+            bail!("superstep_tap_packed returned {} outputs, expected 7", out.len());
+        }
+        let tap = out.pop().unwrap();
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        self.rt.to_host_f32_into(&out[1], kl_out)?;
+        self.rt.to_host_f32_into(&out[2], conf_out)?;
+        self.rt.to_host_f32_into(&out[3], ent_out)?;
+        self.rt.to_host_f32_into(&tap, tap_out)?;
         Ok(())
     }
 
@@ -844,5 +1062,32 @@ mod tests {
         assert!(signals_shape_check(0, 4, 4 * 64, 64).is_err());
         assert!(signals_shape_check(5, 4, 4 * 64, 64).is_err());
         assert!(signals_shape_check(4, 4, 3 * 64, 64).is_err());
+    }
+
+    #[test]
+    fn probe_weights_parse_and_score() {
+        let j = json::parse(r#"{"d_model": 3, "w": [1.0, -2.0, 0.5], "b": 0.25}"#).unwrap();
+        let p = ProbeWeights::from_json(&j, "model sm: probe").unwrap();
+        assert_eq!(p.d_model, 3);
+        assert_eq!(p.w, vec![1.0, -2.0, 0.5]);
+        let s = p.logit(&[2.0, 1.0, 4.0]);
+        assert!((s - (2.0 - 2.0 + 2.0 + 0.25)).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn probe_weights_malformed_fields_err_named() {
+        for (text, needle) in [
+            (r#"{"w": [1.0], "b": 0.0}"#, "d_model"),
+            (r#"{"d_model": 2, "b": 0.0}"#, "w must be an array"),
+            (r#"{"d_model": 2, "w": [1.0, "x"], "b": 0.0}"#, "w[1]"),
+            (r#"{"d_model": 3, "w": [1.0, 2.0], "b": 0.0}"#, "2 entries for d_model 3"),
+            (r#"{"d_model": 1, "w": [1.0]}"#, "b must be a number"),
+        ] {
+            let j = json::parse(text).unwrap();
+            let err = ProbeWeights::from_json(&j, "model sm: probe").unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("model sm: probe"), "{msg}");
+            assert!(msg.contains(needle), "{msg} missing {needle}");
+        }
     }
 }

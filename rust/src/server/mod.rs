@@ -161,6 +161,13 @@ pub struct SchedConfig {
     /// unshared path (sharing is a physical-residency optimization;
     /// the per-request virtual accounting never changes). Default off.
     pub prefix_share: bool,
+    /// Scorer override (PR 8): when set, every request this pool serves
+    /// scores with the named signal family (the `kappa serve --scorer`
+    /// path applies it onto the run config's `kappa.scorer` at boot, so
+    /// a worker pool can run a different family than the CLI default
+    /// without rebuilding the run config). `None` leaves the run
+    /// config's choice untouched.
+    pub scorer: Option<crate::coordinator::scorer::ScorerKind>,
 }
 
 impl Default for SchedConfig {
@@ -183,6 +190,7 @@ impl Default for SchedConfig {
             quarantine_cooldown: 50,
             deadline_ms: 0,
             prefix_share: false,
+            scorer: None,
         }
     }
 }
@@ -568,6 +576,13 @@ impl Server {
     ) -> Result<Server> {
         if let Some(spec) = fault_plan {
             FaultPlan::parse(spec).context("validating --fault-plan spec")?;
+        }
+        // The pool-level scorer override lands on the run config here,
+        // once, so every worker (and `run_config()` introspection) sees
+        // the effective signal family.
+        let mut run_cfg = run_cfg;
+        if let Some(kind) = sched_cfg.scorer {
+            run_cfg.kappa.scorer = kind;
         }
         let n_workers = n_workers.max(1);
         let (tx, rx) = channel::<Request>();
@@ -1546,6 +1561,17 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 64 * 64, "request_seed collided on a tiny grid");
+    }
+
+    #[test]
+    fn sched_config_scorer_override_defaults_off_and_stays_copy() {
+        use crate::coordinator::scorer::ScorerKind;
+        let d = SchedConfig::default();
+        assert!(d.scorer.is_none(), "no override unless the operator asks");
+        let with = SchedConfig { scorer: Some(ScorerKind::Probe), ..d };
+        let copied = with; // admission paths pass SchedConfig by value
+        assert_eq!(copied.scorer, Some(ScorerKind::Probe));
+        assert_eq!(with.scorer, Some(ScorerKind::Probe)); // usable post-copy ⇒ still Copy
     }
 
     #[test]

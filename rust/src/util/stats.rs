@@ -87,9 +87,20 @@ pub fn total_order(a: f64, b: f64) -> std::cmp::Ordering {
 /// Z-score normalization across a slice, as in Algorithm 2 step 19:
 /// `(x - mu) / (sigma + eps)`, then clamped to [-clamp, clamp].
 pub fn z_normalize(xs: &[f64], eps: f64, clamp: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    z_normalize_into(xs, eps, clamp, &mut out);
+    out
+}
+
+/// [`z_normalize`] into a caller-owned buffer — the same float ops in
+/// the same order (the hot scoring path must stay bit-identical to the
+/// allocating reference), with zero steady-state allocation past the
+/// buffer's high-water mark.
+pub fn z_normalize_into(xs: &[f64], eps: f64, clamp: f64, out: &mut Vec<f64>) {
     let mu = mean(xs);
     let sd = std_dev(xs);
-    xs.iter().map(|x| ((x - mu) / (sd + eps)).clamp(-clamp, clamp)).collect()
+    out.clear();
+    out.extend(xs.iter().map(|x| ((x - mu) / (sd + eps)).clamp(-clamp, clamp)));
 }
 
 #[cfg(test)]
@@ -174,5 +185,17 @@ mod tests {
     fn z_norm_constant_input_is_zero() {
         let z = z_normalize(&[5.0, 5.0, 5.0], 1e-8, 3.0);
         assert!(z.iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn z_norm_into_matches_allocating_reference_bitwise() {
+        let xs: Vec<f64> = (0..17).map(|i| ((i * 13) % 7) as f64 / 3.0 - 1.0).collect();
+        let reference = z_normalize(&xs, 1e-8, 3.0);
+        let mut out = vec![99.0; 3]; // stale contents must be cleared
+        z_normalize_into(&xs, 1e-8, 3.0, &mut out);
+        assert_eq!(out.len(), reference.len());
+        for (a, b) in reference.iter().zip(out.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

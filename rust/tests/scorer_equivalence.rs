@@ -1,0 +1,316 @@
+//! Scorer-equivalence suite (PR 8).
+//!
+//! The load-bearing claim of the pluggable-scorer refactor: selecting
+//! the analytic family **explicitly** (`--scorer analytic`, token
+//! cadence — the exact pre-refactor configuration) is bit-identical in
+//! text *and metrics* to the default path, for all four methods, under
+//! every serving shape we support:
+//!
+//!   * the blocking driver (`run_method`),
+//!   * the fused scheduler core (pods, randomized admission),
+//!   * an evict/re-admit round trip (driver dropped mid-flight,
+//!     restarted from scratch),
+//!   * a fault-retry trace (seeded transient pod faults, worker-style
+//!     requeue).
+//!
+//! The default `KappaConfig` *is* analytic/token, so the oracle runs
+//! here are exactly what the pre-refactor pipeline produced; the
+//! explicit-scorer runs exercise the `Scorer`-trait plumbing end to
+//! end. Any divergence — an extra dispatch, a reordered prune, a
+//! drifted z-norm — trips the metric asserts, not just the text.
+//!
+//! Artifact-gated: skips loudly when `artifacts/` is absent (always the
+//! case under the offline xla stub). The scorer trait's pure logic is
+//! covered without artifacts by the in-module tests in
+//! `src/coordinator/scorer.rs`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+use kappa::coordinator::config::{KappaConfig, Method, RunConfig};
+use kappa::coordinator::scorer::{Cadence, ScorerKind};
+use kappa::coordinator::{make_driver, make_driver_fused, run_method, GenOutput, StepOutcome, StepPlan};
+use kappa::engine::{Engine, FuseConfig, FusionHub, PodFault};
+use kappa::runtime::{FaultError, FaultPlan, FaultSite, LoadedModel, Manifest, Runtime};
+use kappa::server::{request_seed, Pollable, SchedConfig, Scheduler};
+use kappa::util::rng::Pcg64;
+
+fn artifacts_dir() -> String {
+    std::env::var("KAPPA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn load() -> Option<Arc<Engine>> {
+    let manifest = match Manifest::load(artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts — run `make artifacts`): {e:#}");
+            return None;
+        }
+    };
+    let rt = Arc::new(Runtime::new().expect("pjrt client"));
+    let model = LoadedModel::load(rt, &manifest, "sm").expect("load sm");
+    Some(Arc::new(Engine::new(Arc::new(model))))
+}
+
+fn packed_ready(engine: &Engine) -> bool {
+    engine.model().buckets().iter().all(|&b| engine.model().has_packed(b))
+}
+
+fn assert_outputs_identical(a: &GenOutput, b: &GenOutput, what: &str) {
+    assert_eq!(a.text, b.text, "{what}: text");
+    assert_eq!(a.chosen_branch, b.chosen_branch, "{what}: chosen branch");
+    assert_eq!(a.metrics.final_branch_tokens, b.metrics.final_branch_tokens, "{what}: tokens");
+    assert_eq!(a.metrics.total_tokens, b.metrics.total_tokens, "{what}: total tokens");
+    assert_eq!(a.metrics.peak_mem_bytes, b.metrics.peak_mem_bytes, "{what}: peak mem");
+    assert_eq!(a.metrics.decode_calls, b.metrics.decode_calls, "{what}: decode calls");
+    assert_eq!(a.metrics.gather_calls, b.metrics.gather_calls, "{what}: gather calls");
+}
+
+/// The default config (the pre-refactor pipeline) and its explicit
+/// `--scorer analytic --cadence token` twin.
+fn config_pair(method: Method) -> (RunConfig, RunConfig) {
+    let default_cfg =
+        RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+    let explicit_cfg = RunConfig {
+        kappa: KappaConfig {
+            scorer: ScorerKind::Analytic,
+            cadence: Cadence::Token,
+            ..default_cfg.kappa.clone()
+        },
+        ..default_cfg.clone()
+    };
+    (default_cfg, explicit_cfg)
+}
+
+/// Blocking driver: explicit analytic scorer vs default config, all
+/// four methods, several requests each.
+#[test]
+fn explicit_analytic_scorer_is_bit_identical_on_blocking_driver() {
+    let Some(engine) = load() else { return };
+    let problems = kappa::data::Dataset::GsmSynth.generate(3, 77);
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let (default_cfg, explicit_cfg) = config_pair(method);
+        for (i, p) in problems.iter().enumerate() {
+            let seed = request_seed(5, i as u64);
+            let oracle = run_method(&engine, &p.prompt(), &default_cfg, seed).expect("default");
+            let explicit = run_method(&engine, &p.prompt(), &explicit_cfg, seed).expect("explicit");
+            assert_outputs_identical(
+                &oracle,
+                &explicit,
+                &format!("{method:?} request {i} (blocking, explicit analytic)"),
+            );
+        }
+    }
+}
+
+/// Fused in-flight request for driving the scheduler core directly —
+/// the same phasing the server worker runs.
+struct FusedFlight<'e> {
+    driver: Box<dyn kappa::coordinator::Driver>,
+    engine: &'e Engine,
+}
+
+impl Pollable for FusedFlight<'_> {
+    fn plan(&mut self) -> Result<StepPlan> {
+        self.driver.plan_step(self.engine)
+    }
+    fn absorb(&mut self) -> Result<StepOutcome> {
+        self.driver.absorb_step(self.engine)
+    }
+    fn device_slots(&self) -> usize {
+        self.driver.device_slots()
+    }
+    fn mem_bytes(&self) -> usize {
+        self.driver.mem_bytes()
+    }
+}
+
+/// Run `prompts` through the fused scheduler core with randomized
+/// admission, retrying any request failed by a contained fault exactly
+/// the way the worker loop does (requeue, fresh driver, same
+/// `(prompt, seed)`). Returns outputs by original index plus the total
+/// retry count. With no fault plan installed the retry path is inert
+/// and this is a plain fused trace.
+fn run_fused_trace(
+    engine: &Engine,
+    fuse_cfg: FuseConfig,
+    prompts: &[String],
+    cfg: &RunConfig,
+    seed0: u64,
+    admit_seed: u64,
+) -> (Vec<GenOutput>, usize) {
+    let hub = FusionHub::new(fuse_cfg);
+    let sched_cfg =
+        SchedConfig { max_inflight: 3, slot_budget: 32, fuse: true, ..SchedConfig::default() };
+    let mut sched: Scheduler<FusedFlight, usize> = Scheduler::new(sched_cfg);
+    let admission = engine.admission_cost(cfg.concurrent_branches()).expect("admission cost");
+    let mut admit_rng = Pcg64::new(admit_seed, 1);
+    let mut queue: VecDeque<usize> = (0..prompts.len()).collect();
+    let mut out: Vec<Option<GenOutput>> = (0..prompts.len()).map(|_| None).collect();
+    let mut retries = 0usize;
+    let mut ticks = 0usize;
+    while !(queue.is_empty() && sched.is_empty()) {
+        ticks += 1;
+        assert!(ticks < 100_000, "fused trace runaway");
+        while !queue.is_empty()
+            && sched.can_admit(admission.0, admission.1)
+            && admit_rng.below(4) != 0
+        {
+            let i = queue.pop_front().unwrap();
+            let driver =
+                make_driver_fused(engine, &hub, &prompts[i], cfg, request_seed(seed0, i as u64))
+                    .expect("fused driver");
+            sched.admit(FusedFlight { driver, engine }, i);
+        }
+        let mut requeue: Vec<usize> = Vec::new();
+        sched.tick(
+            || hub.flush(engine),
+            |i, r| match r {
+                Ok(o) => out[i] = Some(o),
+                Err(e) => {
+                    let contained = e.chain().any(|c| {
+                        c.downcast_ref::<PodFault>().is_some()
+                            || c.downcast_ref::<FaultError>().is_some()
+                    });
+                    assert!(contained, "request {i} failed with a non-contained error: {e:#}");
+                    requeue.push(i);
+                }
+            },
+        );
+        for i in requeue {
+            retries += 1;
+            queue.push_back(i);
+        }
+    }
+    (out.into_iter().map(|o| o.expect("request never completed")).collect(), retries)
+}
+
+/// Fused scheduler: pods, randomized admission phases — the explicit
+/// analytic scorer matches the default config request-for-request.
+#[test]
+fn explicit_analytic_scorer_is_bit_identical_on_fused_scheduler() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = kappa::data::Dataset::GsmSynth.generate(4, 77);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let (default_cfg, explicit_cfg) = config_pair(method);
+        for admit_seed in [1u64, 23] {
+            let (oracle, r0) = run_fused_trace(
+                &engine, FuseConfig::default(), &prompts, &default_cfg, 5, admit_seed,
+            );
+            let (explicit, r1) = run_fused_trace(
+                &engine, FuseConfig::default(), &prompts, &explicit_cfg, 5, admit_seed,
+            );
+            assert_eq!(r0, 0, "{method:?}: fault-free default trace retried");
+            assert_eq!(r1, 0, "{method:?}: fault-free explicit trace retried");
+            for (i, (a, b)) in oracle.iter().zip(&explicit).enumerate() {
+                assert_outputs_identical(
+                    a,
+                    b,
+                    &format!("{method:?} request {i} (fused, admit seed {admit_seed})"),
+                );
+            }
+        }
+    }
+}
+
+/// Evict/re-admit round trip under the explicit scorer: a driver is
+/// dropped mid-flight (releasing its device residence) and restarted
+/// from scratch with the same `(prompt, seed)`; the completed rerun
+/// must match the default-config blocking run bit-for-bit.
+#[test]
+fn explicit_analytic_scorer_survives_evict_readmit_bit_identical() {
+    let Some(engine) = load() else { return };
+    let problems = kappa::data::Dataset::GsmSynth.generate(2, 57);
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let (default_cfg, explicit_cfg) = config_pair(method);
+        for (i, p) in problems.iter().enumerate() {
+            let prompt = p.prompt();
+            let seed = request_seed(3, i as u64);
+            let oracle = run_method(&engine, &prompt, &default_cfg, seed).expect("default");
+
+            // First tenancy: part of the request runs under the
+            // explicit scorer, then the driver is dropped (eviction).
+            let mut evicted = make_driver(&engine, &prompt, &explicit_cfg, seed).expect("driver");
+            for _ in 0..5 {
+                if let StepOutcome::Done(_) = evicted.poll_step(&engine).expect("poll") {
+                    break;
+                }
+            }
+            drop(evicted);
+
+            // Re-admission: a fresh driver re-prefills from scratch.
+            let mut readmitted =
+                make_driver(&engine, &prompt, &explicit_cfg, seed).expect("driver");
+            let out = loop {
+                if let StepOutcome::Done(out) = readmitted.poll_step(&engine).expect("poll") {
+                    break out;
+                }
+            };
+            assert_outputs_identical(
+                &oracle,
+                &out,
+                &format!("{method:?} request {i} (explicit analytic, evict/re-admit)"),
+            );
+        }
+    }
+}
+
+/// Fault-retry trace under the explicit scorer: seeded transient pod
+/// faults take down pods mid-run; victims requeue worker-style and
+/// complete bit-identical to the default-config fault-free oracle.
+#[test]
+fn explicit_analytic_scorer_recovers_from_faults_bit_identical() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = kappa::data::Dataset::GsmSynth.generate(4, 77);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let per_request_pods = FuseConfig { pod_bucket: 1, ..FuseConfig::default() };
+    let rt = engine.model().runtime();
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let (default_cfg, explicit_cfg) = config_pair(method);
+        rt.set_fault_plan(None);
+        let oracle: Vec<GenOutput> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                run_method(&engine, p, &default_cfg, request_seed(5, i as u64)).expect("default")
+            })
+            .collect();
+
+        // A transient fault at the third decode-family dispatch of each
+        // flavor (whichever this method's policy uses).
+        rt.set_fault_plan(Some(FaultPlan::parse("decode@2,superstep@2").expect("plan")));
+        let (fused, retries) =
+            run_fused_trace(&engine, per_request_pods, &prompts, &explicit_cfg, 5, 7);
+        let plan = rt.fault_plan().expect("plan installed");
+        let injected =
+            plan.injected_at(FaultSite::Decode) + plan.injected_at(FaultSite::Superstep);
+        rt.set_fault_plan(None);
+
+        assert!(injected >= 1, "{method:?}: the fault plan never fired");
+        assert_eq!(
+            retries, injected,
+            "{method:?}: retries must match injected faults under per-request pods"
+        );
+        for (i, (a, b)) in oracle.iter().zip(&fused).enumerate() {
+            assert_outputs_identical(
+                a,
+                b,
+                &format!("{method:?} request {i} (explicit analytic, fault retry)"),
+            );
+        }
+    }
+}
