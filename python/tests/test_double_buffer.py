@@ -1,0 +1,132 @@
+"""Double-buffered slab staging: epoch-parity banks vs synchronous reads.
+
+The Rust runtime's overlapped scheduler tick (PR 9) downloads epoch T's
+logits slab into a caller-owned staging bank while epoch T+1's dispatch
+is already in flight; the two banks alternate by epoch parity and the
+pod's epoch window admits exactly two in-flight epochs. ``EpochStaging``
+below is the python model of that discipline (the Rust ``StagingPair``
+plus the two-deep window check in ``absorb_rows``), driven with real
+decode slabs so the parity claim is about actual kernel output, not toy
+data:
+
+- a pipelined consumer running one epoch behind the producer sees every
+  slab bitwise identical to a synchronous single-buffer reference;
+- both in-flight epochs are readable at once (the two-deep window);
+- a three-deep pull — the bank was re-tagged by epoch T+2 before epoch
+  T was read — is rejected with an error naming both epochs, never
+  silently served from the wrong bank.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import CONFIGS, decode_step, init_params, prefill
+
+
+class StaleEpochError(Exception):
+    pass
+
+
+class EpochStaging:
+    """Two staging banks keyed by epoch parity, tagged with the epoch
+    that last wrote them. ``push`` is the download landing at issue
+    order; ``pull`` is the demand-driven read and must fail loudly when
+    the wanted epoch's bank has already been re-tagged by a deeper
+    write (the stale three-deep pull)."""
+
+    def __init__(self):
+        self.banks = [None, None]  # parity slot -> (epoch, slab)
+
+    def push(self, epoch, slab):
+        self.banks[epoch % 2] = (epoch, np.asarray(slab).copy())
+
+    def pull(self, epoch):
+        held = self.banks[epoch % 2]
+        if held is None or held[0] != epoch:
+            have = "empty" if held is None else held[0]
+            raise StaleEpochError(
+                f"stale slab pull: bank {epoch % 2} holds epoch {have}, "
+                f"wanted epoch {epoch}"
+            )
+        return held[1]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["sm"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((1, cfg.prompt_len), jnp.int32).at[0, 0].set(1).at[0, 1].set(5)
+    _, k1, v1 = prefill(cfg, params, tok, jnp.int32(4))
+    return cfg, params, (k1, v1)
+
+
+def decode_trace(cfg, params, cache, steps):
+    """One-row decode chain: yields (epoch, logits slab) per step, the
+    producer side of both the synchronous and the pipelined runs."""
+    k, v = cache
+    pos, tok = 4, jnp.array([3], jnp.int32)
+    for epoch in range(steps):
+        lg, k, v = decode_step(cfg, params, tok, jnp.int32(pos), k, v)
+        yield epoch, lg
+        tok = jnp.array([int(jnp.argmax(lg[0])) % cfg.vocab], jnp.int32)
+        pos = min(pos + 1, cfg.max_seq - 1)
+
+
+class TestDoubleBufferParity:
+    def test_pipelined_reads_bitwise_equal_synchronous_reference(self, setup):
+        cfg, params, cache = setup
+        steps = 6
+
+        # Synchronous reference: one buffer, read immediately.
+        sync = [np.asarray(lg) for _, lg in decode_trace(cfg, params, cache, steps)]
+
+        # Pipelined consumer: epoch T's slab is pulled only after epoch
+        # T+1's download has landed in the other bank — exactly the
+        # overlap window the Rust tick runs (download T while T+1
+        # decodes) — then the final epoch drains at the boundary.
+        staging = EpochStaging()
+        piped = [None] * steps
+        for epoch, lg in decode_trace(cfg, params, cache, steps):
+            staging.push(epoch, lg)
+            if epoch > 0:
+                piped[epoch - 1] = staging.pull(epoch - 1)
+        piped[steps - 1] = staging.pull(steps - 1)
+
+        for e, (got, want) in enumerate(zip(piped, sync)):
+            np.testing.assert_array_equal(got, want, err_msg=f"epoch {e}")
+
+    def test_two_in_flight_epochs_are_both_readable(self, setup):
+        cfg, params, cache = setup
+        staging = EpochStaging()
+        slabs = {e: np.asarray(lg) for e, lg in decode_trace(cfg, params, cache, 2)}
+        staging.push(0, slabs[0])
+        staging.push(1, slabs[1])
+        # The two-deep window: both epochs resident, either pull order.
+        np.testing.assert_array_equal(staging.pull(1), slabs[1])
+        np.testing.assert_array_equal(staging.pull(0), slabs[0])
+
+    def test_three_deep_pull_is_rejected_naming_both_epochs(self, setup):
+        cfg, params, cache = setup
+        staging = EpochStaging()
+        for e, lg in decode_trace(cfg, params, cache, 3):
+            staging.push(e, lg)
+        # Epoch 2 re-tagged epoch 0's parity bank: the stale pull must
+        # fail loudly and the error must name both epochs.
+        with pytest.raises(StaleEpochError) as err:
+            staging.pull(0)
+        assert "epoch 2" in str(err.value) and "epoch 0" in str(err.value)
+        # The in-window epochs are still served.
+        assert staging.pull(1) is not None
+        assert staging.pull(2) is not None
+
+    def test_deeper_write_never_disturbs_the_other_bank(self, setup):
+        cfg, params, cache = setup
+        staging = EpochStaging()
+        slabs = {e: np.asarray(lg) for e, lg in decode_trace(cfg, params, cache, 3)}
+        staging.push(0, slabs[0])
+        staging.push(1, slabs[1])
+        before = staging.pull(1).copy()
+        staging.push(2, slabs[2])  # overwrites bank 0, must not touch bank 1
+        np.testing.assert_array_equal(staging.pull(1), before)

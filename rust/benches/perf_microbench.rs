@@ -43,7 +43,12 @@
 //! prefixes, strictly fewer than requests; physical co-resident KV
 //! peak strictly below the unshared run at the same budgets; all four
 //! methods bit-identical to their sharing-disabled runs, including
-//! across an evict/re-admit and a prefill-fault retry).
+//! across an evict/re-admit and a prefill-fault retry), and
+//! `pipeline_overlap` (PR 9: the software-pipelined scheduler tick —
+//! issue every occupied pod's packed dispatch before awaiting any —
+//! is bit-identical to the synchronous issue-and-await oracle with an
+//! identical counter ledger, while the device idle fraction lands
+//! strictly below and tokens/sec-per-worker strictly above it).
 //!
 //!   cargo bench --bench perf_microbench -- --model sm --iters 30
 
@@ -1190,6 +1195,182 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- pipeline_overlap: the PR 9 acceptance section. The same fused
+    // trace runs twice at identical config and request seeds: once on
+    // the synchronous oracle tick (issue-and-await per pod,
+    // `hub.flush`) and once on the software-pipelined tick
+    // (`tick_overlapped`: issue every occupied pod's packed dispatch
+    // up front, absorb with demand-driven awaits, drain the hub at the
+    // tick boundary). Asserted:
+    // - bit-identity: text, chosen branch, and the full metrics row
+    //   match the oracle for every request;
+    // - the counter ledgers are identical — decode dispatches, slab
+    //   downloads, occupied pod-ticks, and hub flush-ticks — and the
+    //   per-tick invariants (exactly one packed dispatch and at most
+    //   one slab download per occupied pod per tick) hold under
+    //   overlap;
+    // - device idle fraction (1 − device-busy / wall, busy measured
+    //   issue→complete at the Runtime) is *strictly below* the
+    //   synchronous baseline, and tokens/sec-per-worker is *strictly
+    //   above* it — the point of issuing across pods before awaiting.
+    let mut overlap_json = Json::Null;
+    if packed_ready {
+        let run_overlap_trace =
+            |overlap: bool| -> Result<(Vec<GenOutput>, f64, u64, usize, usize, usize, usize)> {
+                let hub = FusionHub::new(FuseConfig::default());
+                let mut sched: Scheduler<FusedBench, usize> =
+                    Scheduler::new(SchedConfig { overlap, ..SchedConfig::default() });
+                let admission = engine.admission_cost(run_cfg.concurrent_branches())?;
+                let mut queue: VecDeque<usize> = (0..n_requests).collect();
+                let mut outputs: Vec<Option<GenOutput>> =
+                    (0..n_requests).map(|_| None).collect();
+                let d0 = model.runtime().decode_dispatch_count();
+                let (_, sd0) = model.runtime().slab_transfers();
+                let busy0 = model.runtime().device_busy_ns();
+                let t0 = Instant::now();
+                let mut ticks = 0usize;
+                let mut failure: Option<anyhow::Error> = None;
+                while !(queue.is_empty() && sched.is_empty()) && failure.is_none() {
+                    ticks += 1;
+                    assert!(ticks < 100_000, "pipeline_overlap trace runaway");
+                    while !queue.is_empty() && sched.can_admit(admission.0, admission.1) {
+                        let i = queue.pop_front().unwrap();
+                        let driver = make_driver_fused(
+                            &engine,
+                            &hub,
+                            &prompts[i],
+                            &run_cfg,
+                            request_seed(4242, i as u64),
+                        )?;
+                        sched.admit(FusedBench { driver, engine: &engine }, i);
+                    }
+                    let on_done = |i: usize, r: Result<GenOutput>| match r {
+                        Ok(out) => outputs[i] = Some(out),
+                        Err(e) => failure = Some(e),
+                    };
+                    if overlap {
+                        sched.tick_overlapped(
+                            || hub.issue(&engine),
+                            || hub.await_ready(),
+                            on_done,
+                        );
+                    } else {
+                        sched.tick(|| hub.flush(&engine), on_done);
+                    }
+                }
+                if let Some(e) = failure {
+                    return Err(e.context("pipeline_overlap fused trace"));
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let busy = model.runtime().device_busy_ns() - busy0;
+                let dispatches = model.runtime().decode_dispatch_count() - d0;
+                let (_, sd1) = model.runtime().slab_transfers();
+                let stats = hub.stats();
+                let outputs: Vec<GenOutput> =
+                    outputs.into_iter().map(|o| o.expect("request completed")).collect();
+                Ok((
+                    outputs,
+                    wall,
+                    busy,
+                    dispatches,
+                    sd1 - sd0,
+                    stats.occupied_pod_ticks,
+                    stats.flushes,
+                ))
+            };
+
+        let (out_sync, wall_sync, busy_sync, disp_sync, slab_sync, occ_sync, flush_sync) =
+            run_overlap_trace(false)?;
+        let (out_over, wall_over, busy_over, disp_over, slab_over, occ_over, flush_over) =
+            run_overlap_trace(true)?;
+
+        // Bit-identity against the synchronous oracle.
+        for (i, (s, o)) in out_sync.iter().zip(&out_over).enumerate() {
+            assert_eq!(s.text, o.text, "pipeline_overlap request {i}: text");
+            assert_eq!(s.chosen_branch, o.chosen_branch, "pipeline_overlap request {i}: branch");
+            assert_eq!(
+                s.metrics.total_tokens, o.metrics.total_tokens,
+                "pipeline_overlap request {i}: total tokens"
+            );
+            assert_eq!(
+                s.metrics.peak_mem_bytes, o.metrics.peak_mem_bytes,
+                "pipeline_overlap request {i}: accounted peak"
+            );
+            assert_eq!(
+                s.metrics.decode_calls, o.metrics.decode_calls,
+                "pipeline_overlap request {i}: decode calls"
+            );
+        }
+
+        // Counter-ledger identity and the per-tick invariants under
+        // overlap: one packed dispatch per occupied pod per tick (both
+        // modes, both witnesses), at most one slab download per
+        // occupied pod-tick.
+        assert_eq!(
+            (disp_sync, slab_sync, occ_sync, flush_sync),
+            (disp_over, slab_over, occ_over, flush_over),
+            "overlap changed the counter ledger \
+             (dispatches/slab-downloads/occupied-pod-ticks/flush-ticks)"
+        );
+        assert_eq!(
+            disp_over, occ_over,
+            "overlapped serving must issue exactly one packed dispatch per occupied pod \
+             per tick ({disp_over} dispatches vs {occ_over} occupied pod-ticks)"
+        );
+        assert!(
+            slab_over <= occ_over,
+            "overlapped serving downloaded more than one slab per occupied pod-tick \
+             ({slab_over} downloads vs {occ_over} occupied pod-ticks)"
+        );
+
+        let tokens: usize = out_over.iter().map(|o| o.metrics.decode_calls).sum();
+        let idle = |busy_ns: u64, wall: f64| -> f64 {
+            if wall > 0.0 { (1.0 - busy_ns as f64 / 1e9 / wall).max(0.0) } else { 0.0 }
+        };
+        let (idle_sync, idle_over) = (idle(busy_sync, wall_sync), idle(busy_over, wall_over));
+        let tps_sync = tokens as f64 / wall_sync;
+        let tps_over = tokens as f64 / wall_over;
+        // The perf acceptance pair: strictly less device idle time and
+        // strictly more tokens/sec per worker than the synchronous
+        // oracle at identical config.
+        assert!(
+            idle_over < idle_sync,
+            "overlap must strictly drop the device idle fraction \
+             ({idle_over:.4} vs {idle_sync:.4} synchronous)"
+        );
+        assert!(
+            tps_over > tps_sync,
+            "overlap must strictly raise tokens/sec per worker \
+             ({tps_over:.2} vs {tps_sync:.2} synchronous)"
+        );
+        println!(
+            "\npipeline_overlap ({n_requests} requests, 1 worker):\n\
+               overlapped: {tps_over:.2} tok/s, device idle {idle_over:.3}, wall {wall_over:.3}s\n\
+               synchronous: {tps_sync:.2} tok/s, device idle {idle_sync:.3}, wall {wall_sync:.3}s\n\
+               ledgers identical ({disp_over} dispatches, {slab_over} slab downloads, \
+               {occ_over} occupied pod-ticks); outputs bit-identical"
+        );
+        overlap_json = Json::obj(vec![
+            ("tokens_decoded", Json::num(tokens as f64)),
+            ("wall_seconds_overlap", Json::num(wall_over)),
+            ("wall_seconds_sync", Json::num(wall_sync)),
+            ("tokens_per_sec_per_worker_overlap", Json::num(tps_over)),
+            ("tokens_per_sec_per_worker_sync", Json::num(tps_sync)),
+            ("device_idle_fraction_overlap", Json::num(idle_over)),
+            ("device_idle_fraction_sync", Json::num(idle_sync)),
+            ("dispatches", Json::num(disp_over as f64)),
+            ("slab_downloads", Json::num(slab_over as f64)),
+            ("occupied_pod_ticks", Json::num(occ_over as f64)),
+            ("ledger_identical", Json::Bool(true)),
+            ("bit_identical", Json::Bool(true)),
+        ]);
+    } else {
+        println!(
+            "\npipeline_overlap: SKIP (artifact set has no packed executables — \
+             re-export with `make artifacts`)"
+        );
+    }
+
     env.write_report(
         "BENCH_serve",
         Json::obj(vec![
@@ -1222,6 +1403,7 @@ fn main() -> Result<()> {
             ("pod_compaction", compaction_json),
             ("fault_recovery", fault_json),
             ("prefix_sharing", prefix_json),
+            ("pipeline_overlap", overlap_json),
         ]),
     )?;
     Ok(())

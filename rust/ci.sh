@@ -36,6 +36,13 @@ if command -v python3 >/dev/null 2>&1; then
     # refactor's "tap rides along for free" claim is void.
     echo "[ci] tap parity: pytest python/tests/test_superstep_tap.py"
     (cd ../python && python3 -m pytest tests/test_superstep_tap.py -x -q)
+    # Double-buffered staging parity (PR 9): the two-bank epoch-parity
+    # staging discipline behind the overlapped scheduler tick must be
+    # value-identical to a synchronous single-buffer download, and a
+    # three-deep (stale-epoch) pull must be rejected, not silently
+    # served from the wrong bank.
+    echo "[ci] double-buffer parity: pytest python/tests/test_double_buffer.py"
+    (cd ../python && python3 -m pytest tests/test_double_buffer.py -x -q)
 else
     echo "[ci] python3 missing — skipping AOT kernel parity tests"
 fi
@@ -65,15 +72,19 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         # of unique prompt prefixes (strictly fewer than requests),
         # physical co-resident KV peak strictly below the unshared run,
         # and all four methods bit-identical to their sharing-disabled
-        # runs. Here we only check the machine-readable trajectories
-        # landed.
+        # runs — and (PR 9) the pipeline_overlap section: the
+        # software-pipelined scheduler tick bit-identical to the
+        # synchronous issue-and-await oracle with an identical counter
+        # ledger, device idle fraction strictly below and
+        # tokens/sec-per-worker strictly above it. Here we only check
+        # the machine-readable trajectories landed.
         for report in BENCH_decode BENCH_serve; do
             if [ ! -f "$ARTIFACTS/reports/$report.json" ]; then
                 echo "[ci] perf smoke ran but $ARTIFACTS/reports/$report.json is missing"
                 exit 1
             fi
         done
-        for section in fault_recovery prefix_sharing; do
+        for section in fault_recovery prefix_sharing pipeline_overlap; do
             if ! grep -q "\"$section\"" "$ARTIFACTS/reports/BENCH_serve.json"; then
                 echo "[ci] BENCH_serve.json has no $section section"
                 exit 1
@@ -107,29 +118,35 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
         # exercised end to end under the serve binary.
         # --scorer analytic rides along (PR 8): the serve binary must
         # parse the scorer selector and boot with the named family.
-        echo "[ci] fault smoke: serve --scorer analytic --prefix-share under --fault-plan prefill@1,decode@1,superstep@1"
+        # Runs twice (PR 9): once on the default software-pipelined
+        # tick and once with --no-overlap, so fault containment is
+        # exercised under both tick shapes from the serve binary.
         SMOKE_LOG="$(mktemp)"
         trap 'rm -f "$SMOKE_LOG"' EXIT
-        cargo run --release --quiet -- serve \
-            --artifacts "$ARTIFACTS" --requests 6 --max-new 32 --prefix-share \
-            --scorer analytic \
-            --fault-plan "prefill@1,decode@1,superstep@1" | tee "$SMOKE_LOG"
-        RECOVERY_LINE="$(grep '^fault recovery:' "$SMOKE_LOG" || true)"
-        if [ -z "$RECOVERY_LINE" ]; then
-            echo "[ci] fault smoke: serve never printed its fault-recovery summary"
-            exit 1
-        fi
-        case "$RECOVERY_LINE" in
-            *" errors=0"*) ;;
-            *) echo "[ci] fault smoke: user-visible errors under a transient plan: $RECOVERY_LINE"
-               exit 1 ;;
-        esac
-        case "$RECOVERY_LINE" in
-            *"retries=0 "*) echo "[ci] fault smoke: the fault plan never fired: $RECOVERY_LINE"
-                            exit 1 ;;
-            *) ;;
-        esac
-        echo "[ci] fault smoke OK — $RECOVERY_LINE"
+        for overlap_flag in "" "--no-overlap"; do
+            MODE="${overlap_flag:-overlap}"
+            echo "[ci] fault smoke ($MODE): serve --scorer analytic --prefix-share under --fault-plan prefill@1,decode@1,superstep@1"
+            cargo run --release --quiet -- serve \
+                --artifacts "$ARTIFACTS" --requests 6 --max-new 32 --prefix-share \
+                --scorer analytic $overlap_flag \
+                --fault-plan "prefill@1,decode@1,superstep@1" | tee "$SMOKE_LOG"
+            RECOVERY_LINE="$(grep '^fault recovery:' "$SMOKE_LOG" || true)"
+            if [ -z "$RECOVERY_LINE" ]; then
+                echo "[ci] fault smoke ($MODE): serve never printed its fault-recovery summary"
+                exit 1
+            fi
+            case "$RECOVERY_LINE" in
+                *" errors=0"*) ;;
+                *) echo "[ci] fault smoke ($MODE): user-visible errors under a transient plan: $RECOVERY_LINE"
+                   exit 1 ;;
+            esac
+            case "$RECOVERY_LINE" in
+                *"retries=0 "*) echo "[ci] fault smoke ($MODE): the fault plan never fired: $RECOVERY_LINE"
+                                exit 1 ;;
+                *) ;;
+            esac
+            echo "[ci] fault smoke ($MODE) OK — $RECOVERY_LINE"
+        done
     else
         if [ "${KAPPA_CI_REQUIRE_PERF:-0}" = "1" ]; then
             echo "[ci] perf smoke FAILED (KAPPA_CI_REQUIRE_PERF=1)"; exit 1

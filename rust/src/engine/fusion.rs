@@ -51,6 +51,23 @@
 //! into its own per-request staging slab ([`FusedBatch::absorb_rows`],
 //! driven by `GenState::finish_dispatched`) — host-side row copies, no
 //! extra transfers, no re-upload.
+//!
+//! # Issue/await split and two-deep epochs
+//!
+//! The pod tick is split into an **issue** half ([`FusedBatch::issue`]
+//! / [`FusionHub::issue`]: launch one packed dispatch per occupied pod,
+//! tickets left in flight) and an **await** half
+//! ([`FusedBatch::await_ready`] / [`FusionHub::await_ready`]: complete
+//! tickets, download slabs, publish `(epoch, ran)` to leases). The
+//! synchronous [`FusionHub::flush`] is the two halves back-to-back per
+//! pod — the bit-identity oracle for the overlapped scheduler tick.
+//! Slab staging is double-buffered by epoch parity ([`StagingPair`]):
+//! a pod tolerates exactly **two** in-flight epochs (the outstanding
+//! ticket's plus the previous epoch's unabsorbed publishes); absorbing
+//! anything older, or issuing a third, fails loudly. All dispatch
+//! counters and fault checks are **issue-time**; only the slab-download
+//! site fires at await — so overlap and `--no-overlap` runs produce
+//! identical counter ledgers.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -58,7 +75,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::faults::FaultError;
-use crate::runtime::KvCache;
+use crate::runtime::{KvCache, PackedStep, StagingPair};
 
 use super::{Engine, MemTracker, SignalSet};
 
@@ -81,8 +98,14 @@ pub struct PodFault {
 impl PodFault {
     /// Classify a pod-operation failure: pull the injected fault site
     /// out of the error chain when there is one (`downcast_ref` on the
-    /// outermost error alone would miss wrapped faults).
+    /// outermost error alone would miss wrapped faults). An error that
+    /// already carries a [`PodFault`] — an await-half failure the pod
+    /// classified in place — is passed through unchanged, so the site
+    /// recorded at the failure point survives hub-level re-handling.
     fn classify(pod: u64, bucket: usize, default_site: &str, e: &anyhow::Error) -> PodFault {
+        if let Some(pf) = e.chain().find_map(|c| c.downcast_ref::<PodFault>()) {
+            return pf.clone();
+        }
         let site = e
             .chain()
             .find_map(|c| c.downcast_ref::<FaultError>())
@@ -163,6 +186,27 @@ struct Lease {
     ready: Option<(u64, SignalSet)>,
 }
 
+/// One issued-but-not-yet-published pod dispatch: the in-flight half
+/// of the issue/await split. Created by [`FusedBatch::issue`]; consumed
+/// by [`FusedBatch::await_ready`], which completes the ticket,
+/// downloads the slabs into the epoch's staging bank, and publishes
+/// `(epoch, ran)` to every surviving staged lease.
+struct PodInflight {
+    /// Epoch assigned at issue time (the pod's epoch after the bump).
+    epoch: u64,
+    /// Signal families this dispatch emits — fixed by the flavor chosen
+    /// at issue, so the publish needs no device round-trip to know it.
+    ran: SignalSet,
+    /// Ids of the leases whose staged rows ride in this dispatch (the
+    /// publish targets). A lease released mid-flight simply isn't found
+    /// at publish time — its rows are never read again.
+    staged_ids: Vec<u64>,
+    /// The in-flight execute ticket. `None` only in unit tests faking
+    /// an already-downloaded epoch, so the publish machinery is
+    /// exercisable offline (the stub refuses real executes).
+    step: Option<PackedStep>,
+}
+
 /// A shared per-bucket device residence (see module docs).
 pub struct FusedBatch {
     /// Stable pod id (memory-accounting component key).
@@ -171,16 +215,20 @@ pub struct FusedBatch {
     max_seq: usize,
     vocab: usize,
     cache: KvCache,
-    /// Shared `[bucket × vocab]` download staging + signal rows (the
-    /// signal rows are meaningful only for epochs whose dispatch emitted
-    /// that family — the per-lease `ready` set records what ran).
-    logits: Vec<f32>,
-    sig_kl: Vec<f32>,
-    sig_conf: Vec<f32>,
-    sig_ent: Vec<f32>,
-    /// Hidden-state tap rows, `[bucket × d_model]` (meaningful only for
-    /// epochs whose dispatch was a packed tapped superstep).
-    sig_tap: Vec<f32>,
+    /// Double-buffered `[bucket × vocab]` download staging + signal
+    /// rows, banked by epoch parity ([`StagingPair`]): epoch T's rows
+    /// stay readable in one bank while epoch T+1's dispatch downloads
+    /// into the other, which is exactly the depth the two-deep absorb
+    /// window needs. Signal rows are meaningful only for epochs whose
+    /// dispatch emitted that family — the per-lease `ready` set records
+    /// what ran.
+    logits: StagingPair<f32>,
+    sig_kl: StagingPair<f32>,
+    sig_conf: StagingPair<f32>,
+    sig_ent: StagingPair<f32>,
+    /// Hidden-state tap rows, `[bucket × d_model]` per bank (meaningful
+    /// only for epochs whose dispatch was a packed tapped superstep).
+    sig_tap: StagingPair<f32>,
     /// Row stride of `sig_tap` (the model's hidden width).
     d_model: usize,
     leases: Vec<Lease>,
@@ -205,10 +253,19 @@ pub struct FusedBatch {
     /// contained and retried individually. `release` deliberately never
     /// checks this — it runs from drop paths and must stay infallible.
     poison: Option<PodFault>,
+    /// The outstanding dispatch ticket while the pod is between
+    /// [`Self::issue`] and [`Self::await_ready`]. Ticket depth is
+    /// exactly **one**: the packed dispatch donates the pod k/v, so a
+    /// second issue before the first completes would pass
+    /// donation-stale handles — the *epoch* window is two-deep
+    /// (current ticket + previous epoch's unabsorbed publishes), the
+    /// ticket window is not.
+    inflight: Option<PodInflight>,
     // ---- dispatch assembly scratch (high-water mark, then reused) ----
     tokens_scratch: Vec<i32>,
     pos_scratch: Vec<i32>,
     fuse_idx: Vec<i32>,
+    ids_scratch: Vec<u64>,
 }
 
 /// Build the dispatch token/pos vectors for one pod tick. Pure so the
@@ -362,14 +419,21 @@ impl FusedBatch {
         self.leases.iter().map(|l| l.rows.len()).sum()
     }
 
-    /// No lease is mid-flight: nothing staged for a coming dispatch and
-    /// nothing dispatched but not yet absorbed. Compaction only runs on
-    /// quiescent pods — between ticks every pod is quiescent, so a
-    /// non-quiescent pod at a compaction site is a scheduler bug the
-    /// epoch bump would surface anyway; checking first keeps the rewrite
-    /// from ever racing a pending pull.
+    /// No lease is mid-flight: nothing staged for a coming dispatch,
+    /// nothing dispatched but not yet absorbed, and **no outstanding
+    /// ticket** — a fully-drained pod. Compaction and teardown only run
+    /// on quiescent pods — between ticks every pod is quiescent (the
+    /// overlapped tick ends with a hub drain), so a non-quiescent pod
+    /// at a compaction site is a scheduler bug the epoch bump would
+    /// surface anyway; checking first keeps the rewrite from ever
+    /// racing a pending pull or abandoning a must-await ticket.
     fn quiescent(&self) -> bool {
-        self.leases.iter().all(|l| !l.staged && l.ready.is_none())
+        self.inflight.is_none() && self.leases.iter().all(|l| !l.staged && l.ready.is_none())
+    }
+
+    /// Whether the pod has an issued-but-not-awaited dispatch ticket.
+    pub fn in_flight(&self) -> bool {
+        self.inflight.is_some()
     }
 
     /// Fill `idx` with the compaction gather plan for a `dst_bucket`-row
@@ -420,24 +484,68 @@ impl FusedBatch {
         }
         self.free.clear();
         self.free.extend(next..dst_bucket);
-        self.epoch += 1;
+        // Skip a full epoch *pair*: absorb tolerates a one-epoch-old
+        // pull (the two-deep window), so a +1 bump would let a pull
+        // staged before the rewrite read relocated rows. +2 pushes any
+        // pre-compaction epoch out of the window — stale pulls still
+        // fail loudly.
+        self.epoch += 2;
         self.low_ticks = 0;
-        self.logits.truncate(dst_bucket * self.vocab);
-        self.sig_kl.truncate(dst_bucket);
-        self.sig_conf.truncate(dst_bucket);
-        self.sig_ent.truncate(dst_bucket);
-        self.sig_tap.truncate(dst_bucket * self.d_model);
+        self.logits.truncate_both(dst_bucket * self.vocab);
+        self.sig_kl.truncate_both(dst_bucket);
+        self.sig_conf.truncate_both(dst_bucket);
+        self.sig_ent.truncate_both(dst_bucket);
+        self.sig_tap.truncate_both(dst_bucket * self.d_model);
     }
 
-    /// One packed dispatch for everything staged in this pod: packed
+    /// Two-deep issue guard, factored out so the boundary is
+    /// unit-testable offline: a pod may carry its current ticket's
+    /// epoch plus the previous epoch's unabsorbed publishes — issuing
+    /// while either (a) a ticket is still outstanding (the donated k/v
+    /// are stale until it completes) or (b) a lease still holds rows
+    /// from one epoch back (the bump would age them out of the absorb
+    /// window) would create a third in-flight epoch, and fails loudly.
+    fn check_issue_capacity(&self) -> Result<()> {
+        if let Some(fl) = &self.inflight {
+            bail!(
+                "fusion: pod {} issuing over an outstanding dispatch \
+                 (epoch {} not yet awaited)",
+                self.id,
+                fl.epoch
+            );
+        }
+        if let Some(l) =
+            self.leases.iter().find(|l| l.ready.is_some_and(|(e, _)| e < self.epoch))
+        {
+            let (e, _) = l.ready.unwrap();
+            bail!(
+                "fusion: pod {} issuing a third in-flight epoch — lease {} still holds \
+                 unabsorbed rows from epoch {e} while the pod is at epoch {}",
+                self.id,
+                l.id,
+                self.epoch
+            );
+        }
+        Ok(())
+    }
+
+    /// The **issue half** of the pod tick: assemble and launch one
+    /// packed dispatch for everything staged in this pod — packed
     /// tapped superstep when any participant wants the tap family (and
     /// the artifact set exports it for this bucket), packed superstep
-    /// when any participant is gating on the scalar family (signals ride
-    /// along for all rows), packed decode otherwise. The shared slab is
-    /// downloaded once into the pod staging; participants pull their
-    /// rows via [`Self::absorb_rows`]. Returns whether a dispatch was
-    /// issued.
-    pub fn flush(&mut self, engine: &Engine) -> Result<bool> {
+    /// when any participant is gating on the scalar family (signals
+    /// ride along for all rows), packed decode otherwise. Returns
+    /// whether a dispatch went in flight.
+    ///
+    /// All issue-time bookkeeping happens here: the epoch bump, the
+    /// staged→in-flight transition, and (inside the model's
+    /// `*_packed_issue`) the pre-issue fault check and the dispatch
+    /// counter. An issue failure leaves the pod's staged state and
+    /// epoch untouched — containment (poison + teardown) is the hub's
+    /// job. The outputs are published by [`Self::await_ready`];
+    /// holding several pods' tickets concurrently is what overlaps
+    /// independent buckets' dispatches on separate device streams.
+    pub fn issue(&mut self, engine: &Engine) -> Result<bool> {
         let pad = crate::tokenizer::PAD_ID as i32;
         let mut tokens = std::mem::take(&mut self.tokens_scratch);
         let mut pos = std::mem::take(&mut self.pos_scratch);
@@ -446,59 +554,110 @@ impl FusedBatch {
         let result = if !any {
             Ok(false)
         } else {
-            let model = engine.model();
-            // What a dispatch *emits* can exceed what a given lease
-            // asked for (union semantics) and can fall short of the
-            // union request (tap wanted, tapped packed artifact absent —
-            // degrade to the scalar superstep). `ready` records what
-            // actually ran; each lease masks it against its own request.
-            let run = if wanted.tap && model.has_tap_packed(self.bucket) {
-                model
-                    .superstep_tap_packed_into(
-                        &tokens,
-                        &pos,
-                        &mut self.cache,
-                        &mut self.logits,
-                        &mut self.sig_kl,
-                        &mut self.sig_conf,
-                        &mut self.sig_ent,
-                        &mut self.sig_tap,
-                    )
-                    .map(|()| SignalSet::ALL)
-            } else if wanted.any() {
-                model
-                    .superstep_packed_into(
-                        &tokens,
-                        &pos,
-                        &mut self.cache,
-                        &mut self.logits,
-                        &mut self.sig_kl,
-                        &mut self.sig_conf,
-                        &mut self.sig_ent,
-                    )
-                    .map(|()| SignalSet::SCALARS)
-            } else {
-                model
-                    .decode_packed_into(&tokens, &pos, &mut self.cache, &mut self.logits)
-                    .map(|()| SignalSet::NONE)
-            };
-            run.map(|ran| {
-                self.epoch += 1;
-                for lease in self.leases.iter_mut() {
-                    if lease.staged {
-                        lease.staged = false;
-                        lease.ready = Some((self.epoch, ran));
-                        // The dispatch wrote this row set's KV at `pos`;
-                        // the next (possibly silent) write slot is past it.
-                        lease.pos += 1;
+            self.check_issue_capacity().and_then(|()| {
+                let model = engine.model();
+                // What a dispatch *emits* can exceed what a given lease
+                // asked for (union semantics) and can fall short of the
+                // union request (tap wanted, tapped packed artifact
+                // absent — degrade to the scalar superstep). The flavor
+                // fixes `ran` at issue; each lease masks the published
+                // set against its own request at absorb.
+                let run = if wanted.tap && model.has_tap_packed(self.bucket) {
+                    model
+                        .superstep_tap_packed_issue(&tokens, &pos, &self.cache)
+                        .map(|s| (s, SignalSet::ALL))
+                } else if wanted.any() {
+                    model
+                        .superstep_packed_issue(&tokens, &pos, &self.cache)
+                        .map(|s| (s, SignalSet::SCALARS))
+                } else {
+                    model
+                        .decode_packed_issue(&tokens, &pos, &self.cache)
+                        .map(|s| (s, SignalSet::NONE))
+                };
+                run.map(|(step, ran)| {
+                    self.epoch += 1;
+                    let mut staged_ids = std::mem::take(&mut self.ids_scratch);
+                    staged_ids.clear();
+                    for lease in self.leases.iter_mut() {
+                        if lease.staged {
+                            lease.staged = false;
+                            staged_ids.push(lease.id);
+                        }
                     }
-                }
-                true
+                    self.inflight = Some(PodInflight {
+                        epoch: self.epoch,
+                        ran,
+                        staged_ids,
+                        step: Some(step),
+                    });
+                    true
+                })
             })
         };
         self.tokens_scratch = tokens;
         self.pos_scratch = pos;
         result
+    }
+
+    /// The **await half**: complete the outstanding ticket (blocking on
+    /// the device event), download the shared slabs into the epoch's
+    /// parity staging bank, and publish `(epoch, ran)` plus the
+    /// post-write position to every surviving staged lease. A no-op
+    /// returning `Ok(false)` when nothing is in flight, so hub-wide
+    /// drains are idempotent.
+    ///
+    /// A completion failure poisons the pod in place (classified as a
+    /// [`PodFault`], which is also the error returned) — the donated
+    /// k/v are unrecoverable, so every lease must fail-and-retry; the
+    /// hub sweeps poisoned pods out at its next drain. No counter moves
+    /// here except the slab-download site inside
+    /// [`PackedStep::complete`] — dispatch counting is issue-time only.
+    pub fn await_ready(&mut self) -> Result<bool> {
+        let Some(fl) = self.inflight.take() else {
+            return Ok(false);
+        };
+        let PodInflight { epoch, ran, mut staged_ids, step } = fl;
+        if let Some(step) = step {
+            let want_signals = step.has_signals();
+            let want_tap = step.has_tap();
+            let FusedBatch { cache, logits, sig_kl, sig_conf, sig_ent, sig_tap, .. } = self;
+            let signals_out = want_signals.then(|| {
+                (sig_kl.bank_mut(epoch), sig_conf.bank_mut(epoch), sig_ent.bank_mut(epoch))
+            });
+            let tap_out = want_tap.then(|| sig_tap.bank_mut(epoch));
+            if let Err(e) = step.complete(cache, logits.bank_mut(epoch), signals_out, tap_out) {
+                let fault = PodFault::classify(self.id, self.bucket, "dispatch", &e);
+                self.poison = Some(fault.clone());
+                return Err(anyhow::Error::new(fault));
+            }
+        }
+        for lease in self.leases.iter_mut() {
+            if staged_ids.contains(&lease.id) {
+                lease.ready = Some((epoch, ran));
+                // The dispatch wrote this row set's KV at `pos`; the
+                // next (possibly silent) write slot is past it.
+                lease.pos += 1;
+            }
+        }
+        staged_ids.clear();
+        self.ids_scratch = staged_ids;
+        Ok(true)
+    }
+
+    /// One packed dispatch for everything staged in this pod, issued
+    /// and awaited back-to-back — the **synchronous oracle**:
+    /// [`Self::issue`] immediately followed by [`Self::await_ready`],
+    /// a zero-length in-flight window. The shared slab is downloaded
+    /// once into the pod staging; participants pull their rows via
+    /// [`Self::absorb_rows`]. Returns whether a dispatch was issued.
+    pub fn flush(&mut self, engine: &Engine) -> Result<bool> {
+        if self.issue(engine)? {
+            self.await_ready()?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
     }
 
     /// Whether any lease has rows staged for the next flush (the
@@ -510,12 +669,23 @@ impl FusedBatch {
         self.leases.iter().any(|l| l.staged)
     }
 
-    /// Pull a request's rows of the last dispatch into its own staging
-    /// buffers (slot order). Returns the signal families that rode along
-    /// (the dispatch's union emission — callers mask it against what
-    /// they asked for). Fails loudly when the pod never dispatched for
-    /// this lease or a newer dispatch has since overwritten the slab —
-    /// both scheduler bugs, not recoverable states.
+    /// Pull a request's rows of its serving dispatch into its own
+    /// staging buffers (slot order). Returns the signal families that
+    /// rode along (the dispatch's union emission — callers mask it
+    /// against what they asked for).
+    ///
+    /// **Demand-driven await**: when the lease's rows ride in the
+    /// still-outstanding ticket, the pull completes it first — so under
+    /// the overlapped tick the first absorbing request of a pod pays
+    /// the await while every other pod's dispatch keeps running, and
+    /// later absorbs of the same epoch are pure host-side row copies.
+    ///
+    /// **Two-deep epoch window**: a pull is valid for the pod's current
+    /// epoch *or* the one before it (whose parity staging bank is still
+    /// intact — the next dispatch downloads into the other bank).
+    /// Anything older fails loudly, naming both epochs: the pod never
+    /// dispatched for this lease, or two newer dispatches have since
+    /// recycled the slab — both scheduler bugs, not recoverable states.
     pub fn absorb_rows(
         &mut self,
         id: u64,
@@ -529,36 +699,49 @@ impl FusedBatch {
             return Err(anyhow::Error::new(fault.clone()));
         }
         let li = self.lease_index(id)?;
+        if self.leases[li].ready.is_none()
+            && self.inflight.as_ref().is_some_and(|fl| fl.staged_ids.contains(&id))
+        {
+            self.await_ready()?;
+        }
         let Some((epoch, ran)) = self.leases[li].ready else {
             bail!("fusion: absorb before the pod dispatched this lease's staged rows");
         };
-        if epoch != self.epoch {
-            bail!("fusion: lease {id} absorbing rows from a stale pod dispatch");
+        if epoch != self.epoch && epoch + 1 != self.epoch {
+            bail!(
+                "fusion: lease {id} absorbing rows from a stale pod dispatch \
+                 (lease ready epoch {epoch}, pod epoch {} — the two-deep window is gone)",
+                self.epoch
+            );
         }
         let v = self.vocab;
         let rows = &self.leases[li].rows;
         if logits_out.len() != rows.len() * v {
             bail!("fusion: absorb buffer holds {} values for {} rows", logits_out.len(), rows.len());
         }
+        let logits = self.logits.bank(epoch);
         for (slot, &r) in rows.iter().enumerate() {
-            logits_out[slot * v..(slot + 1) * v].copy_from_slice(&self.logits[r * v..(r + 1) * v]);
+            logits_out[slot * v..(slot + 1) * v].copy_from_slice(&logits[r * v..(r + 1) * v]);
         }
         if ran.scalars {
+            let (kl, conf, ent) =
+                (self.sig_kl.bank(epoch), self.sig_conf.bank(epoch), self.sig_ent.bank(epoch));
             kl_out.clear();
             conf_out.clear();
             ent_out.clear();
             for &r in rows.iter() {
-                kl_out.push(self.sig_kl[r]);
-                conf_out.push(self.sig_conf[r]);
-                ent_out.push(self.sig_ent[r]);
+                kl_out.push(kl[r]);
+                conf_out.push(conf[r]);
+                ent_out.push(ent[r]);
             }
         }
         if ran.tap {
             let d = self.d_model;
+            let tap = self.sig_tap.bank(epoch);
             tap_out.clear();
             tap_out.reserve(rows.len() * d);
             for &r in rows.iter() {
-                tap_out.extend_from_slice(&self.sig_tap[r * d..(r + 1) * d]);
+                tap_out.extend_from_slice(&tap[r * d..(r + 1) * d]);
             }
         }
         self.leases[li].ready = None;
@@ -676,8 +859,15 @@ impl FusionHub {
         inner.reaccount_pods(&engine.model().config);
 
         let model = engine.model();
-        // First fit (deterministic: pods in open order, lowest free rows).
-        let candidate = inner.pods.iter().position(|p| p.borrow().free.len() >= n);
+        // First fit (deterministic: pods in open order, lowest free
+        // rows). Pods with an outstanding dispatch ticket are skipped:
+        // admission donates (fork) or replaces (fuse) the pod cache,
+        // which must never race an in-flight execute — between ticks
+        // no pod is in flight, so this only bites a mid-tick caller.
+        let candidate = inner
+            .pods
+            .iter()
+            .position(|p| p.borrow().free.len() >= n && !p.borrow().in_flight());
         if let Some(pi) = candidate {
             let pod_rc = Rc::clone(&inner.pods[pi]);
             let mut pod = pod_rc.borrow_mut();
@@ -770,11 +960,11 @@ impl FusionHub {
             max_seq: cfg.max_seq,
             vocab: cfg.vocab,
             cache,
-            logits: Vec::new(),
-            sig_kl: Vec::new(),
-            sig_conf: Vec::new(),
-            sig_ent: Vec::new(),
-            sig_tap: Vec::new(),
+            logits: StagingPair::new(),
+            sig_kl: StagingPair::new(),
+            sig_conf: StagingPair::new(),
+            sig_ent: StagingPair::new(),
+            sig_tap: StagingPair::new(),
             d_model: cfg.d_model,
             leases: vec![Lease {
                 id: 0,
@@ -791,9 +981,11 @@ impl FusionHub {
             epoch: 0,
             low_ticks: 0,
             poison: None,
+            inflight: None,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
+            ids_scratch: Vec::new(),
         };
         // Charged at the discounted value from the start — a shared-
         // prefix admission must never spike the tracker to the full
@@ -804,23 +996,19 @@ impl FusionHub {
         Ok((rc, 0))
     }
 
-    /// One fused tick: exactly one packed dispatch per pod with staged
-    /// work. Called by the scheduler between the plan and absorb
-    /// phases. Pods that emptied since the last tick are retired first
-    /// (their device cache freed and their accounting zeroed) — so an
-    /// idle wave's pod lingers at most until the next flush or
-    /// placement.
-    ///
-    /// A pod whose dispatch fails is **contained**, not propagated: the
-    /// pod is poisoned with the failure (as a [`PodFault`]), dropped
-    /// from the hub, and its physical accounting is released — other
-    /// pods' dispatches proceed untouched. The poisoned pod's `Rc` stays
-    /// alive through its leases; each leasing request's next
-    /// `stage`/`absorb_rows` surfaces the `PodFault` so the scheduler
-    /// fails (and retries) exactly the requests in the failing pod.
-    /// `Err` from here therefore means hub-level infrastructure trouble,
-    /// never a single pod's dispatch.
-    pub fn flush(&self, engine: &Engine) -> Result<()> {
+    /// Shared per-tick dispatch loop behind [`Self::flush`] (sync:
+    /// issue+await per pod, serially) and [`Self::issue`] (overlapped:
+    /// issue only, awaits deferred). All tick-level bookkeeping is
+    /// **issue-time** and identical between the two: occupancy is
+    /// measured before dispatching, `flushes`/`occupied_pod_ticks` move
+    /// once per tick, and the compaction streak samples once per pod —
+    /// so the counter ledgers of an overlapped run and a `--no-overlap`
+    /// run line up exactly.
+    fn dispatch_tick(
+        &self,
+        engine: &Engine,
+        mut dispatch: impl FnMut(&mut FusedBatch, &Engine) -> Result<bool>,
+    ) -> Result<()> {
         let mut inner = self.inner.borrow_mut();
         inner.retire_empty_pods();
         inner.reaccount_pods(&engine.model().config);
@@ -833,7 +1021,7 @@ impl FusionHub {
         let mut failed: Vec<usize> = Vec::new();
         for (i, pod_rc) in pods.iter().enumerate() {
             let mut pod = pod_rc.borrow_mut();
-            if let Err(e) = pod.flush(engine) {
+            if let Err(e) = dispatch(&mut pod, engine) {
                 let fault = PodFault::classify(pod.id, pod.bucket, "dispatch", &e);
                 pod.poison = Some(fault);
                 stats.pod_faults += 1;
@@ -864,6 +1052,71 @@ impl FusionHub {
             } else {
                 p.low_ticks = 0;
             }
+        }
+        Ok(())
+    }
+
+    /// One fused tick, synchronous: exactly one packed dispatch per pod
+    /// with staged work, each issued and awaited back-to-back — the
+    /// bit-identity oracle for the overlapped path. Called by the
+    /// scheduler between the plan and absorb phases. Pods that emptied
+    /// since the last tick are retired first (their device cache freed
+    /// and their accounting zeroed) — so an idle wave's pod lingers at
+    /// most until the next flush or placement.
+    ///
+    /// A pod whose dispatch fails is **contained**, not propagated: the
+    /// pod is poisoned with the failure (as a [`PodFault`]), dropped
+    /// from the hub, and its physical accounting is released — other
+    /// pods' dispatches proceed untouched. The poisoned pod's `Rc` stays
+    /// alive through its leases; each leasing request's next
+    /// `stage`/`absorb_rows` surfaces the `PodFault` so the scheduler
+    /// fails (and retries) exactly the requests in the failing pod.
+    /// `Err` from here therefore means hub-level infrastructure trouble,
+    /// never a single pod's dispatch.
+    pub fn flush(&self, engine: &Engine) -> Result<()> {
+        self.dispatch_tick(engine, |pod, engine| pod.flush(engine))
+    }
+
+    /// The **issue half** of the overlapped tick: launch one packed
+    /// dispatch per occupied pod and return with every ticket still in
+    /// flight — independent buckets' dispatches run concurrently on
+    /// separate device streams while the host proceeds to the absorb
+    /// phase. Same containment and same issue-time bookkeeping as
+    /// [`Self::flush`]; the awaits happen demand-driven inside
+    /// [`FusedBatch::absorb_rows`] and are finished off by
+    /// [`Self::await_ready`] at the end of the tick.
+    pub fn issue(&self, engine: &Engine) -> Result<()> {
+        self.dispatch_tick(engine, |pod, engine| pod.issue(engine))
+    }
+
+    /// The **await half** / end-of-tick drain: complete every still
+    /// outstanding ticket (most were already demand-awaited during the
+    /// absorb phase) and sweep out pods that a failed await poisoned —
+    /// the same teardown (poison + stats + accounting release) a failed
+    /// sync dispatch gets in [`Self::flush`]. After this returns no pod
+    /// holds a ticket, which is the quiescence compaction, admission,
+    /// eviction drains, and teardown rely on. Idempotent; `Err` means
+    /// hub-level trouble, never one pod's dispatch.
+    pub fn await_ready(&self) -> Result<()> {
+        let mut inner = self.inner.borrow_mut();
+        let HubInner { pods, mem, stats, .. } = &mut *inner;
+        let mut failed: Vec<usize> = Vec::new();
+        for (i, pod_rc) in pods.iter().enumerate() {
+            let mut pod = pod_rc.borrow_mut();
+            let already_poisoned = pod.poison.is_some();
+            let awaited = pod.await_ready();
+            if awaited.is_err() || already_poisoned {
+                // A demand-await during the absorb phase may have
+                // poisoned the pod already; either way the teardown
+                // (stats + accounting + removal) lands exactly once,
+                // here.
+                stats.pod_faults += 1;
+                mem.remove_component(&format!("pod{}", pod.id));
+                failed.push(i);
+            }
+        }
+        for &i in failed.iter().rev() {
+            pods.remove(i);
         }
         Ok(())
     }
@@ -978,7 +1231,10 @@ impl FusionHub {
     /// the subsequent placement surfaces them properly.
     pub fn placement_overhead(&self, engine: &Engine, n: usize) -> usize {
         let inner = self.inner.borrow();
-        if inner.pods.iter().any(|p| p.borrow().free_rows() >= n) {
+        if inner.pods.iter().any(|p| {
+            let p = p.borrow();
+            p.free_rows() >= n && !p.in_flight()
+        }) {
             return 0;
         }
         let model = engine.model();
@@ -1041,7 +1297,11 @@ impl HubInner {
         let mem = &mut self.mem;
         self.pods.retain(|pod| {
             let p = pod.borrow();
-            if p.leases.is_empty() {
+            // A pod with an outstanding ticket is never torn down, even
+            // lease-less (every lease dropped mid-flight): the ticket
+            // is must-await — the end-of-tick drain completes it, and
+            // the next hub operation retires the pod.
+            if p.leases.is_empty() && !p.in_flight() {
                 // Remove the component outright: pod ids are monotonic,
                 // so a zeroed-but-retained entry per retired pod (the
                 // pre-PR 5 behavior) grew the component map — and its
@@ -1156,11 +1416,11 @@ mod tests {
             max_seq: 224,
             vocab: 4,
             cache: KvCache { k, v, bucket },
-            logits: vec![0.0; bucket * 4],
-            sig_kl: vec![0.0; bucket],
-            sig_conf: vec![0.0; bucket],
-            sig_ent: vec![0.0; bucket],
-            sig_tap: vec![0.0; bucket * 2],
+            logits: StagingPair::new(),
+            sig_kl: StagingPair::new(),
+            sig_conf: StagingPair::new(),
+            sig_ent: StagingPair::new(),
+            sig_tap: StagingPair::new(),
             d_model: 2,
             leases: Vec::new(),
             free: (0..bucket).collect(),
@@ -1168,9 +1428,46 @@ mod tests {
             epoch: 0,
             low_ticks: 0,
             poison: None,
+            inflight: None,
             tokens_scratch: Vec::new(),
             pos_scratch: Vec::new(),
             fuse_idx: Vec::new(),
+            ids_scratch: Vec::new(),
+        }
+    }
+
+    /// Fill one epoch's staging bank with recognizable values: slab row
+    /// r holds `base + r` in every vocab column, the scalar signal rows
+    /// hold `10/20/30 + r`, and the tap row (d_model = 2) holds
+    /// `100 + 2r, 101 + 2r`.
+    fn fill_bank(pod: &mut FusedBatch, epoch: u64, base: f32) {
+        let b = pod.bucket;
+        let (lg, kl, conf, ent, tap) = (
+            pod.logits.bank_mut(epoch),
+            pod.sig_kl.bank_mut(epoch),
+            pod.sig_conf.bank_mut(epoch),
+            pod.sig_ent.bank_mut(epoch),
+            pod.sig_tap.bank_mut(epoch),
+        );
+        lg.clear();
+        lg.resize(b * 4, 0.0);
+        kl.clear();
+        kl.resize(b, 0.0);
+        conf.clear();
+        conf.resize(b, 0.0);
+        ent.clear();
+        ent.resize(b, 0.0);
+        tap.clear();
+        tap.resize(b * 2, 0.0);
+        for r in 0..b {
+            for c in 0..4 {
+                lg[r * 4 + c] = base + r as f32;
+            }
+            kl[r] = 10.0 + r as f32;
+            conf[r] = 20.0 + r as f32;
+            ent[r] = 30.0 + r as f32;
+            tap[r * 2] = 100.0 + 2.0 * r as f32;
+            tap[r * 2 + 1] = 101.0 + 2.0 * r as f32;
         }
     }
 
@@ -1241,9 +1538,13 @@ mod tests {
         pod.leases.push(lease(0, vec![6, 1, 4], 5));
         pod.leases.push(lease(1, vec![0, 2], 9));
         pod.epoch = 11;
+        fill_bank(&mut pod, 10, 0.0);
+        fill_bank(&mut pod, 11, 0.0);
         // A lease that (buggily) still holds an unabsorbed dispatch:
         // the epoch bump must make its pull fail loudly after the
-        // rewrite.
+        // rewrite — which is why compaction skips a full epoch *pair*
+        // (+2): a +1 bump would leave epoch 11 inside the two-deep
+        // absorb window.
         pod.leases[1].ready = Some((11, SignalSet::NONE));
 
         pod.install_compacted(offline_cache(6), 6);
@@ -1253,12 +1554,14 @@ mod tests {
         assert_eq!(pod.lease_rows(1).unwrap(), &[3, 4]);
         assert_eq!(pod.free, vec![5]);
         assert_eq!(pod.bucket(), 6);
-        assert_eq!(pod.epoch, 12);
-        // The shared staging slabs shrink with the bucket — the tap slab
-        // by its d_model row stride.
-        assert_eq!(pod.logits.len(), 6 * 4);
-        assert_eq!(pod.sig_kl.len(), 6);
-        assert_eq!(pod.sig_tap.len(), 6 * 2);
+        assert_eq!(pod.epoch, 13);
+        // Both staging banks shrink with the bucket — the tap slab by
+        // its d_model row stride.
+        for e in [10, 11] {
+            assert_eq!(pod.logits.bank(e).len(), 6 * 4);
+            assert_eq!(pod.sig_kl.bank(e).len(), 6);
+            assert_eq!(pod.sig_tap.bank(e).len(), 6 * 2);
+        }
 
         let mut lg = vec![0.0; 2 * 4];
         let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
@@ -1390,18 +1693,10 @@ mod tests {
         let mut pod = offline_pod(8);
         pod.free.clear();
         pod.leases.push(lease(0, vec![6, 1, 4], 5));
-        // Pretend a dispatch landed: slab row r holds [r, r, r, r]; the
-        // tap slab (d_model = 2) holds [100 + 2r, 101 + 2r] at row r.
-        for r in 0..8 {
-            for c in 0..4 {
-                pod.logits[r * 4 + c] = r as f32;
-            }
-            pod.sig_kl[r] = 10.0 + r as f32;
-            pod.sig_conf[r] = 20.0 + r as f32;
-            pod.sig_ent[r] = 30.0 + r as f32;
-            pod.sig_tap[r * 2] = 100.0 + 2.0 * r as f32;
-            pod.sig_tap[r * 2 + 1] = 101.0 + 2.0 * r as f32;
-        }
+        // Pretend a dispatch landed for epoch 3: slab row r holds
+        // [r, r, r, r]; the tap slab (d_model = 2) holds
+        // [100 + 2r, 101 + 2r] at row r.
+        fill_bank(&mut pod, 3, 0.0);
         pod.epoch = 3;
         pod.leases[0].ready = Some((3, SignalSet::ALL));
 
@@ -1427,10 +1722,141 @@ mod tests {
         let ran = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap();
         assert_eq!(ran, SignalSet::SCALARS);
         assert_eq!(tap, before);
+    }
 
-        // A stale epoch (pod dispatched again before the pull) fails.
+    #[test]
+    fn absorb_accepts_the_previous_epoch_and_rejects_older() {
+        // The two-deep window: with the pod at epoch 3, a pull for
+        // epoch 2 (one behind — the other parity bank still holds its
+        // rows) is valid; epoch 1 is two behind and must fail loudly,
+        // naming both epochs so two-deep bugs are diagnosable.
+        let mut pod = offline_pod(8);
+        pod.free.clear();
+        pod.leases.push(lease(0, vec![6, 1, 4], 5));
+        fill_bank(&mut pod, 3, 50.0); // current epoch's bank
+        fill_bank(&mut pod, 2, 0.0); // previous epoch's bank (other parity)
+        pod.epoch = 3;
+
+        // Two in flight: accept, and read the *previous* parity bank.
         pod.leases[0].ready = Some((2, SignalSet::NONE));
-        assert!(pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).is_err());
+        let mut lg = vec![0.0; 3 * 4];
+        let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap();
+        assert_eq!(&lg[..4], &[6.0; 4], "epoch-2 pull must read the epoch-2 bank, not epoch 3's");
+
+        // Three in flight: reject, with both epochs in the message.
+        pod.leases[0].ready = Some((1, SignalSet::NONE));
+        let err = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stale"), "{msg}");
+        assert!(msg.contains("lease ready epoch 1"), "{msg}");
+        assert!(msg.contains("pod epoch 3"), "{msg}");
+    }
+
+    #[test]
+    fn await_ready_publishes_the_issued_epoch_and_advances_positions() {
+        // The publish half, exercised offline via a faked in-flight
+        // entry (step = None: the "download" is pre-filled). Staged
+        // leases named by the ticket get `(epoch, ran)` + the post-write
+        // position; a lease released mid-flight is simply skipped.
+        let mut pod = offline_pod(8);
+        pod.free.clear();
+        pod.leases.push(lease(0, vec![6, 1, 4], 5));
+        pod.leases.push(lease(1, vec![0, 2], 9));
+        pod.epoch = 4;
+        fill_bank(&mut pod, 4, 0.0);
+        pod.inflight = Some(PodInflight {
+            epoch: 4,
+            ran: SignalSet::SCALARS,
+            staged_ids: vec![0, 7], // 7: released before the await
+            step: None,
+        });
+
+        assert!(pod.await_ready().unwrap());
+        assert_eq!(pod.leases[0].ready, Some((4, SignalSet::SCALARS)));
+        assert_eq!(pod.leases[0].pos, 6, "publish advances past the written slot");
+        assert_eq!(pod.leases[1].ready, None, "un-staged lease must not be published");
+        assert_eq!(pod.leases[1].pos, 9);
+        assert!(!pod.in_flight());
+
+        // Idempotent: nothing in flight is a clean no-op (hub drains
+        // run unconditionally at the end of every overlapped tick).
+        assert!(!pod.await_ready().unwrap());
+
+        let mut lg = vec![0.0; 3 * 4];
+        let (mut kl, mut conf, mut ent, mut tap) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let ran = pod.absorb_rows(0, &mut lg, &mut kl, &mut conf, &mut ent, &mut tap).unwrap();
+        assert_eq!(ran, SignalSet::SCALARS);
+        assert_eq!(&lg[..4], &[6.0; 4]);
+    }
+
+    #[test]
+    fn issue_capacity_allows_two_in_flight_epochs_and_rejects_a_third() {
+        let mut pod = offline_pod(4);
+        pod.free.clear();
+        pod.leases.push(lease(0, vec![0, 1], 5));
+        pod.leases.push(lease(1, vec![2, 3], 5));
+        pod.epoch = 6;
+
+        // Fresh pod: issuing is fine.
+        pod.check_issue_capacity().unwrap();
+
+        // A lease still absorbing the *current* epoch is within the
+        // window — the bump leaves it one behind, still readable.
+        pod.leases[0].ready = Some((6, SignalSet::NONE));
+        pod.check_issue_capacity().unwrap();
+
+        // A lease one epoch behind would age out of the window on the
+        // next bump: a third in-flight epoch, rejected loudly.
+        pod.leases[0].ready = Some((5, SignalSet::NONE));
+        let err = pod.check_issue_capacity().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("third in-flight epoch"), "{msg}");
+        assert!(msg.contains("epoch 5"), "{msg}");
+        assert!(msg.contains("at epoch 6"), "{msg}");
+
+        // An outstanding ticket blocks a second issue outright (the
+        // donated k/v are stale until it completes).
+        pod.leases[0].ready = None;
+        pod.inflight = Some(PodInflight {
+            epoch: 6,
+            ran: SignalSet::NONE,
+            staged_ids: vec![0],
+            step: None,
+        });
+        let err = pod.check_issue_capacity().unwrap_err();
+        assert!(format!("{err:#}").contains("outstanding dispatch"), "{err:#}");
+        assert!(!pod.quiescent(), "an in-flight pod is never quiescent (no compaction/teardown)");
+    }
+
+    #[test]
+    fn retire_empty_pods_keeps_in_flight_pods_until_drained() {
+        // A pod whose every lease dropped mid-flight still holds a
+        // must-await ticket: retirement must wait for the drain.
+        let mut inner = HubInner {
+            cfg: FuseConfig::default(),
+            pods: Vec::new(),
+            mem: MemTracker::new(),
+            next_pod: 1,
+            stats: FuseStats::default(),
+        };
+        let mut pod = offline_pod(4);
+        pod.inflight = Some(PodInflight {
+            epoch: 1,
+            ran: SignalSet::NONE,
+            staged_ids: vec![0],
+            step: None,
+        });
+        inner.mem.set_component("pod0", 4096);
+        inner.pods.push(Rc::new(RefCell::new(pod)));
+
+        inner.retire_empty_pods();
+        assert_eq!(inner.pods.len(), 1, "in-flight pod must survive retirement");
+
+        inner.pods[0].borrow_mut().await_ready().unwrap();
+        inner.retire_empty_pods();
+        assert!(inner.pods.is_empty(), "drained empty pod retires at the next hub op");
+        assert_eq!(inner.mem.current(), 0);
     }
 
     #[test]

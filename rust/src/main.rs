@@ -53,6 +53,14 @@ USAGE:
   kappa serve    [--model sm] [--method kl] [--n 5] [--workers 1]
                  [--requests 20] [--dataset gsm]
                  [--max-inflight 4] [--slot-budget 32] [--mem-budget-mb 0] [--no-fuse]
+                 [--no-overlap]  (disable the software-pipelined scheduler
+                                tick: packed dispatches are issued and awaited
+                                back-to-back instead of overlapping the await
+                                with other pods' work. The default overlapped
+                                tick is bit-identical in outputs, metrics and
+                                counters — this is the oracle to diff against;
+                                the `pipeline_overlap` section of
+                                BENCH_serve.json pins the speedup)
                  [--prefix-share]  (prefill once per unique prompt prefix and
                                 share its KV copy-on-write across co-resident
                                 requests; outputs stay bit-identical)
@@ -240,6 +248,7 @@ fn serve(args: &Args) -> Result<()> {
         quarantine_cooldown: args.u64_or("quarantine-cooldown", d.quarantine_cooldown),
         deadline_ms: args.u64_or("deadline-ms", d.deadline_ms),
         prefix_share: args.bool_or("prefix-share", false),
+        overlap: !args.bool_or("no-overlap", false),
         // `--scorer` on the serve command travels as a pool-level
         // override so the scheduler owns the effective signal family
         // (cfg.kappa.scorer already parsed the same flag; the override
@@ -255,10 +264,11 @@ fn serve(args: &Args) -> Result<()> {
     let fault_plan = args.get("fault-plan").map(str::to_string);
     eprintln!(
         "[serve] booting {workers} worker(s) for model {model} \
-         (≤{} in flight, {} slots, fusion {}, scorer {}, prefix share {}, preemption {}{}) …",
+         (≤{} in flight, {} slots, fusion {}, overlap {}, scorer {}, prefix share {}, preemption {}{}) …",
         sched.max_inflight,
         sched.slot_budget,
         if sched.fuse { "on" } else { "off" },
+        if sched.overlap { "on" } else { "off" },
         sched.scorer.unwrap_or(cfg.kappa.scorer).name(),
         if sched.prefix_share { "on" } else { "off" },
         if sched.preempt == PreemptPolicy::EvictYoungest { "evict-youngest" } else { "off" },

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -56,6 +56,13 @@ pub struct Runtime {
     /// `prefix_sharing` section asserts it against the per-request
     /// baseline.
     prefill_dispatches: AtomicUsize,
+    /// Nanoseconds the device spent busy on decode-family executions —
+    /// accumulated around the blocking execute on the synchronous path
+    /// and across each ticket's issue→ready span on the async path. The
+    /// pipeline-overlap bench derives its device-idle fraction from this
+    /// (`1 − busy/wall`): overlap must push idle strictly *down* at
+    /// equal work, which no throughput number alone can witness.
+    device_busy_ns: AtomicU64,
     /// Optional injected-fault plan (`runtime::faults`). Checked at
     /// every execute/download site *before* the dispatch runs or its
     /// counter moves, so an injected fault is indistinguishable from a
@@ -78,6 +85,7 @@ impl Runtime {
             decode_dispatches: AtomicUsize::new(0),
             compact_dispatches: AtomicUsize::new(0),
             prefill_dispatches: AtomicUsize::new(0),
+            device_busy_ns: AtomicU64::new(0),
             faults: std::sync::RwLock::new(None),
         })
     }
@@ -208,6 +216,30 @@ impl Runtime {
         self.prefill_dispatches.load(Ordering::Relaxed)
     }
 
+    /// Credit `ns` nanoseconds of device-busy time (one execution's
+    /// issue→complete span). Saturating: a pathological span must clamp,
+    /// not wrap the accumulator back toward "idle".
+    pub fn note_device_busy(&self, ns: u64) {
+        let mut cur = self.device_busy_ns.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(ns);
+            match self.device_busy_ns.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Accumulated device-busy nanoseconds (see [`Self::note_device_busy`]).
+    pub fn device_busy_ns(&self) -> u64 {
+        self.device_busy_ns.load(Ordering::Relaxed)
+    }
+
     // ---- host → device helpers ----
 
     pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
@@ -248,6 +280,52 @@ impl Runtime {
     pub fn to_host_f32_into(&self, buf: &PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
         self.downloads.fetch_add(1, Ordering::Relaxed);
         buf.copy_into(out).context("device→host copy")
+    }
+}
+
+/// Double-buffered caller-owned staging for pipelined downloads: two
+/// host banks keyed by **epoch parity**, so the consumer can still be
+/// reading epoch T's slab (`bank(T)`) while epoch T+1's download lands
+/// in the other bank (`bank_mut(T + 1)`).
+///
+/// Two banks are exactly enough because the dispatch pipeline is
+/// two-deep by construction (a pod holds at most two in-flight epochs —
+/// see `engine::fusion`): epochs T and T+1 map to different parities,
+/// and by the time epoch T+2 reuses T's bank, T has been absorbed or
+/// the two-deep cap would have refused the issue. On real hardware each
+/// bank is a persistent pinned staging allocation handed to
+/// `PJRT_Buffer_ToHostBuffer`; like [`Runtime::to_host_f32_into`]'s
+/// single-buffer contract, a bank at its high-water mark is
+/// re-filled with zero host allocations.
+#[derive(Debug, Default)]
+pub struct StagingPair<T> {
+    banks: [Vec<T>; 2],
+}
+
+impl<T> StagingPair<T> {
+    pub fn new() -> StagingPair<T> {
+        StagingPair { banks: [Vec::new(), Vec::new()] }
+    }
+
+    /// The bank epoch `epoch`'s download lands in (and is later read
+    /// from) — parity-stable, so issue and absorb agree without sharing
+    /// any state beyond the epoch number itself.
+    pub fn bank(&self, epoch: u64) -> &Vec<T> {
+        &self.banks[(epoch % 2) as usize]
+    }
+
+    pub fn bank_mut(&mut self, epoch: u64) -> &mut Vec<T> {
+        &mut self.banks[(epoch % 2) as usize]
+    }
+
+    /// Shrink both banks' *logical* length to `len` elements (capacity
+    /// is retained — the high-water-mark contract). Pod compaction
+    /// routes through this so a shrunk pod cannot read stale tail rows
+    /// out of either parity.
+    pub fn truncate_both(&mut self, len: usize) {
+        for bank in &mut self.banks {
+            bank.truncate(len);
+        }
     }
 }
 
@@ -339,6 +417,37 @@ mod tests {
         // Clearing the plan restores free passes.
         rt.set_fault_plan(None);
         assert!(rt.fault_check(FaultSite::Decode).is_ok());
+    }
+
+    #[test]
+    fn device_busy_accumulates_and_saturates() {
+        let rt = Runtime::new().unwrap();
+        assert_eq!(rt.device_busy_ns(), 0);
+        rt.note_device_busy(1_500);
+        rt.note_device_busy(500);
+        assert_eq!(rt.device_busy_ns(), 2_000);
+        rt.note_device_busy(u64::MAX);
+        assert_eq!(rt.device_busy_ns(), u64::MAX, "must clamp, not wrap");
+    }
+
+    #[test]
+    fn staging_pair_alternates_banks_by_epoch_parity() {
+        let mut pair: StagingPair<f32> = StagingPair::new();
+        pair.bank_mut(4).extend_from_slice(&[1.0, 2.0]);
+        pair.bank_mut(5).extend_from_slice(&[9.0]);
+        // Epoch T and T+1 never share a bank; T and T+2 do.
+        assert_eq!(pair.bank(4), &vec![1.0, 2.0]);
+        assert_eq!(pair.bank(5), &vec![9.0]);
+        assert_eq!(pair.bank(6), &vec![1.0, 2.0]);
+        // Refilling a bank keeps its allocation (high-water contract).
+        let base = pair.bank(4).as_ptr();
+        pair.bank_mut(6).clear();
+        pair.bank_mut(6).push(7.0);
+        assert_eq!(pair.bank(4).as_ptr(), base);
+        // truncate_both bounds the readable length in both parities.
+        pair.truncate_both(1);
+        assert_eq!(pair.bank(4).len(), 1);
+        assert_eq!(pair.bank(5).len(), 1);
     }
 
     #[test]

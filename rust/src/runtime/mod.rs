@@ -9,7 +9,7 @@ pub mod manifest;
 pub mod model;
 pub mod weights;
 
-pub use client::Runtime;
+pub use client::{Runtime, StagingPair};
 pub use faults::{FaultError, FaultPlan, FaultSite};
 pub use manifest::{Manifest, ModelConfig, ModelManifest, ParamEntry};
-pub use model::{KvCache, LoadedModel, ProbeWeights};
+pub use model::{KvCache, LoadedModel, PackedStep, ProbeWeights};

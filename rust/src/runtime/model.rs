@@ -42,6 +42,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{PjRtBuffer, PjRtLoadedExecutable};
 
+use std::time::Instant;
+
 use super::client::Runtime;
 use super::faults::FaultSite;
 use super::manifest::{Manifest, ModelConfig, ModelManifest};
@@ -108,6 +110,112 @@ pub struct KvCache {
     pub v: PjRtBuffer,
     /// Batch bucket these buffers are shaped for.
     pub bucket: usize,
+}
+
+/// An in-flight packed dispatch: the issue half of the issue/await
+/// split. Produced by [`LoadedModel::decode_packed_issue`] /
+/// [`LoadedModel::superstep_packed_issue`] /
+/// [`LoadedModel::superstep_tap_packed_issue`]; consumed exactly once
+/// by [`PackedStep::complete`].
+///
+/// On real PJRT the wrapped ticket is the `PJRT_Event` +
+/// stream-ordered output handles that `PJRT_LoadedExecutable_Execute`
+/// returns at enqueue time — holding several `PackedStep`s for
+/// *different pods* keeps their dispatches in flight concurrently on
+/// separate streams, which is the whole point of the overlapped tick.
+/// Issue-time bookkeeping is final the moment this struct exists: the
+/// fault check ran, `note_decode_dispatch` counted, and the
+/// predecessor k/v handles of the issuing cache are donation-stale —
+/// the pod must not re-dispatch from that cache until `complete`
+/// installs the aliased successors.
+///
+/// Every ticket must be awaited: dropping one un-completed abandons
+/// the donated k/v in an indeterminate state (the stub tolerates it;
+/// real PJRT leaks a pending event), so the fusion hub treats
+/// outstanding tickets as must-await and drains them before teardown.
+pub struct PackedStep {
+    rt: Arc<Runtime>,
+    ticket: xla::PjRtExecution,
+    what: &'static str,
+    expect: usize,
+    bucket: usize,
+    issued: Instant,
+}
+
+impl PackedStep {
+    /// Whether this dispatch computes the on-device signal vectors
+    /// (superstep flavors) in addition to logits.
+    pub fn has_signals(&self) -> bool {
+        self.expect >= 6
+    }
+
+    /// Whether this dispatch appends the hidden-state tap slab.
+    pub fn has_tap(&self) -> bool {
+        self.expect == 7
+    }
+
+    /// Await the dispatch and publish its outputs: install the
+    /// donation-aliased successor k/v into `cache`, then download the
+    /// logits slab (and, per flavor, the three signal vectors and the
+    /// tap slab) into the caller-owned staging buffers. `signals_out`
+    /// must be `Some` exactly for superstep flavors and `tap_out`
+    /// exactly for the tapped flavor — a mismatch is a caller bug and
+    /// fails loudly *after* the ticket is awaited (the must-await
+    /// contract holds even on the error path).
+    ///
+    /// The slab-download fault site and counter fire here, at await
+    /// time — the download is await-side work, unlike the dispatch
+    /// counter which is issue-side. Device-busy time for the whole
+    /// issue→ready span is credited to [`Runtime::note_device_busy`]
+    /// before any error propagates, so the idle-fraction metric sees
+    /// sync and overlapped dispatches through one mechanism.
+    pub fn complete(
+        self,
+        cache: &mut KvCache,
+        logits_out: &mut Vec<f32>,
+        signals_out: Option<(&mut Vec<f32>, &mut Vec<f32>, &mut Vec<f32>)>,
+        tap_out: Option<&mut Vec<f32>>,
+    ) -> Result<()> {
+        let res = self.ticket.await_ready();
+        self.rt.note_device_busy(self.issued.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+        let mut out = res?.swap_remove(0);
+        if cache.bucket != self.bucket {
+            bail!(
+                "{}: step issued for bucket {} completed against a cache for bucket {}",
+                self.what,
+                self.bucket,
+                cache.bucket
+            );
+        }
+        if signals_out.is_some() != self.has_signals() || tap_out.is_some() != self.has_tap() {
+            bail!(
+                "{}: staging mismatch (signals {}, tap {})",
+                self.what,
+                signals_out.is_some(),
+                tap_out.is_some()
+            );
+        }
+        if out.len() != self.expect {
+            bail!("{} returned {} outputs, expected {}", self.what, out.len(), self.expect);
+        }
+        let tap = self.has_tap().then(|| out.pop().unwrap());
+        // Donation contract: the stale k/v handles are dropped here, in
+        // the same statement that installs their aliased successors.
+        cache.v = out.pop().unwrap();
+        cache.k = out.pop().unwrap();
+        self.rt.fault_check(FaultSite::SlabDownload)?;
+        self.rt.note_slab_download();
+        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        if let Some((kl_out, conf_out, ent_out)) = signals_out {
+            self.rt.to_host_f32_into(&out[1], kl_out)?;
+            self.rt.to_host_f32_into(&out[2], conf_out)?;
+            self.rt.to_host_f32_into(&out[3], ent_out)?;
+        }
+        if let (Some(tap), Some(tap_out)) = (tap, tap_out) {
+            self.rt.to_host_f32_into(&tap, tap_out)?;
+        }
+        Ok(())
+    }
 }
 
 /// An artifact path plus its compile-once executable handle.
@@ -598,39 +706,12 @@ impl LoadedModel {
         ent_out: &mut Vec<f32>,
         tap_out: &mut Vec<f32>,
     ) -> Result<()> {
-        let b = cache.bucket;
-        self.check_step_packed(tokens, pos, b)?;
-        let cell = self
-            .superstep_tap_packed_exes
-            .get(&b)
-            .ok_or_else(|| anyhow!("no superstep_tap_packed artifact for bucket {b}"))?;
-        let exe = cell.get(&self.rt)?;
-
-        let tok = self.rt.i32_buffer(tokens, &[b])?;
-        let posb = self.rt.i32_buffer(pos, &[b])?;
-        self.rt.fault_check(FaultSite::Superstep)?;
-        self.rt.note_decode_dispatch();
-        let mut out = exe
-            .execute_b_donated(
-                &self.param_table,
-                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
-                &[2, 3],
-            )?
-            .swap_remove(0);
-        if out.len() != 7 {
-            bail!("superstep_tap_packed returned {} outputs, expected 7", out.len());
-        }
-        let tap = out.pop().unwrap();
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
-        self.rt.fault_check(FaultSite::SlabDownload)?;
-        self.rt.note_slab_download();
-        self.rt.to_host_f32_into(&out[0], logits_out)?;
-        self.rt.to_host_f32_into(&out[1], kl_out)?;
-        self.rt.to_host_f32_into(&out[2], conf_out)?;
-        self.rt.to_host_f32_into(&out[3], ent_out)?;
-        self.rt.to_host_f32_into(&tap, tap_out)?;
-        Ok(())
+        self.superstep_tap_packed_issue(tokens, pos, cache)?.complete(
+            cache,
+            logits_out,
+            Some((kl_out, conf_out, ent_out)),
+            Some(tap_out),
+        )
     }
 
     /// Whether the cross-request batch-fusion executables (packed
@@ -660,6 +741,113 @@ impl LoadedModel {
         Ok(())
     }
 
+    /// Shared issue half of the packed dispatch family: resolve the
+    /// executable, upload the token/position rows, run the pre-issue
+    /// fault check, count the dispatch, and enqueue the execute —
+    /// returning the in-flight [`PackedStep`] ticket. All issue-time
+    /// bookkeeping lives here so the sync `*_packed_into` wrappers and
+    /// the overlapped hub count identically: `fault_check` fires
+    /// *before* the dispatch counter moves (an injected fault means
+    /// the dispatch never happened), and neither fires again at await.
+    #[allow(clippy::too_many_arguments)]
+    fn packed_issue(
+        &self,
+        exes: &BTreeMap<usize, ExeCell>,
+        missing: &'static str,
+        what: &'static str,
+        site: FaultSite,
+        expect: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &KvCache,
+    ) -> Result<PackedStep> {
+        let b = cache.bucket;
+        self.check_step_packed(tokens, pos, b)?;
+        let cell =
+            exes.get(&b).ok_or_else(|| anyhow!("no {missing} artifact for bucket {b}"))?;
+        let exe = cell.get(&self.rt)?;
+
+        let tok = self.rt.i32_buffer(tokens, &[b])?;
+        let posb = self.rt.i32_buffer(pos, &[b])?;
+        self.rt.fault_check(site)?;
+        self.rt.note_decode_dispatch();
+        let issued = Instant::now();
+        let ticket = if expect >= 6 {
+            exe.execute_b_donated_async(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[2, 3],
+            )?
+        } else {
+            exe.execute_b_donated_async(
+                &self.param_table,
+                &[&tok, &posb, &cache.k, &cache.v],
+                &[2, 3],
+            )?
+        };
+        Ok(PackedStep { rt: Arc::clone(&self.rt), ticket, what, expect, bucket: b, issued })
+    }
+
+    /// Issue half of [`Self::decode_packed_into`]: enqueue the packed
+    /// decode and return its in-flight ticket. The predecessor k/v in
+    /// `cache` are donation-stale until [`PackedStep::complete`]
+    /// installs the successors.
+    pub fn decode_packed_issue(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &KvCache,
+    ) -> Result<PackedStep> {
+        self.packed_issue(
+            &self.decode_packed_exes,
+            "packed decode",
+            "decode_packed",
+            FaultSite::Decode,
+            3,
+            tokens,
+            pos,
+            cache,
+        )
+    }
+
+    /// Issue half of [`Self::superstep_packed_into`].
+    pub fn superstep_packed_issue(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &KvCache,
+    ) -> Result<PackedStep> {
+        self.packed_issue(
+            &self.superstep_packed_exes,
+            "packed superstep",
+            "superstep_packed",
+            FaultSite::Superstep,
+            6,
+            tokens,
+            pos,
+            cache,
+        )
+    }
+
+    /// Issue half of [`Self::superstep_tap_packed_into`].
+    pub fn superstep_tap_packed_issue(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache: &KvCache,
+    ) -> Result<PackedStep> {
+        self.packed_issue(
+            &self.superstep_tap_packed_exes,
+            "superstep_tap_packed",
+            "superstep_tap_packed",
+            FaultSite::Superstep,
+            7,
+            tokens,
+            pos,
+            cache,
+        )
+    }
+
     /// Cross-request **packed decode** — one dispatch advances every
     /// co-resident request's live rows by one token, each row at its own
     /// sequence position (`pos[i]` is the slot row `i` writes). Rows
@@ -669,6 +857,11 @@ impl LoadedModel {
     /// identical to each request's solo dispatch
     /// (`python/tests/test_packed.py` pins the parity at the graph
     /// level).
+    ///
+    /// Expressed as [`Self::decode_packed_issue`] immediately followed
+    /// by [`PackedStep::complete`] — the synchronous oracle is the
+    /// overlapped path with a zero-length in-flight window, so the two
+    /// stay bit-identical by construction.
     pub fn decode_packed_into(
         &self,
         tokens: &[i32],
@@ -676,30 +869,7 @@ impl LoadedModel {
         cache: &mut KvCache,
         logits_out: &mut Vec<f32>,
     ) -> Result<()> {
-        let b = cache.bucket;
-        self.check_step_packed(tokens, pos, b)?;
-        let cell = self
-            .decode_packed_exes
-            .get(&b)
-            .ok_or_else(|| anyhow!("no packed decode artifact for bucket {b}"))?;
-        let exe = cell.get(&self.rt)?;
-
-        let tok = self.rt.i32_buffer(tokens, &[b])?;
-        let posb = self.rt.i32_buffer(pos, &[b])?;
-        self.rt.fault_check(FaultSite::Decode)?;
-        self.rt.note_decode_dispatch();
-        let mut out = exe
-            .execute_b_donated(&self.param_table, &[&tok, &posb, &cache.k, &cache.v], &[2, 3])?
-            .swap_remove(0);
-        if out.len() != 3 {
-            bail!("decode_packed returned {} outputs, expected 3", out.len());
-        }
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
-        self.rt.fault_check(FaultSite::SlabDownload)?;
-        self.rt.note_slab_download();
-        self.rt.to_host_f32_into(&out[0], logits_out)?;
-        Ok(())
+        self.decode_packed_issue(tokens, pos, cache)?.complete(cache, logits_out, None, None)
     }
 
     /// Packed **decode+signals superstep** — the fused scheduler's hot
@@ -718,37 +888,12 @@ impl LoadedModel {
         conf_out: &mut Vec<f32>,
         ent_out: &mut Vec<f32>,
     ) -> Result<()> {
-        let b = cache.bucket;
-        self.check_step_packed(tokens, pos, b)?;
-        let cell = self
-            .superstep_packed_exes
-            .get(&b)
-            .ok_or_else(|| anyhow!("no packed superstep artifact for bucket {b}"))?;
-        let exe = cell.get(&self.rt)?;
-
-        let tok = self.rt.i32_buffer(tokens, &[b])?;
-        let posb = self.rt.i32_buffer(pos, &[b])?;
-        self.rt.fault_check(FaultSite::Superstep)?;
-        self.rt.note_decode_dispatch();
-        let mut out = exe
-            .execute_b_donated(
-                &self.param_table,
-                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
-                &[2, 3],
-            )?
-            .swap_remove(0);
-        if out.len() != 6 {
-            bail!("superstep_packed returned {} outputs, expected 6", out.len());
-        }
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
-        self.rt.fault_check(FaultSite::SlabDownload)?;
-        self.rt.note_slab_download();
-        self.rt.to_host_f32_into(&out[0], logits_out)?;
-        self.rt.to_host_f32_into(&out[1], kl_out)?;
-        self.rt.to_host_f32_into(&out[2], conf_out)?;
-        self.rt.to_host_f32_into(&out[3], ent_out)?;
-        Ok(())
+        self.superstep_packed_issue(tokens, pos, cache)?.complete(
+            cache,
+            logits_out,
+            Some((kl_out, conf_out, ent_out)),
+            None,
+        )
     }
 
     /// Pod admission: merge a freshly prefilled bucket-1 cache into a

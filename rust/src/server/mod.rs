@@ -168,6 +168,18 @@ pub struct SchedConfig {
     /// without rebuilding the run config). `None` leaves the run
     /// config's choice untouched.
     pub scorer: Option<crate::coordinator::scorer::ScorerKind>,
+    /// Software-pipelined scheduler tick (PR 9, default on): fused
+    /// workers split each tick's packed dispatches into an **issue**
+    /// half (one in-flight ticket per occupied pod, independent
+    /// buckets' dispatches running concurrently on separate device
+    /// streams) and demand-driven **awaits** during the absorb phase,
+    /// with an end-of-tick drain so no ticket ever crosses a tick
+    /// boundary (see [`Scheduler::tick_overlapped`]). Outputs, metrics
+    /// and counter ledgers are bit-identical to the synchronous tick —
+    /// overlap moves wall-clock, never data. `false` (the `serve
+    /// --no-overlap` escape hatch) keeps the back-to-back
+    /// issue-and-await [`Scheduler::tick`], the bit-identity oracle.
+    pub overlap: bool,
 }
 
 impl Default for SchedConfig {
@@ -191,6 +203,7 @@ impl Default for SchedConfig {
             deadline_ms: 0,
             prefix_share: false,
             scorer: None,
+            overlap: true,
         }
     }
 }
@@ -440,6 +453,78 @@ impl<P: Pollable, M> Scheduler<P, M> {
             // its whole bucket — sample the co-resident high-water mark
             // per request, not per tick.
             self.mem_peak = self.mem_peak.max(self.mem_used());
+        }
+    }
+
+    /// The software-pipelined flavor of [`Self::tick`] (PR 9): plan →
+    /// **issue** → absorb → **drain**. `issue` launches one packed
+    /// dispatch per occupied pod and returns with the tickets still in
+    /// flight ([`crate::engine::FusionHub::issue`]); the awaits happen
+    /// demand-driven inside the absorb phase — the first request to
+    /// pull rows from a pod pays that pod's await while every other
+    /// pod's dispatch keeps running on its own device stream. `drain`
+    /// ([`crate::engine::FusionHub::await_ready`]) then completes any
+    /// ticket nobody absorbed (a pod whose requests all finished or
+    /// failed this tick), so **no ticket ever crosses a tick
+    /// boundary**: between ticks every pod is quiescent, which is the
+    /// precondition compaction, eviction/deadline drains and pod
+    /// teardown rely on. Phase order, completion order, and every
+    /// counter are identical to the synchronous tick — only the await
+    /// points move.
+    pub fn tick_overlapped(
+        &mut self,
+        mut issue: impl FnMut() -> Result<()>,
+        mut drain: impl FnMut() -> Result<()>,
+        mut on_done: impl FnMut(M, Result<GenOutput>),
+    ) {
+        // Phase 1: plan — identical to the synchronous tick.
+        let mut i = 0;
+        while i < self.active.len() {
+            match self.active[i].0.plan() {
+                Ok(_) => i += 1,
+                Err(e) => {
+                    let (_, meta) = self.active.remove(i);
+                    on_done(meta, Err(e));
+                }
+            }
+        }
+        // Phase 2: issue. An `Err` here is hub-level infrastructure
+        // (pod-scoped failures are contained pod-side), so the whole
+        // in-flight set fails loudly — after a best-effort drain, so a
+        // ticket launched before the failure cannot leak past the tick
+        // boundary and wedge its pod forever.
+        if let Err(e) = issue() {
+            let _ = drain();
+            let msg = format!("{e:#}");
+            for (_, meta) in self.active.drain(..) {
+                on_done(meta, Err(anyhow!("fused dispatch failed: {msg}")));
+            }
+            return;
+        }
+        // Phase 3: absorb — demand-driven awaits happen in here.
+        let mut i = 0;
+        while i < self.active.len() {
+            match self.active[i].0.absorb() {
+                Ok(StepOutcome::Pending) => i += 1,
+                Ok(StepOutcome::Done(out)) => {
+                    let (_, meta) = self.active.remove(i);
+                    on_done(meta, Ok(out));
+                }
+                Err(e) => {
+                    let (_, meta) = self.active.remove(i);
+                    on_done(meta, Err(e));
+                }
+            }
+            self.mem_peak = self.mem_peak.max(self.mem_used());
+        }
+        // Phase 4: the end-of-tick drain. Failed awaits are contained
+        // pod-side exactly like failed sync dispatches; an `Err` is
+        // infrastructure and poisons the in-flight set loudly.
+        if let Err(e) = drain() {
+            let msg = format!("{e:#}");
+            for (_, meta) in self.active.drain(..) {
+                on_done(meta, Err(anyhow!("fused tick drain failed: {msg}")));
+            }
         }
     }
 
@@ -913,6 +998,13 @@ fn worker_loop(
                 Ok(Flight { driver, engine: &engine, fused: !solo })
             },
             || hub.flush(&engine),
+            // The split-dispatch pair for the overlapped tick: issue
+            // every occupied pod's packed dispatch, drain the tickets
+            // at end of tick (the absorb phase demand-awaits in
+            // between). `--no-overlap` ignores these and runs the
+            // synchronous flush above instead.
+            || hub.issue(&engine),
+            || hub.await_ready(),
             // Physical admission gate: the next placement's pod bytes
             // must fit the memory budget (idle workers always admit —
             // same no-starvation escape as `Scheduler::can_admit`).
@@ -941,6 +1033,8 @@ fn worker_loop(
                 Ok(Flight { driver, engine: &engine, fused: false })
             },
             || Ok(()),
+            || Ok(()),
+            || Ok(()),
             |_| true,
             |_| Ok(0),
         );
@@ -954,7 +1048,17 @@ fn worker_loop(
 /// without artifacts — the in-module tests drive it with synthetic
 /// [`Pollable`]s. `dispatch` runs once per tick between the plan and
 /// absorb phases: the fusion hub's one-packed-dispatch-per-occupied-pod
-/// flush on fused workers, a no-op on solo workers. `admit_extra(idle)`
+/// flush on fused workers, a no-op on solo workers. Under
+/// [`SchedConfig::overlap`] (the default) the tick runs
+/// software-pipelined instead — `issue`/`drain` are the two halves of
+/// the split dispatch ([`crate::engine::FusionHub::issue`] /
+/// [`crate::engine::FusionHub::await_ready`] on fused workers, no-ops
+/// on solo workers, where the two tick shapes coincide) and `dispatch`
+/// is not called; `--no-overlap` flips back to the synchronous
+/// `dispatch` tick, the bit-identity oracle. Either way no dispatch
+/// work crosses a tick boundary, so the between-ticks quiescence that
+/// compaction, eviction and the deadline drains rely on holds
+/// unconditionally. `admit_extra(idle)`
 /// is an additional admission gate evaluated alongside
 /// `Scheduler::can_admit` — fused workers bound *physical* pod memory
 /// with it (per-request virtual accounting cannot see pod granularity);
@@ -1030,6 +1134,8 @@ fn scheduler_loop<P: Pollable>(
     admission: (usize, usize),
     mut spawn: impl FnMut(&str, u64, bool) -> Result<P>,
     mut dispatch: impl FnMut() -> Result<()>,
+    mut issue: impl FnMut() -> Result<()>,
+    mut drain: impl FnMut() -> Result<()>,
     mut admit_extra: impl FnMut(bool) -> bool,
     mut reclaim: impl FnMut(bool) -> Result<usize>,
 ) {
@@ -1342,7 +1448,7 @@ fn scheduler_loop<P: Pollable>(
         // One tick stale at worst (the current tick's growth lands in
         // the next response) — fine for a monotone high-water mark.
         let kv_peak = sched.mem_peak();
-        sched.tick(&mut dispatch, |meta, result| match result {
+        let on_done = |meta: Meta, result: Result<GenOutput>| match result {
             Ok(mut output) => {
                 // A fused completion proves the fused path healthy end
                 // to end — lift every quarantine. Solo completions prove
@@ -1427,7 +1533,12 @@ fn scheduler_loop<P: Pollable>(
                     )));
                 }
             }
-        });
+        };
+        if sched_cfg.overlap {
+            sched.tick_overlapped(&mut issue, &mut drain, on_done);
+        } else {
+            sched.tick(&mut dispatch, on_done);
+        }
     }
 }
 
@@ -1819,6 +1930,177 @@ mod tests {
         }
     }
 
+    // ---- the overlapped tick (PR 9), with the same fakes ----
+
+    /// `tick_overlapped` phase order: every tick runs exactly one issue
+    /// (between plan and absorb — the `FakeFusedFlight` handshake pins
+    /// that) and exactly one end-of-tick drain, with the drain always
+    /// *after* that tick's issue. Completion order matches the
+    /// synchronous tick.
+    #[test]
+    fn tick_overlapped_runs_issue_before_absorb_and_drains_after() {
+        let dispatches = Arc::new(Mutex::new(0usize));
+        // Each drain records how many issues it has seen — proving the
+        // drain runs after its own tick's issue, once per tick.
+        let drains = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let mut sched: Scheduler<FakeFusedFlight, &str> = Scheduler::new(SchedConfig::default());
+        sched.admit(FakeFusedFlight::new("a", 3, Arc::clone(&dispatches)), "a");
+        sched.admit(FakeFusedFlight::new("b", 1, Arc::clone(&dispatches)), "b");
+        sched.admit(FakeFusedFlight::new("c", 2, Arc::clone(&dispatches)), "c");
+
+        let mut done = Vec::new();
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            ticks += 1;
+            let d = Arc::clone(&dispatches);
+            let d2 = Arc::clone(&dispatches);
+            let dr = Arc::clone(&drains);
+            sched.tick_overlapped(
+                move || {
+                    *d.lock().unwrap() += 1;
+                    Ok(())
+                },
+                move || {
+                    dr.lock().unwrap().push(*d2.lock().unwrap());
+                    Ok(())
+                },
+                |m, r| done.push((m, r.is_ok())),
+            );
+            assert!(ticks < 100, "tick loop runaway");
+        }
+        assert_eq!(*dispatches.lock().unwrap(), ticks, "one issue per occupied tick");
+        assert_eq!(
+            *drains.lock().unwrap(),
+            (1..=ticks).collect::<Vec<_>>(),
+            "one drain per tick, always after that tick's issue"
+        );
+        assert_eq!(done, vec![("b", true), ("c", true), ("a", true)]);
+    }
+
+    /// An `Err` escaping the issue half is hub-level infrastructure,
+    /// exactly like a failed synchronous flush: the in-flight set fails
+    /// loudly — and the drain still runs first, so a ticket launched
+    /// before the failure cannot leak past the tick boundary.
+    #[test]
+    fn tick_overlapped_issue_failure_drains_then_fails_the_inflight_set() {
+        let dispatches = Arc::new(Mutex::new(0usize));
+        let mut sched: Scheduler<FakeFusedFlight, &str> = Scheduler::new(SchedConfig::default());
+        sched.admit(FakeFusedFlight::new("a", 3, Arc::clone(&dispatches)), "a");
+        sched.admit(FakeFusedFlight::new("b", 2, Arc::clone(&dispatches)), "b");
+
+        let mut drained = 0usize;
+        let mut done = Vec::new();
+        sched.tick_overlapped(
+            || Err(anyhow!("device fault")),
+            || {
+                drained += 1;
+                Ok(())
+            },
+            |m, r: Result<GenOutput>| done.push((m, format!("{:#}", r.unwrap_err()))),
+        );
+        assert!(sched.is_empty(), "a poisoned issue retires everything");
+        assert_eq!(drained, 1, "the best-effort drain must run before the set fails");
+        assert_eq!(done.len(), 2);
+        for (_, msg) in &done {
+            assert!(msg.contains("device fault"), "{msg}");
+        }
+    }
+
+    /// An `Err` escaping the end-of-tick drain poisons whatever is
+    /// still in flight — requests that completed earlier in the same
+    /// tick keep their successful responses.
+    #[test]
+    fn tick_overlapped_drain_failure_fails_the_remaining_inflight_set() {
+        let dispatches = Arc::new(Mutex::new(0usize));
+        let mut sched: Scheduler<FakeFusedFlight, &str> = Scheduler::new(SchedConfig::default());
+        sched.admit(FakeFusedFlight::new("short", 1, Arc::clone(&dispatches)), "short");
+        sched.admit(FakeFusedFlight::new("long", 5, Arc::clone(&dispatches)), "long");
+
+        let mut done = Vec::new();
+        let d = Arc::clone(&dispatches);
+        sched.tick_overlapped(
+            move || {
+                *d.lock().unwrap() += 1;
+                Ok(())
+            },
+            || Err(anyhow!("stuck ticket")),
+            |m, r: Result<GenOutput>| done.push((m, r.map_err(|e| format!("{e:#}")))),
+        );
+        assert!(sched.is_empty());
+        assert_eq!(done.len(), 2);
+        assert!(done[0].1.is_ok(), "the completed request keeps its response");
+        assert_eq!(done[0].0, "short");
+        let err = done[1].1.as_ref().unwrap_err();
+        assert!(err.contains("stuck ticket") && err.contains("drain"), "{err}");
+    }
+
+    /// [`SchedConfig::overlap`] picks the tick shape inside
+    /// `scheduler_loop`: overlap on runs the issue/drain pair and never
+    /// the synchronous dispatch; `--no-overlap` runs the synchronous
+    /// dispatch and never the pair. Both serve the same requests.
+    #[test]
+    fn scheduler_loop_overlap_flag_selects_the_tick_shape() {
+        for overlap in [true, false] {
+            let (tx, rx) = channel::<Request>();
+            let rx = Arc::new(Mutex::new(rx));
+            let stop = Arc::new(AtomicBool::new(false));
+            let cfg = SchedConfig { fuse: false, overlap, ..SchedConfig::default() };
+
+            let rx_a = submit_to(&tx, "len:3", 0);
+            drop(tx);
+
+            let counts = Arc::new(Mutex::new((0usize, 0usize, 0usize))); // (sync, issue, drain)
+            let worker = {
+                let rx = Arc::clone(&rx);
+                let stop = Arc::clone(&stop);
+                let counts = Arc::clone(&counts);
+                std::thread::spawn(move || {
+                    let c1 = Arc::clone(&counts);
+                    let c2 = Arc::clone(&counts);
+                    let c3 = Arc::clone(&counts);
+                    scheduler_loop(
+                        0,
+                        cfg,
+                        &rx,
+                        &stop,
+                        (1, 0),
+                        |prompt, _seed, _solo| {
+                            let polls: usize =
+                                prompt.trim_start_matches("len:").parse().unwrap();
+                            Ok(FakeFlight::new(prompt, polls, 1))
+                        },
+                        move || {
+                            c1.lock().unwrap().0 += 1;
+                            Ok(())
+                        },
+                        move || {
+                            c2.lock().unwrap().1 += 1;
+                            Ok(())
+                        },
+                        move || {
+                            c3.lock().unwrap().2 += 1;
+                            Ok(())
+                        },
+                        |_| true,
+                        |_| Ok(0),
+                    );
+                })
+            };
+
+            assert!(rx_a.recv().expect("alive").is_ok());
+            worker.join().expect("clean exit");
+            let (sync, issue, drain) = *counts.lock().unwrap();
+            if overlap {
+                assert_eq!(sync, 0, "overlap must never run the synchronous dispatch");
+                assert!(issue >= 3, "every occupied tick issues ({issue})");
+                assert_eq!(issue, drain, "every issue tick drains at end of tick");
+            } else {
+                assert!(sync >= 3, "--no-overlap runs the synchronous dispatch ({sync})");
+                assert_eq!((issue, drain), (0, 0), "--no-overlap never touches the pair");
+            }
+        }
+    }
+
     // ---- scheduler_loop (the worker body) against fake drivers ----
 
     fn submit_to(tx: &Sender<Request>, prompt: &str, seed: u64) -> Receiver<Result<Response>> {
@@ -1869,6 +2151,8 @@ mod tests {
                         f.done_log = Some(Arc::clone(&done_log));
                         Ok(f)
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),
@@ -1921,6 +2205,8 @@ mod tests {
                         Ok(FakeFlight::new(prompt, polls, 4))
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -1966,6 +2252,8 @@ mod tests {
                             Ok(FakeFlight::new(prompt, 2, 1))
                         }
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),
@@ -2025,6 +2313,8 @@ mod tests {
                             prompt.rsplit("len:").next().unwrap().parse().unwrap();
                         Ok(FakeFlight::new(prompt, polls, 3))
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),
@@ -2089,6 +2379,8 @@ mod tests {
                         Ok(FakeFlight::new(prompt, polls, 3))
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2151,6 +2443,8 @@ mod tests {
                         }
                         Ok(FakeFlight::new(prompt, polls, 1))
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |idle| idle || !*blocked.lock().unwrap(),
                     |force| {
@@ -2219,6 +2513,8 @@ mod tests {
                         Ok(f)
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2271,6 +2567,8 @@ mod tests {
                         f.fault = true; // every tenancy faults
                         Ok(f)
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),
@@ -2336,6 +2634,8 @@ mod tests {
                         f.fault = prompt == "bad" && !solo;
                         Ok(f)
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),
@@ -2418,6 +2718,8 @@ mod tests {
                         Ok(f)
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2479,6 +2781,8 @@ mod tests {
                         Ok(f)
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2532,6 +2836,8 @@ mod tests {
                     (1, 0),
                     |prompt, _seed, _solo| Ok(FakeFlight::new(prompt, 2, 1)),
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2582,6 +2888,8 @@ mod tests {
                         Ok(FakeFlight::new(prompt, polls, 1))
                     },
                     no_dispatch,
+                    no_dispatch,
+                    no_dispatch,
                     |_| true,
                     |_| Ok(0),
                 );
@@ -2630,6 +2938,8 @@ mod tests {
                         f.fail = true; // bare error, not a contained fault
                         Ok(f)
                     },
+                    no_dispatch,
+                    no_dispatch,
                     no_dispatch,
                     |_| true,
                     |_| Ok(0),

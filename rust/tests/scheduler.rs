@@ -201,13 +201,23 @@ impl Pollable for FusedFlight<'_> {
 /// `compact` is set the trace runs the pod-compaction pass between
 /// ticks (the worker loop's shape) and asserts every committed
 /// compaction physically shrinks `FusionHub::pod_bytes` while the pod
-/// stays occupied. Returns outputs indexed by original position plus
-/// the hub's stats.
+/// stays occupied. When `overlap` is set the trace runs the
+/// software-pipelined tick (PR 9) — `FusionHub::issue` launches every
+/// occupied pod's dispatch, the absorb phase demand-awaits, and
+/// `FusionHub::await_ready` drains the tickets at end of tick — instead
+/// of the synchronous flush oracle. `evict_at_tick` drops the
+/// youngest in-flight request's driver mid-flight at the first
+/// eligible tick and requeues it (the fused evict/re-admit round
+/// trip); the eviction happens between ticks, where every pod is
+/// quiescent. Returns outputs indexed by original position plus the
+/// hub's stats.
 #[allow(clippy::too_many_arguments)]
 fn run_fused_trace_with(
     engine: &Engine,
     fuse_cfg: FuseConfig,
     compact: bool,
+    overlap: bool,
+    evict_at_tick: Option<usize>,
     prompts: &[String],
     cfg: &RunConfig,
     seed0: u64,
@@ -225,9 +235,21 @@ fn run_fused_trace_with(
     let mut out: Vec<Option<GenOutput>> = (0..prompts.len()).map(|_| None).collect();
     let dispatches_before = engine.model().runtime().decode_dispatch_count();
     let mut ticks = 0usize;
+    let mut evicted = false;
     while !(queue.is_empty() && sched.is_empty()) {
         ticks += 1;
         assert!(ticks < 100_000, "fused trace runaway");
+        if let Some(evict_at) = evict_at_tick {
+            // Between ticks every pod is quiescent (the overlapped tick
+            // ends with a hub drain), so dropping a driver here never
+            // abandons an in-flight ticket.
+            if !evicted && ticks >= evict_at && sched.len() > 1 {
+                let (flight, i) = sched.evict_youngest(|_| true).expect("evictable");
+                drop(flight); // releases the pod lease on the spot
+                queue.push_back(i);
+                evicted = true;
+            }
+        }
         if compact {
             // Between ticks every pod is quiescent — the worker loop's
             // compaction point. A committed compaction must be a real
@@ -258,10 +280,17 @@ fn run_fused_trace_with(
                     .expect("fused driver");
             sched.admit(FusedFlight { driver, engine }, i);
         }
-        sched.tick(
-            || hub.flush(engine),
-            |i, r| out[i] = Some(r.expect("fused request failed")),
-        );
+        let on_done = |i: usize, r: Result<GenOutput>| {
+            out[i] = Some(r.expect("fused request failed"));
+        };
+        if overlap {
+            sched.tick_overlapped(|| hub.issue(engine), || hub.await_ready(), on_done);
+        } else {
+            sched.tick(|| hub.flush(engine), on_done);
+        }
+    }
+    if evict_at_tick.is_some() {
+        assert!(evicted, "the trace never reached an evictable state — it exercised nothing");
     }
     // The fused invariant while we are here, across two independent
     // counters: every decode-family dispatch of the trace came from a
@@ -280,7 +309,9 @@ fn run_fused_trace_with(
     (out.into_iter().map(|o| o.expect("request never completed")).collect(), stats)
 }
 
-/// [`run_fused_trace_with`] at the default pod config, no compaction.
+/// [`run_fused_trace_with`] at the default pod config, no compaction,
+/// no eviction — sync or overlapped per `overlap`.
+#[allow(clippy::too_many_arguments)]
 fn run_fused_trace(
     engine: &Engine,
     prompts: &[String],
@@ -289,11 +320,14 @@ fn run_fused_trace(
     order: &[usize],
     admit_seed: u64,
     max_inflight: usize,
+    overlap: bool,
 ) -> Vec<GenOutput> {
     run_fused_trace_with(
         engine,
         FuseConfig::default(),
         false,
+        overlap,
+        None,
         prompts,
         cfg,
         seed0,
@@ -328,14 +362,23 @@ fn fused_ticks_are_bit_identical_to_blocking_runs_for_all_methods() {
             .collect();
         // Several randomized admission interleavings: each packs the
         // same requests into pods at different co-residency phases.
+        // Every trace runs both tick shapes — the synchronous flush
+        // oracle and the software-pipelined issue/await split (PR 9) —
+        // and both must match the blocking run bit for bit (text *and*
+        // metrics), which also pins them bit-identical to each other.
         for admit_seed in [1u64, 9, 23] {
-            let fused = run_fused_trace(&engine, &prompts, &cfg, 5, &order, admit_seed, 3);
-            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
-                assert_outputs_identical(
-                    b,
-                    f,
-                    &format!("{method:?} request {i} (admit seed {admit_seed})"),
-                );
+            for overlap in [false, true] {
+                let fused =
+                    run_fused_trace(&engine, &prompts, &cfg, 5, &order, admit_seed, 3, overlap);
+                for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                    assert_outputs_identical(
+                        b,
+                        f,
+                        &format!(
+                            "{method:?} request {i} (admit seed {admit_seed}, overlap {overlap})"
+                        ),
+                    );
+                }
             }
         }
     }
@@ -356,9 +399,11 @@ fn request_rng_streams_independent_of_coresident_packing_order() {
     let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
     let cfg = RunConfig { method: Method::Kappa, n: 4, max_new_tokens: 48, ..RunConfig::default() };
 
-    let natural = run_fused_trace(&engine, &prompts, &cfg, 13, &[0, 1, 2, 3], 7, 4);
+    // Overlapped ticks (the serving default) — RNG independence must
+    // hold with the awaits moved just as it does synchronously.
+    let natural = run_fused_trace(&engine, &prompts, &cfg, 13, &[0, 1, 2, 3], 7, 4, true);
     for order in [[2usize, 0, 3, 1], [3, 2, 1, 0], [1, 3, 0, 2]] {
-        let permuted = run_fused_trace(&engine, &prompts, &cfg, 13, &order, 7, 4);
+        let permuted = run_fused_trace(&engine, &prompts, &cfg, 13, &order, 7, 4, true);
         for (i, (a, b)) in natural.iter().zip(&permuted).enumerate() {
             assert_outputs_identical(a, b, &format!("request {i} under admission order {order:?}"));
         }
@@ -429,17 +474,27 @@ fn requests_surviving_pod_compaction_are_bit_identical_to_blocking_runs() {
             .enumerate()
             .map(|(i, p)| run_method(&engine, p, &cfg, request_seed(5, i as u64)).expect("blocking"))
             .collect();
+        // Compaction × overlap (PR 9): between-ticks compaction only
+        // ever sees quiescent pods — the overlapped tick drains every
+        // ticket before it ends — so relocating leased rows stays
+        // bit-identical with the awaits moved.
         for admit_seed in [1u64, 23] {
-            let (fused, stats) = run_fused_trace_with(
-                &engine, aggressive, true, &prompts, &cfg, 5, &order, admit_seed, 3,
-            );
-            any_compaction |= stats.compactions > 0;
-            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
-                assert_outputs_identical(
-                    b,
-                    f,
-                    &format!("{method:?} request {i} through compaction (admit seed {admit_seed})"),
+            for overlap in [false, true] {
+                let (fused, stats) = run_fused_trace_with(
+                    &engine, aggressive, true, overlap, None, &prompts, &cfg, 5, &order,
+                    admit_seed, 3,
                 );
+                any_compaction |= stats.compactions > 0;
+                for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                    assert_outputs_identical(
+                        b,
+                        f,
+                        &format!(
+                            "{method:?} request {i} through compaction \
+                             (admit seed {admit_seed}, overlap {overlap})"
+                        ),
+                    );
+                }
             }
         }
     }
@@ -461,6 +516,7 @@ fn requests_surviving_pod_compaction_are_bit_identical_to_blocking_runs() {
 fn run_faulted_fused_trace(
     engine: &Engine,
     fuse_cfg: FuseConfig,
+    overlap: bool,
     prompts: &[String],
     cfg: &RunConfig,
     seed0: u64,
@@ -488,20 +544,22 @@ fn run_faulted_fused_trace(
             sched.admit(FusedFlight { driver, engine }, i);
         }
         let mut requeue: Vec<usize> = Vec::new();
-        sched.tick(
-            || hub.flush(engine),
-            |i, r| match r {
-                Ok(o) => out[i] = Some(o),
-                Err(e) => {
-                    let contained = e.chain().any(|c| {
-                        c.downcast_ref::<PodFault>().is_some()
-                            || c.downcast_ref::<FaultError>().is_some()
-                    });
-                    assert!(contained, "request {i} failed with a non-contained error: {e:#}");
-                    requeue.push(i);
-                }
-            },
-        );
+        let on_done = |i: usize, r: Result<GenOutput>| match r {
+            Ok(o) => out[i] = Some(o),
+            Err(e) => {
+                let contained = e.chain().any(|c| {
+                    c.downcast_ref::<PodFault>().is_some()
+                        || c.downcast_ref::<FaultError>().is_some()
+                });
+                assert!(contained, "request {i} failed with a non-contained error: {e:#}");
+                requeue.push(i);
+            }
+        };
+        if overlap {
+            sched.tick_overlapped(|| hub.issue(engine), || hub.await_ready(), on_done);
+        } else {
+            sched.tick(|| hub.flush(engine), on_done);
+        }
         for i in requeue {
             retries[i] += 1;
             queue.push_back(i);
@@ -548,49 +606,131 @@ fn injected_pod_faults_recover_bit_identical_with_containment() {
 
         // A transient fault at the third decode-family dispatch of each
         // flavor (whichever this method's policy uses) — each hit takes
-        // down exactly one pod.
-        rt.set_fault_plan(Some(FaultPlan::parse("decode@2,superstep@2").expect("plan")));
-        let before = rt.decode_dispatch_count();
-        let (fused, retries, spawns, stats) =
-            run_faulted_fused_trace(&engine, per_request_pods, &prompts, &cfg, 5, 3);
-        let plan = rt.fault_plan().expect("plan installed");
-        let injected =
-            plan.injected_at(FaultSite::Decode) + plan.injected_at(FaultSite::Superstep);
-        let dispatched = rt.decode_dispatch_count() - before;
-        rt.set_fault_plan(None);
+        // down exactly one pod. The same plan runs once synchronously
+        // (`--no-overlap`'s tick) and once overlapped; the fault sites
+        // are decode/superstep, which fire at **issue** time in both
+        // modes, so the two runs' counter ledgers must be identical
+        // entry for entry (PR 9's issue-time-counting audit).
+        let mut ledgers: Vec<(bool, usize, usize, Vec<usize>, Vec<usize>, usize, usize)> =
+            Vec::new();
+        for overlap in [false, true] {
+            rt.set_fault_plan(Some(FaultPlan::parse("decode@2,superstep@2").expect("plan")));
+            let before = rt.decode_dispatch_count();
+            let (fused, retries, spawns, stats) =
+                run_faulted_fused_trace(&engine, per_request_pods, overlap, &prompts, &cfg, 5, 3);
+            let plan = rt.fault_plan().expect("plan installed");
+            let injected =
+                plan.injected_at(FaultSite::Decode) + plan.injected_at(FaultSite::Superstep);
+            let dispatched = rt.decode_dispatch_count() - before;
+            rt.set_fault_plan(None);
 
-        assert!(injected >= 1, "{method:?}: the fault plan never fired");
-        assert_eq!(
-            stats.pod_faults, injected,
-            "{method:?}: every injected fault must be contained pod-side"
-        );
-        // Recovery is bit-identical for everyone, victims included.
-        for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
-            assert_outputs_identical(
-                b,
-                f,
-                &format!("{method:?} request {i} under injected faults"),
+            assert!(injected >= 1, "{method:?} (overlap {overlap}): the fault plan never fired");
+            assert_eq!(
+                stats.pod_faults, injected,
+                "{method:?} (overlap {overlap}): every injected fault must be contained pod-side"
             );
+            // Recovery is bit-identical for everyone, victims included.
+            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                assert_outputs_identical(
+                    b,
+                    f,
+                    &format!("{method:?} request {i} under injected faults (overlap {overlap})"),
+                );
+            }
+            // Containment: one retry per injected fault, landing only on
+            // the faulted pod's request; bystanders spawn exactly once
+            // (zero extra dispatches).
+            assert_eq!(
+                retries.iter().sum::<usize>(),
+                injected,
+                "{method:?} (overlap {overlap}): retries {retries:?} must match injected faults"
+            );
+            for (i, (&r, &s)) in retries.iter().zip(&spawns).enumerate() {
+                assert_eq!(
+                    s,
+                    1 + r,
+                    "{method:?} request {i} (overlap {overlap}): spawns must be 1 + retries"
+                );
+            }
+            // The dispatch/pod-tick ledger: an aborted dispatch was
+            // counted as an occupied pod-tick but never reached the
+            // execute, so the fused invariant becomes an exact deficit.
+            assert_eq!(
+                dispatched,
+                stats.occupied_pod_ticks - injected,
+                "{method:?} (overlap {overlap}): decode dispatches must equal \
+                 occupied pod-ticks minus injected faults"
+            );
+            ledgers.push((
+                overlap,
+                injected,
+                dispatched,
+                retries,
+                spawns,
+                stats.pod_faults,
+                stats.occupied_pod_ticks,
+            ));
         }
-        // Containment: one retry per injected fault, landing only on
-        // the faulted pod's request; bystanders spawn exactly once
-        // (zero extra dispatches).
+        // The cross-mode audit: identical fault plan, identical counter
+        // ledger. `note_*` moves at issue time only, so moving the
+        // awaits must not move a single counter.
+        let (sync, over) = (&ledgers[0], &ledgers[1]);
         assert_eq!(
-            retries.iter().sum::<usize>(),
-            injected,
-            "{method:?}: retries {retries:?} must match injected faults"
+            (&sync.1, &sync.2, &sync.3, &sync.4, &sync.5, &sync.6),
+            (&over.1, &over.2, &over.3, &over.4, &over.5, &over.6),
+            "{method:?}: the overlapped run's counter ledger diverged from --no-overlap"
         );
-        for (i, (&r, &s)) in retries.iter().zip(&spawns).enumerate() {
-            assert_eq!(s, 1 + r, "{method:?} request {i}: spawns must be 1 + retries");
+    }
+}
+
+/// Eviction × overlap (PR 9): a fused request evicted mid-flight under
+/// the software-pipelined tick — its driver (and pod lease) dropped
+/// between ticks, where the end-of-tick drain guarantees no ticket is
+/// outstanding — re-admits, re-prefills, and completes bit-identical
+/// to its blocking run, for all four methods. The synchronous tick runs
+/// the same eviction trace as the oracle.
+#[test]
+fn evicted_fused_requests_under_overlap_are_bit_identical() {
+    let Some(engine) = load() else { return };
+    if !packed_ready(&engine) {
+        eprintln!("SKIP: artifact set has no packed executables (re-run `make artifacts`)");
+        return;
+    }
+    let problems = Dataset::GsmSynth.generate(4, 19);
+    let prompts: Vec<String> = problems.iter().map(|p| p.prompt()).collect();
+    let order: Vec<usize> = (0..prompts.len()).collect();
+
+    for method in [Method::Greedy, Method::Bon, Method::StBon, Method::Kappa] {
+        let cfg = RunConfig { method, n: 4, max_new_tokens: 48, ..RunConfig::default() };
+        let blocking: Vec<GenOutput> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| run_method(&engine, p, &cfg, request_seed(5, i as u64)).expect("blocking"))
+            .collect();
+        for overlap in [false, true] {
+            let (fused, _stats) = run_fused_trace_with(
+                &engine,
+                FuseConfig::default(),
+                false,
+                overlap,
+                Some(4),
+                &prompts,
+                &cfg,
+                5,
+                &order,
+                1,
+                3,
+            );
+            for (i, (b, f)) in blocking.iter().zip(&fused).enumerate() {
+                assert_outputs_identical(
+                    b,
+                    f,
+                    &format!(
+                        "{method:?} request {i} after a fused evict/re-admit (overlap {overlap})"
+                    ),
+                );
+            }
         }
-        // The dispatch/pod-tick ledger: an aborted dispatch was counted
-        // as an occupied pod-tick but never reached the execute, so the
-        // fused invariant becomes an exact deficit.
-        assert_eq!(
-            dispatched,
-            stats.occupied_pod_ticks - injected,
-            "{method:?}: decode dispatches must equal occupied pod-ticks minus injected faults"
-        );
     }
 }
 

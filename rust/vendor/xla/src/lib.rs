@@ -256,10 +256,44 @@ impl PjRtLoadedExecutable {
     /// execute like every other stub execute path.
     pub fn execute_b_donated(
         &self,
-        _prefix: &[PjRtBuffer],
+        prefix: &[PjRtBuffer],
         tail: &[&PjRtBuffer],
         donated_tail: &[usize],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_b_donated_async(prefix, tail, donated_tail)?.await_ready()
+    }
+
+    /// Asynchronous flavor of [`Self::execute_b_donated`]: **issue** the
+    /// dispatch and return a [`PjRtExecution`] ticket instead of blocking
+    /// on completion. The caller awaits the ticket when it actually needs
+    /// the outputs, which is what lets a second dispatch launch while the
+    /// first is still on device (two-deep pipelining).
+    ///
+    /// Real-hardware mapping: `PJRT_LoadedExecutable_Execute` is already
+    /// asynchronous — it enqueues the computation on the device stream
+    /// and returns one `PJRT_Event` per device (the
+    /// `device_complete_events` out-param) plus output buffer handles
+    /// that are legal to pass to further executions immediately (PJRT
+    /// orders them on the stream). The ticket wraps that event:
+    /// [`PjRtExecution::await_ready`] maps to `PJRT_Event_Await` (or an
+    /// `PJRT_Event_OnReady` callback wired to a channel). Independent
+    /// dispatches issued through different tickets run on separate
+    /// streams/queues when the plugin supports it — concurrency across
+    /// tickets is the backend's scheduling freedom, while a single
+    /// ticket's issue→await pair is totally ordered.
+    ///
+    /// Issue-time vs await-time errors: argument validation (the donated
+    /// index bounds here; shape/layout mismatches on real PJRT) fails the
+    /// *issue* synchronously, while device-side failures surface from the
+    /// await. The stub mirrors that split exactly — indices are validated
+    /// eagerly, and the stub's cannot-execute refusal is deferred into
+    /// the ticket so issue/await sequencing is testable offline.
+    pub fn execute_b_donated_async(
+        &self,
+        _prefix: &[PjRtBuffer],
+        tail: &[&PjRtBuffer],
+        donated_tail: &[usize],
+    ) -> Result<PjRtExecution> {
         for &i in donated_tail {
             if i >= tail.len() {
                 return err(format!(
@@ -268,10 +302,37 @@ impl PjRtLoadedExecutable {
                 ));
             }
         }
-        err(
-            "xla stub backend cannot execute HLO — swap rust/vendor/xla for the \
-             PJRT-backed crate to run compiled artifacts",
-        )
+        Ok(PjRtExecution {
+            result: err(
+                "xla stub backend cannot execute HLO — swap rust/vendor/xla for the \
+                 PJRT-backed crate to run compiled artifacts",
+            ),
+        })
+    }
+}
+
+/// In-flight execution ticket returned by
+/// [`PjRtLoadedExecutable::execute_b_donated_async`].
+///
+/// Real-hardware mapping: the per-device `PJRT_Event` that
+/// `PJRT_LoadedExecutable_Execute` hands back, bundled with the output
+/// `PJRT_Buffer` handles (which PJRT returns immediately — they are
+/// stream-ordered promises, usable as inputs to further dispatches
+/// before the event fires). Dropping a ticket without awaiting maps to
+/// `PJRT_Event_Destroy` on a still-pending event: legal, but the caller
+/// loses the only place device-side errors surface — `kappa`'s fusion
+/// hub therefore treats every issued ticket as must-await.
+#[derive(Debug)]
+pub struct PjRtExecution {
+    result: Result<Vec<Vec<PjRtBuffer>>>,
+}
+
+impl PjRtExecution {
+    /// Block until the execution completes and return its outputs
+    /// (`PJRT_Event_Await` + output handle handoff). Consumes the ticket:
+    /// an execution completes exactly once.
+    pub fn await_ready(self) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.result
     }
 }
 
@@ -376,5 +437,28 @@ mod tests {
         // In-range donation reaches the (stub) execute refusal instead.
         let e = exe.execute_b_donated(&[], &[&b], &[0]).unwrap_err();
         assert!(e.to_string().contains("cannot execute"), "{e}");
+    }
+
+    /// The issue/await split: bad arguments fail the issue eagerly, while
+    /// device-side failures (here, the stub's execute refusal) defer into
+    /// the ticket and only surface at `await_ready` — the same place a
+    /// real `PJRT_Event` would deliver them.
+    #[test]
+    fn async_issue_validates_eagerly_and_defers_execution_errors() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule stub".into() };
+        let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let b = c.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        // Argument validation is synchronous at issue.
+        let e = exe.execute_b_donated_async(&[], &[&b], &[9]).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // A well-formed issue succeeds; two tickets can be in flight at
+        // once; each surfaces its (stub) device error only when awaited.
+        let t1 = exe.execute_b_donated_async(&[], &[&b], &[0]).expect("issue succeeds");
+        let t2 = exe.execute_b_donated_async(&[], &[&b], &[]).expect("second in-flight issue");
+        let e1 = t1.await_ready().unwrap_err();
+        assert!(e1.to_string().contains("cannot execute"), "{e1}");
+        let e2 = t2.await_ready().unwrap_err();
+        assert!(e2.to_string().contains("cannot execute"), "{e2}");
     }
 }
