@@ -14,6 +14,19 @@ cd "$(dirname "$0")"
 echo "[ci] cargo fmt --check"
 cargo fmt --check
 
+# Repo-specific static analysis (rust/tools/lint): the ROADMAP serving
+# invariants as machine-checked rules, run *before* clippy so the
+# cheapest, most specific gate fails first. --self-test proves the
+# engine still flags every golden fixture (a gate that cannot fail
+# proves nothing); the tree scan then fails on any finding not covered
+# by a reasoned `lint:allow` pragma or a config allowlist entry, and on
+# any stale allowlist entry or ratchet drift (see kappa-lint.toml).
+echo "[ci] kappa-lint --self-test (golden fixtures)"
+cargo run --release -p kappa-lint --quiet -- --self-test
+
+echo "[ci] kappa-lint (tree scan, per-rule counts)"
+cargo run --release -p kappa-lint --quiet -- --root ..
+
 echo "[ci] cargo clippy (all targets, warnings are errors)"
 cargo clippy --all-targets -- -D warnings
 

@@ -230,8 +230,13 @@ impl Scorer for HiddenProbeScorer {
             return false;
         }
         for (slot, &bi) in tick.live.iter().enumerate() {
-            let p = sigmoid(self.probe.logit(&tap[slot * d..(slot + 1) * d]));
-            self.sig[bi].update_trajectory(p, tick.t);
+            // The slab-level width check above makes a mis-sized row
+            // unreachable here, but `logit` re-checks per row — treat a
+            // `None` as this tick being unscoreable rather than panic.
+            let Some(logit) = self.probe.logit(&tap[slot * d..(slot + 1) * d]) else {
+                return false;
+            };
+            self.sig[bi].update_trajectory(sigmoid(logit), tick.t);
         }
         true
     }

@@ -214,7 +214,13 @@ pub struct FusedBatch {
     bucket: usize,
     max_seq: usize,
     vocab: usize,
-    cache: KvCache,
+    /// The pod's device residence. `None` exactly while a packed
+    /// dispatch holds the donated handles ([`Self::issue`] moves the
+    /// cache out via [`KvCache::donate`]; [`Self::await_ready`] installs
+    /// the successor) — so re-dispatching from donation-stale handles is
+    /// a type error, not a runtime invariant. A pod observed between
+    /// ticks always has `Some` here.
+    cache: Option<KvCache>,
     /// Double-buffered `[bucket × vocab]` download staging + signal
     /// rows, banked by epoch parity ([`StagingPair`]): epoch T's rows
     /// stay readable in one bank while epoch T+1's dispatch downloads
@@ -317,6 +323,30 @@ impl FusedBatch {
 
     pub fn bucket(&self) -> usize {
         self.bucket
+    }
+
+    /// The pod's resident cache, or a named error while it is donated
+    /// to an in-flight dispatch. Callers that run strictly between
+    /// ticks (admission, compaction) treat the error as a scheduler
+    /// bug surfaced loudly, never as a state to recover from.
+    fn resident_cache(&self) -> Result<&KvCache> {
+        self.cache.as_ref().ok_or_else(|| {
+            anyhow!(
+                "fusion: pod {} has no resident cache \
+                 (donated to a dispatch that never completed)",
+                self.id
+            )
+        })
+    }
+
+    fn resident_cache_mut(&mut self) -> Result<&mut KvCache> {
+        let id = self.id;
+        self.cache.as_mut().ok_or_else(|| {
+            anyhow!(
+                "fusion: pod {id} has no resident cache \
+                 (donated to a dispatch that never completed)"
+            )
+        })
     }
 
     /// Leased rows of a request, in slot order (diagnostics/tests).
@@ -471,9 +501,18 @@ impl FusedBatch {
     /// statement block in which rows "move": compaction is itself a
     /// dispatch, so the PR 4 row-stability invariant (rows never move
     /// *between* dispatches) is refined, not violated.
-    fn install_compacted(&mut self, cache: KvCache, dst_bucket: usize) {
-        debug_assert_eq!(cache.bucket, dst_bucket);
-        self.cache = cache;
+    fn install_compacted(&mut self, cache: KvCache, dst_bucket: usize) -> Result<()> {
+        // Row-accounting path: a mismatched bucket here would hand every
+        // lease out-of-bucket indices, so the check runs in all build
+        // profiles (never a `debug_assert`-only guard).
+        if cache.bucket != dst_bucket {
+            bail!(
+                "fusion invariant: compacted cache is bucket {} but the commit \
+                 expected {dst_bucket}",
+                cache.bucket
+            );
+        }
+        self.cache = Some(cache);
         self.bucket = dst_bucket;
         let mut next = 0usize;
         for lease in self.leases.iter_mut() {
@@ -496,6 +535,7 @@ impl FusedBatch {
         self.sig_conf.truncate_both(dst_bucket);
         self.sig_ent.truncate_both(dst_bucket);
         self.sig_tap.truncate_both(dst_bucket * self.d_model);
+        Ok(())
     }
 
     /// Two-deep issue guard, factored out so the boundary is
@@ -514,15 +554,15 @@ impl FusedBatch {
                 fl.epoch
             );
         }
-        if let Some(l) =
-            self.leases.iter().find(|l| l.ready.is_some_and(|(e, _)| e < self.epoch))
-        {
-            let (e, _) = l.ready.unwrap();
+        let stale = self.leases.iter().find_map(|l| match l.ready {
+            Some((e, _)) if e < self.epoch => Some((l.id, e)),
+            _ => None,
+        });
+        if let Some((lease_id, e)) = stale {
             bail!(
-                "fusion: pod {} issuing a third in-flight epoch — lease {} still holds \
+                "fusion: pod {} issuing a third in-flight epoch — lease {lease_id} still holds \
                  unabsorbed rows from epoch {e} while the pod is at epoch {}",
                 self.id,
-                l.id,
                 self.epoch
             );
         }
@@ -556,6 +596,22 @@ impl FusedBatch {
         } else {
             self.check_issue_capacity().and_then(|()| {
                 let model = engine.model();
+                // The donation is a *move*: the resident cache leaves the
+                // pod here and only [`Self::await_ready`] can put a
+                // successor back. An issue error consumes it — consistent,
+                // because `dispatch_tick` poisons and tears down the pod
+                // on any issue failure, so the pod never serves again.
+                let donated = self
+                    .cache
+                    .take()
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "fusion: pod {} has no resident cache \
+                             (donated to a dispatch that never completed)",
+                            self.id
+                        )
+                    })?
+                    .donate();
                 // What a dispatch *emits* can exceed what a given lease
                 // asked for (union semantics) and can fall short of the
                 // union request (tap wanted, tapped packed artifact
@@ -564,15 +620,15 @@ impl FusedBatch {
                 // set against its own request at absorb.
                 let run = if wanted.tap && model.has_tap_packed(self.bucket) {
                     model
-                        .superstep_tap_packed_issue(&tokens, &pos, &self.cache)
+                        .superstep_tap_packed_issue(&tokens, &pos, donated)
                         .map(|s| (s, SignalSet::ALL))
                 } else if wanted.any() {
                     model
-                        .superstep_packed_issue(&tokens, &pos, &self.cache)
+                        .superstep_packed_issue(&tokens, &pos, donated)
                         .map(|s| (s, SignalSet::SCALARS))
                 } else {
                     model
-                        .decode_packed_issue(&tokens, &pos, &self.cache)
+                        .decode_packed_issue(&tokens, &pos, donated)
                         .map(|s| (s, SignalSet::NONE))
                 };
                 run.map(|(step, ran)| {
@@ -621,15 +677,21 @@ impl FusedBatch {
         if let Some(step) = step {
             let want_signals = step.has_signals();
             let want_tap = step.has_tap();
-            let FusedBatch { cache, logits, sig_kl, sig_conf, sig_ent, sig_tap, .. } = self;
+            let FusedBatch { logits, sig_kl, sig_conf, sig_ent, sig_tap, .. } = self;
             let signals_out = want_signals.then(|| {
                 (sig_kl.bank_mut(epoch), sig_conf.bank_mut(epoch), sig_ent.bank_mut(epoch))
             });
             let tap_out = want_tap.then(|| sig_tap.bank_mut(epoch));
-            if let Err(e) = step.complete(cache, logits.bank_mut(epoch), signals_out, tap_out) {
-                let fault = PodFault::classify(self.id, self.bucket, "dispatch", &e);
-                self.poison = Some(fault.clone());
-                return Err(anyhow::Error::new(fault));
+            match step.complete(logits.bank_mut(epoch), signals_out, tap_out) {
+                // The successor cache comes back only from a completed
+                // ticket — the other end of the donation move in
+                // [`Self::issue`].
+                Ok(cache) => self.cache = Some(cache),
+                Err(e) => {
+                    let fault = PodFault::classify(self.id, self.bucket, "dispatch", &e);
+                    self.poison = Some(fault.clone());
+                    return Err(anyhow::Error::new(fault));
+                }
             }
         }
         for lease in self.leases.iter_mut() {
@@ -883,7 +945,7 @@ impl FusionHub {
                 for &r in &rows {
                     idx[r] = 0;
                 }
-                model.fork_into(src, &mut pod.cache, &idx)
+                pod.resident_cache_mut().and_then(|cache| model.fork_into(src, cache, &idx))
             } else {
                 // fuse convention (complement): idx[r] ≥ 0 keeps dst row
                 // idx[r]; −1 pulls src row 0. Produces a fresh cache.
@@ -892,9 +954,11 @@ impl FusionHub {
                 for &r in &rows {
                     idx[r] = -1;
                 }
-                model.fuse(&pod.cache, src, &idx).map(|cache| {
-                    pod.cache = cache;
-                })
+                pod.resident_cache()
+                    .and_then(|resident| model.fuse(resident, src, &idx))
+                    .map(|cache| {
+                        pod.cache = Some(cache);
+                    })
             };
             pod.fuse_idx = idx;
             match merged {
@@ -959,7 +1023,7 @@ impl FusionHub {
             bucket,
             max_seq: cfg.max_seq,
             vocab: cfg.vocab,
-            cache,
+            cache: Some(cache),
             logits: StagingPair::new(),
             sig_kl: StagingPair::new(),
             sig_conf: StagingPair::new(),
@@ -1178,7 +1242,7 @@ impl FusionHub {
             let mut idx = std::mem::take(&mut pod.fuse_idx);
             let run = pod.compaction_idx(dst_bucket, &mut idx).and_then(|()| {
                 let mut dst = model.kv_zeros(dst_bucket)?;
-                model.compact_into(&pod.cache, &mut dst, &idx)?;
+                model.compact_into(pod.resident_cache()?, &mut dst, &idx)?;
                 Ok(dst)
             });
             pod.fuse_idx = idx;
@@ -1197,8 +1261,17 @@ impl FusionHub {
             let old_bucket = pod.bucket;
             // Commit: cache install + lease rewrite + epoch bump in one
             // statement block (`install_compacted`); the old pod cache
-            // drops here, which is the physical reclaim.
-            pod.install_compacted(dst, dst_bucket);
+            // drops here, which is the physical reclaim. A failed commit
+            // gets the same pod-scoped containment as a failed dispatch.
+            if let Err(e) = pod.install_compacted(dst, dst_bucket) {
+                mem.free("compact_transient", dst_bytes);
+                let fault = PodFault::classify(pod.id, pod.bucket, "compact", &e);
+                pod.poison = Some(fault);
+                stats.pod_faults += 1;
+                mem.remove_component(&format!("pod{}", pod.id));
+                failed.push(i);
+                continue;
+            }
             // Discounted, like every pod component: the CoW prefix model
             // survives compaction (the rewrite is a page-table copy of
             // the shared region, not a materialization).
@@ -1415,7 +1488,7 @@ mod tests {
             bucket,
             max_seq: 224,
             vocab: 4,
-            cache: KvCache { k, v, bucket },
+            cache: Some(KvCache { k, v, bucket }),
             logits: StagingPair::new(),
             sig_kl: StagingPair::new(),
             sig_conf: StagingPair::new(),
@@ -1547,7 +1620,7 @@ mod tests {
         // absorb window.
         pod.leases[1].ready = Some((11, SignalSet::NONE));
 
-        pod.install_compacted(offline_cache(6), 6);
+        pod.install_compacted(offline_cache(6), 6).unwrap();
         // Sequential rewrite matching `compaction_idx`'s plan: lease 0
         // rows → 0..3, lease 1 rows → 3..5; row 5 free.
         assert_eq!(pod.lease_rows(0).unwrap(), &[0, 1, 2]);

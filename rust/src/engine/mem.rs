@@ -97,6 +97,7 @@ impl MemTracker {
             let had = self.current;
             self.current = 0;
             self.log(label, -(bytes as i64), None);
+            // lint:allow(no-panic-serving, deliberate: an accounting underflow means every later admission decision is poisoned — saturate the counter, journal the free, then die loudly rather than serve on corrupt accounting)
             panic!("MemTracker::free underflow: freeing {bytes} bytes of {label:?} with only {had} tracked");
         };
         self.current = next;

@@ -205,6 +205,7 @@ impl PrefixHandle {
         let e = inner
             .entries
             .get(&self.key)
+            // lint:allow(no-unwrap-serving, an entry outlives its handles by construction — the last release reclaims it and `released` gates double-release — so a miss is store-invariant corruption where unwinding beats serving from a freed prefix)
             .expect("prefix entry reclaimed while a live handle reads it");
         f(&e.data)
     }

@@ -16,6 +16,17 @@
 //!
 //! Python never runs on the request path: `make artifacts` → the Rust
 //! binary is self-contained.
+//!
+//! The ROADMAP's serving invariants are machine-checked: `kappa-lint`
+//! (`rust/tools/lint`, run by `rust/ci.sh` ahead of clippy — see its
+//! `RULES.md`) scans this tree, and the attributes below put the
+//! compile-time half of the same contracts on every build: no `unsafe`
+//! anywhere in the serving stack, and the `clippy.toml`
+//! disallowed-methods/-types lists (`partial_cmp` on floats, hashed
+//! collections on deterministic paths) promoted to hard errors.
+
+#![forbid(unsafe_code)]
+#![deny(clippy::disallowed_methods, clippy::disallowed_types)]
 
 pub mod bench;
 pub mod coordinator;

@@ -130,8 +130,19 @@ impl Runtime {
     }
 
     /// Load + compile an HLO-text artifact (memoized by path).
+    ///
+    /// The memo/log mutexes recover from poisoning instead of
+    /// panicking: both structures are append-only (a panicking writer
+    /// cannot leave a half-valid entry visible), so the data behind a
+    /// poisoned lock is still consistent and serving must not die for
+    /// another thread's panic.
     pub fn load_executable(&self, path: &Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+        if let Some(exe) = self
+            .cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get(path)
+        {
             return Ok(std::sync::Arc::clone(exe));
         }
         let t0 = Instant::now();
@@ -142,19 +153,30 @@ impl Runtime {
             self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?,
         );
         let dt = t0.elapsed().as_secs_f64();
-        self.compile_log.lock().unwrap().push((path.to_path_buf(), dt));
-        self.cache.lock().unwrap().insert(path.to_path_buf(), std::sync::Arc::clone(&exe));
+        self.compile_log
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push((path.to_path_buf(), dt));
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(path.to_path_buf(), std::sync::Arc::clone(&exe));
         Ok(exe)
     }
 
     /// Number of compiled executables currently cached.
     pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
     }
 
     /// Total wall-clock spent in compilation so far (seconds).
     pub fn compile_seconds(&self) -> f64 {
-        self.compile_log.lock().unwrap().iter().map(|(_, t)| t).sum()
+        self.compile_log
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .iter()
+            .map(|(_, t)| t)
+            .sum()
     }
 
     /// Number of host→device transfers issued so far.
@@ -409,7 +431,7 @@ mod tests {
         rt.set_fault_plan(Some(FaultPlan::parse("decode@0").unwrap()));
         let err = rt.fault_check(FaultSite::Decode).unwrap_err();
         assert!(
-            err.downcast_ref::<super::super::faults::FaultError>().is_some(),
+            err.chain().any(|c| c.downcast_ref::<super::super::faults::FaultError>().is_some()),
             "fault check must surface a typed FaultError"
         );
         assert_eq!(rt.faults_injected(), 1);

@@ -12,4 +12,4 @@ pub mod weights;
 pub use client::{Runtime, StagingPair};
 pub use faults::{FaultError, FaultPlan, FaultSite};
 pub use manifest::{Manifest, ModelConfig, ModelManifest, ParamEntry};
-pub use model::{KvCache, LoadedModel, PackedStep, ProbeWeights};
+pub use model::{DonatedKv, KvCache, LoadedModel, PackedStep, ProbeWeights};

@@ -91,16 +91,22 @@ impl ProbeWeights {
         Ok(ProbeWeights { d_model, w, b })
     }
 
-    /// The probe's pre-sigmoid score for one tap row. Panics are not an
-    /// option on the decode path, so a mis-sized row is a contract
-    /// violation checked by the caller (`d_model` is validated at load).
-    pub fn logit(&self, tap: &[f32]) -> f64 {
-        debug_assert_eq!(tap.len(), self.w.len());
+    /// The probe's pre-sigmoid score for one tap row, or `None` for a
+    /// mis-sized row. Panics are not an option on the decode path (the
+    /// signal-family invariant: unscoreable ticks degrade, never
+    /// panic), and the old `debug_assert_eq!` compiled out of release
+    /// builds entirely — a silently truncated dot product would have
+    /// scored garbage. The width check is active in every profile and
+    /// the caller treats `None` as "this tick is unscoreable".
+    pub fn logit(&self, tap: &[f32]) -> Option<f64> {
+        if tap.len() != self.w.len() {
+            return None;
+        }
         let mut acc = 0.0f64;
         for (x, w) in tap.iter().zip(&self.w) {
             acc += *x as f64 * *w as f64;
         }
-        acc + self.b as f64
+        Some(acc + self.b as f64)
     }
 }
 
@@ -110,6 +116,44 @@ pub struct KvCache {
     pub v: PjRtBuffer,
     /// Batch bucket these buffers are shaped for.
     pub bucket: usize,
+}
+
+impl KvCache {
+    /// Consume this cache into a [`DonatedKv`] donation token — the
+    /// typestate handoff for the packed issue/await family. After this
+    /// call the cache no longer exists as a value, so issuing a second
+    /// dispatch from the same handles (the donation-aliasing hazard the
+    /// ROADMAP used to guard with prose) is a **compile error**, not a
+    /// runtime bucket-mismatch check:
+    ///
+    /// ```compile_fail
+    /// fn reuse_after_donation(model: &kappa::runtime::LoadedModel,
+    ///                         cache: kappa::runtime::KvCache) {
+    ///     let first = model.decode_packed_issue(&[0], &[0], cache.donate());
+    ///     // ERROR: use of moved value `cache` — the donation consumed it.
+    ///     let second = model.decode_packed_issue(&[0], &[0], cache.donate());
+    ///     let _ = (first, second);
+    /// }
+    /// ```
+    ///
+    /// The token is held by the in-flight [`PackedStep`] and dropped by
+    /// [`PackedStep::complete`], which returns the successor `KvCache`
+    /// (aliasing the same device memory) — so the stale handles live
+    /// exactly as long as the dispatch that consumed them.
+    pub fn donate(self) -> DonatedKv {
+        DonatedKv { k: self.k, v: self.v, bucket: self.bucket }
+    }
+}
+
+/// Move-only witness that a [`KvCache`]'s k/v handles have been handed
+/// to a donating dispatch. Deliberately opaque (private fields, no
+/// `Clone`): the only way to get the handles back is
+/// [`PackedStep::complete`] returning the successor cache. See
+/// [`KvCache::donate`].
+pub struct DonatedKv {
+    k: PjRtBuffer,
+    v: PjRtBuffer,
+    bucket: usize,
 }
 
 /// An in-flight packed dispatch: the issue half of the issue/await
@@ -124,10 +168,10 @@ pub struct KvCache {
 /// *different pods* keeps their dispatches in flight concurrently on
 /// separate streams, which is the whole point of the overlapped tick.
 /// Issue-time bookkeeping is final the moment this struct exists: the
-/// fault check ran, `note_decode_dispatch` counted, and the
-/// predecessor k/v handles of the issuing cache are donation-stale —
-/// the pod must not re-dispatch from that cache until `complete`
-/// installs the aliased successors.
+/// fault check ran, `note_decode_dispatch` counted, and the issuing
+/// cache was **consumed** into the [`DonatedKv`] token held here — the
+/// type system (not a ROADMAP bullet) guarantees nobody re-dispatches
+/// from the stale handles until `complete` returns the successor.
 ///
 /// Every ticket must be awaited: dropping one un-completed abandons
 /// the donated k/v in an indeterminate state (the stub tolerates it;
@@ -138,8 +182,25 @@ pub struct PackedStep {
     ticket: xla::PjRtExecution,
     what: &'static str,
     expect: usize,
-    bucket: usize,
+    /// The consumed predecessor cache; its handles stay alive (stale)
+    /// for exactly the in-flight window and drop inside `complete`.
+    donated: DonatedKv,
     issued: Instant,
+}
+
+/// Pop the donation-ordered successor `(k, v)` pair off a dispatch's
+/// output list (outputs end `..., k, v`). Callers have already
+/// length-checked `out`, so a missing handle means a corrupted output
+/// list — reported as a named error, never a panic (the serving-path
+/// discipline: one failed dispatch poisons one pod, not the worker).
+fn pop_kv(out: &mut Vec<PjRtBuffer>, what: &str) -> Result<(PjRtBuffer, PjRtBuffer)> {
+    let v = out
+        .pop()
+        .ok_or_else(|| anyhow!("{what}: output list missing the successor v handle"))?;
+    let k = out
+        .pop()
+        .ok_or_else(|| anyhow!("{what}: output list missing the successor k handle"))?;
+    Ok((k, v))
 }
 
 impl PackedStep {
@@ -154,14 +215,23 @@ impl PackedStep {
         self.expect == 7
     }
 
-    /// Await the dispatch and publish its outputs: install the
-    /// donation-aliased successor k/v into `cache`, then download the
-    /// logits slab (and, per flavor, the three signal vectors and the
-    /// tap slab) into the caller-owned staging buffers. `signals_out`
-    /// must be `Some` exactly for superstep flavors and `tap_out`
-    /// exactly for the tapped flavor — a mismatch is a caller bug and
-    /// fails loudly *after* the ticket is awaited (the must-await
-    /// contract holds even on the error path).
+    /// The bucket this dispatch was issued for (carried by the donation
+    /// token, so it can never disagree with the successor it produces).
+    pub fn bucket(&self) -> usize {
+        self.donated.bucket
+    }
+
+    /// Await the dispatch and publish its outputs: download the logits
+    /// slab (and, per flavor, the three signal vectors and the tap
+    /// slab) into the caller-owned staging buffers, and return the
+    /// successor [`KvCache`] built from the donation-aliased k/v
+    /// outputs. The old issued-for-bucket-N-completed-against-bucket-M
+    /// failure mode is unrepresentable now: the successor's bucket is
+    /// the consumed predecessor's, carried by the [`DonatedKv`] token.
+    /// `signals_out` must be `Some` exactly for superstep flavors and
+    /// `tap_out` exactly for the tapped flavor — a mismatch is a caller
+    /// bug and fails loudly *after* the ticket is awaited (the
+    /// must-await contract holds even on the error path).
     ///
     /// The slab-download fault site and counter fire here, at await
     /// time — the download is await-side work, unlike the dispatch
@@ -171,50 +241,49 @@ impl PackedStep {
     /// sync and overlapped dispatches through one mechanism.
     pub fn complete(
         self,
-        cache: &mut KvCache,
         logits_out: &mut Vec<f32>,
         signals_out: Option<(&mut Vec<f32>, &mut Vec<f32>, &mut Vec<f32>)>,
         tap_out: Option<&mut Vec<f32>>,
-    ) -> Result<()> {
-        let res = self.ticket.await_ready();
-        self.rt.note_device_busy(self.issued.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+    ) -> Result<KvCache> {
+        let has_signals = self.has_signals();
+        let has_tap = self.has_tap();
+        let PackedStep { rt, ticket, what, expect, donated, issued } = self;
+        let res = ticket.await_ready();
+        rt.note_device_busy(issued.elapsed().as_nanos().min(u64::MAX as u128) as u64);
         let mut out = res?.swap_remove(0);
-        if cache.bucket != self.bucket {
+        if signals_out.is_some() != has_signals || tap_out.is_some() != has_tap {
             bail!(
-                "{}: step issued for bucket {} completed against a cache for bucket {}",
-                self.what,
-                self.bucket,
-                cache.bucket
-            );
-        }
-        if signals_out.is_some() != self.has_signals() || tap_out.is_some() != self.has_tap() {
-            bail!(
-                "{}: staging mismatch (signals {}, tap {})",
-                self.what,
+                "{what}: staging mismatch (signals {}, tap {})",
                 signals_out.is_some(),
                 tap_out.is_some()
             );
         }
-        if out.len() != self.expect {
-            bail!("{} returned {} outputs, expected {}", self.what, out.len(), self.expect);
+        if out.len() != expect {
+            bail!("{what} returned {} outputs, expected {expect}", out.len());
         }
-        let tap = self.has_tap().then(|| out.pop().unwrap());
-        // Donation contract: the stale k/v handles are dropped here, in
-        // the same statement that installs their aliased successors.
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
-        self.rt.fault_check(FaultSite::SlabDownload)?;
-        self.rt.note_slab_download();
-        self.rt.to_host_f32_into(&out[0], logits_out)?;
+        let tap = if has_tap {
+            Some(out.pop().ok_or_else(|| anyhow!("{what}: output list missing the tap slab"))?)
+        } else {
+            None
+        };
+        let (k, v) = pop_kv(&mut out, what)?;
+        // Donation contract: the successor aliases the consumed
+        // predecessor's device memory; the stale handles in `donated`
+        // drop when this call returns, in the same scope that built
+        // their replacement.
+        let cache = KvCache { k, v, bucket: donated.bucket };
+        rt.fault_check(FaultSite::SlabDownload)?;
+        rt.note_slab_download();
+        rt.to_host_f32_into(&out[0], logits_out)?;
         if let Some((kl_out, conf_out, ent_out)) = signals_out {
-            self.rt.to_host_f32_into(&out[1], kl_out)?;
-            self.rt.to_host_f32_into(&out[2], conf_out)?;
-            self.rt.to_host_f32_into(&out[3], ent_out)?;
+            rt.to_host_f32_into(&out[1], kl_out)?;
+            rt.to_host_f32_into(&out[2], conf_out)?;
+            rt.to_host_f32_into(&out[3], ent_out)?;
         }
         if let (Some(tap), Some(tap_out)) = (tap, tap_out) {
-            self.rt.to_host_f32_into(&tap, tap_out)?;
+            rt.to_host_f32_into(&tap, tap_out)?;
         }
-        Ok(())
+        Ok(cache)
     }
 }
 
@@ -238,6 +307,7 @@ impl ExeCell {
         if let Some(e) = self.exe.get() {
             return Ok(Arc::clone(e));
         }
+        // lint:allow(mutex-hot-path, this is the one blessed compile site — first use per (op, bucket) pays the mutexed compile+memoize path exactly once, and every steady-state dispatch takes the lock-free OnceLock read above)
         let e = rt.load_executable(&self.path)?;
         // A racing thread may have set the cell first; either way the
         // stored handle is for the same artifact.
@@ -394,6 +464,7 @@ impl LoadedModel {
 
     /// Device-resident reference distribution (uploaded once at load).
     pub fn q_device(&self) -> &PjRtBuffer {
+        // lint:allow(no-unwrap-serving, `load` uploads q unconditionally before any LoadedModel escapes, so a missing buffer is unreachable — and an infallible accessor keeps every hot dispatch site branch-free)
         self.q_buf.get().expect("q uploaded during load")
     }
 
@@ -444,7 +515,11 @@ impl LoadedModel {
         // `prompt_len`, then allocation-free), uploaded before the guard
         // drops.
         let tokens = {
-            let mut padded = self.prefill_scratch.lock().unwrap();
+            // Poison recovery, not unwrap: the scratch is cleared and
+            // rebuilt below, so a panicked peer can only have left it
+            // with stale contents we immediately overwrite.
+            let mut padded =
+                self.prefill_scratch.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             padded.clear();
             padded.extend_from_slice(prompt_ids);
             padded.resize(p, crate::tokenizer::PAD_ID as i32);
@@ -456,8 +531,7 @@ impl LoadedModel {
         if out.len() != 3 {
             bail!("prefill returned {} outputs, expected 3", out.len());
         }
-        let v = out.pop().unwrap();
-        let k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "prefill")?;
         let logits = self.rt.to_host_f32(&out[0])?;
         Ok((logits, KvCache { k, v, bucket: 1 }))
     }
@@ -503,8 +577,7 @@ impl LoadedModel {
         if out.len() != 3 {
             bail!("decode returned {} outputs, expected 3", out.len());
         }
-        let v = out.pop().unwrap();
-        let k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "decode")?;
         self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         let logits = self.rt.to_host_f32(&out[0])?;
@@ -543,8 +616,9 @@ impl LoadedModel {
         }
         // Donation contract: the stale k/v handles are dropped here, in
         // the same statement that installs their aliased successors.
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "decode")?;
+        cache.k = k;
+        cache.v = v;
         self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
@@ -604,8 +678,9 @@ impl LoadedModel {
         if out.len() != 6 {
             bail!("superstep returned {} outputs, expected 6", out.len());
         }
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "superstep")?;
+        cache.k = k;
+        cache.v = v;
         self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
@@ -678,9 +753,12 @@ impl LoadedModel {
         if out.len() != 7 {
             bail!("superstep_tap returned {} outputs, expected 7", out.len());
         }
-        let tap = out.pop().unwrap();
-        cache.v = out.pop().unwrap();
-        cache.k = out.pop().unwrap();
+        let tap = out
+            .pop()
+            .ok_or_else(|| anyhow!("superstep_tap output list missing the tap handle"))?;
+        let (k, v) = pop_kv(&mut out, "superstep_tap")?;
+        cache.k = k;
+        cache.v = v;
         self.rt.fault_check(FaultSite::SlabDownload)?;
         self.rt.note_slab_download();
         self.rt.to_host_f32_into(&out[0], logits_out)?;
@@ -699,15 +777,14 @@ impl LoadedModel {
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &mut KvCache,
+        cache: KvCache,
         logits_out: &mut Vec<f32>,
         kl_out: &mut Vec<f32>,
         conf_out: &mut Vec<f32>,
         ent_out: &mut Vec<f32>,
         tap_out: &mut Vec<f32>,
-    ) -> Result<()> {
-        self.superstep_tap_packed_issue(tokens, pos, cache)?.complete(
-            cache,
+    ) -> Result<KvCache> {
+        self.superstep_tap_packed_issue(tokens, pos, cache.donate())?.complete(
             logits_out,
             Some((kl_out, conf_out, ent_out)),
             Some(tap_out),
@@ -759,9 +836,9 @@ impl LoadedModel {
         expect: usize,
         tokens: &[i32],
         pos: &[i32],
-        cache: &KvCache,
+        donated: DonatedKv,
     ) -> Result<PackedStep> {
-        let b = cache.bucket;
+        let b = donated.bucket;
         self.check_step_packed(tokens, pos, b)?;
         let cell =
             exes.get(&b).ok_or_else(|| anyhow!("no {missing} artifact for bucket {b}"))?;
@@ -775,28 +852,30 @@ impl LoadedModel {
         let ticket = if expect >= 6 {
             exe.execute_b_donated_async(
                 &self.param_table,
-                &[&tok, &posb, &cache.k, &cache.v, self.q_device()],
+                &[&tok, &posb, &donated.k, &donated.v, self.q_device()],
                 &[2, 3],
             )?
         } else {
             exe.execute_b_donated_async(
                 &self.param_table,
-                &[&tok, &posb, &cache.k, &cache.v],
+                &[&tok, &posb, &donated.k, &donated.v],
                 &[2, 3],
             )?
         };
-        Ok(PackedStep { rt: Arc::clone(&self.rt), ticket, what, expect, bucket: b, issued })
+        Ok(PackedStep { rt: Arc::clone(&self.rt), ticket, what, expect, donated, issued })
     }
 
     /// Issue half of [`Self::decode_packed_into`]: enqueue the packed
-    /// decode and return its in-flight ticket. The predecessor k/v in
-    /// `cache` are donation-stale until [`PackedStep::complete`]
-    /// installs the successors.
+    /// decode and return its in-flight ticket. Taking [`DonatedKv`]
+    /// (not `&KvCache`) makes the donation a *move* at the type level:
+    /// the caller surrenders the cache via [`KvCache::donate`] and can
+    /// only get a cache back from [`PackedStep::complete`] — re-issuing
+    /// against donation-stale handles no longer compiles.
     pub fn decode_packed_issue(
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &KvCache,
+        donated: DonatedKv,
     ) -> Result<PackedStep> {
         self.packed_issue(
             &self.decode_packed_exes,
@@ -806,7 +885,7 @@ impl LoadedModel {
             3,
             tokens,
             pos,
-            cache,
+            donated,
         )
     }
 
@@ -815,7 +894,7 @@ impl LoadedModel {
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &KvCache,
+        donated: DonatedKv,
     ) -> Result<PackedStep> {
         self.packed_issue(
             &self.superstep_packed_exes,
@@ -825,7 +904,7 @@ impl LoadedModel {
             6,
             tokens,
             pos,
-            cache,
+            donated,
         )
     }
 
@@ -834,7 +913,7 @@ impl LoadedModel {
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &KvCache,
+        donated: DonatedKv,
     ) -> Result<PackedStep> {
         self.packed_issue(
             &self.superstep_tap_packed_exes,
@@ -844,7 +923,7 @@ impl LoadedModel {
             7,
             tokens,
             pos,
-            cache,
+            donated,
         )
     }
 
@@ -866,10 +945,10 @@ impl LoadedModel {
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &mut KvCache,
+        cache: KvCache,
         logits_out: &mut Vec<f32>,
-    ) -> Result<()> {
-        self.decode_packed_issue(tokens, pos, cache)?.complete(cache, logits_out, None, None)
+    ) -> Result<KvCache> {
+        self.decode_packed_issue(tokens, pos, cache.donate())?.complete(logits_out, None, None)
     }
 
     /// Packed **decode+signals superstep** — the fused scheduler's hot
@@ -882,14 +961,13 @@ impl LoadedModel {
         &self,
         tokens: &[i32],
         pos: &[i32],
-        cache: &mut KvCache,
+        cache: KvCache,
         logits_out: &mut Vec<f32>,
         kl_out: &mut Vec<f32>,
         conf_out: &mut Vec<f32>,
         ent_out: &mut Vec<f32>,
-    ) -> Result<()> {
-        self.superstep_packed_issue(tokens, pos, cache)?.complete(
-            cache,
+    ) -> Result<KvCache> {
+        self.superstep_packed_issue(tokens, pos, cache.donate())?.complete(
             logits_out,
             Some((kl_out, conf_out, ent_out)),
             None,
@@ -929,8 +1007,7 @@ impl LoadedModel {
         if out.len() != 2 {
             bail!("fuse returned {} outputs, expected 2", out.len());
         }
-        let v = out.pop().unwrap();
-        let k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "fuse")?;
         Ok(KvCache { k, v, bucket: b })
     }
 
@@ -999,8 +1076,9 @@ impl LoadedModel {
         }
         // Donation contract: install the aliased outputs over the stale
         // dst handles in one statement.
-        dst.v = out.pop().unwrap();
-        dst.k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "compact")?;
+        dst.k = k;
+        dst.v = v;
         Ok(())
     }
 
@@ -1054,8 +1132,9 @@ impl LoadedModel {
         }
         // Donation contract: install the aliased outputs over the stale
         // dst handles in one statement.
-        dst.v = out.pop().unwrap();
-        dst.k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "fork")?;
+        dst.k = k;
+        dst.v = v;
         Ok(())
     }
 
@@ -1084,8 +1163,7 @@ impl LoadedModel {
         if out.len() != 2 {
             bail!("gather returned {} outputs, expected 2", out.len());
         }
-        let v = out.pop().unwrap();
-        let k = out.pop().unwrap();
+        let (k, v) = pop_kv(&mut out, "gather")?;
         Ok(KvCache { k, v, bucket: dst_bucket })
     }
 
@@ -1164,6 +1242,7 @@ impl LoadedModel {
             // bucket): no padding copy needed.
             return self.signals_padded(logits, rows, bucket);
         }
+        // lint:allow(hot-path-alloc, compatibility wrapper only — the decode hot path calls signals_padded on the engine's reused slab; this copy exists solely for callers with tight unpadded slabs)
         let mut slab = logits.to_vec();
         slab.resize(bucket * v, 0.0);
         self.signals_padded(&slab, rows, bucket)
@@ -1215,8 +1294,22 @@ mod tests {
         let p = ProbeWeights::from_json(&j, "model sm: probe").unwrap();
         assert_eq!(p.d_model, 3);
         assert_eq!(p.w, vec![1.0, -2.0, 0.5]);
-        let s = p.logit(&[2.0, 1.0, 4.0]);
+        let s = p.logit(&[2.0, 1.0, 4.0]).unwrap();
         assert!((s - (2.0 - 2.0 + 2.0 + 0.25)).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn probe_logit_rejects_mis_sized_tap_row_without_panicking() {
+        // Regression: a tap row narrower or wider than the probe used
+        // to trip a debug_assert (debug builds) or silently truncate
+        // the dot product (release builds). Both are wrong — the row
+        // must score as "unscoreable", not panic or return garbage.
+        let j = json::parse(r#"{"d_model": 3, "w": [1.0, -2.0, 0.5], "b": 0.25}"#).unwrap();
+        let p = ProbeWeights::from_json(&j, "model sm: probe").unwrap();
+        assert_eq!(p.logit(&[1.0, 2.0]), None);
+        assert_eq!(p.logit(&[1.0, 2.0, 3.0, 4.0]), None);
+        assert_eq!(p.logit(&[]), None);
+        assert!(p.logit(&[1.0, 2.0, 3.0]).is_some());
     }
 
     #[test]

@@ -10,10 +10,10 @@
 //! use kappa::testing::{check, Gen};
 //! check("sort is idempotent", 200, |g| {
 //!     let mut v = g.vec_f64(0..64, -1e3..1e3);
-//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     v.sort_by(|a, b| a.total_cmp(b));
 //!     let w = {
 //!         let mut w = v.clone();
-//!         w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!         w.sort_by(|a, b| a.total_cmp(b));
 //!         w
 //!     };
 //!     assert_eq!(v, w);

@@ -44,7 +44,7 @@ fn prop_sampler_respects_top_k_support() {
         let (tok, lp) = sampler::sample(&logits, &cfg, &mut rng);
         // Token must be among the k highest logits.
         let mut sorted: Vec<f32> = logits.clone();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, b| b.total_cmp(a));
         let threshold = sorted[k - 1];
         assert!(
             logits[tok as usize] >= threshold - 1e-6,

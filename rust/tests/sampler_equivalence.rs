@@ -23,7 +23,10 @@ use kappa::util::rng::Pcg64;
 
 /// Verbatim seed implementation (pre-refactor), kept as the oracle.
 /// Panics on NaN via `partial_cmp().unwrap()` — exactly why callers only
-/// hand it non-NaN rows.
+/// hand it non-NaN rows. Exempt from the float-ordering ban (clippy
+/// allow below + the kappa-lint path allowlist): rewriting the frozen
+/// oracle would void the equivalence claim it exists to pin.
+#[allow(clippy::disallowed_methods)]
 fn seed_sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (u32, f64) {
     let v = logits.len();
     let inv_t = 1.0 / cfg.temperature.max(1e-6);

@@ -1,0 +1,9 @@
+// Fixture: known-bad snippet for `accounting-debug-assert`. Scanned
+// under the virtual path rust/src/engine/mem.rs — never compiled.
+// The guard compiles out of release builds and lets the tracker wrap.
+impl MemTracker {
+    pub fn free(&mut self, bytes: usize) {
+        debug_assert!(self.current >= bytes, "double free");
+        self.current -= bytes;
+    }
+}

@@ -1,0 +1,8 @@
+# Fixture: known-bad snippet for `py-bare-except`. Scanned under the
+# virtual path python/compile/emit.py — never executed. A bare except
+# in the lowering pipeline hides lowering bugs as silent parity drift.
+def lower(op):
+    try:
+        return emit(op)
+    except:
+        return None

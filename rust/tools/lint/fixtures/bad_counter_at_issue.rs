@@ -1,0 +1,7 @@
+// Fixture: known-bad snippet for `counter-at-issue`. Scanned under
+// the virtual path rust/src/runtime/model.rs — never compiled. The
+// bump lives in a completion helper, so the overlapped and
+// synchronous ledgers disagree while a dispatch is in flight.
+fn absorb(&self) {
+    self.rt.note_decode_dispatch();
+}

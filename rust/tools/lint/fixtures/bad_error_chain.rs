@@ -1,0 +1,6 @@
+// Fixture: known-bad snippet for `error-chain`. Scanned under the
+// virtual path rust/src/server/mod.rs — never compiled. The fault is
+// wrapped in dispatch context, so the outermost downcast misses it.
+fn classify(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<PodFault>().is_some()
+}

@@ -1,0 +1,7 @@
+// Fixture: known-bad snippet for the `float-ordering` rule. Scanned
+// under the virtual path rust/src/coordinator/policy.rs — never
+// compiled. NaN compares as None under partial_cmp, so this sort
+// panics on the exact input the pruning policy must survive.
+fn rank(scores: &mut Vec<f64>) {
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,7 @@
+// Fixture: known-bad snippet for `hot-path-alloc`. Scanned under the
+// virtual path rust/src/runtime/model.rs — never compiled. One fresh
+// Vec per gated step is exactly the regression the *_into API family
+// exists to prevent.
+fn logits_row(&self, row: &[f32]) -> Vec<f32> {
+    row.to_vec()
+}

@@ -1,0 +1,8 @@
+// Fixture: known-bad snippet for `mutex-hot-path`. Scanned under the
+// virtual path rust/src/engine/mod.rs — never compiled. Hitting the
+// compile-cache mutex on the tick path serializes every worker; the
+// steady state reads the lock-free ExeCell instead.
+fn step(&self, rt: &Runtime) -> Result<()> {
+    let exe = rt.load_executable(&self.path)?;
+    exe.run()
+}

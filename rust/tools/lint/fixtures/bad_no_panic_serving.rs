@@ -1,0 +1,7 @@
+// Fixture: known-bad snippet for `no-panic-serving`. Scanned under
+// the virtual path rust/src/engine/mod.rs — never compiled.
+fn admit(&mut self, rows: usize) {
+    if rows > self.capacity {
+        panic!("over capacity");
+    }
+}

@@ -1,0 +1,6 @@
+// Fixture: known-bad snippet for `no-unwrap-serving`. Scanned under
+// the virtual path rust/src/server/mod.rs — never compiled. A panic
+// here tears down the worker thread instead of poisoning one pod.
+fn next_batch(&mut self) -> Batch {
+    self.queue.pop_front().unwrap()
+}

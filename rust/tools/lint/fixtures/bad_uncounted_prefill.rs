@@ -1,0 +1,7 @@
+// Fixture: known-bad snippet for `uncounted-prefill`. Scanned under
+// the virtual path rust/src/runtime/model.rs — never compiled. A
+// steady-state prefill that skips the counter and the fault check
+// breaks both the dispatch ledger and fault-injection coverage.
+fn handle_request(&self, tokens: &[i32]) -> Result<KvCache> {
+    self.prefill_uncounted(tokens)
+}

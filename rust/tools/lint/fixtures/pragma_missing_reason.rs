@@ -1,0 +1,8 @@
+// Fixture: a pragma with no reason string. Scanned under the virtual
+// path rust/src/server/mod.rs — never compiled. The pragma itself is
+// a `pragma-reason` finding AND it fails to suppress, so the expect
+// underneath surfaces as a `no-unwrap-serving` finding too.
+fn peek(&self) -> &Buffer {
+    // lint:allow(no-unwrap-serving)
+    self.buf.get().expect("installed in new()")
+}

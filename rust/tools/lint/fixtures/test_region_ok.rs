@@ -1,0 +1,17 @@
+// Fixture: unwraps inside a #[cfg(test)] region are fine even on a
+// serving path. Scanned under the virtual path rust/src/server/mod.rs
+// — never compiled. Test code states expectations; panicking is the
+// point.
+fn shutdown(&self) -> Result<()> {
+    self.tx.send(Msg::Shutdown)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shutdown_drains() {
+        let srv = Server::offline();
+        srv.shutdown().unwrap();
+        assert!(srv.queue.lock().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,939 @@
+//! kappa-lint: the ROADMAP invariants as a machine-checked gate.
+//!
+//! This crate is a dependency-free line/token-level scanner over
+//! `rust/src`, `rust/tests`, `rust/benches`, and `python/compile`. It
+//! exists because the disciplines that keep the serving stack's
+//! bit-identity claims honest — `total_cmp` ordering, chain-walked
+//! fault classification, counters moved at issue time, no
+//! `debug_assert`-only accounting guards — used to live as prose in
+//! ROADMAP.md and would erode one "harmless" diff at a time. `ci.sh`
+//! runs the binary ahead of clippy and fails on any unallowlisted
+//! finding.
+//!
+//! Suppression is explicit and audited:
+//!
+//! * pragma: `// lint:allow(<rule>, <reason>)` on the offending line
+//!   or the line directly above. The reason string is **required** —
+//!   a pragma without one is itself a finding (`pragma-reason`).
+//! * path allowlist: `[allow.<rule>]` entries in `kappa-lint.toml`,
+//!   each `"path" = "reason"`.
+//!
+//! Both forms are self-checking: a pragma or path entry that no longer
+//! suppresses anything is a `lint-config` finding (stale allowlists
+//! rot into blanket exemptions otherwise), and the `[ratchet]` table
+//! freezes per-rule allowlisted-site counts so they can only move
+//! toward zero.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub mod rules;
+
+use rules::{match_line, LineCtx, Rule, RULES};
+
+/// One reported violation, rendered as `file:line rule message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A path allowlist entry from `kappa-lint.toml`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub path: String,
+    pub reason: String,
+    /// Line in the config file, for stale-entry findings.
+    pub line: usize,
+}
+
+/// Parsed `kappa-lint.toml` (a deliberately tiny TOML subset: `[section]`
+/// headers, `key = value` entries, full-line `#` comments).
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// rule -> (frozen max allowlisted-site count, config line).
+    pub ratchet: BTreeMap<String, (usize, usize)>,
+    /// rule -> path allowlist.
+    pub path_allow: BTreeMap<String, Vec<AllowEntry>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section: Option<String> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = Some(name.trim().to_string());
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("kappa-lint.toml:{lineno}: expected `key = value`"));
+            };
+            let key = unquote(key.trim());
+            let value_raw = value.trim();
+            match section.as_deref() {
+                Some("ratchet") => {
+                    let max: usize = value_raw.parse().map_err(|_| {
+                        format!("kappa-lint.toml:{lineno}: ratchet value must be an integer")
+                    })?;
+                    cfg.ratchet.insert(key, (max, lineno));
+                }
+                Some(s) if s.starts_with("allow.") => {
+                    let rule = s["allow.".len()..].to_string();
+                    cfg.path_allow.entry(rule).or_default().push(AllowEntry {
+                        path: key,
+                        reason: unquote(value_raw),
+                        line: lineno,
+                    });
+                }
+                Some(other) => {
+                    return Err(format!("kappa-lint.toml:{lineno}: unknown section [{other}]"));
+                }
+                None => {
+                    return Err(format!("kappa-lint.toml:{lineno}: entry before any [section]"));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// The outcome of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// rule -> (unallowlisted findings, allowlisted sites). Every rule
+    /// appears (zero counts included) so per-rule trajectory lines are
+    /// stable across runs.
+    pub counts: BTreeMap<String, (usize, usize)>,
+}
+
+impl Report {
+    fn bump(&mut self, rule: &str, allowed: bool) {
+        let slot = self.counts.entry(rule.to_string()).or_insert((0, 0));
+        if allowed {
+            slot.1 += 1;
+        } else {
+            slot.0 += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source masking: blank out comments and string/char-literal contents so
+// token rules don't fire on prose. Newlines are preserved so line numbers
+// survive; string delimiters are kept so masked lines still look like code.
+// ---------------------------------------------------------------------------
+
+fn mask_rust(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    let n = b.len();
+    let keep = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(keep(b[i]));
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1u32;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+            // Possible raw string r"..." / r#"..."#.
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                out.push(' ');
+                for _ in 0..hashes {
+                    out.push(' ');
+                }
+                out.push('"');
+                i = j + 1;
+                loop {
+                    if i >= n {
+                        break;
+                    }
+                    if b[i] == '"' {
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if i + 1 + h >= n || b[i + 1 + h] != '#' {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            out.push('"');
+                            for _ in 0..hashes {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            } else {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(keep(b[i + 1]));
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime. `'x'` and `'\..'` are literals;
+            // `'ident` (no nearby closing quote) is a lifetime.
+            if i + 2 < n && b[i + 1] == '\\' {
+                out.push('\'');
+                out.push(' ');
+                let mut j = i + 2;
+                if b[j] == 'u' {
+                    while j < n && b[j] != '}' {
+                        out.push(' ');
+                        j += 1;
+                    }
+                    // account for '}' below
+                }
+                // the escaped char (or the closing '}' of \u{..})
+                out.push(' ');
+                j += 1;
+                if j < n && b[j] == '\'' {
+                    out.push('\'');
+                    j += 1;
+                }
+                i = j;
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i += 3;
+            } else {
+                out.push('\'');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+fn mask_python(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    let n = b.len();
+    let keep = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        if c == '#' {
+            while i < n && b[i] != '\n' {
+                out.push(keep(b[i]));
+                i += 1;
+            }
+        } else if c == '"' || c == '\'' {
+            let q = c;
+            let triple = i + 2 < n && b[i + 1] == q && b[i + 2] == q;
+            let qlen = if triple { 3 } else { 1 };
+            for _ in 0..qlen {
+                out.push(q);
+            }
+            i += qlen;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(keep(b[i + 1]));
+                    i += 2;
+                    continue;
+                }
+                let closes = if triple {
+                    i + 2 < n && b[i] == q && b[i + 1] == q && b[i + 2] == q
+                } else {
+                    b[i] == q || b[i] == '\n'
+                };
+                if closes {
+                    for _ in 0..qlen {
+                        out.push(if b[i] == '\n' { '\n' } else { q });
+                        if b[i] != '\n' {
+                            i += 1;
+                        } else {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    break;
+                }
+                out.push(keep(b[i]));
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis: masked lines, #[cfg(test)] regions, enclosing fns,
+// pragmas.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    line: usize,
+    rule: String,
+    reason: String,
+}
+
+struct FileAnalysis {
+    raw: Vec<String>,
+    masked: Vec<String>,
+    in_test: Vec<bool>,
+    enclosing_fn: Vec<Option<String>>,
+    pragmas: Vec<Pragma>,
+    /// Pragma-syntax findings (missing reason, unknown rule).
+    pragma_findings: Vec<(usize, String)>,
+}
+
+fn fn_name_on_line(masked: &str) -> Option<String> {
+    let bytes = masked.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = masked[search..].find("fn ") {
+        let at = search + rel;
+        let boundary = at == 0
+            || !(bytes[at - 1] as char).is_alphanumeric() && bytes[at - 1] != b'_';
+        if boundary {
+            let rest = &masked[at + 3..];
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        search = at + 3;
+    }
+    None
+}
+
+fn analyze(path: &str, content: &str) -> FileAnalysis {
+    let is_python = path.ends_with(".py");
+    let masked_all = if is_python { mask_python(content) } else { mask_rust(content) };
+    let raw: Vec<String> = content.lines().map(|l| l.to_string()).collect();
+    let mut masked: Vec<String> = masked_all.lines().map(|l| l.to_string()).collect();
+    masked.resize(raw.len(), String::new());
+
+    let mut in_test = vec![false; raw.len()];
+    let mut enclosing_fn: Vec<Option<String>> = vec![None; raw.len()];
+
+    // Brace-depth walk over masked lines: #[cfg(test)] regions and the
+    // innermost enclosing fn. Python has neither; its rules don't need
+    // them.
+    if !is_python {
+        let mut depth = 0usize;
+        // Region is active while depth > the depth the opening brace
+        // was entered at.
+        let mut test_open_depth: Option<usize> = None;
+        let mut pending_cfg_test = 0usize; // lines of patience left
+        let mut pending_fn: Option<String> = None;
+        let mut fn_stack: Vec<(usize, String)> = Vec::new();
+        for (idx, m) in masked.iter().enumerate() {
+            in_test[idx] = test_open_depth.is_some();
+            enclosing_fn[idx] = fn_stack.last().map(|(_, n)| n.clone());
+            if m.contains("#[cfg(test)]") {
+                pending_cfg_test = 3;
+                in_test[idx] = true;
+            }
+            if let Some(name) = fn_name_on_line(m) {
+                pending_fn = Some(name);
+            }
+            for ch in m.chars() {
+                if ch == '{' {
+                    if pending_cfg_test > 0 && test_open_depth.is_none() {
+                        test_open_depth = Some(depth);
+                        pending_cfg_test = 0;
+                        in_test[idx] = true;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((depth, name));
+                        // The body line(s) after this one are inside
+                        // the fn; the signature line keeps the outer
+                        // scope, which is what the rules want.
+                    }
+                    depth += 1;
+                } else if ch == '}' {
+                    depth = depth.saturating_sub(1);
+                    if test_open_depth == Some(depth) {
+                        test_open_depth = None;
+                    }
+                    while fn_stack.last().is_some_and(|(d, _)| *d >= depth) {
+                        fn_stack.pop();
+                    }
+                }
+            }
+            if pending_cfg_test > 0 {
+                pending_cfg_test -= 1;
+            }
+        }
+    }
+
+    // Pragmas live in comments, so parse them from the raw lines.
+    let mut pragmas = Vec::new();
+    let mut pragma_findings = Vec::new();
+    let known = rules::rule_names();
+    for (idx, line) in raw.iter().enumerate() {
+        let lineno = idx + 1;
+        let Some(at) = line.find("lint:allow(") else { continue };
+        let after = &line[at + "lint:allow(".len()..];
+        let Some(close) = after.rfind(')') else {
+            pragma_findings.push((lineno, "unterminated lint:allow pragma".to_string()));
+            continue;
+        };
+        let inner = &after[..close];
+        let (rule, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+            None => (inner.trim().to_string(), String::new()),
+        };
+        if !known.contains(&rule.as_str()) {
+            pragma_findings.push((lineno, format!("lint:allow names unknown rule `{rule}`")));
+            continue;
+        }
+        if reason.is_empty() {
+            pragma_findings.push((
+                lineno,
+                format!("lint:allow({rule}) has no reason — a pragma must say why the site is exempt"),
+            ));
+            continue;
+        }
+        pragmas.push(Pragma { line: lineno, rule, reason });
+    }
+
+    FileAnalysis { raw, masked, in_test, enclosing_fn, pragmas, pragma_findings }
+}
+
+// ---------------------------------------------------------------------------
+// The lint run proper.
+// ---------------------------------------------------------------------------
+
+fn in_tests_tree(path: &str) -> bool {
+    path.starts_with("rust/tests/") || path.starts_with("rust/benches/")
+}
+
+/// Lint a set of (repo-relative path, content) pairs against `cfg`.
+/// `cfg_label` names the config file in `lint-config` findings.
+pub fn lint_files(files: &[(String, String)], cfg: &Config, cfg_label: &str) -> Report {
+    let mut report = Report::default();
+    for rule in RULES {
+        report.counts.insert(rule.name.to_string(), (0, 0));
+    }
+    report.counts.insert("pragma-reason".to_string(), (0, 0));
+    report.counts.insert("lint-config".to_string(), (0, 0));
+
+    // (rule, path) pairs whose config allowlist entry suppressed at
+    // least one finding — everything else is stale.
+    let mut used_path_allows: Vec<(String, String)> = Vec::new();
+    let mut used_pragmas: Vec<(String, usize)> = Vec::new(); // (path, line)
+
+    for (path, content) in files {
+        let fa = analyze(path, content);
+        for (lineno, msg) in &fa.pragma_findings {
+            report.bump("pragma-reason", false);
+            report.findings.push(Finding {
+                file: path.clone(),
+                line: *lineno,
+                rule: "pragma-reason".to_string(),
+                message: msg.clone(),
+            });
+        }
+        for (idx, raw_line) in fa.raw.iter().enumerate() {
+            let lineno = idx + 1;
+            let window_start = idx.saturating_sub(3);
+            let window = fa.masked[window_start..=idx].join("\n");
+            let ctx = LineCtx {
+                path,
+                raw: raw_line,
+                masked: &fa.masked[idx],
+                window: &window,
+                enclosing_fn: fa.enclosing_fn[idx].as_deref(),
+            };
+            for rule in RULES {
+                if !rule.scans_tests && (fa.in_test[idx] || in_tests_tree(path)) {
+                    continue;
+                }
+                let Some(message) = match_line(rule, &ctx) else { continue };
+                // Pragma on the same line or directly above?
+                let pragma = fa
+                    .pragmas
+                    .iter()
+                    .find(|p| p.rule == rule.name && (p.line == lineno || p.line + 1 == lineno));
+                if let Some(p) = pragma {
+                    debug_assert!(!p.reason.is_empty());
+                    used_pragmas.push((path.clone(), p.line));
+                    report.bump(rule.name, true);
+                    continue;
+                }
+                // Path allowlist?
+                let entry = cfg
+                    .path_allow
+                    .get(rule.name)
+                    .and_then(|v| v.iter().find(|e| e.path == *path));
+                if entry.is_some() {
+                    used_path_allows.push((rule.name.to_string(), path.clone()));
+                    report.bump(rule.name, true);
+                    continue;
+                }
+                report.bump(rule.name, false);
+                report.findings.push(Finding {
+                    file: path.clone(),
+                    line: lineno,
+                    rule: rule.name.to_string(),
+                    message,
+                });
+            }
+        }
+        // Stale pragmas: a lint:allow that suppressed nothing is an
+        // error, not a no-op — otherwise dead pragmas accumulate into
+        // blanket exemptions.
+        for p in &fa.pragmas {
+            if !used_pragmas.iter().any(|(f, l)| f == path && *l == p.line) {
+                report.bump("lint-config", false);
+                report.findings.push(Finding {
+                    file: path.clone(),
+                    line: p.line,
+                    rule: "lint-config".to_string(),
+                    message: format!(
+                        "stale lint:allow({}) — no finding on this or the next line; remove it",
+                        p.rule
+                    ),
+                });
+            }
+        }
+    }
+
+    // Config self-checks.
+    let known = rules::rule_names();
+    for (rule, entries) in &cfg.path_allow {
+        if !known.contains(&rule.as_str()) {
+            report.bump("lint-config", false);
+            report.findings.push(Finding {
+                file: cfg_label.to_string(),
+                line: entries.first().map(|e| e.line).unwrap_or(1),
+                rule: "lint-config".to_string(),
+                message: format!("[allow.{rule}] names an unknown rule"),
+            });
+            continue;
+        }
+        for e in entries {
+            if e.reason.is_empty() {
+                report.bump("lint-config", false);
+                report.findings.push(Finding {
+                    file: cfg_label.to_string(),
+                    line: e.line,
+                    rule: "lint-config".to_string(),
+                    message: format!("[allow.{rule}] entry for {} has no reason", e.path),
+                });
+            }
+            if !used_path_allows.iter().any(|(r, p)| r == rule && p == &e.path) {
+                report.bump("lint-config", false);
+                report.findings.push(Finding {
+                    file: cfg_label.to_string(),
+                    line: e.line,
+                    rule: "lint-config".to_string(),
+                    message: format!(
+                        "stale allowlist entry: {} no longer has any {rule} match — remove it",
+                        e.path
+                    ),
+                });
+            }
+        }
+    }
+    for (rule, (max, line)) in &cfg.ratchet {
+        if !known.contains(&rule.as_str()) {
+            report.bump("lint-config", false);
+            report.findings.push(Finding {
+                file: cfg_label.to_string(),
+                line: *line,
+                rule: "lint-config".to_string(),
+                message: format!("[ratchet] names an unknown rule `{rule}`"),
+            });
+            continue;
+        }
+        let allowed = report.counts.get(rule.as_str()).map(|c| c.1).unwrap_or(0);
+        if allowed > *max {
+            report.bump("lint-config", false);
+            report.findings.push(Finding {
+                file: cfg_label.to_string(),
+                line: *line,
+                rule: "lint-config".to_string(),
+                message: format!(
+                    "suppression creep: {allowed} allowlisted {rule} sites exceed the frozen \
+                     max of {max} — fix the new sites, do not grow the allowlist"
+                ),
+            });
+        } else if allowed < *max {
+            report.bump("lint-config", false);
+            report.findings.push(Finding {
+                file: cfg_label.to_string(),
+                line: *line,
+                rule: "lint-config".to_string(),
+                message: format!(
+                    "ratchet: only {allowed} allowlisted {rule} sites remain but the frozen max \
+                     is {max} — lower it (the count may only move toward zero)"
+                ),
+            });
+        }
+    }
+
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking.
+// ---------------------------------------------------------------------------
+
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "python/compile"];
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs" || e == "py") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Collect the scannable tree under `root` as (repo-relative path,
+/// content) pairs, sorted for deterministic output.
+pub fn collect_tree(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut paths = Vec::new();
+    for scan_root in SCAN_ROOTS {
+        let dir = root.join(scan_root);
+        if dir.is_dir() {
+            walk(&dir, &mut paths)?;
+        }
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push((rel, std::fs::read_to_string(&p)?));
+    }
+    Ok(files)
+}
+
+// ---------------------------------------------------------------------------
+// Fixture-driven self-test: known-bad snippets under fixtures/ must be
+// flagged with the expected rule, allowlisted ones must come back clean.
+// ci.sh runs `kappa-lint --self-test` before the real scan so the gate
+// demonstrably *can* fail before we trust its "tree is clean".
+// ---------------------------------------------------------------------------
+
+pub struct FixtureCase {
+    pub name: &'static str,
+    /// The path the fixture pretends to live at (rule scopes are
+    /// path-keyed, so fixtures are scanned under a virtual path).
+    pub virtual_path: &'static str,
+    pub content: &'static str,
+    /// `Some(rule)` = the scan must produce at least one finding of
+    /// exactly this rule; `None` = the scan must be clean.
+    pub expect_rule: Option<&'static str>,
+    /// Further rules that must *also* fire (e.g. a reasonless pragma
+    /// is both a `pragma-reason` finding and a failure to suppress).
+    pub expect_also: &'static [&'static str],
+    /// Number of allowlisted (pragma-suppressed) sites the scan must
+    /// report for `allow_rule`.
+    pub expect_allowed: usize,
+    pub allow_rule: &'static str,
+}
+
+pub fn fixture_cases() -> Vec<FixtureCase> {
+    vec![
+        FixtureCase {
+            name: "bad_float_ordering",
+            virtual_path: "rust/src/coordinator/policy.rs",
+            content: include_str!("../fixtures/bad_float_ordering.rs"),
+            expect_rule: Some("float-ordering"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "float-ordering",
+        },
+        FixtureCase {
+            name: "bad_accounting_debug_assert",
+            virtual_path: "rust/src/engine/mem.rs",
+            content: include_str!("../fixtures/bad_accounting_debug_assert.rs"),
+            expect_rule: Some("accounting-debug-assert"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "accounting-debug-assert",
+        },
+        FixtureCase {
+            name: "bad_error_chain",
+            virtual_path: "rust/src/server/mod.rs",
+            content: include_str!("../fixtures/bad_error_chain.rs"),
+            expect_rule: Some("error-chain"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "error-chain",
+        },
+        FixtureCase {
+            name: "bad_no_unwrap_serving",
+            virtual_path: "rust/src/server/mod.rs",
+            content: include_str!("../fixtures/bad_no_unwrap_serving.rs"),
+            expect_rule: Some("no-unwrap-serving"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "no-unwrap-serving",
+        },
+        FixtureCase {
+            name: "bad_no_panic_serving",
+            virtual_path: "rust/src/engine/mod.rs",
+            content: include_str!("../fixtures/bad_no_panic_serving.rs"),
+            expect_rule: Some("no-panic-serving"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "no-panic-serving",
+        },
+        FixtureCase {
+            name: "bad_hot_path_alloc",
+            virtual_path: "rust/src/runtime/model.rs",
+            content: include_str!("../fixtures/bad_hot_path_alloc.rs"),
+            expect_rule: Some("hot-path-alloc"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "hot-path-alloc",
+        },
+        FixtureCase {
+            name: "bad_mutex_hot_path",
+            virtual_path: "rust/src/engine/mod.rs",
+            content: include_str!("../fixtures/bad_mutex_hot_path.rs"),
+            expect_rule: Some("mutex-hot-path"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "mutex-hot-path",
+        },
+        FixtureCase {
+            name: "bad_counter_at_issue",
+            virtual_path: "rust/src/runtime/model.rs",
+            content: include_str!("../fixtures/bad_counter_at_issue.rs"),
+            expect_rule: Some("counter-at-issue"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "counter-at-issue",
+        },
+        FixtureCase {
+            name: "bad_uncounted_prefill",
+            virtual_path: "rust/src/runtime/model.rs",
+            content: include_str!("../fixtures/bad_uncounted_prefill.rs"),
+            expect_rule: Some("uncounted-prefill"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "uncounted-prefill",
+        },
+        FixtureCase {
+            name: "bad_bare_except",
+            virtual_path: "python/compile/emit.py",
+            content: include_str!("../fixtures/bad_bare_except.py"),
+            expect_rule: Some("py-bare-except"),
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "py-bare-except",
+        },
+        FixtureCase {
+            name: "allowed_pragma",
+            virtual_path: "rust/src/server/mod.rs",
+            content: include_str!("../fixtures/allowed_pragma.rs"),
+            expect_rule: None,
+            expect_also: &[],
+            expect_allowed: 1,
+            allow_rule: "no-unwrap-serving",
+        },
+        FixtureCase {
+            name: "pragma_missing_reason",
+            virtual_path: "rust/src/server/mod.rs",
+            content: include_str!("../fixtures/pragma_missing_reason.rs"),
+            // A reasonless pragma is flagged *and* fails to suppress:
+            // the violation underneath surfaces too.
+            expect_rule: Some("pragma-reason"),
+            expect_also: &["no-unwrap-serving"],
+            expect_allowed: 0,
+            allow_rule: "no-unwrap-serving",
+        },
+        FixtureCase {
+            name: "test_region_ok",
+            virtual_path: "rust/src/server/mod.rs",
+            content: include_str!("../fixtures/test_region_ok.rs"),
+            expect_rule: None,
+            expect_also: &[],
+            expect_allowed: 0,
+            allow_rule: "no-unwrap-serving",
+        },
+    ]
+}
+
+/// Run every fixture through the engine with an empty config; returns a
+/// one-line summary on success, a description of the first mismatch on
+/// failure.
+pub fn self_test() -> Result<String, String> {
+    let cfg = Config::default();
+    let cases = fixture_cases();
+    for case in &cases {
+        let files = vec![(case.virtual_path.to_string(), case.content.to_string())];
+        let report = lint_files(&files, &cfg, "self-test-config");
+        match case.expect_rule {
+            Some(rule) => {
+                for want in std::iter::once(rule).chain(case.expect_also.iter().copied()) {
+                    if !report.findings.iter().any(|f| f.rule == want) {
+                        return Err(format!(
+                            "fixture {}: expected a {want} finding, got {:?}",
+                            case.name,
+                            report.findings.iter().map(Finding::render).collect::<Vec<_>>()
+                        ));
+                    }
+                }
+                let unexpected: Vec<_> = report
+                    .findings
+                    .iter()
+                    .filter(|f| f.rule != rule && !case.expect_also.contains(&f.rule.as_str()))
+                    .collect();
+                if !unexpected.is_empty() {
+                    return Err(format!(
+                        "fixture {}: unexpected extra findings: {:?}",
+                        case.name,
+                        unexpected.iter().map(|f| f.render()).collect::<Vec<_>>()
+                    ));
+                }
+            }
+            None => {
+                if !report.findings.is_empty() {
+                    return Err(format!(
+                        "fixture {}: expected a clean scan, got {:?}",
+                        case.name,
+                        report.findings.iter().map(Finding::render).collect::<Vec<_>>()
+                    ));
+                }
+            }
+        }
+        let allowed = report.counts.get(case.allow_rule).map(|c| c.1).unwrap_or(0);
+        if allowed != case.expect_allowed {
+            return Err(format!(
+                "fixture {}: expected {} allowlisted {} site(s), saw {allowed}",
+                case.name, case.expect_allowed, case.allow_rule
+            ));
+        }
+    }
+    Ok(format!("{} fixtures flagged/clean as expected", cases.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_strips_comments_and_strings() {
+        let m = mask_rust("let x = \"partial_cmp(\"; // partial_cmp(\n");
+        assert!(!m.contains("partial_cmp("), "masked: {m:?}");
+        assert!(m.contains("let x = "));
+    }
+
+    #[test]
+    fn masking_survives_lifetimes_and_chars() {
+        let m = mask_rust("fn f<'a>(c: char) -> bool { c == ')' || c == '\\n' }");
+        assert!(m.contains("fn f<'a>"));
+        assert!(!m.contains(')') || m.matches(')').count() < 3);
+    }
+
+    #[test]
+    fn config_round_trip() {
+        let cfg = Config::parse(
+            "# comment\n[ratchet]\nno-unwrap-serving = 2\n\n[allow.float-ordering]\n\"rust/tests/x.rs\" = \"seed oracle\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.ratchet.get("no-unwrap-serving").map(|r| r.0), Some(2));
+        let entries = cfg.path_allow.get("float-ordering").unwrap();
+        assert_eq!(entries[0].path, "rust/tests/x.rs");
+        assert_eq!(entries[0].reason, "seed oracle");
+    }
+
+    #[test]
+    fn self_test_passes() {
+        self_test().unwrap();
+    }
+}

@@ -1,0 +1,91 @@
+//! kappa-lint CLI.
+//!
+//!   kappa-lint --self-test              # fixture-driven engine check
+//!   kappa-lint --root <repo-root>       # scan the tree, exit 1 on findings
+//!   kappa-lint --root <root> --config <path>
+//!
+//! Output is machine-readable: one `file:line rule message` per finding
+//! on stdout, then one `[kappa-lint] rule=<name> findings=<n> allowed=<m>`
+//! trajectory line per rule (stable set, zero counts included) so CI
+//! diffs can see suppression creep.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut config: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--self-test" => self_test = true,
+            "--root" => root = args.next().map(PathBuf::from),
+            "--config" => config = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                eprintln!("usage: kappa-lint [--self-test] [--root <repo-root>] [--config <kappa-lint.toml>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("kappa-lint: unknown argument {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if self_test {
+        return match kappa_lint::self_test() {
+            Ok(summary) => {
+                println!("[kappa-lint] self-test OK: {summary}");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("[kappa-lint] self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let root = root.unwrap_or_else(|| PathBuf::from("."));
+    let cfg_path = config.unwrap_or_else(|| root.join("rust/tools/lint/kappa-lint.toml"));
+    let cfg_text = match std::fs::read_to_string(&cfg_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("kappa-lint: cannot read {}: {e}", cfg_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match kappa_lint::Config::parse(&cfg_text) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("kappa-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let files = match kappa_lint::collect_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("kappa-lint: walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if files.is_empty() {
+        eprintln!("kappa-lint: no scannable files under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let report = kappa_lint::lint_files(&files, &cfg, "rust/tools/lint/kappa-lint.toml");
+    for f in &report.findings {
+        println!("{}", f.render());
+    }
+    for (rule, (found, allowed)) in &report.counts {
+        println!("[kappa-lint] rule={rule} findings={found} allowed={allowed}");
+    }
+    if report.findings.is_empty() {
+        println!("[kappa-lint] OK: {} files scanned, zero unallowlisted findings", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("[kappa-lint] {} finding(s) — see RULES.md for the invariant each rule guards", report.findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,290 @@
+//! The rule catalogue: each entry transcribes one ROADMAP invariant
+//! into a line-level predicate. See `RULES.md` (next to this crate's
+//! `Cargo.toml`) for the rule → invariant → allowlist-policy table.
+//!
+//! Rules are deliberately token-level, not AST-level: the gate has to
+//! stay dependency-free and fast, and every discipline it guards is
+//! phrased in ROADMAP.md as "this token sequence must not appear here".
+//! The compile-time half of the enforcement story (the `DonatedKv`
+//! typestate, `clippy.toml` disallowed-methods/-types, the crate-level
+//! `#![deny]` sets) covers what the type system and clippy can express
+//! natively; these rules cover what they cannot.
+
+/// One lint rule. `scans_tests` controls whether `#[cfg(test)]`
+/// regions and the `rust/tests` / `rust/benches` trees are scanned;
+/// `scans_comments` controls whether the raw line (comments and string
+/// literals included) or the masked line (both stripped) is matched.
+pub struct Rule {
+    pub name: &'static str,
+    pub invariant: &'static str,
+    pub scans_tests: bool,
+    pub scans_comments: bool,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "float-ordering",
+        invariant: "float score ordering is total_cmp, never partial_cmp — NaN must order \
+                    deterministically, and docs must not teach the banned idiom",
+        // Comments included on purpose: module docs demonstrating the
+        // `partial_cmp(..).unwrap()` sort are how the pattern leaks
+        // back into the tree.
+        scans_tests: true,
+        scans_comments: true,
+    },
+    Rule {
+        name: "accounting-debug-assert",
+        invariant: "memory-accounting guards are active in all build profiles — a debug_assert \
+                    compiles out of release and lets the tracker wrap silently",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "error-chain",
+        invariant: "typed fault classification walks e.chain(); downcast_ref on the outermost \
+                    error misses wrapped PodFault/FaultError/RequestError layers",
+        scans_tests: true,
+        scans_comments: false,
+    },
+    Rule {
+        name: "no-unwrap-serving",
+        invariant: "serving paths (server/, runtime/, engine/) return named errors; a panic \
+                    tears down the worker instead of poisoning one pod",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "no-panic-serving",
+        invariant: "explicit panic!/unreachable!/todo!/unimplemented! are banned on serving \
+                    paths for the same reason as unwrap — contained faults, not torn-down workers",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "hot-path-alloc",
+        invariant: "the gated-step hot path reuses caller-owned scratch; per-tick to_vec() \
+                    allocation is the regression the *_into API family exists to prevent",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "mutex-hot-path",
+        invariant: "Runtime::load_executable takes the compile-cache mutex; steady-state \
+                    dispatch reads the lock-free ExeCell instead",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "counter-at-issue",
+        invariant: "decode dispatch counters move at issue time (in *_issue functions), so the \
+                    overlapped and synchronous ledgers stay identical mid-flight",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "uncounted-prefill",
+        invariant: "prefill_uncounted exists for load-time warmup only; every steady-state \
+                    prefill is counted and fault-checked",
+        scans_tests: false,
+        scans_comments: false,
+    },
+    Rule {
+        name: "py-bare-except",
+        invariant: "the AOT lowering pipeline never swallows arbitrary exceptions — a bare \
+                    except: hides lowering bugs as silent parity drift",
+        scans_tests: true,
+        scans_comments: false,
+    },
+];
+
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+/// Everything `match_line` needs to know about one source line.
+pub struct LineCtx<'a> {
+    /// Repo-relative, '/'-separated path (e.g. `rust/src/engine/mem.rs`).
+    pub path: &'a str,
+    /// The line as written, comments and strings intact.
+    pub raw: &'a str,
+    /// The line with comments and string-literal contents blanked.
+    pub masked: &'a str,
+    /// Masked current line joined with the previous three masked lines
+    /// (statement-level context for multi-line chains).
+    pub window: &'a str,
+    /// Name of the innermost enclosing `fn`, if the line is inside one.
+    pub enclosing_fn: Option<&'a str>,
+}
+
+/// Files whose accounting arithmetic must be guarded in every build
+/// profile (the `accounting-debug-assert` scope).
+const ACCOUNTING_FILES: &[&str] = &[
+    "rust/src/engine/mem.rs",
+    "rust/src/engine/fusion.rs",
+    "rust/src/engine/prefix.rs",
+];
+
+/// The gated-step hot-path modules (the `hot-path-alloc` scope): code
+/// here runs once per scheduler tick per pod.
+const HOT_PATH_FILES: &[&str] = &[
+    "rust/src/runtime/model.rs",
+    "rust/src/engine/mod.rs",
+    "rust/src/engine/fusion.rs",
+    "rust/src/coordinator/sampler.rs",
+];
+
+/// The synchronous dispatch family: each of these calls *is* its own
+/// issue half (the dispatch enters the device queue inside the call),
+/// so the counter bump at the call site is the counter moving at issue
+/// time. The overlapped family proper must bump inside `*_issue`.
+const SYNC_DISPATCH_FNS: &[&str] = &["decode", "decode_into", "superstep_into", "superstep_tap_into"];
+
+fn is_serving_path(path: &str) -> bool {
+    path.starts_with("rust/src/server/")
+        || path.starts_with("rust/src/runtime/")
+        || path.starts_with("rust/src/engine/")
+}
+
+/// Apply one rule to one line. Returns the finding message, or `None`.
+pub fn match_line(rule: &Rule, ctx: &LineCtx<'_>) -> Option<String> {
+    match rule.name {
+        "float-ordering" => {
+            if ctx.path.ends_with(".rs") && ctx.raw.contains("partial_cmp(") {
+                return Some(
+                    "partial_cmp on a score path — use total_cmp (NaN must order \
+                     deterministically; see RULES.md float-ordering)"
+                        .into(),
+                );
+            }
+            None
+        }
+        "accounting-debug-assert" => {
+            if ACCOUNTING_FILES.contains(&ctx.path) && ctx.masked.contains("debug_assert") {
+                return Some(
+                    "debug_assert in an accounting path — the guard compiles out of release \
+                     builds; use a real check that fails in every profile"
+                        .into(),
+                );
+            }
+            None
+        }
+        "error-chain" => {
+            if !ctx.path.ends_with(".rs") || !ctx.masked.contains("downcast_ref::<") {
+                return None;
+            }
+            let typed = ["PodFault", "FaultError", "RequestError"]
+                .iter()
+                .any(|t| ctx.masked.contains(t));
+            if typed && !ctx.window.contains(".chain()") {
+                return Some(
+                    "downcast_ref on the outermost error — walk e.chain() so wrapped \
+                     PodFault/FaultError/RequestError layers are still classified"
+                        .into(),
+                );
+            }
+            None
+        }
+        "no-unwrap-serving" => {
+            if is_serving_path(ctx.path)
+                && (ctx.masked.contains(".unwrap()") || ctx.masked.contains(".expect("))
+            {
+                return Some(
+                    "unwrap/expect on a serving path — return a named error so the fault is \
+                     contained to one pod instead of tearing down the worker"
+                        .into(),
+                );
+            }
+            None
+        }
+        "no-panic-serving" => {
+            if is_serving_path(ctx.path) {
+                for mac in ["panic!(", "unreachable!(", "todo!(", "unimplemented!("] {
+                    if ctx.masked.contains(mac) {
+                        return Some(format!(
+                            "{} on a serving path — return a named error so the fault is \
+                             contained to one pod instead of tearing down the worker",
+                            mac.trim_end_matches('(')
+                        ));
+                    }
+                }
+            }
+            None
+        }
+        "hot-path-alloc" => {
+            if HOT_PATH_FILES.contains(&ctx.path) && ctx.masked.contains(".to_vec()") {
+                return Some(
+                    "to_vec() in a gated-step hot-path module — land into caller-owned \
+                     scratch (the *_into family) instead of allocating per tick"
+                        .into(),
+                );
+            }
+            None
+        }
+        "mutex-hot-path" => {
+            if ctx.path.starts_with("rust/src/")
+                && ctx.path != "rust/src/runtime/client.rs"
+                && ctx.masked.contains("load_executable(")
+            {
+                return Some(
+                    "load_executable outside the runtime's compile layer — it takes the \
+                     compile-cache mutex; steady-state dispatch must read the ExeCell"
+                        .into(),
+                );
+            }
+            None
+        }
+        "counter-at-issue" => {
+            if !ctx.path.starts_with("rust/src/") || !ctx.masked.contains("note_decode_dispatch()")
+            {
+                return None;
+            }
+            let allowed = ctx.enclosing_fn.is_some_and(|f| {
+                f.ends_with("_issue") || SYNC_DISPATCH_FNS.contains(&f)
+            });
+            if !allowed {
+                return Some(
+                    "decode dispatch counter bumped outside an issue site — counters move \
+                     in *_issue functions (or the synchronous dispatch family, whose call \
+                     is its own issue half)"
+                        .into(),
+                );
+            }
+            None
+        }
+        "uncounted-prefill" => {
+            if !ctx.path.starts_with("rust/src/") || !ctx.masked.contains("prefill_uncounted(") {
+                return None;
+            }
+            // The definition itself and the two blessed callers: `load`
+            // (BOS warmup before serving starts) and `prefill` (the
+            // counted, fault-checked wrapper).
+            if ctx.masked.contains("fn prefill_uncounted") {
+                return None;
+            }
+            if ctx.enclosing_fn.is_some_and(|f| f == "load" || f == "prefill") {
+                return None;
+            }
+            Some(
+                "prefill_uncounted outside load-time warmup — steady-state prefills go \
+                 through the counted, fault-checked `prefill`"
+                    .into(),
+            )
+        }
+        "py-bare-except" => {
+            if !ctx.path.ends_with(".py") {
+                return None;
+            }
+            let t = ctx.masked.trim();
+            if t == "except:" || (t.starts_with("except") && t.trim_end_matches(':').trim() == "except")
+            {
+                return Some(
+                    "bare except: in the lowering pipeline — name the exception type so \
+                     lowering bugs fail loudly instead of becoming parity drift"
+                        .into(),
+                );
+            }
+            None
+        }
+        other => unreachable!("unknown rule {other}"),
+    }
+}

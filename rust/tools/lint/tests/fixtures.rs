@@ -1,0 +1,131 @@
+//! Golden tests for the lint engine: every fixture must be flagged (or
+//! clean) exactly as catalogued, and the allowlist machinery must be
+//! self-checking — stale entries, stale pragmas, and ratchet drift in
+//! either direction are errors, not no-ops.
+
+use kappa_lint::{lint_files, Config, Finding};
+
+fn lint_one(path: &str, content: &str, cfg: &Config) -> kappa_lint::Report {
+    lint_files(&[(path.to_string(), content.to_string())], cfg, "kappa-lint.toml")
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn fixtures_flag_and_clear_as_catalogued() {
+    // The same table ci.sh exercises via `kappa-lint --self-test`: the
+    // gate must demonstrably be able to fail before its "tree is
+    // clean" means anything.
+    kappa_lint::self_test().unwrap();
+}
+
+#[test]
+fn stale_path_allow_entry_is_an_error() {
+    let cfg = Config::parse(
+        "[allow.float-ordering]\n\"rust/src/coordinator/policy.rs\" = \"historic oracle\"\n",
+    )
+    .unwrap();
+    // The file no longer contains any float-ordering match, so the
+    // allowlist entry is dead weight and must be reported.
+    let report = lint_one(
+        "rust/src/coordinator/policy.rs",
+        "fn rank(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n",
+        &cfg,
+    );
+    assert_eq!(rules_of(&report.findings), vec!["lint-config"], "{:?}", report.findings);
+    assert!(report.findings[0].message.contains("stale allowlist entry"));
+}
+
+#[test]
+fn live_path_allow_entry_suppresses_and_counts() {
+    let cfg = Config::parse(
+        "[allow.float-ordering]\n\"rust/src/coordinator/policy.rs\" = \"frozen oracle\"\n",
+    )
+    .unwrap();
+    let report = lint_one(
+        "rust/src/coordinator/policy.rs",
+        "fn rank(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+        &cfg,
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+    assert_eq!(report.counts.get("float-ordering"), Some(&(0, 1)));
+}
+
+#[test]
+fn stale_pragma_is_an_error() {
+    let src = "fn tick(&self) {\n    // lint:allow(no-unwrap-serving, historic reason)\n    self.counter += 1;\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &Config::default());
+    assert_eq!(rules_of(&report.findings), vec!["lint-config"], "{:?}", report.findings);
+    assert!(report.findings[0].message.contains("stale lint:allow"));
+    assert_eq!(report.findings[0].line, 2);
+}
+
+#[test]
+fn ratchet_flags_suppression_creep() {
+    let cfg = Config::parse("[ratchet]\nno-unwrap-serving = 0\n").unwrap();
+    let src = "fn peek(&self) -> &Buffer {\n    // lint:allow(no-unwrap-serving, installed in new() before any handle escapes)\n    self.buf.get().expect(\"installed\")\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &cfg);
+    assert_eq!(rules_of(&report.findings), vec!["lint-config"], "{:?}", report.findings);
+    assert!(report.findings[0].message.contains("suppression creep"));
+}
+
+#[test]
+fn ratchet_forces_burn_down() {
+    // Fewer allowlisted sites than the frozen max is also an error:
+    // the max must be lowered so the count only ever moves toward
+    // zero.
+    let cfg = Config::parse("[ratchet]\nno-unwrap-serving = 3\n").unwrap();
+    let src = "fn peek(&self) -> &Buffer {\n    // lint:allow(no-unwrap-serving, installed in new() before any handle escapes)\n    self.buf.get().expect(\"installed\")\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &cfg);
+    assert_eq!(rules_of(&report.findings), vec!["lint-config"], "{:?}", report.findings);
+    assert!(report.findings[0].message.contains("lower it"));
+}
+
+#[test]
+fn ratchet_at_exact_count_is_clean() {
+    let cfg = Config::parse("[ratchet]\nno-unwrap-serving = 1\n").unwrap();
+    let src = "fn peek(&self) -> &Buffer {\n    // lint:allow(no-unwrap-serving, installed in new() before any handle escapes)\n    self.buf.get().expect(\"installed\")\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &cfg);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn unknown_rule_in_pragma_is_an_error() {
+    let src = "fn f() {\n    // lint:allow(no-such-rule, because)\n    let _ = 1;\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &Config::default());
+    assert_eq!(rules_of(&report.findings), vec!["pragma-reason"], "{:?}", report.findings);
+    assert!(report.findings[0].message.contains("unknown rule"));
+}
+
+#[test]
+fn unknown_rule_in_config_is_an_error() {
+    let cfg = Config::parse("[allow.no-such-rule]\n\"rust/src/lib.rs\" = \"why\"\n").unwrap();
+    let report = lint_one("rust/src/lib.rs", "pub mod engine;\n", &cfg);
+    assert_eq!(rules_of(&report.findings), vec!["lint-config"], "{:?}", report.findings);
+}
+
+#[test]
+fn chain_walk_within_statement_window_is_clean() {
+    // The real classify sites split the walk across lines; the rule's
+    // statement window must reach the .chain() three lines up.
+    let src = "fn classify(e: &anyhow::Error) -> bool {\n    e.chain().any(|c| {\n        c.downcast_ref::<PodFault>().is_some()\n            || c.downcast_ref::<FaultError>().is_some()\n    })\n}\n";
+    let report = lint_one("rust/src/server/mod.rs", src, &Config::default());
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn findings_render_machine_readable() {
+    let report = lint_one(
+        "rust/src/server/mod.rs",
+        "fn f(&self) { self.q.pop().unwrap(); }\n",
+        &Config::default(),
+    );
+    assert_eq!(report.findings.len(), 1);
+    let line = report.findings[0].render();
+    assert!(
+        line.starts_with("rust/src/server/mod.rs:1 no-unwrap-serving "),
+        "rendered: {line}"
+    );
+}
